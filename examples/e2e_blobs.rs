@@ -1,0 +1,101 @@
+//! End-to-end driver across all three layers on a real (synthetic-image)
+//! workload — the repo's full-stack validation (DESIGN.md §5, recorded in
+//! EXPERIMENTS.md §E2E):
+//!
+//!   L1/L2 (build time): `make artifacts` trained Pallas-kernel score
+//!   nets on blobs8/gmm2d and exported HLO text.
+//!   L3 (this binary):   loads the nets through PJRT, replays the
+//!   manifest probes (cross-layer numerics), then runs gDDIM with the
+//!   *learned* score at several NFE and reports FD vs the oracle runs.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_blobs
+//! ```
+
+use std::sync::Arc;
+
+use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
+use gddim::data::presets;
+use gddim::diffusion::process::KtKind;
+use gddim::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
+use gddim::math::rng::Rng;
+use gddim::metrics::frechet::frechet_to_spec;
+use gddim::runtime::{Manifest, NetScore};
+use gddim::samplers::gddim::sample_deterministic;
+use gddim::score::model::ScoreModel;
+use gddim::score::oracle::GmmOracle;
+use gddim::util::bench::Table;
+use gddim::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let dir = Manifest::default_dir();
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("no artifacts at {dir:?} ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let client = xla::PjRtClient::cpu().expect("PJRT CPU client");
+    println!("PJRT platform: {} ({} devices)", client.platform_name(), client.device_count());
+
+    // Cross-layer probe check for every exported model.
+    println!("\n== manifest probes (jax-recorded vs PJRT-executed) ==");
+    let mut nets = Vec::new();
+    for entry in &manifest.models {
+        let net = NetScore::load(&client, entry).expect("load model");
+        let err = net.probe_error().expect("probe");
+        println!(
+            "{:<16} dim={:<4} loss={:<8} probe max|Δ| = {err:.2e}  {}",
+            entry.name,
+            entry.dim_u,
+            entry.final_loss.map(|l| format!("{l:.4}")).unwrap_or("cached".into()),
+            if err < 1e-4 { "OK" } else { "MISMATCH" }
+        );
+        assert!(err < 1e-3, "cross-layer probe mismatch for {}", entry.name);
+        nets.push(net);
+    }
+
+    // Learned-score sampling vs oracle-score sampling.
+    let n = args.get_usize("n", 1000);
+    let mut t = Table::new(
+        "E2E: gDDIM with learned (PJRT) vs exact score — FD",
+        &["model", "NFE", "FD (net)", "FD (oracle)"],
+    );
+    for net in &nets {
+        let entry = &net.entry;
+        let spec = presets::by_name(&entry.dataset).unwrap();
+        let proc: Arc<dyn Process> = match entry.process.as_str() {
+            "vpsde" => Arc::new(Vpsde::standard(spec.d)),
+            "cld" => Arc::new(Cld::standard(spec.d)),
+            "bdm" => {
+                let side = (spec.d as f64).sqrt() as usize;
+                Arc::new(Bdm::standard(side, side))
+            }
+            other => panic!("{other}"),
+        };
+        let oracle = GmmOracle::new(proc.clone(), spec.clone(), entry.kt);
+        for nfe in [20usize, 50] {
+            let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), nfe);
+            let plan = SamplerPlan::build(
+                proc.as_ref(),
+                &grid,
+                &PlanConfig::deterministic(2, entry.kt),
+            );
+            let mut rng = Rng::seed_from(5);
+            let out_net = sample_deterministic(proc.as_ref(), &plan, net as &dyn ScoreModel, n, &mut rng, false);
+            let mut rng = Rng::seed_from(5);
+            let out_oracle =
+                sample_deterministic(proc.as_ref(), &plan, &oracle, n, &mut rng, false);
+            t.row(vec![
+                entry.name.clone(),
+                nfe.to_string(),
+                format!("{:.3}", frechet_to_spec(&out_net.xs, &spec)),
+                format!("{:.3}", frechet_to_spec(&out_oracle.xs, &spec)),
+            ]);
+        }
+    }
+    t.emit("e2e_blobs");
+    println!("python was used only at build time; this binary ran the nets via PJRT.");
+}

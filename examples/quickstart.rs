@@ -1,0 +1,51 @@
+//! Quickstart: build a diffusion process, prepare a gDDIM plan (Stage I),
+//! sample with 20 NFE (Stage II), and score the result — the 60-second
+//! tour of the public API.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
+use gddim::data::presets;
+use gddim::diffusion::process::KtKind;
+use gddim::diffusion::{Cld, Process, TimeGrid};
+use gddim::math::rng::Rng;
+use gddim::metrics::coverage::coverage;
+use gddim::metrics::frechet::frechet_to_spec;
+use gddim::samplers::gddim::sample_deterministic;
+use gddim::score::oracle::GmmOracle;
+
+fn main() {
+    // 1. A diffusion model: critically-damped Langevin dynamics over 2-D data.
+    let proc = Arc::new(Cld::standard(2));
+
+    // 2. Data + its exact score (swap in a PJRT-backed net via
+    //    `gddim::runtime::NetScore` once `make artifacts` has run).
+    let spec = presets::gmm2d();
+    let oracle = GmmOracle::new(proc.clone(), spec.clone(), KtKind::R);
+
+    // 3. Stage I — offline: 20-step grid, multistep order 3, K_t = R_t.
+    let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 20);
+    let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(3, KtKind::R));
+    println!("Stage I done in {:.1} ms", plan.build_seconds * 1e3);
+
+    // 4. Stage II — online: 4096 samples in 20 score evaluations.
+    let mut rng = Rng::seed_from(0);
+    let out = sample_deterministic(proc.as_ref(), &plan, &oracle, 4096, &mut rng, false);
+
+    // 5. Quality report.
+    let fd = frechet_to_spec(&out.xs, &spec);
+    let cov = coverage(&out.xs, &spec);
+    println!(
+        "gDDIM on CLD: NFE={}  FD={fd:.4}  modes covered {}/{}  outliers {:.2}%",
+        out.nfe,
+        spec.n_modes() - cov.missing,
+        spec.n_modes(),
+        100.0 * cov.outliers
+    );
+    assert!(fd < 0.5, "quickstart quality regression");
+    println!("first samples: {:?}", &out.xs[..8.min(out.xs.len())]);
+}

@@ -1,0 +1,13 @@
+//! The batched sampling service under a Poisson workload — the serving
+//! deliverable's demo (`gddim serve` wraps the same code).
+//!
+//! ```sh
+//! cargo run --release --example serve_demo -- --requests 64 --rate 200
+//! ```
+
+use gddim::server::demo;
+use gddim::util::cli::Args;
+
+fn main() {
+    demo::run(&Args::from_env());
+}

@@ -1,0 +1,175 @@
+"""AOT export: train (or load cached) score nets, lower to HLO **text**,
+write `artifacts/*.hlo.txt` + `artifacts/manifest.json`.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` crate binds) rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+The manifest records, per model: file, dims, batch, K_t kind, process,
+dataset, network config, final training loss, and a **probe** (frozen
+input → expected ε output) that the rust integration test replays
+through PJRT to pin the cross-layer numerics.
+
+Exported function signature: `eps = f(u: f32[B, D], t: f32[]) → f32[B, D]`.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import score_eps
+from .train import train_model
+
+# (name, process, dataset, kt, hidden, blocks, steps)
+VARIANTS = [
+    ("vpsde_gmm2d", "vpsde", "gmm2d", "R", 128, 3, None),
+    ("cld_gmm2d_R", "cld", "gmm2d", "R", 128, 3, None),
+    ("cld_gmm2d_L", "cld", "gmm2d", "L", 128, 3, None),
+    ("vpsde_blobs8", "vpsde", "blobs8", "R", 256, 3, None),
+    ("bdm_blobs8", "bdm", "blobs8", "R", 256, 3, None),
+    ("cld_blobs8_R", "cld", "blobs8", "R", 256, 3, None),
+]
+
+BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big literals
+    # as `constant({...})`, which the old XLA text parser then silently
+    # fills with zeros — i.e. it would strip the trained weights out of
+    # the artifact. (Found the hard way; pinned by the probe check below
+    # and the rust integration test.)
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO text still contains elided constants"
+    return text
+
+
+def export_variant(out_dir, name, process, dataset, kt, hidden, blocks, steps):
+    params_path = os.path.join(out_dir, f"params_{name}.npz")
+    cfg = None
+    if os.path.exists(params_path):
+        print(f"[{name}] loading cached params")
+        blob = np.load(params_path, allow_pickle=True)
+        params = {k: jnp.asarray(blob[k]) for k in blob.files if k != "__cfg__"}
+        cfg_arr = blob["__cfg__"]
+        from .model import ScoreNetConfig
+
+        cfg = ScoreNetConfig(*[int(x) for x in cfg_arr])
+        losses = []
+    else:
+        print(f"[{name}] training ({steps} steps)…")
+        params, cfg, losses = train_model(
+            process, dataset, kt=kt, hidden=hidden, blocks=blocks, steps=steps
+        )
+        np.savez(
+            params_path,
+            __cfg__=np.asarray(list(cfg), dtype=np.int64),
+            **{k: np.asarray(v) for k, v in params.items()},
+        )
+
+    d = cfg.dim
+
+    # Export with the jnp reference ops (see model._IMPLS for why), after
+    # asserting pallas↔ref equivalence on a random batch.
+    rng0 = np.random.default_rng(99)
+    u_chk = jnp.asarray(rng0.standard_normal((32, d)).astype(np.float32))
+    a = np.asarray(score_eps(params, cfg, u_chk, jnp.float32(0.37), impl="pallas"))
+    b = np.asarray(score_eps(params, cfg, u_chk, jnp.float32(0.37), impl="ref"))
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+    def fn(u, t):
+        return (score_eps(params, cfg, u, t, impl="ref"),)
+
+    spec_u = jax.ShapeDtypeStruct((BATCH, d), jnp.float32)
+    spec_t = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(fn).lower(spec_u, spec_t)
+    hlo = to_hlo_text(lowered)
+    hlo_file = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, hlo_file), "w") as f:
+        f.write(hlo)
+
+    # Probe: deterministic input, jax-evaluated output (row 0 recorded).
+    rng = np.random.default_rng(1234)
+    u_probe = rng.standard_normal((BATCH, d)).astype(np.float32)
+    t_probe = np.float32(0.5)
+    eps_out = np.asarray(fn(jnp.asarray(u_probe), jnp.asarray(t_probe))[0])
+
+    entry = {
+        "file": hlo_file,
+        "process": process,
+        "dataset": dataset,
+        "kt": kt,
+        "dim_u": d,
+        "batch": BATCH,
+        "hidden": cfg.hidden,
+        "blocks": cfg.blocks,
+        "final_loss": float(np.mean(losses[-50:])) if losses else None,
+        "probe": {
+            "t": float(t_probe),
+            "u_row0": [float(x) for x in u_probe[0]],
+            "eps_row0": [float(x) for x in eps_out[0]],
+            "seed": 1234,
+        },
+    }
+    print(f"[{name}] exported {hlo_file} ({len(hlo)} chars)")
+    return entry
+
+
+def export_pallas_probe(out_dir):
+    """A single-Pallas-kernel artifact proving the pallas→HLO-text→PJRT
+    path end to end (xla_extension 0.5.1 handles exactly one interpret-
+    mode kernel per module — see model._IMPLS). The rust integration test
+    executes it and checks `silu(x@w+b)` numerically."""
+    from .kernels.fused_linear import fused_linear
+
+    w = jnp.asarray(np.linspace(-0.5, 0.5, 8 * 4, dtype=np.float32).reshape(8, 4))
+    b = jnp.asarray(np.linspace(0.0, 0.3, 4, dtype=np.float32))
+
+    def fn(x):
+        return (fused_linear(x, w, b, activation="silu"),)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4, 8), jnp.float32))
+    with open(os.path.join(out_dir, "pallas_probe.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    x = np.arange(32, dtype=np.float32).reshape(4, 8) * 0.1
+    y = np.asarray(fn(jnp.asarray(x))[0])
+    np.save(os.path.join(out_dir, "pallas_probe_expected.npy"), y)
+    with open(os.path.join(out_dir, "pallas_probe_expected.json"), "w") as f:
+        json.dump({"x_scale": 0.1, "y": y.reshape(-1).tolist()}, f)
+    print(f"exported pallas_probe.hlo.txt")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=int(os.environ.get("AOT_STEPS", "2000")))
+    ap.add_argument("--only", default=None, help="comma-separated variant names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    export_pallas_probe(args.out_dir)
+    manifest = {"models": {}, "batch": BATCH}
+    for name, process, dataset, kt, hidden, blocks, steps in VARIANTS:
+        if only and name not in only:
+            continue
+        manifest["models"][name] = export_variant(
+            args.out_dir, name, process, dataset, kt, hidden, blocks, steps or args.steps
+        )
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json with {len(manifest['models'])} models")
+
+
+if __name__ == "__main__":
+    main()

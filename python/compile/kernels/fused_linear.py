@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: fused tiled matmul + bias + SiLU.
+
+The score network's hot spot is a chain of dense layers; on TPU the right
+shape is an MXU-tiled matmul whose epilogue fuses the bias add and the
+SiLU activation so the activation tensor never round-trips to HBM
+(DESIGN.md §4 — this is the TPU rethink of the paper's cuBLAS+pointwise
+GPU chain).
+
+BlockSpec schedule: grid over (M/bm, N/bn, K/bk); A tiles (bm×bk) and
+B tiles (bk×bn) stream HBM→VMEM; the output block's index map ignores the
+K axis, so Pallas keeps it resident in VMEM across the K-reduction
+(accumulator), and the epilogue fuses bias + SiLU on the last K step.
+
+Everything is lowered with ``interpret=True``: the CPU PJRT client cannot
+execute Mosaic custom-calls; real-TPU numbers are *estimated* from the
+block shapes in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly defaults (128×128 systolic array; fp32 here).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _kernel(a_ref, b_ref, bias_ref, o_ref, *, n_k: int, activation: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out = o_ref[...] + bias_ref[...]
+        if activation == "silu":
+            out = out * jax.nn.sigmoid(out)
+        elif activation == "tanh":
+            out = jnp.tanh(out)
+        o_ref[...] = out
+
+
+def _tile(x: int, cap: int) -> int:
+    """Smallest power-of-two ≥ min(x, cap), at least 8."""
+    t = 8
+    while t < x and t < cap:
+        t *= 2
+    return min(t, cap)
+
+
+def _pad_to(x: int, b: int) -> int:
+    return ((x + b - 1) // b) * b
+
+
+def fused_linear(x, w, b, activation: str = "silu", bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """y = act(x @ w + b) with an MXU-tiled Pallas kernel.
+
+    x: (M, K), w: (K, N), b: (N,). Shapes need not be tile multiples;
+    inputs are zero-padded up and the result sliced back.
+
+    Differentiable: the forward pass is the Pallas kernel; the backward
+    pass is an analytic jnp VJP (`pl.program_id` has no JVP rule, and on
+    TPU one would hand-write the backward kernels anyway).
+    """
+    return _fused_linear_vjp(x, w, b, activation, bm, bn, bk)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fused_linear_vjp(x, w, b, activation, bm, bn, bk):
+    return _forward_pallas(x, w, b, activation, bm, bn, bk)
+
+
+def _fused_linear_fwd(x, w, b, activation, bm, bn, bk):
+    return _forward_pallas(x, w, b, activation, bm, bn, bk), (x, w, b)
+
+
+def _fused_linear_bwd(activation, bm, bn, bk, res, g):
+    x, w, b = res
+    z = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    if activation == "silu":
+        sig = jax.nn.sigmoid(z)
+        dz = g * sig * (1.0 + z * (1.0 - sig))
+    elif activation == "tanh":
+        dz = g * (1.0 - jnp.tanh(z) ** 2)
+    else:
+        dz = g
+    return dz @ w.T, x.T @ dz, dz.sum(axis=0)
+
+
+_fused_linear_vjp.defvjp(_fused_linear_fwd, _fused_linear_bwd)
+
+
+def _forward_pallas(x, w, b, activation, bm, bn, bk):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    assert b.shape == (n,)
+
+    bm_, bn_, bk_ = _tile(m, bm), _tile(n, bn), _tile(k, bk)
+    mp, np_, kp = _pad_to(m, bm_), _pad_to(n, bn_), _pad_to(k, bk_)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b.astype(jnp.float32), (0, np_ - n))[None, :]
+
+    n_k = kp // bk_
+    grid = (mp // bm_, np_ // bn_, n_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn_), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK, dtype_bytes=4) -> int:
+    """VMEM working-set estimate for one grid step (DESIGN.md §Perf):
+    A tile + B tile + out tile + bias row."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn + bn)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for every Pallas kernel — the CORE correctness signal
+(pytest asserts kernel == ref across a shape/activation sweep)."""
+
+import jax
+import jax.numpy as jnp
+
+from .time_embed import frequencies
+
+
+def fused_linear_ref(x, w, b, activation: str = "silu"):
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    if activation == "silu":
+        return y * jax.nn.sigmoid(y)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    return y
+
+
+def time_embed_ref(t, half: int = 16):
+    f = frequencies(half)[None, :]
+    phase = t.astype(jnp.float32)[:, None] * f
+    return jnp.concatenate([jnp.sin(phase), jnp.cos(phase)], axis=-1)
+
+
+def scale_shift_ref(h, scale, shift):
+    return h.astype(jnp.float32) * (1.0 + scale.astype(jnp.float32)) + shift.astype(jnp.float32)

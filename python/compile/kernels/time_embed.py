@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: Fourier time embedding.
+
+`emb(t) = [sin(t·f₀…), cos(t·f₀…)]` with log-spaced frequencies — the
+standard diffusion time-conditioning features, fused into one elementwise
+VMEM pass (the tensor is tiny; the point is that it lowers into the same
+HLO module as the rest of the network).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def frequencies(half: int, max_period: float = 100.0):
+    """Log-spaced angular frequencies, shape (half,)."""
+    exps = jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1)
+    return (2.0 * jnp.pi) / (max_period ** exps)
+
+
+def _kernel(t_ref, f_ref, o_ref, *, half: int):
+    t = t_ref[...]  # (B, 1)
+    f = f_ref[...]  # (1, half)
+    phase = t * f
+    o_ref[...] = jnp.concatenate([jnp.sin(phase), jnp.cos(phase)], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("half",))
+def time_embed(t, half: int = 16):
+    """t: (B,) → (B, 2·half) Fourier features."""
+    b = t.shape[0]
+    f = frequencies(half)[None, :]
+    return pl.pallas_call(
+        functools.partial(_kernel, half=half),
+        out_shape=jax.ShapeDtypeStruct((b, 2 * half), jnp.float32),
+        interpret=True,
+    )(t.astype(jnp.float32)[:, None], f)

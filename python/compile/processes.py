@@ -1,0 +1,174 @@
+"""Forward-process kernels for training (build-time only).
+
+Each process provides `perturb(x0, t, key, kt)` → `(u_t, eps)` with
+`u_t = Ψ(t,0)·lift(x0) + K_t ε`, matching the rust Stage-I definitions:
+
+* VPSDE: closed form (same β₀/β₁/T as `rust/src/diffusion/vpsde.rs`).
+* CLD: Ψ/Σ/R/L read from `configs/cld_tables.json` (exported by
+  `gddim gen-configs` — the rust coefficient engine is the single source
+  of truth; python only interpolates).
+* BDM: closed-form cosine + blur schedule (same formulas as
+  `rust/src/diffusion/bdm.rs`).
+"""
+
+import json
+import os
+
+import numpy as np
+
+CONFIG_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "configs")
+
+
+# ---------------------------------------------------------------- VPSDE
+class Vpsde:
+    name = "vpsde"
+
+    def __init__(self, d, beta0=0.1, beta1=20.0, t_max=1.0, t_min=1e-3):
+        self.d = d
+        self.dim_u = d
+        self.beta0, self.beta1 = beta0, beta1
+        self.t_max, self.t_min = t_max, t_min
+
+    def alpha(self, t):
+        return np.exp(-(self.beta0 * t + 0.5 * (self.beta1 - self.beta0) * t * t))
+
+    def perturb(self, x0, t, rng, kt="R"):
+        # K_t = sqrt(1-α) I for every kind (isotropic).
+        a = self.alpha(t)[:, None]
+        eps = rng.standard_normal(x0.shape).astype(np.float32)
+        u_t = np.sqrt(a) * x0 + np.sqrt(1.0 - a) * eps
+        return u_t.astype(np.float32), eps
+
+
+# ------------------------------------------------------------------ CLD
+class Cld:
+    name = "cld"
+
+    def __init__(self, d):
+        self.d = d
+        self.dim_u = 2 * d
+        path = os.path.join(CONFIG_DIR, "cld_tables.json")
+        with open(path) as f:
+            tab = json.load(f)
+        rows = np.asarray(tab["rows"], dtype=np.float64)
+        self.ts = rows[:, 0]
+        self.psi = rows[:, 1:5]      # (a,b,c,d)
+        self.sigma = rows[:, 5:8]    # (xx,xv,vv)
+        self.r = rows[:, 8:12]       # (a,b,c,d)
+        self.l = rows[:, 12:15]      # (l11,l21,l22)
+        self.gamma0 = tab["gamma0"]
+        self.mass = tab["mass"]
+        self.t_max, self.t_min = float(self.ts[-1]), 1e-3
+
+    def _interp(self, table, t):
+        out = np.empty((len(t), table.shape[1]))
+        for j in range(table.shape[1]):
+            out[:, j] = np.interp(t, self.ts, table[:, j])
+        return out
+
+    def perturb(self, x0, t, rng, kt="R"):
+        b, d = x0.shape
+        psi = self._interp(self.psi, t)  # (B,4)
+        # mean = Ψ(t,0) [x0; 0] → x-channel a·x0, v-channel c·x0
+        mean_x = psi[:, 0:1] * x0
+        mean_v = psi[:, 2:3] * x0
+        if kt == "R":
+            k = self._interp(self.r, t)  # (a,b,c,d)
+            ka, kb, kc, kd = k[:, 0:1], k[:, 1:2], k[:, 2:3], k[:, 3:4]
+        else:  # L (lower triangular)
+            k = self._interp(self.l, t)
+            ka, kb, kc, kd = k[:, 0:1], np.zeros((b, 1)), k[:, 1:2], k[:, 2:3]
+        ex = rng.standard_normal((b, d)).astype(np.float32)
+        ev = rng.standard_normal((b, d)).astype(np.float32)
+        u_x = mean_x + ka * ex + kb * ev
+        u_v = mean_v + kc * ex + kd * ev
+        u = np.concatenate([u_x, u_v], axis=1).astype(np.float32)
+        eps = np.concatenate([ex, ev], axis=1)
+        return u, eps
+
+
+# ------------------------------------------------------------------ BDM
+class Bdm:
+    name = "bdm"
+
+    def __init__(self, h, w, tau_max=0.5, cosine_s=0.008, t_max=1.0, t_min=1e-3):
+        self.h, self.w = h, w
+        self.d = h * w
+        self.dim_u = h * w
+        self.tau_max, self.cosine_s = tau_max, cosine_s
+        self.t_max, self.t_min = t_max, t_min
+        # Orthonormal DCT-II matrices (same as rust/src/math/dct.rs).
+        self.ch = _dct_matrix(h)
+        self.cw = _dct_matrix(w)
+        fh = (np.pi * np.arange(h) / h) ** 2
+        fw = (np.pi * np.arange(w) / w) ** 2
+        self.lam = (fh[:, None] + fw[None, :]).reshape(-1)
+
+    def _theta(self, t):
+        s = self.cosine_s
+        raw = 0.5 * np.pi * (t / self.t_max + s) / (1.0 + s)
+        return np.minimum(raw, 0.5 * np.pi - 1e-2)
+
+    def alphabar(self, t):
+        th0 = self._theta(np.zeros_like(t))
+        return (np.cos(self._theta(t)) / np.cos(th0)) ** 2
+
+    def tau(self, t):
+        return self.tau_max * np.sin(0.5 * np.pi * t / self.t_max) ** 2
+
+    def to_freq(self, x):
+        img = x.reshape(-1, self.h, self.w)
+        return np.einsum("ij,bjk,lk->bil", self.ch, img, self.cw).reshape(-1, self.d)
+
+    def perturb(self, x0, t, rng, kt="R"):
+        # State = DCT spectrum; α_{t,k} = √ᾱ·exp(−λ_k τ), σ² = 1−ᾱ.
+        y0 = self.to_freq(x0)
+        ab = self.alphabar(t)[:, None]
+        tau = self.tau(t)[:, None]
+        alpha = np.sqrt(ab) * np.exp(-self.lam[None, :] * tau)
+        eps = rng.standard_normal(y0.shape).astype(np.float32)
+        u_t = alpha * y0 + np.sqrt(1.0 - ab) * eps
+        return u_t.astype(np.float32), eps
+
+
+def _dct_matrix(n):
+    c = np.zeros((n, n))
+    for k in range(n):
+        s = np.sqrt(1.0 / n) if k == 0 else np.sqrt(2.0 / n)
+        c[k] = s * np.cos(np.pi * (np.arange(n) + 0.5) * k / n)
+    return c
+
+
+# -------------------------------------------------------------- Dataset
+class GmmData:
+    """Sampler for the shared `configs/datasets.json` specs."""
+
+    def __init__(self, name):
+        path = os.path.join(CONFIG_DIR, "datasets.json")
+        with open(path) as f:
+            specs = json.load(f)
+        spec = specs[name]
+        self.name = name
+        self.means = np.asarray(spec["means"], dtype=np.float32)
+        self.weights = np.asarray(spec["weights"], dtype=np.float64)
+        self.var = float(spec["var"])
+        self.d = self.means.shape[1]
+
+    def sample(self, n, rng):
+        idx = rng.choice(len(self.means), size=n, p=self.weights / self.weights.sum())
+        x = self.means[idx] + np.sqrt(self.var) * rng.standard_normal(
+            (n, self.d)
+        ).astype(np.float32)
+        return x.astype(np.float32)
+
+
+def build_process(name, d):
+    if name == "vpsde":
+        return Vpsde(d)
+    if name == "cld":
+        return Cld(d)
+    if name == "bdm":
+        side = int(round(d ** 0.5))
+        assert side * side == d
+        return Bdm(side, side)
+    raise ValueError(name)

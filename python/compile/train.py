@@ -1,0 +1,69 @@
+"""Build-time training of the score networks (DSM/HSM, paper Eq. 5/77).
+
+Small MLPs on synthetic mixtures — minutes on CPU. Python never runs at
+request time; `aot.py` calls `train_model` once per exported variant and
+caches parameters under `artifacts/params_<name>.npz`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import ScoreNetConfig, dsm_loss, init_params, score_eps
+from .processes import GmmData, build_process
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    new_params, new_m, new_v = {}, {}, {}
+    for k in params:
+        new_m[k] = b1 * m[k] + (1 - b1) * grads[k]
+        new_v[k] = b2 * v[k] + (1 - b2) * grads[k] ** 2
+        mhat = new_m[k] / (1 - b1 ** step)
+        vhat = new_v[k] / (1 - b2 ** step)
+        new_params[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_params, new_m, new_v
+
+
+def train_model(
+    process_name: str,
+    dataset_name: str,
+    kt: str = "R",
+    hidden: int = 128,
+    blocks: int = 3,
+    steps: int = 2000,
+    batch: int = 512,
+    lr: float = 2e-3,
+    seed: int = 0,
+    log_every: int = 500,
+):
+    """Train ε_θ for (process, dataset, K_t); returns (params, cfg, losses)."""
+    data = GmmData(dataset_name)
+    proc = build_process(process_name, data.d)
+    cfg = ScoreNetConfig(dim=proc.dim_u, hidden=hidden, blocks=blocks)
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, cfg)
+    m = {k: jnp.zeros_like(p) for k, p in params.items()}
+    v = {k: jnp.zeros_like(p) for k, p in params.items()}
+    rng = np.random.default_rng(seed + 1)
+
+    loss_grad = jax.jit(jax.value_and_grad(functools.partial(dsm_loss, cfg=cfg)))
+    losses = []
+    for step in range(1, steps + 1):
+        x0 = data.sample(batch, rng)
+        t = rng.uniform(proc.t_min, proc.t_max, size=batch).astype(np.float32)
+        u_t, eps = proc.perturb(x0, t, rng, kt=kt)
+        loss, grads = loss_grad(params, batch=(jnp.asarray(u_t), jnp.asarray(t), jnp.asarray(eps)))
+        # Cosine LR decay.
+        cur_lr = lr * 0.5 * (1.0 + np.cos(np.pi * step / steps))
+        params, m, v = adam_update(params, grads, m, v, step, cur_lr)
+        losses.append(float(loss))
+        if log_every and step % log_every == 0:
+            print(f"  [{process_name}/{dataset_name}/K={kt}] step {step}/{steps} loss {loss:.4f}")
+    return params, cfg, losses
+
+
+def eval_eps(params, cfg, u, t):
+    """Convenience wrapper used by aot.py's probe recording."""
+    return np.asarray(score_eps(params, cfg, jnp.asarray(u), jnp.asarray(t)))

@@ -1,0 +1,76 @@
+"""Kernel-vs-reference sweeps — the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels.fused_linear import fused_linear, vmem_bytes
+from compile.kernels.ref import fused_linear_ref, scale_shift_ref, time_embed_ref
+from compile.kernels.scale_shift import scale_shift
+from compile.kernels.time_embed import time_embed
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+# hypothesis-style sweep (the hypothesis package is not installed; the
+# grid covers the same boundary cases: non-tile-multiples, tiny dims,
+# tall/wide, every activation).
+SHAPES = [
+    (1, 1, 1),
+    (2, 3, 5),
+    (8, 8, 8),
+    (16, 32, 8),
+    (7, 130, 33),
+    (256, 64, 128),
+    (130, 20, 257),
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("act", ["silu", "none", "tanh"])
+def test_fused_linear_matches_ref(m, k, n, act):
+    x, w, b = rand(m, k), rand(k, n), rand(n)
+    got = np.asarray(fused_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), activation=act))
+    want = np.asarray(fused_linear_ref(x, w, b, activation=act))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_fused_linear_large_k_accumulation():
+    # K spans many tiles: the in-VMEM accumulator must not lose terms.
+    x, w, b = rand(4, 1024), rand(1024, 8), rand(8)
+    got = np.asarray(fused_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), activation="none"))
+    want = x @ w + b
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,half", [(1, 4), (7, 16), (64, 16), (256, 32)])
+def test_time_embed_matches_ref(b, half):
+    t = RNG.uniform(0.0, 1.0, size=b).astype(np.float32)
+    got = np.asarray(time_embed(jnp.asarray(t), half=half))
+    want = np.asarray(time_embed_ref(t, half=half))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    assert got.shape == (b, 2 * half)
+
+
+def test_time_embed_distinguishes_times():
+    t = np.asarray([0.0, 0.5, 1.0], dtype=np.float32)
+    e = np.asarray(time_embed(jnp.asarray(t)))
+    assert np.linalg.norm(e[0] - e[1]) > 0.1
+    assert np.linalg.norm(e[1] - e[2]) > 0.1
+
+
+@pytest.mark.parametrize("shape", [(1, 1), (5, 7), (64, 128)])
+def test_scale_shift_matches_ref(shape):
+    h, s, b = rand(*shape), rand(*shape), rand(*shape)
+    got = np.asarray(scale_shift(jnp.asarray(h), jnp.asarray(s), jnp.asarray(b)))
+    want = np.asarray(scale_shift_ref(h, s, b))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_vmem_estimate_fits_tpu_budget():
+    # DESIGN.md §Perf: default tiles must fit a ~16 MiB VMEM comfortably.
+    assert vmem_bytes() < 4 * 1024 * 1024

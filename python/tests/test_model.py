@@ -1,0 +1,56 @@
+"""Score-network shape/behaviour tests (L2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import ScoreNetConfig, dsm_loss, init_params, score_eps
+
+
+def make(dim=4, hidden=32, blocks=2):
+    cfg = ScoreNetConfig(dim=dim, hidden=hidden, blocks=blocks)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def test_output_shape():
+    params, cfg = make(dim=4)
+    u = jnp.zeros((8, 4))
+    out = score_eps(params, cfg, u, jnp.float32(0.3))
+    assert out.shape == (8, 4)
+
+
+def test_deterministic():
+    params, cfg = make()
+    u = jax.random.normal(jax.random.PRNGKey(1), (5, 4))
+    a = score_eps(params, cfg, u, jnp.float32(0.7))
+    b = score_eps(params, cfg, u, jnp.float32(0.7))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_time_conditioning_matters():
+    params, cfg = make()
+    # Need a trained-ish net? No: FiLM layers are randomly initialized, so
+    # different t must change the output through the embedding path.
+    u = jax.random.normal(jax.random.PRNGKey(2), (5, 4))
+    a = np.asarray(score_eps(params, cfg, u, jnp.float32(0.1)))
+    b = np.asarray(score_eps(params, cfg, u, jnp.float32(0.9)))
+    assert np.abs(a - b).max() > 1e-7
+
+
+def test_head_starts_near_zero():
+    params, cfg = make()
+    u = 3.0 * jax.random.normal(jax.random.PRNGKey(3), (16, 4))
+    out = np.asarray(score_eps(params, cfg, u, jnp.float32(0.5)))
+    assert np.abs(out).max() < 0.5, "near-zero init head"
+
+
+def test_loss_differentiable_and_finite():
+    params, cfg = make()
+    u = jax.random.normal(jax.random.PRNGKey(4), (8, 4))
+    t = jnp.full((8,), 0.4)
+    eps = jax.random.normal(jax.random.PRNGKey(5), (8, 4))
+    loss, grads = jax.value_and_grad(lambda p: dsm_loss(p, cfg, (u, t, eps)))(params)
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(g)).all() for g in grads.values())
+    assert any(np.abs(np.asarray(g)).max() > 0 for g in grads.values())

@@ -1,0 +1,107 @@
+"""Training + AOT export smoke tests (fast settings)."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+CONFIGS = os.path.join(os.path.dirname(__file__), "..", "..", "configs")
+
+needs_configs = pytest.mark.skipif(
+    not os.path.exists(os.path.join(CONFIGS, "datasets.json")),
+    reason="run `gddim gen-configs` first",
+)
+
+
+@needs_configs
+def test_short_training_reduces_loss():
+    from compile.train import train_model
+
+    _params, _cfg, losses = train_model(
+        "vpsde", "gmm2d", steps=150, batch=256, hidden=64, blocks=2, log_every=0
+    )
+    first = np.mean(losses[:20])
+    last = np.mean(losses[-20:])
+    assert last < 0.8 * first, f"loss did not drop: {first} -> {last}"
+
+
+@needs_configs
+def test_cld_tables_consistent():
+    # R Rᵀ must equal Σ in the exported tables (rust guarantees it by
+    # construction; this guards the JSON plumbing).
+    from compile.processes import Cld
+
+    p = Cld(2)
+    for i in [0, 500, 1000, 2000]:
+        r = p.r[i]
+        rrt = np.array(
+            [
+                r[0] * r[0] + r[1] * r[1],
+                r[0] * r[2] + r[1] * r[3],
+                r[2] * r[2] + r[3] * r[3],
+            ]
+        )
+        np.testing.assert_allclose(rrt, p.sigma[i], rtol=1e-6, atol=1e-9)
+
+
+@needs_configs
+def test_perturb_statistics_vpsde():
+    # E[u_t] = √α x0, Var = 1−α.
+    from compile.processes import Vpsde
+
+    p = Vpsde(1)
+    rng = np.random.default_rng(0)
+    x0 = np.full((20000, 1), 2.0, dtype=np.float32)
+    t = np.full(20000, 0.5, dtype=np.float32)
+    u, _eps = p.perturb(x0, t, rng)
+    a = p.alpha(np.array([0.5]))[0]
+    assert abs(u.mean() - np.sqrt(a) * 2.0) < 0.02
+    assert abs(u.var() - (1 - a)) < 0.02
+
+
+@needs_configs
+def test_perturb_statistics_cld_matches_sigma():
+    from compile.processes import Cld
+
+    p = Cld(1)
+    rng = np.random.default_rng(1)
+    x0 = np.zeros((40000, 1), dtype=np.float32)
+    t = np.full(40000, 0.3, dtype=np.float32)
+    for kt in ["R", "L"]:
+        u, _ = p.perturb(x0, t, rng, kt=kt)
+        sig = p._interp(p.sigma, np.array([0.3]))[0]
+        cov_xx = np.var(u[:, 0])
+        cov_vv = np.var(u[:, 1])
+        cov_xv = np.mean(u[:, 0] * u[:, 1])
+        assert abs(cov_xx - sig[0]) < 0.01, kt
+        assert abs(cov_xv - sig[1]) < 0.01, kt
+        assert abs(cov_vv - sig[2]) < 0.01, kt
+
+
+@needs_configs
+def test_aot_exports_loadable_hlo(tmp_path):
+    # Fast end-to-end: train tiny, export, re-parse HLO text with jax's
+    # own XlaComputation parser (round-trip sanity).
+    env = dict(os.environ, AOT_STEPS="30")
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(tmp_path),
+            "--only",
+            "vpsde_gmm2d",
+            "--steps",
+            "30",
+        ],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env=env,
+        check=True,
+    )
+    hlo = (tmp_path / "vpsde_gmm2d.hlo.txt").read_text()
+    assert "HloModule" in hlo
+    manifest = (tmp_path / "manifest.json").read_text()
+    assert "probe" in manifest

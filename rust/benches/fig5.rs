@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig5` — regenerates the paper's fig5 (see
+//! DESIGN.md §5 and EXPERIMENTS.md). Pass --full for paper-scale sample
+//! counts; the default uses --fast sizes so the whole battery runs in CI
+//! time. Full-scale runs: `gddim exp fig5`.
+use gddim::util::cli::Args;
+
+fn main() {
+    let mut args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    if !args.has("full") {
+        args.flags.insert("fast".into(), "true".into());
+    }
+    gddim::exp::run("fig5", &args);
+}

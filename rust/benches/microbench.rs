@@ -1,0 +1,111 @@
+//! `cargo bench --bench microbench` — hot-path microbenchmarks feeding
+//! the §Perf pass: Stage-I plan build time (paper App. C.3: "within
+//! 1 min"), per-step sampler cost with score calls excluded (coordinator
+//! overhead), oracle score throughput, Fréchet metric cost.
+
+use std::sync::Arc;
+
+use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
+use gddim::data::presets;
+use gddim::diffusion::process::KtKind;
+use gddim::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
+use gddim::math::rng::Rng;
+use gddim::score::model::ScoreModel;
+use gddim::score::oracle::GmmOracle;
+use gddim::util::bench::{time_until, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Microbench (per-iteration wall time)",
+        &["what", "mean", "p50", "p99"],
+    );
+
+    // Stage-I plan construction (the paper's "within 1 min" budget).
+    for (name, proc) in [
+        ("plan vpsde N=50 q=3", Arc::new(Vpsde::standard(2)) as Arc<dyn Process>),
+        ("plan cld   N=50 q=3", Arc::new(Cld::standard(2))),
+        ("plan bdm   N=50 q=3", Arc::new(Bdm::standard(8, 8))),
+    ] {
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 50);
+        let s = time_until(0.5, 50, || {
+            let _ = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(3, KtKind::R));
+        });
+        t.row(vec![name.into(), fmt(s.mean), fmt(s.p50), fmt(s.p99)]);
+    }
+
+    // Stochastic plan (adds the Ψ̂/P ODE solves).
+    {
+        let proc = Cld::standard(2);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 50);
+        let s = time_until(0.5, 20, || {
+            let _ = SamplerPlan::build(&proc, &grid, &PlanConfig::stochastic(1.0));
+        });
+        t.row(vec!["plan cld stochastic λ=1 N=50".into(), fmt(s.mean), fmt(s.p50), fmt(s.p99)]);
+    }
+
+    // Oracle score throughput (batch 1024, 8 modes, 2-D CLD).
+    {
+        let proc = Arc::new(Cld::standard(2));
+        let oracle = GmmOracle::new(proc.clone(), presets::gmm2d(), KtKind::R);
+        let mut rng = Rng::seed_from(1);
+        let us: Vec<f64> = (0..1024 * 4).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0; us.len()];
+        let s = time_until(0.5, 10_000, || oracle.eps_batch(0.5, &us, &mut out));
+        t.row(vec!["oracle eps (1024×4, 8 modes)".into(), fmt(s.mean), fmt(s.p50), fmt(s.p99)]);
+    }
+
+    // Coordinator overhead: gDDIM step arithmetic with a free score.
+    {
+        struct ZeroScore(usize);
+        impl ScoreModel for ZeroScore {
+            fn dim_u(&self) -> usize {
+                self.0
+            }
+            fn kt_kind(&self) -> KtKind {
+                KtKind::R
+            }
+            fn eps_batch(&self, _t: f64, _us: &[f64], out: &mut [f64]) {
+                out.iter_mut().for_each(|x| *x = 0.0);
+            }
+        }
+        let proc = Cld::standard(2);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 50);
+        let plan = SamplerPlan::build(&proc, &grid, &PlanConfig::deterministic(3, KtKind::R));
+        let model = ZeroScore(4);
+        let s = time_until(0.5, 1000, || {
+            let mut rng = Rng::seed_from(2);
+            let _ = gddim::samplers::gddim::sample_deterministic(
+                &proc, &plan, &model, 1024, &mut rng, false,
+            );
+        });
+        t.row(vec![
+            "gDDIM 50 steps × 1024 samples (zero score) — L3 overhead".into(),
+            fmt(s.mean),
+            fmt(s.p50),
+            fmt(s.p99),
+        ]);
+    }
+
+    // Fréchet metric on 64-dim data.
+    {
+        let spec = presets::blobs8();
+        let mut rng = Rng::seed_from(3);
+        let xs = spec.sample(2000, &mut rng);
+        let s = time_until(0.5, 200, || {
+            let _ = gddim::metrics::frechet::frechet_to_spec(&xs, &spec);
+        });
+        t.row(vec!["frechet (2000×64)".into(), fmt(s.mean), fmt(s.p50), fmt(s.p99)]);
+    }
+
+    t.emit("microbench");
+}
+
+fn fmt(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}

@@ -1,0 +1,63 @@
+//! `cargo bench --bench serving` — batched sampling service throughput &
+//! latency under a Poisson workload (the L3 deliverable's headline bench).
+//! Reports batch occupancy, samples/s, and latency percentiles at several
+//! arrival rates, plus a batching on/off comparison.
+
+use std::time::Duration;
+
+use gddim::server::batcher::BatcherConfig;
+use gddim::server::request::{GenRequest, PlanKey};
+use gddim::server::router::{oracle_factory, Router};
+use gddim::util::bench::Table;
+use gddim::util::cli::Args;
+use gddim::workload::{ClosedLoop, WorkloadSpec};
+
+fn run_once(rate: f64, max_wait_ms: u64, n_requests: usize, samples: usize) -> (f64, f64, f64, f64) {
+    let router = Router::new(
+        4,
+        BatcherConfig { max_batch: 4096, max_wait: Duration::from_millis(max_wait_ms) },
+        oracle_factory(),
+    );
+    let spec = WorkloadSpec {
+        n_requests,
+        samples_per_request: samples,
+        rate_per_sec: rate,
+        keys: vec![PlanKey::gddim("cld", "gmm2d", 20, 2)],
+        seed: 7,
+    };
+    let _ = ClosedLoop::new(spec).drive(&router, |id, key, n, seed| GenRequest {
+        id,
+        n,
+        key: key.clone(),
+        seed,
+    });
+    let report = router.metrics().report();
+    let lat = report.latency.as_ref().unwrap();
+    let out = (report.samples_per_sec, lat.p50, lat.p99, report.mean_batch_requests);
+    router.shutdown();
+    out
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let n_requests = args.get_usize("requests", 48);
+    let samples = args.get_usize("samples", 64);
+    let mut t = Table::new(
+        "Serving: Poisson workload on the batched sampler (gDDIM CLD NFE=20)",
+        &["rate(req/s)", "batching", "samples/s", "p50(s)", "p99(s)", "mean batch"],
+    );
+    for rate in [100.0, 400.0, f64::INFINITY] {
+        for (label, wait) in [("off (1µs)", 0u64), ("on (5ms)", 5)] {
+            let (tput, p50, p99, mb) = run_once(rate, wait, n_requests, samples);
+            t.row(vec![
+                if rate.is_finite() { format!("{rate:.0}") } else { "burst".into() },
+                label.into(),
+                format!("{tput:.0}"),
+                format!("{p50:.4}"),
+                format!("{p99:.4}"),
+                format!("{mb:.1}"),
+            ]);
+        }
+    }
+    t.emit("serving");
+}

@@ -1,0 +1,161 @@
+//! Quadrature and ODE integration lifted to [`LinOp`]-valued functions.
+//!
+//! All coefficient operators of one process share a structure (scalar /
+//! diag / 2×2 block), so we flatten to a coefficient vector, reuse the
+//! scalar machinery, and re-wrap.
+
+use std::sync::Arc;
+
+use crate::math::linop::LinOp;
+use crate::math::mat2::Mat2;
+use crate::math::ode::{rk4_step, Rk4Scratch};
+use crate::math::quad::integrate_gl_vec;
+
+/// Flatten a LinOp into its coefficient vector.
+pub fn flatten(op: &LinOp) -> Vec<f64> {
+    match op {
+        LinOp::Scalar(s) => vec![*s],
+        LinOp::Diag(d) => d.as_ref().clone(),
+        LinOp::Block2(m) => m.to_array().to_vec(),
+    }
+}
+
+/// Rebuild a LinOp with the same structure as `like` from coefficients.
+pub fn unflatten(like: &LinOp, v: &[f64]) -> LinOp {
+    match like {
+        LinOp::Scalar(_) => LinOp::Scalar(v[0]),
+        LinOp::Diag(_) => LinOp::Diag(Arc::new(v.to_vec())),
+        LinOp::Block2(_) => LinOp::Block2(Mat2::from_array([v[0], v[1], v[2], v[3]])),
+    }
+}
+
+/// `∫_a^b f(τ) dτ` for a LinOp-valued integrand with `n`-point
+/// Gauss–Legendre (works with a > b; orientation in the affine map).
+pub fn integrate_linop<F: Fn(f64) -> LinOp>(f: F, a: f64, b: f64, n: usize) -> LinOp {
+    let probe = f(0.5 * (a + b));
+    let k = flatten(&probe).len();
+    let mut out = vec![0.0; k];
+    integrate_gl_vec(
+        |t, buf: &mut [f64]| {
+            let v = flatten(&f(t));
+            buf.copy_from_slice(&v);
+        },
+        a,
+        b,
+        n,
+        &mut out,
+    );
+    unflatten(&probe, &out)
+}
+
+/// Composite Gauss–Legendre for LinOp integrands with a quadratic node
+/// concentration toward the *lower* endpoint — the Type-II integrands
+/// carry `K_τ^{-T} ~ (1−α_τ)^{-1/2}`-style behaviour near `t_min`, where
+/// plain GL converges slowly. `pieces = 1` reduces to plain GL.
+pub fn integrate_linop_composite<F: Fn(f64) -> LinOp>(
+    f: F,
+    a: f64,
+    b: f64,
+    n: usize,
+    pieces: usize,
+) -> LinOp {
+    if pieces <= 1 {
+        return integrate_linop(f, a, b, n);
+    }
+    let (lo, hi, sign) = if a < b { (a, b, 1.0) } else { (b, a, -1.0) };
+    let mut total: Option<LinOp> = None;
+    for k in 0..pieces {
+        // Quadratic spacing: segment edges at lo + (hi−lo)·(k/p)².
+        let x0 = lo + (hi - lo) * (k as f64 / pieces as f64).powi(2);
+        let x1 = lo + (hi - lo) * ((k + 1) as f64 / pieces as f64).powi(2);
+        let seg = integrate_linop(&f, x0, x1, n);
+        total = Some(match total {
+            None => seg,
+            Some(t) => t.add(&seg),
+        });
+    }
+    total.unwrap().scale(sign)
+}
+
+/// Solve the matrix ODE `dY/dτ = rhs(τ, Y)` from `t0` to `t1` (either
+/// direction) with `nsteps` RK4 steps, where `Y` is LinOp-structured.
+pub fn solve_linop_ode<F: Fn(f64, &LinOp) -> LinOp>(
+    rhs: F,
+    t0: f64,
+    t1: f64,
+    nsteps: usize,
+    y0: LinOp,
+) -> LinOp {
+    let proto = y0.clone();
+    let mut y = flatten(&y0);
+    let mut scratch = Rk4Scratch::default();
+    let h = (t1 - t0) / nsteps as f64;
+    let mut f = |t: f64, y: &[f64], dy: &mut [f64]| {
+        let d = rhs(t, &unflatten(&proto, y));
+        dy.copy_from_slice(&flatten(&d));
+    };
+    let mut t = t0;
+    for _ in 0..nsteps {
+        rk4_step(&mut f, t, h, &mut y, &mut scratch);
+        t += h;
+    }
+    unflatten(&proto, &y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::close;
+
+    #[test]
+    fn flatten_roundtrip() {
+        let ops = [
+            LinOp::Scalar(2.5),
+            LinOp::diag(vec![1.0, -2.0]),
+            LinOp::Block2(Mat2::new(1.0, 2.0, 3.0, 4.0)),
+        ];
+        for op in &ops {
+            let back = unflatten(op, &flatten(op));
+            assert!(op.dist(&back) < 1e-15);
+        }
+    }
+
+    #[test]
+    fn integrate_scalar_linop() {
+        // ∫_0^1 t² I dt = I/3.
+        let r = integrate_linop(|t| LinOp::Scalar(t * t), 0.0, 1.0, 16);
+        assert!(r.dist(&LinOp::Scalar(1.0 / 3.0)) < 1e-12);
+    }
+
+    #[test]
+    fn integrate_block_linop_reversed() {
+        // Reverse-time orientation: ∫_1^0 M t dt = −M/2.
+        let m = Mat2::new(1.0, 0.0, 2.0, -1.0);
+        let r = integrate_linop(|t| LinOp::Block2(m.scale(t)), 1.0, 0.0, 16);
+        assert!(r.dist(&LinOp::Block2(m.scale(-0.5))) < 1e-12);
+    }
+
+    #[test]
+    fn solve_matrix_exponential() {
+        // dY/dt = A Y, Y(0)=I -> Y(1) = expm(A).
+        let a = Mat2::new(0.3, -0.2, 0.5, 0.1);
+        let y = solve_linop_ode(
+            |_t, y| LinOp::Block2(a).matmul(y),
+            0.0,
+            1.0,
+            200,
+            LinOp::Block2(Mat2::IDENT),
+        );
+        assert!(y.dist(&LinOp::Block2(a.expm())) < 1e-9);
+    }
+
+    #[test]
+    fn solve_backwards() {
+        // dy/dt = y integrated from 1 to 0: y(0) = y(1)·e^{-1}.
+        let y = solve_linop_ode(|_t, y| y.clone(), 1.0, 0.0, 200, LinOp::Scalar(3.0));
+        match y {
+            LinOp::Scalar(v) => assert!(close(v, 3.0 * (-1.0f64).exp(), 1e-9, 0.0)),
+            _ => unreachable!(),
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Stage I — offline preparation of gDDIM (paper App. C.3 / C.4).
+//!
+//! Everything a sampler run needs is computed **once** per
+//! (process, time grid, K_t, q, λ) and packaged as a [`SamplerPlan`]:
+//!
+//! * Type-I quantities (matrix ODE solutions): `R_t` comes from the
+//!   [`crate::diffusion::Process`]; `Ψ̂(t,s)` (transition of
+//!   `F̂ = F + (1+λ²)/2·GGᵀΣ⁻¹`) and the injected-noise covariance
+//!   `P_st` (Eq. 23) are integrated per grid interval here.
+//! * Type-II quantities (definite integrals): the exponential-integrator
+//!   multistep predictor/corrector coefficients `ᵖC_ij` (Eq. 19b) and
+//!   `ᶜC_ij` (Eq. 46), evaluated with Gauss–Legendre quadrature.
+//!
+//! The plan is reused across every batch with the same discretization —
+//! "calculated once and used everywhere" (App. C.3).
+
+pub mod plan;
+pub mod linop_integrate;
+
+pub use plan::{PlanConfig, SamplerPlan};

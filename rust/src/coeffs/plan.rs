@@ -1,0 +1,382 @@
+//! [`SamplerPlan`]: the precomputed per-run coefficient bundle
+//! (paper App. C.4, "Stage I: Offline preparation of gDDIM").
+//!
+//! Step indexing: the grid is ascending (`t_0 = ε … t_N = T`); step `i`
+//! (for `i = N, N−1, …, 1`) updates the state from `t_i` to `t_{i−1}`.
+//! Arrays below are indexed by `i−1 ∈ [0, N)`.
+
+use crate::diffusion::process::{KtKind, Process};
+use crate::diffusion::schedule::TimeGrid;
+use crate::coeffs::linop_integrate::{integrate_linop_composite, solve_linop_ode};
+use crate::math::interp::lagrange_basis;
+use crate::math::linop::LinOp;
+
+/// Configuration of a sampling run's coefficients.
+#[derive(Clone, Debug)]
+pub struct PlanConfig {
+    /// Multistep order q (q = 1 is the plain exponential integrator /
+    /// deterministic gDDIM of Eq. 18; the paper's tables write this as
+    /// polynomial order `q` with q=0 meaning 1-step — we use the count of
+    /// history points, i.e. paper-q + 1).
+    pub q: usize,
+    /// Stochasticity λ of the marginal-equivalent SDE Eq. 6 (0 = ODE).
+    pub lambda: f64,
+    /// Score parameterization K_t (R_t for gDDIM, L_t for the ablation).
+    pub kt: KtKind,
+    /// Whether the corrector coefficients are also prepared (Table 8).
+    pub with_corrector: bool,
+    /// Gauss–Legendre points per interval for Type-II integrals.
+    pub gl_points: usize,
+    /// Composite-quadrature pieces per interval (denser near t_min).
+    pub gl_pieces: usize,
+    /// RK4 steps per interval for the Type-I (Ψ̂, P_st) ODEs.
+    pub ode_steps: usize,
+}
+
+impl Default for PlanConfig {
+    fn default() -> Self {
+        PlanConfig {
+            q: 2,
+            lambda: 0.0,
+            kt: KtKind::R,
+            with_corrector: false,
+            gl_points: 32,
+            gl_pieces: 4,
+            ode_steps: 512,
+        }
+    }
+}
+
+impl PlanConfig {
+    pub fn deterministic(q: usize, kt: KtKind) -> Self {
+        PlanConfig { q, kt, ..Default::default() }
+    }
+
+    pub fn stochastic(lambda: f64) -> Self {
+        PlanConfig { q: 1, lambda, kt: KtKind::R, ..Default::default() }
+    }
+}
+
+/// Precomputed coefficients for one (process, grid, config).
+pub struct SamplerPlan {
+    pub cfg: PlanConfig,
+    pub grid: TimeGrid,
+    /// `Ψ(t_{i−1}, t_i)` per step.
+    pub psi: Vec<LinOp>,
+    /// Predictor coefficients `ᵖC_ij^{(q_cur)}` (Eq. 19b): for step `i`,
+    /// entry `j` multiplies `ε_θ(u(t_{i+j}), t_{i+j})`.
+    pub pred: Vec<Vec<LinOp>>,
+    /// Corrector coefficients `ᶜC_ij^{(q_cur)}` (Eq. 46): entry `jj`
+    /// corresponds to `j = jj − 1` (node `t_{i+j}`, starting at t_{i−1}).
+    pub corr: Vec<Vec<LinOp>>,
+    /// Stochastic-gDDIM per-step mean factor `[Ψ̂ − Ψ]·K_{t_i}` (Eq. 22)
+    /// and noise factor `chol(P_{t_i→t_{i−1}})` (Eq. 23); empty if λ = 0.
+    pub stoch_mean: Vec<LinOp>,
+    pub stoch_noise: Vec<LinOp>,
+    /// `K_{t_i}` and `K_{t_i}^{-T}` at every grid node (score ⇄ ε).
+    pub kt_nodes: Vec<LinOp>,
+    pub kt_inv_t_nodes: Vec<LinOp>,
+    /// Wall time spent building (reported by `gddim coeffs`).
+    pub build_seconds: f64,
+}
+
+impl SamplerPlan {
+    /// Build the full plan — the paper's Stage-I Steps 1–4.
+    pub fn build(proc: &dyn Process, grid: &TimeGrid, cfg: &PlanConfig) -> SamplerPlan {
+        assert!(grid.is_valid(), "time grid must be strictly increasing");
+        assert!(cfg.q >= 1, "multistep order must be >= 1");
+        assert!(cfg.lambda >= 0.0);
+        if cfg.lambda > 0.0 {
+            assert_eq!(
+                cfg.kt,
+                KtKind::R,
+                "stochastic gDDIM (Prop 6) is derived for the R_t parameterization"
+            );
+        }
+        let t_build = std::time::Instant::now();
+        let ts = &grid.ts;
+        let n = grid.n_steps();
+
+        // Step 2: transition matrices at grid nodes.
+        let psi: Vec<LinOp> = (1..=n).map(|i| proc.psi(ts[i - 1], ts[i])).collect();
+
+        // Step 3: K_t at grid nodes.
+        let kt_nodes: Vec<LinOp> = ts.iter().map(|&t| proc.kt(cfg.kt, t)).collect();
+        let kt_inv_t_nodes: Vec<LinOp> =
+            kt_nodes.iter().map(|k| k.inv().transpose()).collect();
+
+        // Step 4: Type-II integrals — predictor & corrector coefficients.
+        let integrand = |t_target: f64, tau: f64| -> LinOp {
+            proc.psi(t_target, tau)
+                .matmul(&proc.ggt_op(tau))
+                .matmul(&proc.kt(cfg.kt, tau).inv().transpose())
+                .scale(0.5)
+        };
+        let mut pred: Vec<Vec<LinOp>> = Vec::with_capacity(n);
+        let mut corr: Vec<Vec<LinOp>> = Vec::with_capacity(n);
+        for i in 1..=n {
+            // Warm start (Algo 1): fewer history points near t_N.
+            let q_cur = cfg.q.min(n - i + 1);
+            let nodes: Vec<f64> = (0..q_cur).map(|j| ts[i + j]).collect();
+            let coeffs: Vec<LinOp> = (0..q_cur)
+                .map(|j| {
+                    integrate_linop_composite(
+                        |tau| integrand(ts[i - 1], tau).scale(lagrange_basis(&nodes, j, tau)),
+                        ts[i],
+                        ts[i - 1],
+                        cfg.gl_points,
+                        cfg.gl_pieces,
+                    )
+                })
+                .collect();
+            pred.push(coeffs);
+
+            if cfg.with_corrector {
+                let q_cur = cfg.q.min(n - i + 2).max(2);
+                // Corrector nodes: t_{i-1}, t_i, …, t_{i+q_cur-2}.
+                let q_cur = q_cur.min(n - i + 2);
+                let nodes: Vec<f64> = (0..q_cur).map(|jj| ts[i - 1 + jj]).collect();
+                let coeffs: Vec<LinOp> = (0..q_cur)
+                    .map(|jj| {
+                        integrate_linop_composite(
+                            |tau| {
+                                integrand(ts[i - 1], tau)
+                                    .scale(lagrange_basis(&nodes, jj, tau))
+                            },
+                            ts[i],
+                            ts[i - 1],
+                            cfg.gl_points,
+                            cfg.gl_pieces,
+                        )
+                    })
+                    .collect();
+                corr.push(coeffs);
+            }
+        }
+
+        // Stochastic part (λ > 0): Ψ̂ and P per interval (Type I ODEs).
+        let mut stoch_mean = Vec::new();
+        let mut stoch_noise = Vec::new();
+        if cfg.lambda > 0.0 {
+            let lam2 = cfg.lambda * cfg.lambda;
+            let f_hat = |t: f64| -> LinOp {
+                // F̂ = F + (1+λ²)/2 · GGᵀ Σ⁻¹, with Σ⁻¹ via the Cholesky
+                // factor (L⁻ᵀL⁻¹) to dodge the det-Σ cancellation.
+                let l_inv = proc.sigma(t).cholesky().inv();
+                let sig_inv = l_inv.transpose().matmul(&l_inv);
+                proc.f_op(t)
+                    .add(&proc.ggt_op(t).matmul(&sig_inv).scale(0.5 * (1.0 + lam2)))
+            };
+            for i in 1..=n {
+                let (s, t) = (ts[i], ts[i - 1]); // integrate backwards s -> t
+                // Ψ̂(t, s): dY/dτ = F̂(τ) Y from τ=s to τ=t, Y(s) = I.
+                let ident = match proc.f_op(s) {
+                    LinOp::Diag(d) => LinOp::diag(vec![1.0; d.len()]),
+                    LinOp::Block2(_) => LinOp::Block2(crate::math::mat2::Mat2::IDENT),
+                    LinOp::Scalar(_) => LinOp::Scalar(1.0),
+                };
+                let psi_hat =
+                    solve_linop_ode(|tau, y| f_hat(tau).matmul(y), s, t, cfg.ode_steps, ident);
+                // Mean factor [Ψ̂ − Ψ]·K_s (Eq. 22).
+                stoch_mean.push(psi_hat.sub(&psi[i - 1]).matmul(&proc.kt(cfg.kt, s)));
+                // P_st = Cov[u(t)|u(s)] (Eq. 23). The paper writes the
+                // ODE for τ increasing away from s; integrating in the
+                // *sampling* direction (τ: s → t with t < s) the noise
+                // source flips sign:  dP/dτ = F̂P + PF̂ᵀ − λ²GGᵀ, P(s)=0,
+                // which is the derivative of
+                // P(τ) = λ²∫_τ^s Ψ̂(τ,r) GGᵀ(r) Ψ̂(τ,r)ᵀ dr ⪰ 0.
+                let p0 = psi[i - 1].scale(0.0);
+                let p = solve_linop_ode(
+                    |tau, y| {
+                        let fh = f_hat(tau);
+                        fh.matmul(y)
+                            .add(&y.matmul(&fh.transpose()))
+                            .sub(&proc.ggt_op(tau).scale(lam2))
+                    },
+                    s,
+                    t,
+                    cfg.ode_steps,
+                    p0,
+                );
+                // Symmetrize defensively before factoring.
+                let p = p.add(&p.transpose()).scale(0.5);
+                stoch_noise.push(p.sqrt_spd());
+            }
+        }
+
+        SamplerPlan {
+            cfg: cfg.clone(),
+            grid: grid.clone(),
+            psi,
+            pred,
+            corr,
+            stoch_mean,
+            stoch_noise,
+            kt_nodes,
+            kt_inv_t_nodes,
+            build_seconds: t_build.elapsed().as_secs_f64(),
+        }
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.grid.n_steps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diffusion::{Cld, Vpsde};
+    use crate::math::close;
+
+    fn scalar(op: &LinOp) -> f64 {
+        match op {
+            LinOp::Scalar(s) => *s,
+            _ => panic!("expected scalar, got {op:?}"),
+        }
+    }
+
+    #[test]
+    fn one_step_predictor_matches_analytic_ddim_on_vpsde() {
+        // Prop 2 / Eq. 12: the q=1 EI coefficient on VPSDE must equal
+        //   √(1−α_{t−Δ}) − √(1−α_t)·√(α_{t−Δ}/α_t).
+        let p = Vpsde::standard(1);
+        let grid = TimeGrid::uniform(p.t_min, p.t_max, 20);
+        let plan = SamplerPlan::build(&p, &grid, &PlanConfig::deterministic(1, KtKind::R));
+        for i in 1..=grid.n_steps() {
+            let (s, t) = (grid.ts[i], grid.ts[i - 1]); // step from s down to t
+            let expect = (1.0 - p.alpha(t)).sqrt()
+                - (1.0 - p.alpha(s)).sqrt() * (p.alpha(t) / p.alpha(s)).sqrt();
+            let got = scalar(&plan.pred[i - 1][0]);
+            assert!(
+                close(got, expect, 1e-8, 1e-10),
+                "step {i}: C={got} vs analytic DDIM {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn psi_nodes_match_process() {
+        let p = Vpsde::standard(1);
+        let grid = TimeGrid::uniform(p.t_min, p.t_max, 10);
+        let plan = SamplerPlan::build(&p, &grid, &PlanConfig::default());
+        for i in 1..=10 {
+            let expect = (p.alpha(grid.ts[i - 1]) / p.alpha(grid.ts[i])).sqrt();
+            assert!(close(scalar(&plan.psi[i - 1]), expect, 1e-12, 0.0));
+        }
+    }
+
+    #[test]
+    fn multistep_coeffs_sum_to_one_step() {
+        // Σ_j ᵖC_ij = one-step EI coefficient (Lagrange bases sum to 1) —
+        // a structural identity of Eq. 19b.
+        let p = Cld::standard(1);
+        let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 12);
+        let multi = SamplerPlan::build(&p, &grid, &PlanConfig::deterministic(3, KtKind::R));
+        let single = SamplerPlan::build(&p, &grid, &PlanConfig::deterministic(1, KtKind::R));
+        for i in 0..grid.n_steps() {
+            let mut sum = multi.pred[i][0].clone();
+            for c in &multi.pred[i][1..] {
+                sum = sum.add(c);
+            }
+            assert!(
+                sum.dist(&single.pred[i][0]) < 1e-9 * (1.0 + single.pred[i][0].max_abs()),
+                "step {i}: Σ_j C_ij != C^{{(1)}}"
+            );
+        }
+    }
+
+    #[test]
+    fn corrector_coeffs_also_sum_to_one_step() {
+        let p = Cld::standard(1);
+        let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 10);
+        let cfg = PlanConfig { q: 2, with_corrector: true, ..PlanConfig::default() };
+        let plan = SamplerPlan::build(&p, &grid, &cfg);
+        let single = SamplerPlan::build(&p, &grid, &PlanConfig::deterministic(1, KtKind::R));
+        for i in 0..grid.n_steps() {
+            let mut sum = plan.corr[i][0].clone();
+            for c in &plan.corr[i][1..] {
+                sum = sum.add(c);
+            }
+            assert!(sum.dist(&single.pred[i][0]) < 1e-9 * (1.0 + single.pred[i][0].max_abs()));
+        }
+    }
+
+    #[test]
+    fn stochastic_matches_thm1_on_vpsde() {
+        // Thm 1: on DDPM, the per-step noise std must be
+        //   σ² = (1−α_t)[1 − ((1−α_t)/(1−α_s))^{λ²} (α_s/α_t)^{λ²}]
+        // and the mean ε-coefficient −√(α_t/α_s)√(1−α_s) + √(1−α_t−σ²).
+        let p = Vpsde::standard(1);
+        let grid = TimeGrid::uniform(p.t_min, p.t_max, 10);
+        for lambda in [0.3, 1.0] {
+            let plan = SamplerPlan::build(&p, &grid, &PlanConfig::stochastic(lambda));
+            for i in 1..=10 {
+                let (s, t) = (grid.ts[i], grid.ts[i - 1]);
+                let (als, alt) = (p.alpha(s), p.alpha(t));
+                let lam2 = lambda * lambda;
+                let sig2 = (1.0 - alt)
+                    * (1.0 - ((1.0 - alt) / (1.0 - als)).powf(lam2) * (als / alt).powf(lam2));
+                let got_noise = scalar(&plan.stoch_noise[i - 1]);
+                assert!(
+                    close(got_noise, sig2.sqrt(), 1e-5, 1e-7),
+                    "step {i} λ={lambda}: noise {got_noise} vs {}",
+                    sig2.sqrt()
+                );
+                let mean_expect =
+                    -(alt / als).sqrt() * (1.0 - als).sqrt() + (1.0 - alt - sig2).sqrt();
+                let got_mean = scalar(&plan.stoch_mean[i - 1]);
+                assert!(
+                    close(got_mean, mean_expect, 1e-5, 1e-7),
+                    "step {i} λ={lambda}: mean {got_mean} vs {mean_expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop7_lambda_zero_limit() {
+        // Prop 7: as λ→0 the stochastic mean factor [Ψ̂−Ψ]K_s equals the
+        // deterministic one-step EI coefficient, and the noise vanishes.
+        let p = Vpsde::standard(1);
+        let grid = TimeGrid::uniform(p.t_min, p.t_max, 8);
+        let det = SamplerPlan::build(&p, &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let sto = SamplerPlan::build(
+            &p,
+            &grid,
+            &PlanConfig { q: 1, lambda: 1e-6, ..PlanConfig::stochastic(1e-6) },
+        );
+        for i in 0..8 {
+            let d = scalar(&det.pred[i][0]);
+            let s = scalar(&sto.stoch_mean[i]);
+            assert!(close(s, d, 1e-5, 1e-8), "step {i}: {s} vs {d}");
+            assert!(scalar(&sto.stoch_noise[i]) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn cld_psi_hat_equals_rt_rs_inv_at_lambda_zero() {
+        // Ψ̂(t,s) = R_t R_s⁻¹ when λ=0 (used in the proof of Prop 7) —
+        // here checked through the plan's stochastic path with tiny λ.
+        let p = Cld::standard(1);
+        let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 6);
+        let plan = SamplerPlan::build(
+            &p,
+            &grid,
+            &PlanConfig { q: 1, lambda: 1e-8, kt: KtKind::R, ..PlanConfig::default() },
+        );
+        for i in 1..=6 {
+            let (s, t) = (grid.ts[i], grid.ts[i - 1]);
+            // stoch_mean = [Ψ̂ − Ψ]R_s ⇒ Ψ̂ = stoch_mean·R_s⁻¹ + Ψ.
+            let psi_hat = plan.stoch_mean[i - 1]
+                .matmul(&p.rt(s).inv())
+                .add(&plan.psi[i - 1]);
+            let expect = p.rt(t).matmul(&p.rt(s).inv());
+            assert!(
+                psi_hat.dist(&expect) < 1e-4 * (1.0 + expect.max_abs()),
+                "step {i}: dist {}",
+                psi_hat.dist(&expect)
+            );
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Mixture-of-isotropic-Gaussians data specification.
+
+use crate::math::linalg::MatD;
+use crate::math::rng::Rng;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// `p(x) = Σ_m w_m N(x; μ_m, σ² I_d)` (σ may be 0 → mixture of Diracs).
+#[derive(Clone, Debug)]
+pub struct GmmSpec {
+    pub name: String,
+    pub d: usize,
+    pub weights: Vec<f64>,
+    /// Component means, each of length `d`.
+    pub means: Vec<Vec<f64>>,
+    /// Shared isotropic component variance σ².
+    pub var: f64,
+}
+
+impl GmmSpec {
+    pub fn new(name: &str, means: Vec<Vec<f64>>, var: f64) -> GmmSpec {
+        let m = means.len();
+        assert!(m > 0);
+        let d = means[0].len();
+        assert!(means.iter().all(|mu| mu.len() == d));
+        GmmSpec {
+            name: name.to_string(),
+            d,
+            weights: vec![1.0 / m as f64; m],
+            means,
+            var,
+        }
+    }
+
+    pub fn n_modes(&self) -> usize {
+        self.means.len()
+    }
+
+    /// Draw `n` samples (row-major `n × d`).
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n * self.d);
+        let sd = self.var.sqrt();
+        for _ in 0..n {
+            let m = rng.categorical(&self.weights);
+            for j in 0..self.d {
+                out.push(self.means[m][j] + sd * rng.normal());
+            }
+        }
+        out
+    }
+
+    /// Exact mixture mean.
+    pub fn mean(&self) -> Vec<f64> {
+        let mut mu = vec![0.0; self.d];
+        for (w, m) in self.weights.iter().zip(&self.means) {
+            for j in 0..self.d {
+                mu[j] += w * m[j];
+            }
+        }
+        mu
+    }
+
+    /// Exact mixture covariance: σ²I + Σ w_m μ_mμ_mᵀ − μμᵀ.
+    pub fn cov(&self) -> MatD {
+        let mu = self.mean();
+        let mut c = MatD::zeros(self.d, self.d);
+        for (w, m) in self.weights.iter().zip(&self.means) {
+            for i in 0..self.d {
+                for j in 0..self.d {
+                    c[(i, j)] += w * (m[i] - mu[i]) * (m[j] - mu[j]);
+                }
+            }
+        }
+        for i in 0..self.d {
+            c[(i, i)] += self.var;
+        }
+        c
+    }
+
+    /// Second moment scale `E‖x‖²/d` (used by the oracle's state-space lift).
+    pub fn second_moment(&self) -> f64 {
+        let mut acc = 0.0;
+        for (w, m) in self.weights.iter().zip(&self.means) {
+            acc += w * m.iter().map(|x| x * x).sum::<f64>();
+        }
+        acc / self.d as f64 + self.var
+    }
+
+    /// Exact log-density (for NLL ground truth; requires σ > 0).
+    pub fn logpdf(&self, x: &[f64]) -> f64 {
+        assert!(self.var > 0.0, "logpdf needs positive component variance");
+        assert_eq!(x.len(), self.d);
+        let inv2v = 0.5 / self.var;
+        let log_norm =
+            -0.5 * self.d as f64 * (2.0 * std::f64::consts::PI * self.var).ln();
+        let mut best = f64::NEG_INFINITY;
+        let logs: Vec<f64> = self
+            .weights
+            .iter()
+            .zip(&self.means)
+            .map(|(w, m)| {
+                let d2: f64 = x.iter().zip(m).map(|(a, b)| (a - b) * (a - b)).sum();
+                let l = w.max(1e-300).ln() + log_norm - d2 * inv2v;
+                best = best.max(l);
+                l
+            })
+            .collect();
+        best + logs.iter().map(|l| (l - best).exp()).sum::<f64>().ln()
+    }
+
+    /// Serialize for `configs/datasets.json` (consumed by python/compile).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".into(), Json::Str(self.name.clone()));
+        o.insert("d".into(), Json::Num(self.d as f64));
+        o.insert("var".into(), Json::Num(self.var));
+        o.insert(
+            "weights".into(),
+            Json::Arr(self.weights.iter().map(|&w| Json::Num(w)).collect()),
+        );
+        o.insert(
+            "means".into(),
+            Json::Arr(
+                self.means
+                    .iter()
+                    .map(|m| Json::Arr(m.iter().map(|&x| Json::Num(x)).collect()))
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<GmmSpec, String> {
+        let name = j.get("name").and_then(|v| v.as_str()).ok_or("missing name")?;
+        let var = j.get("var").and_then(|v| v.as_f64()).ok_or("missing var")?;
+        let weights = j.get("weights").and_then(|v| v.as_f64_vec()).ok_or("missing weights")?;
+        let means: Vec<Vec<f64>> = j
+            .get("means")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing means")?
+            .iter()
+            .map(|row| row.as_f64_vec().ok_or("bad mean row".to_string()))
+            .collect::<Result<_, _>>()?;
+        let d = means.first().map(|m| m.len()).ok_or("empty means")?;
+        Ok(GmmSpec { name: name.to_string(), d, weights, means, var })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::close;
+
+    fn two_mode() -> GmmSpec {
+        GmmSpec::new("t", vec![vec![-2.0, 0.0], vec![2.0, 0.0]], 0.01)
+    }
+
+    #[test]
+    fn sample_moments_match_exact() {
+        let g = two_mode();
+        let mut rng = Rng::seed_from(77);
+        let xs = g.sample(100_000, &mut rng);
+        let mu = crate::math::stats::mean(&xs, 2);
+        let exact = g.mean();
+        assert!((mu[0] - exact[0]).abs() < 0.02, "{mu:?}");
+        let c = crate::math::stats::covariance(&xs, 2);
+        let ce = g.cov();
+        assert!((c[(0, 0)] - ce[(0, 0)]).abs() < 0.1, "{} vs {}", c[(0, 0)], ce[(0, 0)]);
+        assert!((c[(1, 1)] - ce[(1, 1)]).abs() < 0.01);
+    }
+
+    #[test]
+    fn exact_cov_of_two_symmetric_modes() {
+        let g = two_mode();
+        let c = g.cov();
+        // Var(x1) = 4 + 0.01, Var(x2) = 0.01, no cross term.
+        assert!(close(c[(0, 0)], 4.01, 1e-12, 0.0));
+        assert!(close(c[(1, 1)], 0.01, 1e-12, 0.0));
+        assert!(c[(0, 1)].abs() < 1e-15);
+    }
+
+    #[test]
+    fn logpdf_integrates_to_one_ish() {
+        // Monte-Carlo check: E_q[p/q] over a wide uniform box ≈ 1.
+        let g = GmmSpec::new("t1", vec![vec![0.0]], 0.25);
+        let mut rng = Rng::seed_from(3);
+        let (lo, hi) = (-4.0, 4.0);
+        let n = 200_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let x = rng.uniform_in(lo, hi);
+            acc += g.logpdf(&[x]).exp();
+        }
+        let integral = acc / n as f64 * (hi - lo);
+        assert!((integral - 1.0).abs() < 0.02, "{integral}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let g = two_mode();
+        let j = g.to_json();
+        let back = GmmSpec::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.name, g.name);
+        assert_eq!(back.means, g.means);
+        assert!(close(back.var, g.var, 0.0, 1e-15));
+    }
+}

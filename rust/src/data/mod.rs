@@ -1,0 +1,18 @@
+//! Synthetic datasets.
+//!
+//! Everything is a **mixture of isotropic Gaussians** (possibly with zero
+//! variance, i.e. a mixture of Diracs). That is a deliberate design
+//! decision, not a simplification of convenience: the paper's own
+//! explanation of why DDIM works (§3, Fig. 2) is that realistic datasets
+//! behave like well-separated mixtures under the manifold hypothesis, and
+//! mixtures admit a *closed-form* score — so every sampler comparison in
+//! this repo can be run against the exact score, isolating the
+//! integrator (which is what gDDIM is about) from score-model error.
+//! The same specs are exported to `configs/datasets.json` for the python
+//! training layer (`gddim gen-configs`), so the learned-score pipeline
+//! trains on exactly these distributions.
+
+pub mod gmm;
+pub mod presets;
+
+pub use gmm::GmmSpec;

@@ -1,0 +1,205 @@
+//! The repo's canonical datasets (the CIFAR10/CELEBA substitutes; see
+//! DESIGN.md §3). All procedurally generated from fixed seeds so the
+//! rust side and the exported `configs/datasets.json` (python training)
+//! agree exactly.
+
+use crate::data::gmm::GmmSpec;
+use crate::math::rng::Rng;
+use crate::util::json::Json;
+
+/// 8 well-separated modes on a circle of radius 4 (the classic 2-D toy;
+/// paper Fig. 2's "mixture of well-separated" modes).
+pub fn gmm2d() -> GmmSpec {
+    let means = (0..8)
+        .map(|i| {
+            let th = std::f64::consts::TAU * i as f64 / 8.0;
+            vec![4.0 * th.cos(), 4.0 * th.sin()]
+        })
+        .collect();
+    GmmSpec::new("gmm2d", means, 0.05)
+}
+
+/// Mixture of two 1-D Gaussians (paper Fig. 2's toy: "a mixture of two
+/// one dimension Gaussian distributions").
+pub fn gmm2d_1d() -> GmmSpec {
+    GmmSpec::new("gmm1d", vec![vec![-2.0], vec![2.0]], 0.04)
+}
+
+/// The paper's "challenging 2D example" (Fig. 4): mixture of Gaussians
+/// with *small variance* — hard for naive solvers at low NFE.
+pub fn hard2d() -> GmmSpec {
+    let mut means = Vec::new();
+    for i in 0..5 {
+        for j in 0..5 {
+            means.push(vec![-4.0 + 2.0 * i as f64, -4.0 + 2.0 * j as f64]);
+        }
+    }
+    GmmSpec::new("hard2d", means, 0.003)
+}
+
+/// A spiral discretized into a 24-mode mixture (manifold-like 2-D data).
+pub fn spiral2d() -> GmmSpec {
+    let means = (0..24)
+        .map(|i| {
+            let s = i as f64 / 23.0;
+            let th = 1.5 * std::f64::consts::TAU * s;
+            let r = 0.8 + 3.2 * s;
+            vec![r * th.cos(), r * th.sin()]
+        })
+        .collect();
+    GmmSpec::new("spiral2d", means, 0.01)
+}
+
+/// 8×8 grayscale "two blobs" images: 48 prototype images (random blob
+/// centers/intensities from a fixed seed) + small pixel jitter. 64-dim
+/// data exercising the image-scale path and the DCT/BDM machinery —
+/// the repo's CIFAR10 stand-in.
+pub fn blobs8() -> GmmSpec {
+    let h = 8;
+    let w = 8;
+    let mut rng = Rng::seed_from(0xB10B5);
+    let mut means = Vec::with_capacity(48);
+    for _ in 0..48 {
+        let mut img = vec![0.0f64; h * w];
+        for _blob in 0..2 {
+            let cx = rng.uniform_in(1.5, (w - 2) as f64);
+            let cy = rng.uniform_in(1.5, (h - 2) as f64);
+            let amp = rng.uniform_in(0.6, 1.0);
+            let s2 = rng.uniform_in(0.6, 2.0);
+            for y in 0..h {
+                for x in 0..w {
+                    let d2 = (x as f64 - cx).powi(2) + (y as f64 - cy).powi(2);
+                    img[y * w + x] += amp * (-d2 / (2.0 * s2)).exp();
+                }
+            }
+        }
+        // Center to roughly zero mean, scale to [-1, 1]-ish like image DMs.
+        let mean = img.iter().sum::<f64>() / img.len() as f64;
+        for p in img.iter_mut() {
+            *p = (*p - mean) * 2.0;
+        }
+        means.push(img);
+    }
+    GmmSpec::new("blobs8", means, 0.005)
+}
+
+/// A 16-prototype variant on 8×8 used as the "CELEBA" analog (fewer,
+/// more distinct modes).
+pub fn faces8() -> GmmSpec {
+    let h = 8;
+    let w = 8;
+    let mut rng = Rng::seed_from(0xFACE5);
+    let mut means = Vec::with_capacity(16);
+    for _ in 0..16 {
+        let mut img = vec![0.0f64; h * w];
+        // an oval + two "eyes": crude but consistently structured images
+        let cx = rng.uniform_in(3.0, 4.0);
+        let cy = rng.uniform_in(3.0, 4.0);
+        let rx = rng.uniform_in(2.0, 3.0);
+        let ry = rng.uniform_in(2.4, 3.4);
+        for y in 0..h {
+            for x in 0..w {
+                let e = ((x as f64 - cx) / rx).powi(2) + ((y as f64 - cy) / ry).powi(2);
+                img[y * w + x] = if e < 1.0 { 0.8 * (1.0 - e) } else { 0.0 };
+            }
+        }
+        for eye in 0..2 {
+            let ex = cx + if eye == 0 { -1.0 } else { 1.0 } * rng.uniform_in(0.8, 1.2);
+            let ey = cy - rng.uniform_in(0.5, 1.0);
+            for y in 0..h {
+                for x in 0..w {
+                    let d2 = (x as f64 - ex).powi(2) + (y as f64 - ey).powi(2);
+                    img[y * w + x] -= 0.5 * (-d2 / 0.5).exp();
+                }
+            }
+        }
+        let mean = img.iter().sum::<f64>() / img.len() as f64;
+        for p in img.iter_mut() {
+            *p = (*p - mean) * 2.0;
+        }
+        means.push(img);
+    }
+    GmmSpec::new("faces8", means, 0.005)
+}
+
+/// All canonical datasets by name.
+pub fn by_name(name: &str) -> Option<GmmSpec> {
+    match name {
+        "gmm2d" => Some(gmm2d()),
+        "hard2d" => Some(hard2d()),
+        "spiral2d" => Some(spiral2d()),
+        "blobs8" => Some(blobs8()),
+        "faces8" => Some(faces8()),
+        _ => None,
+    }
+}
+
+pub const ALL: [&str; 5] = ["gmm2d", "hard2d", "spiral2d", "blobs8", "faces8"];
+
+/// Serialize every preset into the shared `configs/datasets.json`.
+pub fn export_json() -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    for name in ALL {
+        o.insert(name.to_string(), by_name(name).unwrap().to_json());
+    }
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_deterministic() {
+        let a = blobs8();
+        let b = blobs8();
+        assert_eq!(a.means, b.means, "procedural generation must be seed-stable");
+        assert_eq!(faces8().means, faces8().means);
+    }
+
+    #[test]
+    fn all_presets_resolve() {
+        for name in ALL {
+            let g = by_name(name).unwrap();
+            assert_eq!(g.name, name);
+            assert!(g.n_modes() >= 2);
+            assert!((g.weights.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn image_presets_are_64_dim() {
+        assert_eq!(blobs8().d, 64);
+        assert_eq!(faces8().d, 64);
+    }
+
+    #[test]
+    fn modes_are_well_separated_relative_to_var() {
+        // The manifold-hypothesis regime the paper argues from: distances
+        // between modes >> component std.
+        for name in ALL {
+            let g = by_name(name).unwrap();
+            let sd = g.var.sqrt();
+            let mut min_dist = f64::INFINITY;
+            for i in 0..g.n_modes() {
+                for j in (i + 1)..g.n_modes() {
+                    let d2: f64 = g.means[i]
+                        .iter()
+                        .zip(&g.means[j])
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    min_dist = min_dist.min(d2.sqrt());
+                }
+            }
+            assert!(min_dist > 3.0 * sd, "{name}: min mode distance {min_dist} vs sd {sd}");
+        }
+    }
+
+    #[test]
+    fn export_contains_all() {
+        let j = export_json();
+        for name in ALL {
+            assert!(j.get(name).is_some());
+        }
+    }
+}

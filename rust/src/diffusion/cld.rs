@@ -1,0 +1,474 @@
+//! Critically-damped Langevin diffusion (Dockhorn et al. 2021; paper
+//! Eq. 10). State `u = (x, v) ∈ R^{2d}`; only the velocity channel is
+//! driven by noise, so `Σ_t` is non-diagonal and the choice of `K_t`
+//! (its Cholesky `L_t` vs gDDIM's `R_t`) actually matters — this is the
+//! paper's main experimental vehicle (Tables 1, 2, 5, 6, 8).
+//!
+//! Coefficients (constant-β convention of Dockhorn et al., critical
+//! damping `Γ² = 4M`):
+//!
+//! ```text
+//!   F_t = β [[0,  M⁻¹], [−1, −ΓM⁻¹]] ⊗ I_d,   G_tG_tᵀ = diag(0, 2Γβ) ⊗ I_d
+//!   u(0) = (x₀, v₀),  v₀ ~ N(0, γM I_d)   ⇒  Σ₀ = diag(0, γM)
+//! ```
+//!
+//! Under critical damping `A = βF/β` has a double eigenvalue `−ω`
+//! (`ω = 1/√M`) and `A + ωI` is nilpotent, so both the transition matrix
+//! `Ψ(t,s) = e^{−ωτ}(I + (A+ωI)τ)`, `τ = β(t−s)`, and the conditional
+//! covariance `Σ_t` (elementary exponential-polynomial integrals) are
+//! **closed form** — machine-precision Stage-I inputs.
+//!
+//! Only `R_t` (Eq. 17) has no closed form. Naively integrating the matrix
+//! ODE is numerically hopeless near `t=0`: `x` is an integral of `v`, so
+//! `corr(x,v) → 1` and `Σ_t` is nearly rank-one — `det Σ` cancels
+//! catastrophically and `½G GᵀΣ_t⁻¹` is violently stiff (∼10⁹ at
+//! t=10⁻⁵). We instead use the **polar trick**: any two factors of `Σ`
+//! differ by an orthogonal matrix, so
+//!
+//! ```text
+//!   R_t = L_t · Rot(φ_t),          L_t = chol(Σ_t)  (closed form),
+//!   φ'  = [ L⁻¹F L + ½ L⁻¹G GᵀL⁻ᵀ − L⁻¹L' ]₍₂,₁₎
+//! ```
+//!
+//! (`Σ⁻¹L = L⁻ᵀ` removes `det Σ` entirely; the bracket is skew-symmetric,
+//! which the tests verify). `R_tR_tᵀ = Σ_t` then holds to machine
+//! precision *by construction*, and the only numerical object is a scalar
+//! angle tabulated on a geometric grid — the robust version of the
+//! paper's "RK4 with step 1e-6" (App. C.3).
+
+use crate::diffusion::process::Process;
+use crate::math::interp::LogTable;
+use crate::math::linop::LinOp;
+use crate::math::mat2::Mat2;
+use crate::math::ode::{rk4_step, Rk4Scratch};
+
+#[derive(Clone, Debug)]
+pub struct CldConfig {
+    pub d: usize,
+    /// Noise scale β (constant in t, Dockhorn et al. use 4.0).
+    pub beta: f64,
+    /// Mass M (critical damping fixes Γ = 2√M).
+    pub mass: f64,
+    /// Initial velocity variance scale: v₀ ~ N(0, γM).
+    pub gamma0: f64,
+    pub t_max: f64,
+    pub t_min: f64,
+    /// Stored rows of the (log-spaced) R_t table.
+    pub table_len: usize,
+    /// RK4 substeps between consecutive table rows.
+    pub substeps: usize,
+}
+
+impl Default for CldConfig {
+    fn default() -> Self {
+        CldConfig {
+            d: 1,
+            beta: 4.0,
+            mass: 0.25,
+            gamma0: 0.04,
+            t_max: 1.0,
+            t_min: 1e-3,
+            table_len: 4096,
+            substeps: 8,
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct Cld {
+    pub cfg: CldConfig,
+    /// Drift structure matrix A with F_t = β·A.
+    a: Mat2,
+    /// Γ (critical damping).
+    gamma: f64,
+    /// ω = 1/√M (the double eigenvalue magnitude of A).
+    omega: f64,
+    /// Rotation angle φ(t) with R_t = L_t·Rot(φ_t), on a geometric grid.
+    phi_tab: LogTable,
+    r_start: f64,
+}
+
+/// 2×2 rotation by angle φ.
+fn rot(phi: f64) -> Mat2 {
+    Mat2::new(phi.cos(), -phi.sin(), phi.sin(), phi.cos())
+}
+
+impl Cld {
+    pub fn new(cfg: CldConfig) -> Self {
+        let m_inv = 1.0 / cfg.mass;
+        let gamma = 2.0 * cfg.mass.sqrt(); // critical damping Γ = 2√M
+        let omega = 1.0 / cfg.mass.sqrt();
+        let a = Mat2::new(0.0, m_inv, -1.0, -gamma * m_inv);
+
+        let r_start = cfg.t_min * 1e-2;
+        let proto = Cld {
+            cfg: cfg.clone(),
+            a,
+            gamma,
+            omega,
+            phi_tab: LogTable::from_values(1.0, 2.0, vec![vec![0.0], vec![0.0]]),
+            r_start,
+        };
+
+        // φ(r_start): R(r_start) = sqrtm(Σ) = L·Rot(φ₀)
+        //   ⇒ Rot(φ₀) = L⁻¹ sqrtm(Σ).
+        let s0 = proto.sigma_mat(r_start);
+        let w0 = s0.cholesky().inv() * s0.sqrtm_spd();
+        let phi0 = w0.c.atan2(w0.a);
+
+        let mut rhs = |t: f64, _y: &[f64], dy: &mut [f64]| {
+            dy[0] = proto.phi_rate(t);
+        };
+        let n = cfg.table_len;
+        let ratio = (cfg.t_max / r_start).ln();
+        let mut y = vec![phi0];
+        let mut rows = Vec::with_capacity(n + 1);
+        rows.push(y.clone());
+        let mut scratch = Rk4Scratch::default();
+        for i in 0..n {
+            let t_lo = r_start * (ratio * i as f64 / n as f64).exp();
+            let t_hi = r_start * (ratio * (i + 1) as f64 / n as f64).exp();
+            let h = (t_hi - t_lo) / cfg.substeps as f64;
+            for k in 0..cfg.substeps {
+                rk4_step(&mut rhs, t_lo + k as f64 * h, h, &mut y, &mut scratch);
+            }
+            rows.push(y.clone());
+        }
+        let phi_tab = LogTable::from_values(r_start, cfg.t_max, rows);
+
+        Cld { cfg, a, gamma, omega, phi_tab, r_start }
+    }
+
+    /// Time derivative of Σ_t (Lyapunov RHS with closed-form Σ).
+    fn sigma_dot(&self, t: f64) -> Mat2 {
+        let s = self.sigma_mat(t);
+        let f = self.a.scale(self.cfg.beta);
+        let ggt = Mat2::new(0.0, 0.0, 0.0, 2.0 * self.gamma * self.cfg.beta);
+        (f * s + s * f.transpose() + ggt).sym()
+    }
+
+    /// Cholesky factor L_t and its derivative L'_t, both closed form.
+    fn chol_and_dot(&self, t: f64) -> (Mat2, Mat2) {
+        let s = self.sigma_mat(t);
+        let sd = self.sigma_dot(t);
+        let l11 = s.a.max(0.0).sqrt();
+        let l21 = s.b / l11;
+        let l22 = (s.d - l21 * l21).max(0.0).sqrt();
+        let d11 = sd.a / (2.0 * l11);
+        let d21 = (sd.b - l21 * d11) / l11;
+        let d22 = (sd.d - 2.0 * l21 * d21) / (2.0 * l22);
+        (Mat2::new(l11, 0.0, l21, l22), Mat2::new(d11, 0.0, d21, d22))
+    }
+
+    /// The generator of the rotation factor:
+    /// `M = L⁻¹ F L + ½ L⁻¹ G GᵀL⁻ᵀ − L⁻¹L'` is skew-symmetric and
+    /// `φ' = M₍₂,₁₎`.
+    pub fn phi_rate(&self, t: f64) -> f64 {
+        let (l, ld) = self.chol_and_dot(t);
+        let li = l.inv();
+        let f = self.a.scale(self.cfg.beta);
+        let ggt_half = Mat2::new(0.0, 0.0, 0.0, self.gamma * self.cfg.beta);
+        let m = li * f * l + li * ggt_half * li.transpose() - li * ld;
+        m.c
+    }
+
+    /// Skew-residual of the rotation generator (diagnostic; ≈0 when the
+    /// closed forms are consistent). Exposed for tests.
+    pub fn phi_skew_residual(&self, t: f64) -> f64 {
+        let (l, ld) = self.chol_and_dot(t);
+        let li = l.inv();
+        let f = self.a.scale(self.cfg.beta);
+        let ggt_half = Mat2::new(0.0, 0.0, 0.0, self.gamma * self.cfg.beta);
+        let m = li * f * l + li * ggt_half * li.transpose() - li * ld;
+        m.a.abs().max(m.d.abs()).max((m.b + m.c).abs())
+    }
+
+    pub fn standard(d: usize) -> Self {
+        Cld::new(CldConfig { d, ..CldConfig::default() })
+    }
+
+    /// Closed-form conditional covariance `Σ_t` (see module docs):
+    /// `Σ_t = Ψ(t,0) Σ₀ Ψ(t,0)ᵀ + 2Γβ ∫₀ᵗ Ψ(t,s) e₂e₂ᵀ Ψ(t,s)ᵀ ds`.
+    pub fn sigma_mat(&self, t: f64) -> Mat2 {
+        let w = self.omega;
+        let tb = self.cfg.beta * t.max(0.0); // integrated time τ = βt
+        let e = (-2.0 * w * tb).exp();
+
+        // Initial velocity Gaussian pushed through Ψ(t,0):
+        // Ψ e₂ = e^{-ωτ} (ω²τ, 1-ωτ)ᵀ.
+        let g0 = self.cfg.gamma0 * self.cfg.mass;
+        let p = w * w * tb;
+        let q = 1.0 - w * tb;
+        let init = Mat2::new(p * p, p * q, p * q, q * q).scale(g0 * e);
+
+        // Noise integral with a = 2ω:
+        //   I0 = (1-e)/a, I1 = (1-e(1+aτ))/a², I2 = (2-e(2+2aτ+a²τ²))/a³.
+        let aa = 2.0 * w;
+        let at = aa * tb;
+        let (i0, i1, i2) = if at < 1e-4 {
+            // Series for small τ to avoid cancellation:
+            // I0 ≈ τ - aτ²/2, I1 ≈ τ²/2 - aτ³/3, I2 ≈ τ³/3 - aτ⁴/4.
+            (
+                tb - aa * tb * tb / 2.0 + aa * aa * tb.powi(3) / 6.0,
+                tb * tb / 2.0 - aa * tb.powi(3) / 3.0,
+                tb.powi(3) / 3.0 - aa * tb.powi(4) / 4.0,
+            )
+        } else {
+            (
+                (1.0 - e) / aa,
+                (1.0 - e * (1.0 + at)) / (aa * aa),
+                (2.0 - e * (2.0 + 2.0 * at + at * at)) / (aa * aa * aa),
+            )
+        };
+        // Ψ(t,s)e₂ = e^{-ωτ'}(ω²τ', 1-ωτ')ᵀ with τ' = β(t-s); ∫ ds = ∫ dτ'/β.
+        let c = 2.0 * self.gamma; // (2Γβ)/β
+        let noise = Mat2::new(
+            w.powi(4) * i2,
+            w * w * (i1 - w * i2),
+            w * w * (i1 - w * i2),
+            i0 - 2.0 * w * i1 + w * w * i2,
+        )
+        .scale(c);
+
+        (init + noise).sym()
+    }
+
+    pub fn r_mat(&self, t: f64) -> Mat2 {
+        let t = t.clamp(self.r_start, self.cfg.t_max);
+        let phi = self.phi_tab.eval(t)[0];
+        let (l, _) = self.chol_and_dot(t);
+        l * rot(phi)
+    }
+
+    /// Closed-form `Ψ(t,s) = e^{−ωτ}(I + (A+ωI)τ)`, `τ = β(t−s)`.
+    pub fn psi_mat(&self, t: f64, s: f64) -> Mat2 {
+        let w = self.omega;
+        let tau = self.cfg.beta * (t - s);
+        let nil = self.a + Mat2::scalar(w);
+        (Mat2::IDENT + nil.scale(tau)).scale((-w * tau).exp())
+    }
+
+    /// Γ (critical damping constant).
+    pub fn damping(&self) -> f64 {
+        self.gamma
+    }
+}
+
+impl Process for Cld {
+    fn name(&self) -> &str {
+        "cld"
+    }
+
+    fn dim_x(&self) -> usize {
+        self.cfg.d
+    }
+
+    fn dim_u(&self) -> usize {
+        2 * self.cfg.d
+    }
+
+    fn t_max(&self) -> f64 {
+        self.cfg.t_max
+    }
+
+    fn t_min(&self) -> f64 {
+        self.cfg.t_min
+    }
+
+    fn f_op(&self, _t: f64) -> LinOp {
+        LinOp::Block2(self.a.scale(self.cfg.beta))
+    }
+
+    fn ggt_op(&self, _t: f64) -> LinOp {
+        LinOp::Block2(Mat2::new(0.0, 0.0, 0.0, 2.0 * self.gamma * self.cfg.beta))
+    }
+
+    fn g_op(&self, _t: f64) -> LinOp {
+        LinOp::Block2(Mat2::new(0.0, 0.0, 0.0, (2.0 * self.gamma * self.cfg.beta).sqrt()))
+    }
+
+    fn psi(&self, t: f64, s: f64) -> LinOp {
+        LinOp::Block2(self.psi_mat(t, s))
+    }
+
+    fn sigma(&self, t: f64) -> LinOp {
+        LinOp::Block2(self.sigma_mat(t))
+    }
+
+    fn sigma0(&self) -> LinOp {
+        LinOp::Block2(Mat2::diag(0.0, self.cfg.gamma0 * self.cfg.mass))
+    }
+
+    fn rt(&self, t: f64) -> LinOp {
+        LinOp::Block2(self.r_mat(t))
+    }
+
+    fn lift_data(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cfg.d);
+        let mut u = vec![0.0; 2 * self.cfg.d];
+        u[..self.cfg.d].copy_from_slice(x);
+        u
+    }
+
+    fn proj_data(&self, u: &[f64]) -> Vec<f64> {
+        u[..self.cfg.d].to_vec()
+    }
+
+    fn prior_factor(&self) -> LinOp {
+        // Stationary covariance of CLD is diag(1, M).
+        LinOp::Block2(Mat2::diag(1.0, self.cfg.mass.sqrt()))
+    }
+
+    fn lift_cov(&self, m2: f64) -> LinOp {
+        LinOp::Block2(Mat2::diag(m2, 0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diffusion::process::validate_process;
+    use crate::math::close;
+
+    #[test]
+    fn invariants() {
+        let p = Cld::standard(1);
+        validate_process(&p, &[1e-3, 0.05, 0.3, 0.7, 1.0]).unwrap();
+    }
+
+    #[test]
+    fn sigma_matches_lyapunov_ode() {
+        // Closed form must agree with a brute-force RK4 Lyapunov solve.
+        let p = Cld::standard(1);
+        let beta = p.cfg.beta;
+        let a = p.a;
+        let ggt_vv = 2.0 * p.gamma * beta;
+        for &t in &[1e-3, 0.05, 0.4, 1.0] {
+            let mut y = vec![0.0, 0.0, p.cfg.gamma0 * p.cfg.mass];
+            crate::math::ode::rk4_integrate(
+                &mut |_tt: f64, y: &[f64], dy: &mut [f64]| {
+                    let s = Mat2::new(y[0], y[1], y[1], y[2]);
+                    let f = a.scale(beta);
+                    let d = f * s + s * f.transpose();
+                    dy[0] = d.a;
+                    dy[1] = 0.5 * (d.b + d.c);
+                    dy[2] = d.d + ggt_vv;
+                },
+                0.0,
+                t,
+                20_000,
+                &mut y,
+            );
+            let s = p.sigma_mat(t);
+            assert!(close(s.a, y[0], 1e-7, 1e-12), "t={t} xx: {} vs {}", s.a, y[0]);
+            assert!(close(s.b, y[1], 1e-7, 1e-12), "t={t} xv: {} vs {}", s.b, y[1]);
+            assert!(close(s.d, y[2], 1e-7, 1e-12), "t={t} vv: {} vs {}", s.d, y[2]);
+        }
+    }
+
+    #[test]
+    fn sigma_approaches_stationary() {
+        // Stationary covariance is diag(1, M).
+        let mut cfg = CldConfig::default();
+        cfg.t_max = 4.0; // run long to converge
+        let p = Cld::new(cfg.clone());
+        let s = p.sigma_mat(4.0);
+        assert!(close(s.a, 1.0, 0.0, 1e-2), "Sxx={}", s.a);
+        assert!(close(s.d, cfg.mass, 0.0, 1e-2), "Svv={}", s.d);
+        assert!(s.b.abs() < 1e-2, "Sxv={}", s.b);
+    }
+
+    #[test]
+    fn psi_is_transition_matrix_of_f() {
+        // Ψ(t,s) must solve dΨ/dt = FΨ; compare against RK4.
+        let p = Cld::standard(1);
+        let (s, t) = (0.2, 0.9);
+        let beta = p.cfg.beta;
+        let a = p.a;
+        let mut y = Mat2::IDENT.to_array().to_vec();
+        crate::math::ode::rk4_integrate(
+            &mut move |_t: f64, y: &[f64], dy: &mut [f64]| {
+                let m = Mat2::from_array([y[0], y[1], y[2], y[3]]);
+                let d = a.scale(beta) * m;
+                dy.copy_from_slice(&d.to_array());
+            },
+            s,
+            t,
+            4_000,
+            &mut y,
+        );
+        let psi = p.psi_mat(t, s);
+        for (u, v) in psi.to_array().iter().zip(&y) {
+            assert!(close(*u, *v, 1e-8, 1e-10), "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn psi_matches_expm() {
+        let p = Cld::standard(1);
+        let (s, t) = (0.1, 0.75);
+        let via_expm = p.a.scale(p.cfg.beta * (t - s)).expm();
+        assert!((p.psi_mat(t, s) - via_expm).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn rt_factorizes_sigma_everywhere() {
+        // By construction (polar trick) this must hold to machine precision.
+        let p = Cld::standard(1);
+        for &t in &[1e-3, 0.01, 0.1, 0.5, 1.0] {
+            let r = p.r_mat(t);
+            let s = p.sigma_mat(t);
+            let err = (r * r.transpose() - s).max_abs();
+            assert!(err < 1e-12 + 1e-12 * s.max_abs(), "t={t}: err={err}");
+        }
+    }
+
+    #[test]
+    fn rotation_generator_is_skew() {
+        // The bracket L⁻¹FL + ½L⁻¹GGᵀL⁻ᵀ − L⁻¹L' must be skew-symmetric —
+        // this is the internal consistency check of the polar-trick
+        // derivation (it fails loudly if Σ, Σ', or L' are wrong).
+        let p = Cld::standard(1);
+        for &t in &[1e-4, 1e-3, 0.01, 0.1, 0.5, 1.0] {
+            let res = p.phi_skew_residual(t);
+            let scale = p.phi_rate(t).abs() + 1.0;
+            assert!(res < 1e-7 * scale, "t={t}: skew residual {res} (rate {})", p.phi_rate(t));
+        }
+    }
+
+    #[test]
+    fn rt_differs_from_cholesky() {
+        // The whole point of gDDIM on CLD: R_t is NOT the Cholesky factor.
+        let p = Cld::standard(1);
+        let t = 0.5;
+        let r = p.r_mat(t);
+        let l = p.sigma_mat(t).cholesky();
+        assert!((r - l).max_abs() > 1e-2, "R_t should differ from L_t: {r:?} vs {l:?}");
+        // but both factor Σ
+        assert!((l * l.transpose() - p.sigma_mat(t)).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn noise_only_enters_velocity() {
+        let p = Cld::standard(3);
+        let g = p.g_op(0.3);
+        let mut rng = crate::math::rng::Rng::seed_from(9);
+        let mut z = vec![0.0; 6];
+        g.sample_noise(&mut rng, &mut z);
+        assert!(z[..3].iter().all(|&x| x == 0.0), "x-channel must get no direct noise");
+        assert!(z[3..].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn rt_satisfies_eq17_ode() {
+        // Residual check of dR/dt = (F + ½GGᵀΣ⁻¹)R via finite differences.
+        let p = Cld::standard(1);
+        let t = 0.4;
+        let h = 1e-4;
+        let num = (p.r_mat(t + h) - p.r_mat(t - h)).scale(1.0 / (2.0 * h));
+        let ggt_half = Mat2::new(0.0, 0.0, 0.0, p.gamma * p.cfg.beta);
+        let drift = p.a.scale(p.cfg.beta) + ggt_half * p.sigma_mat(t).inv();
+        let ana = drift * p.r_mat(t);
+        assert!((num - ana).max_abs() < 1e-3 * (1.0 + ana.max_abs()), "{num:?} vs {ana:?}");
+    }
+}

@@ -1,0 +1,19 @@
+//! The diffusion-model substrate: the three linear-SDE forward processes
+//! the paper evaluates (Sec. 2), behind one [`Process`] trait.
+//!
+//! A forward process is `du = F_t u dt + G_t dw` (Eq. 1) with Gaussian
+//! transition `p_{0t}(u(t)|u(0)) = N(Ψ(t,0) u(0) + …, Σ_t)`; everything a
+//! sampler or the Stage-I coefficient engine needs is a handful of
+//! time-indexed structured matrices exposed here as [`LinOp`]s.
+
+pub mod process;
+pub mod vpsde;
+pub mod cld;
+pub mod bdm;
+pub mod schedule;
+
+pub use process::{Process, KtKind};
+pub use vpsde::Vpsde;
+pub use cld::Cld;
+pub use bdm::Bdm;
+pub use schedule::TimeGrid;

@@ -1,0 +1,168 @@
+//! The [`Process`] trait: everything the paper needs from a diffusion
+//! model, as time-indexed structured matrices.
+//!
+//! Conventions (matching the paper, Sec. 2):
+//! * forward SDE `du = F_t u dt + G_t dw`, `t ∈ [0, T]` (Eq. 1);
+//! * `Ψ(t,s)` is the transition matrix of `F` (`∂Ψ/∂t = F_tΨ`, `Ψ(s,s)=I`);
+//! * `Σ_t` is the covariance of `p_{0t}(u(t) | data point)` — for CLD this
+//!   *includes* the initial velocity Gaussian `Σ₀ = diag(0, γM)` (Prop 4
+//!   uses a Gaussian initial distribution precisely for this reason);
+//! * `mean(t)` maps a data point into the state mean:
+//!   `E[u(t)] = Ψ(t,0) · lift(x₀)`.
+//!
+//! For BDM the *state is the DCT spectrum* of the image: `lift_data`
+//! applies the forward DCT and `proj_data` the inverse. That turns every
+//! coefficient into a [`LinOp::Diag`] and makes the paper's Eq. 11 SDE
+//! per-frequency scalar.
+
+use crate::math::linop::LinOp;
+
+/// Which square root of `Σ_t` parameterizes the score network
+/// (`s_θ(u,t) = −K_t^{-T} ε_θ(u,t)`, Eq. 4). The whole point of gDDIM
+/// (Sec. 4) is that `K_t = R_t` — the solution of Eq. 17 — is the right
+/// choice, while CLD's original `L_t` (Cholesky) is not.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KtKind {
+    /// gDDIM's `R_t`: solves `dR/dt = (F_t + ½G_tG_tᵀΣ_t⁻¹)R_t` (Eq. 17).
+    R,
+    /// Cholesky factor `L_t` of `Σ_t` (Dockhorn et al.'s CLD choice, Eq. 78).
+    L,
+    /// Symmetric principal square root `Σ_t^{1/2}` (used in ablations).
+    SqrtSigma,
+}
+
+impl KtKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            KtKind::R => "R_t",
+            KtKind::L => "L_t",
+            KtKind::SqrtSigma => "sqrt(Sigma)",
+        }
+    }
+}
+
+impl std::str::FromStr for KtKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "r" | "rt" | "r_t" => Ok(KtKind::R),
+            "l" | "lt" | "l_t" => Ok(KtKind::L),
+            "sqrt" | "sqrtsigma" => Ok(KtKind::SqrtSigma),
+            other => Err(format!("unknown K_t kind: {other}")),
+        }
+    }
+}
+
+/// A linear-SDE diffusion model (paper Eq. 1).
+pub trait Process: Send + Sync {
+    /// Short identifier ("vpsde", "cld", "bdm").
+    fn name(&self) -> &str;
+
+    /// Data dimension `d`.
+    fn dim_x(&self) -> usize;
+
+    /// State dimension `D` (`d`, or `2d` for CLD).
+    fn dim_u(&self) -> usize;
+
+    /// Final diffusion time `T`.
+    fn t_max(&self) -> f64;
+
+    /// Earliest sampling time ε (the "smaller stop sampling time" trick
+    /// from Karras et al. that the paper adopts, Sec. 5).
+    fn t_min(&self) -> f64;
+
+    /// Drift coefficient `F_t`.
+    fn f_op(&self, t: f64) -> LinOp;
+
+    /// Diffusion outer product `G_t G_tᵀ`.
+    fn ggt_op(&self, t: f64) -> LinOp;
+
+    /// A factor `G_t` with `G_tG_tᵀ` as above (for injecting noise).
+    fn g_op(&self, t: f64) -> LinOp {
+        self.ggt_op(t).sqrt_spd()
+    }
+
+    /// Transition matrix `Ψ(t, s)` of `F`.
+    fn psi(&self, t: f64, s: f64) -> LinOp;
+
+    /// Conditional covariance `Σ_t` of `p_{0t}(u(t)|x₀)` (see module docs
+    /// re: CLD's velocity Gaussian).
+    fn sigma(&self, t: f64) -> LinOp;
+
+    /// Initial covariance `Σ₀` (zero for Dirac data; `diag(0, γM)` for CLD).
+    fn sigma0(&self) -> LinOp;
+
+    /// gDDIM's `R_t` (Eq. 17). Implementations precompute a table.
+    fn rt(&self, t: f64) -> LinOp;
+
+    /// The `K_t` requested by a parameterization kind.
+    fn kt(&self, kind: KtKind, t: f64) -> LinOp {
+        match kind {
+            KtKind::R => self.rt(t),
+            KtKind::L => self.sigma(t).cholesky(),
+            KtKind::SqrtSigma => self.sigma(t).sqrt_spd(),
+        }
+    }
+
+    /// Embed a data point into state space (mean of `p₀` given `x₀`).
+    fn lift_data(&self, x: &[f64]) -> Vec<f64>;
+
+    /// Project a state back to data space.
+    fn proj_data(&self, u: &[f64]) -> Vec<f64>;
+
+    /// Stationary/prior std used to draw `u(T) ~ p_T`: the sampler draws
+    /// `u(T) = prior_factor() · z`, `z ~ N(0, I)`.
+    fn prior_factor(&self) -> LinOp {
+        self.sigma(self.t_max()).sqrt_spd()
+    }
+
+    /// Marginal covariance of `u(t)` for data with second moment
+    /// `E[x₀x₀ᵀ] = m2·I` (used by the exact-score oracle sanity checks).
+    fn marginal_sigma(&self, t: f64, m2: f64) -> LinOp {
+        let psi = self.psi(t, 0.0);
+        let lifted = self.lift_cov(m2);
+        psi.matmul(&lifted).matmul(&psi.transpose()).add(&self.sigma(t))
+    }
+
+    /// Lift an isotropic data covariance `m2·I_d` into state space
+    /// (zero velocity block for CLD).
+    fn lift_cov(&self, m2: f64) -> LinOp;
+}
+
+/// Verify `Process` invariants at a set of probe times; used by each
+/// implementation's tests and by `gddim selfcheck`.
+pub fn validate_process(p: &dyn Process, probes: &[f64]) -> Result<(), String> {
+    let (t0, t1) = (p.t_min(), p.t_max());
+    if !(t0 > 0.0 && t1 > t0) {
+        return Err(format!("bad time range [{t0}, {t1}]"));
+    }
+    for &t in probes {
+        // Ψ(t,t) = I
+        if p.psi(t, t).dist(&LinOp::ident()) > 1e-9 {
+            return Err(format!("Psi(t,t) != I at t={t}"));
+        }
+        // Σ_t symmetric positive semidefinite-ish: sqrt roundtrip
+        let sig = p.sigma(t);
+        let root = sig.sqrt_spd();
+        if root.matmul(&root.transpose()).dist(&sig) > 1e-7 * (1.0 + sig.max_abs()) {
+            return Err(format!("Sigma not PSD-consistent at t={t}"));
+        }
+        // R_t R_tᵀ = Σ_t (the paper remarks R_t satisfies this like K_t)
+        let r = p.rt(t);
+        let rrt = r.matmul(&r.transpose());
+        if rrt.dist(&sig) > 1e-5 * (1.0 + sig.max_abs()) {
+            return Err(format!(
+                "R_t R_tᵀ != Σ_t at t={t}: dist={}",
+                rrt.dist(&sig)
+            ));
+        }
+    }
+    // Semigroup: Ψ(t2, t0) = Ψ(t2, t1)Ψ(t1, t0)
+    let (a, b, c) = (t0, 0.5 * (t0 + t1), t1);
+    let lhs = p.psi(c, a);
+    let rhs = p.psi(c, b).matmul(&p.psi(b, a));
+    if lhs.dist(&rhs) > 1e-7 * (1.0 + lhs.max_abs()) {
+        return Err(format!("Psi semigroup violated: dist={}", lhs.dist(&rhs)));
+    }
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Time discretization grids `{t_i}_{i=0}^N` (paper Sec. 4.1:
+//! `t_0 = ε, t_N = T`). Stored ascending; samplers walk them backwards.
+
+/// A sampling time grid. `ts[0] = t_min`, `ts.last() = t_max`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimeGrid {
+    pub ts: Vec<f64>,
+}
+
+impl TimeGrid {
+    /// Uniform spacing on [t_min, t_max] with `n` steps (n+1 nodes) —
+    /// the paper's default for the FID-vs-NFE tables.
+    pub fn uniform(t_min: f64, t_max: f64, n: usize) -> TimeGrid {
+        assert!(n >= 1 && t_max > t_min);
+        let ts = (0..=n)
+            .map(|i| t_min + (t_max - t_min) * i as f64 / n as f64)
+            .collect();
+        TimeGrid { ts }
+    }
+
+    /// Quadratic spacing (finer near t_min where the score is stiff).
+    pub fn quadratic(t_min: f64, t_max: f64, n: usize) -> TimeGrid {
+        assert!(n >= 1 && t_max > t_min);
+        let ts = (0..=n)
+            .map(|i| {
+                let x = i as f64 / n as f64;
+                t_min + (t_max - t_min) * x * x
+            })
+            .collect();
+        TimeGrid { ts }
+    }
+
+    /// Power-law spacing with exponent ρ (ρ=1 uniform, ρ=2 quadratic, …).
+    pub fn power(t_min: f64, t_max: f64, n: usize, rho: f64) -> TimeGrid {
+        assert!(n >= 1 && t_max > t_min && rho > 0.0);
+        let ts = (0..=n)
+            .map(|i| {
+                let x = i as f64 / n as f64;
+                t_min + (t_max - t_min) * x.powf(rho)
+            })
+            .collect();
+        TimeGrid { ts }
+    }
+
+    /// Number of steps N (grid has N+1 nodes).
+    pub fn n_steps(&self) -> usize {
+        self.ts.len() - 1
+    }
+
+    pub fn t_min(&self) -> f64 {
+        self.ts[0]
+    }
+
+    pub fn t_max(&self) -> f64 {
+        *self.ts.last().unwrap()
+    }
+
+    /// Validate monotonicity; used by plan construction.
+    pub fn is_valid(&self) -> bool {
+        self.ts.len() >= 2 && self.ts.windows(2).all(|w| w[1] > w[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::close;
+
+    #[test]
+    fn uniform_endpoints_and_spacing() {
+        let g = TimeGrid::uniform(1e-3, 1.0, 10);
+        assert_eq!(g.ts.len(), 11);
+        assert!(close(g.t_min(), 1e-3, 0.0, 1e-15));
+        assert!(close(g.t_max(), 1.0, 0.0, 1e-15));
+        let d0 = g.ts[1] - g.ts[0];
+        for w in g.ts.windows(2) {
+            assert!(close(w[1] - w[0], d0, 1e-10, 1e-12));
+        }
+        assert!(g.is_valid());
+    }
+
+    #[test]
+    fn quadratic_is_finer_near_start() {
+        let g = TimeGrid::quadratic(1e-3, 1.0, 10);
+        assert!(g.ts[1] - g.ts[0] < g.ts[10] - g.ts[9]);
+        assert!(g.is_valid());
+    }
+
+    #[test]
+    fn power_one_is_uniform() {
+        let a = TimeGrid::uniform(0.01, 2.0, 7);
+        let b = TimeGrid::power(0.01, 2.0, 7, 1.0);
+        for (x, y) in a.ts.iter().zip(&b.ts) {
+            assert!(close(*x, *y, 1e-12, 1e-14));
+        }
+    }
+}

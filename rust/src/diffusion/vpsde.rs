@@ -1,0 +1,178 @@
+//! VPSDE / continuous-time DDPM (paper Eq. 8).
+//!
+//! `F_t = ½ d log α_t/dt · I`, `G_t = √(−d log α_t/dt) · I` with the
+//! standard linear-β schedule `β(t) = β₀ + t(β₁−β₀)` and
+//! `α_t = exp(−∫₀ᵗ β)`. Every coefficient is scalar; `R_t = L_t =
+//! √(1−α_t)·I`, which is exactly why gDDIM collapses to DDIM here
+//! (Sec. 4: "we remark `K_t = √(1−α_t) I_d` is a solution to Eq. 17").
+
+use crate::diffusion::process::Process;
+use crate::math::linop::LinOp;
+
+#[derive(Clone, Debug)]
+pub struct Vpsde {
+    pub d: usize,
+    pub beta0: f64,
+    pub beta1: f64,
+    pub t_max: f64,
+    pub t_min: f64,
+}
+
+impl Vpsde {
+    /// Standard score-SDE hyperparameters (β₀=0.1, β₁=20, T=1).
+    pub fn standard(d: usize) -> Self {
+        Vpsde { d, beta0: 0.1, beta1: 20.0, t_max: 1.0, t_min: 1e-3 }
+    }
+
+    #[inline]
+    pub fn beta(&self, t: f64) -> f64 {
+        self.beta0 + t * (self.beta1 - self.beta0)
+    }
+
+    /// `∫₀ᵗ β(s) ds`.
+    #[inline]
+    pub fn beta_int(&self, t: f64) -> f64 {
+        self.beta0 * t + 0.5 * (self.beta1 - self.beta0) * t * t
+    }
+
+    /// `α_t = exp(−∫β)` — the paper's decreasing α with α₀=1, α_T≈0.
+    #[inline]
+    pub fn alpha(&self, t: f64) -> f64 {
+        (-self.beta_int(t)).exp()
+    }
+}
+
+impl Process for Vpsde {
+    fn name(&self) -> &str {
+        "vpsde"
+    }
+
+    fn dim_x(&self) -> usize {
+        self.d
+    }
+
+    fn dim_u(&self) -> usize {
+        self.d
+    }
+
+    fn t_max(&self) -> f64 {
+        self.t_max
+    }
+
+    fn t_min(&self) -> f64 {
+        self.t_min
+    }
+
+    fn f_op(&self, t: f64) -> LinOp {
+        // ½ dlogα/dt = −½β(t)
+        LinOp::Scalar(-0.5 * self.beta(t))
+    }
+
+    fn ggt_op(&self, t: f64) -> LinOp {
+        LinOp::Scalar(self.beta(t))
+    }
+
+    fn psi(&self, t: f64, s: f64) -> LinOp {
+        // √(α_t/α_s) = exp(−½(B(t)−B(s)))
+        LinOp::Scalar((-0.5 * (self.beta_int(t) - self.beta_int(s))).exp())
+    }
+
+    fn sigma(&self, t: f64) -> LinOp {
+        LinOp::Scalar(1.0 - self.alpha(t))
+    }
+
+    fn sigma0(&self) -> LinOp {
+        LinOp::Scalar(0.0)
+    }
+
+    fn rt(&self, t: f64) -> LinOp {
+        LinOp::Scalar((1.0 - self.alpha(t)).sqrt())
+    }
+
+    fn lift_data(&self, x: &[f64]) -> Vec<f64> {
+        x.to_vec()
+    }
+
+    fn proj_data(&self, u: &[f64]) -> Vec<f64> {
+        u.to_vec()
+    }
+
+    fn prior_factor(&self) -> LinOp {
+        LinOp::Scalar(1.0)
+    }
+
+    fn lift_cov(&self, m2: f64) -> LinOp {
+        LinOp::Scalar(m2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diffusion::process::validate_process;
+    use crate::math::{close, ode::rk4_integrate};
+
+    #[test]
+    fn invariants() {
+        let p = Vpsde::standard(2);
+        validate_process(&p, &[1e-3, 0.1, 0.5, 0.9, 1.0]).unwrap();
+    }
+
+    #[test]
+    fn alpha_boundary_values() {
+        let p = Vpsde::standard(1);
+        assert!(close(p.alpha(0.0), 1.0, 0.0, 1e-15));
+        assert!(p.alpha(1.0) < 5e-5, "alpha_T = {}", p.alpha(1.0)); // ~exp(-10.05)
+    }
+
+    #[test]
+    fn sigma_solves_lyapunov_ode() {
+        // dΣ/dt = 2FΣ + GGᵀ with Σ(0)=0 must match 1−α_t.
+        let p = Vpsde::standard(1);
+        let mut y = vec![0.0];
+        let pc = p.clone();
+        rk4_integrate(
+            &mut move |t: f64, y: &[f64], dy: &mut [f64]| {
+                dy[0] = -pc.beta(t) * y[0] + pc.beta(t);
+            },
+            0.0,
+            0.7,
+            2_000,
+            &mut y,
+        );
+        assert!(close(y[0], 1.0 - p.alpha(0.7), 1e-8, 1e-10));
+    }
+
+    #[test]
+    fn psi_solves_transition_ode() {
+        let p = Vpsde::standard(1);
+        let mut y = vec![1.0];
+        let pc = p.clone();
+        rk4_integrate(
+            &mut move |t: f64, y: &[f64], dy: &mut [f64]| {
+                dy[0] = -0.5 * pc.beta(t) * y[0];
+            },
+            0.2,
+            0.9,
+            2_000,
+            &mut y,
+        );
+        let psi = match p.psi(0.9, 0.2) {
+            LinOp::Scalar(s) => s,
+            _ => unreachable!(),
+        };
+        assert!(close(y[0], psi, 1e-10, 0.0));
+    }
+
+    #[test]
+    fn ddpm_identity_sqrt_ratio() {
+        // Ψ(t,s) = sqrt(α_t/α_s) (used throughout Sec. 3 derivations).
+        let p = Vpsde::standard(1);
+        let (s, t) = (0.3, 0.8);
+        let psi = match p.psi(t, s) {
+            LinOp::Scalar(x) => x,
+            _ => unreachable!(),
+        };
+        assert!(close(psi, (p.alpha(t) / p.alpha(s)).sqrt(), 1e-13, 0.0));
+    }
+}

@@ -1,0 +1,116 @@
+//! Shared experiment plumbing.
+
+use std::sync::Arc;
+
+use crate::coeffs::plan::{PlanConfig, SamplerPlan};
+use crate::data::gmm::GmmSpec;
+use crate::data::presets;
+use crate::diffusion::process::KtKind;
+use crate::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
+use crate::math::rng::Rng;
+use crate::metrics::frechet::frechet_to_spec;
+use crate::samplers::common::SampleOutput;
+use crate::score::oracle::GmmOracle;
+use crate::util::cli::Args;
+
+pub struct Setup {
+    pub proc: Arc<dyn Process>,
+    pub spec: GmmSpec,
+}
+
+pub fn setup(process: &str, dataset: &str) -> Setup {
+    let spec = presets::by_name(dataset).expect("unknown dataset");
+    let proc: Arc<dyn Process> = match process {
+        "vpsde" => Arc::new(Vpsde::standard(spec.d)),
+        "cld" => Arc::new(Cld::standard(spec.d)),
+        "bdm" => {
+            let side = (spec.d as f64).sqrt() as usize;
+            Arc::new(Bdm::standard(side, side))
+        }
+        other => panic!("unknown process {other}"),
+    };
+    Setup { proc, spec }
+}
+
+pub fn oracle(s: &Setup, kt: KtKind) -> GmmOracle {
+    GmmOracle::new(s.proc.clone(), s.spec.clone(), kt)
+}
+
+/// Sample count: `--n`, scaled down by `--fast` for smoke runs.
+pub fn n_samples(args: &Args, default: usize) -> usize {
+    let n = args.get_usize("n", default);
+    if args.has("fast") {
+        (n / 8).max(200)
+    } else {
+        n
+    }
+}
+
+pub fn fd(out: &SampleOutput, spec: &GmmSpec) -> f64 {
+    frechet_to_spec(&out.xs, spec)
+}
+
+/// Run deterministic gDDIM with a fresh plan.
+pub fn run_gddim(
+    s: &Setup,
+    kt: KtKind,
+    q: usize,
+    nfe: usize,
+    corrector: bool,
+    n: usize,
+    seed: u64,
+) -> SampleOutput {
+    let grid = TimeGrid::uniform(s.proc.t_min(), s.proc.t_max(), nfe);
+    let cfg = PlanConfig { q, kt, with_corrector: corrector, ..PlanConfig::default() };
+    let plan = SamplerPlan::build(s.proc.as_ref(), &grid, &cfg);
+    let o = oracle(s, kt);
+    let mut rng = Rng::seed_from(seed);
+    crate::samplers::gddim::sample_deterministic(s.proc.as_ref(), &plan, &o, n, &mut rng, false)
+}
+
+pub fn run_gddim_sde(s: &Setup, lambda: f64, nfe: usize, n: usize, seed: u64) -> SampleOutput {
+    let grid = TimeGrid::uniform(s.proc.t_min(), s.proc.t_max(), nfe);
+    let plan = SamplerPlan::build(s.proc.as_ref(), &grid, &PlanConfig::stochastic(lambda));
+    let o = oracle(s, KtKind::R);
+    let mut rng = Rng::seed_from(seed);
+    crate::samplers::gddim::sample_stochastic(s.proc.as_ref(), &plan, &o, n, &mut rng, false)
+}
+
+pub fn run_em(s: &Setup, lambda: f64, nfe: usize, n: usize, seed: u64) -> SampleOutput {
+    let grid = TimeGrid::uniform(s.proc.t_min(), s.proc.t_max(), nfe);
+    let o = oracle(s, KtKind::R);
+    let mut rng = Rng::seed_from(seed);
+    crate::samplers::em::sample_em(s.proc.as_ref(), &o, &grid, lambda, n, &mut rng, false)
+}
+
+pub fn run_ancestral(s: &Setup, nfe: usize, n: usize, seed: u64) -> SampleOutput {
+    let grid = TimeGrid::uniform(s.proc.t_min(), s.proc.t_max(), nfe);
+    let o = oracle(s, KtKind::R);
+    let mut rng = Rng::seed_from(seed);
+    crate::samplers::ancestral::sample_ancestral(s.proc.as_ref(), &o, &grid, n, &mut rng)
+}
+
+pub fn run_heun(s: &Setup, nfe_grid: usize, n: usize, seed: u64) -> SampleOutput {
+    let grid = TimeGrid::uniform(s.proc.t_min(), s.proc.t_max(), nfe_grid);
+    let o = oracle(s, KtKind::R);
+    let mut rng = Rng::seed_from(seed);
+    crate::samplers::heun::sample_heun(s.proc.as_ref(), &o, &grid, n, &mut rng)
+}
+
+pub fn run_rk45_at(s: &Setup, target_nfe: usize, n: usize, seed: u64) -> SampleOutput {
+    let o = oracle(s, KtKind::R);
+    let (rtol, _) = crate::samplers::rk45::tune_rtol_for_nfe(s.proc.as_ref(), &o, target_nfe, seed);
+    let mut rng = Rng::seed_from(seed);
+    crate::samplers::rk45::sample_rk45(s.proc.as_ref(), &o, rtol, n, &mut rng)
+}
+
+/// Total variation of a recorded ε-trajectory component (smoothness
+/// measure for Figs. 1–3: small TV = flat = multistep-friendly).
+pub fn traj_tv(eps: &[Vec<f64>], component: usize) -> f64 {
+    let vals: Vec<f64> = eps
+        .iter()
+        .filter(|e| !e.is_empty())
+        .map(|e| e[component])
+        .collect();
+    vals.windows(2).map(|w| (w[1] - w[0]).abs()).sum()
+}

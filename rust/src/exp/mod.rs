@@ -1,0 +1,43 @@
+//! Experiment harnesses — one per paper table/figure (DESIGN.md §5).
+//!
+//! Every harness prints the same rows/columns the paper reports (plus the
+//! paper's own numbers where useful for shape comparison) and appends the
+//! rendered table to `bench_results/`. All of them run against the exact
+//! mixture oracle so the comparison isolates the integrator, exactly like
+//! the paper's Fig. 4 protocol; the learned-score path is exercised by
+//! `examples/e2e_blobs.rs`.
+
+pub mod helpers;
+pub mod tables;
+pub mod figures;
+
+use crate::util::cli::Args;
+
+/// Dispatch an experiment by name ("all" runs the whole battery).
+pub fn run(which: &str, args: &Args) {
+    let all = [
+        "table1", "table2", "table3", "table5", "table6", "table7", "table8", "fig1", "fig2",
+        "fig4", "fig5", "nll",
+    ];
+    if which == "all" {
+        for w in all {
+            run(w, args);
+        }
+        return;
+    }
+    match which {
+        "table1" => tables::table1(args),
+        "table2" => tables::table2(args),
+        "table3" => tables::table3(args),
+        "table5" => tables::table5(args),
+        "table6" => tables::table6(args),
+        "table7" => tables::table7(args),
+        "table8" => tables::table8(args),
+        "fig1" => figures::fig1(args),
+        "fig2" => figures::fig2(args),
+        "fig4" => figures::fig4(args),
+        "fig5" => figures::fig5(args),
+        "nll" => tables::nll(args),
+        other => eprintln!("unknown experiment '{other}'; one of {all:?}"),
+    }
+}

@@ -1,0 +1,44 @@
+//! # gDDIM — Generalized Denoising Diffusion Implicit Models
+//!
+//! A production-quality reproduction of *"gDDIM: Generalized denoising
+//! diffusion implicit models"* (Zhang, Tao, Chen — ICLR 2023) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`math`] — the numerical substrate (small-matrix linear algebra,
+//!   ODE solvers, quadrature, interpolation, RNG, statistics, DCT) —
+//!   everything is hand-rolled on `std` because the build is offline.
+//! * [`diffusion`] — the three diffusion processes the paper evaluates
+//!   (VPSDE/DDPM, CLD, BDM) behind a common [`diffusion::Process`] trait.
+//! * [`coeffs`] — the paper's App. C.3/C.4 "Stage I": offline computation
+//!   of `R_t`, transition matrices, and multistep predictor/corrector
+//!   coefficients, packaged as a reusable [`coeffs::SamplerPlan`].
+//! * [`score`] — score models: exact oracles for mixture data (closed
+//!   form, used to validate Props 1–7) and PJRT-backed neural nets
+//!   AOT-compiled from JAX/Pallas.
+//! * [`samplers`] — "Stage II": gDDIM (deterministic + stochastic,
+//!   multistep predictor-corrector) and every baseline the paper
+//!   compares against (EM, ancestral, RK45 probability flow, Heun, SSCS).
+//! * [`metrics`] — Fréchet distance (the repo's FID analog), Wasserstein,
+//!   mode coverage, probability-flow NLL.
+//! * [`data`] — synthetic datasets shared with the python build layer.
+//! * [`runtime`] — the PJRT client wrapper that loads `artifacts/*.hlo.txt`.
+//! * [`server`] — a batched sampling service (router + dynamic batcher).
+//! * [`exp`] — experiment harnesses regenerating every paper table/figure.
+
+pub mod math;
+pub mod util;
+pub mod diffusion;
+pub mod coeffs;
+pub mod data;
+pub mod score;
+pub mod samplers;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod workload;
+pub mod exp;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,223 @@
+//! `gddim` — the leader binary.
+//!
+//! Subcommands:
+//!   gen-configs            write configs/datasets.json + configs/cld_tables.json
+//!   selfcheck              validate processes, plans and oracle invariants
+//!   sample                 run one sampling config and report metrics
+//!   exp <table1|...|nll>   regenerate a paper table/figure (also via `cargo bench`)
+//!   coeffs                 time Stage-I plan construction (App. C.3 "within 1 min")
+//!   serve                  run the batched sampling service demo
+
+use std::sync::Arc;
+
+use gddim::data::presets;
+use gddim::diffusion::process::KtKind;
+use gddim::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
+use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
+use gddim::metrics::coverage::coverage;
+use gddim::metrics::frechet::frechet_to_spec;
+use gddim::math::rng::Rng;
+use gddim::score::oracle::GmmOracle;
+use gddim::util::cli::Args;
+use gddim::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "gen-configs" => gen_configs(),
+        "selfcheck" => selfcheck(),
+        "sample" => sample(&args),
+        "coeffs" => coeffs(&args),
+        "exp" => exp(&args),
+        "serve" => serve(&args),
+        _ => {
+            eprintln!(
+                "usage: gddim <gen-configs|selfcheck|sample|coeffs|exp|serve> [--flags]\n\
+                 sample flags: --process vpsde|cld|bdm --dataset gmm2d|hard2d|spiral2d|blobs8|faces8\n\
+                 \u{20}              --sampler gddim|gddim-sde|em|ancestral|rk45|heun|sscs\n\
+                 \u{20}              --nfe N --q Q --kt R|L --lambda L --n N --seed S --corrector"
+            );
+        }
+    }
+}
+
+fn gen_configs() {
+    std::fs::create_dir_all("configs").unwrap();
+    let j = presets::export_json();
+    std::fs::write("configs/datasets.json", j.to_string_pretty()).unwrap();
+    println!("wrote configs/datasets.json");
+
+    // CLD Stage-I tables for the python training layer: Ψ(t,0), Σ_t, R_t,
+    // L_t on a dense grid (python interpolates linearly).
+    let cld = Cld::standard(1);
+    let n = 2000;
+    let mut rows = Vec::with_capacity(n + 1);
+    for i in 0..=n {
+        let t = cld.t_min() * 0.1 + (cld.t_max() - cld.t_min() * 0.1) * i as f64 / n as f64;
+        let psi = cld.psi_mat(t, 0.0);
+        let sig = cld.sigma_mat(t);
+        let r = cld.r_mat(t);
+        let l = sig.cholesky();
+        let mut row = vec![t];
+        row.extend_from_slice(&psi.to_array());
+        row.extend_from_slice(&[sig.a, sig.b, sig.d]);
+        row.extend_from_slice(&r.to_array());
+        row.extend_from_slice(&[l.a, l.c, l.d]);
+        rows.push(Json::Arr(row.into_iter().map(Json::Num).collect()));
+    }
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert(
+        "columns".to_string(),
+        Json::Str("t, psi(a,b,c,d), sigma(xx,xv,vv), R(a,b,c,d), L(l11,l21,l22)".into()),
+    );
+    obj.insert("beta".to_string(), Json::Num(cld.cfg.beta));
+    obj.insert("mass".to_string(), Json::Num(cld.cfg.mass));
+    obj.insert("gamma0".to_string(), Json::Num(cld.cfg.gamma0));
+    obj.insert("rows".to_string(), Json::Arr(rows));
+    std::fs::write("configs/cld_tables.json", Json::Obj(obj).to_string_pretty()).unwrap();
+    println!("wrote configs/cld_tables.json");
+}
+
+fn build_process(name: &str, d: usize) -> Arc<dyn Process> {
+    match name {
+        "vpsde" => Arc::new(Vpsde::standard(d)),
+        "cld" => Arc::new(Cld::standard(d)),
+        "bdm" => {
+            let side = (d as f64).sqrt() as usize;
+            assert_eq!(side * side, d, "bdm needs a square image dimension");
+            Arc::new(Bdm::standard(side, side))
+        }
+        other => panic!("unknown process {other}"),
+    }
+}
+
+fn selfcheck() {
+    use gddim::diffusion::process::validate_process;
+    for (name, d) in [("vpsde", 2usize), ("cld", 2), ("bdm", 16)] {
+        let p = build_process(name, d);
+        let probes = [p.t_min(), 0.1, 0.5, 0.9, p.t_max()];
+        match validate_process(p.as_ref(), &probes) {
+            Ok(()) => println!("{name}: process invariants OK"),
+            Err(e) => println!("{name}: FAILED — {e}"),
+        }
+        let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 10);
+        let plan = SamplerPlan::build(p.as_ref(), &grid, &PlanConfig::default());
+        println!("{name}: plan built in {:.3}s", plan.build_seconds);
+    }
+}
+
+fn sample(args: &Args) {
+    let dataset = args.get_or("dataset", "gmm2d");
+    let spec = presets::by_name(&dataset).expect("unknown dataset");
+    let proc_name = args.get_or("process", "cld");
+    let proc = build_process(&proc_name, spec.d);
+    let kt: KtKind = args.get_or("kt", "R").parse().unwrap();
+    let nfe = args.get_usize("nfe", 50);
+    let q = args.get_usize("q", 2);
+    let lambda = args.get_f64("lambda", 0.0);
+    let n = args.get_usize("n", 2000);
+    let seed = args.get_u64("seed", 0);
+    let sampler = args.get_or("sampler", "gddim");
+    let oracle = GmmOracle::new(proc.clone(), spec.clone(), kt);
+    let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), nfe);
+    let mut rng = Rng::seed_from(seed);
+
+    let t0 = std::time::Instant::now();
+    let out = match sampler.as_str() {
+        "gddim" => {
+            let cfg = PlanConfig {
+                q,
+                kt,
+                with_corrector: args.has("corrector"),
+                ..PlanConfig::default()
+            };
+            let plan = SamplerPlan::build(proc.as_ref(), &grid, &cfg);
+            gddim::samplers::gddim::sample_deterministic(
+                proc.as_ref(),
+                &plan,
+                &oracle,
+                n,
+                &mut rng,
+                false,
+            )
+        }
+        "gddim-sde" => {
+            let plan =
+                SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::stochastic(lambda.max(0.1)));
+            gddim::samplers::gddim::sample_stochastic(
+                proc.as_ref(),
+                &plan,
+                &oracle,
+                n,
+                &mut rng,
+                false,
+            )
+        }
+        "em" => gddim::samplers::em::sample_em(
+            proc.as_ref(),
+            &oracle,
+            &grid,
+            lambda,
+            n,
+            &mut rng,
+            false,
+        ),
+        "ancestral" => {
+            gddim::samplers::ancestral::sample_ancestral(proc.as_ref(), &oracle, &grid, n, &mut rng)
+        }
+        "rk45" => gddim::samplers::rk45::sample_rk45(
+            proc.as_ref(),
+            &oracle,
+            args.get_f64("rtol", 1e-4),
+            n,
+            &mut rng,
+        ),
+        "heun" => gddim::samplers::heun::sample_heun(proc.as_ref(), &oracle, &grid, n, &mut rng),
+        "sscs" => gddim::samplers::sscs::sample_sscs(proc.as_ref(), &oracle, &grid, n, &mut rng),
+        other => panic!("unknown sampler {other}"),
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    let fd = frechet_to_spec(&out.xs, &spec);
+    let cov = coverage(&out.xs, &spec);
+    println!(
+        "process={proc_name} dataset={dataset} sampler={sampler} kt={} q={q} λ={lambda}\n\
+         NFE={} FD={fd:.4} missing-modes={}/{} outliers={:.3} wall={wall:.2}s",
+        kt.label(),
+        out.nfe,
+        cov.missing,
+        spec.n_modes(),
+        cov.outliers,
+    );
+}
+
+fn coeffs(args: &Args) {
+    // App. C.3: "The calculation of all these coefficients can be done
+    // within 1 min." Report our Stage-I timings.
+    let nfe = args.get_usize("nfe", 50);
+    for name in ["vpsde", "cld", "bdm"] {
+        let d = if name == "bdm" { 64 } else { 2 };
+        let p = build_process(name, d);
+        let grid = TimeGrid::uniform(p.t_min(), p.t_max(), nfe);
+        for (label, cfg) in [
+            ("det q=3", PlanConfig::deterministic(3, KtKind::R)),
+            (
+                "det q=3 + corrector",
+                PlanConfig { q: 3, with_corrector: true, ..PlanConfig::default() },
+            ),
+            ("stochastic λ=1", PlanConfig::stochastic(1.0)),
+        ] {
+            let plan = SamplerPlan::build(p.as_ref(), &grid, &cfg);
+            println!("{name:6} {label:22} N={nfe}: {:.3}s", plan.build_seconds);
+        }
+    }
+}
+
+fn exp(args: &Args) {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    gddim::exp::run(which, args);
+}
+
+fn serve(args: &Args) {
+    gddim::server::demo::run(args);
+}

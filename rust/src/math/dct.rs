@@ -1,0 +1,141 @@
+//! Orthonormal DCT-II transforms for the Blurring Diffusion Model.
+//!
+//! BDM (paper Eq. 11, App. B.1) defines its forward process in frequency
+//! space: `y_t = Vᵀ x_t` with `Vᵀ` the (orthonormal) DCT and `V` the
+//! inverse DCT, and diagonal `α_t`, `σ_t` per frequency. We implement the
+//! 1-D DCT-II matrix and its separable 2-D application; image sizes here
+//! are small (≤ 32) so the dense O(n²) matrix apply is the right tool
+//! (and is exactly invertible by the transpose, which the tests verify).
+
+use crate::math::linalg::MatD;
+
+/// Orthonormal DCT-II matrix `C` with `y = C x`:
+/// `C[k][n] = s_k * cos(π (n + ½) k / N)`, `s_0 = √(1/N)`, `s_k = √(2/N)`.
+pub fn dct_matrix(n: usize) -> MatD {
+    let mut c = MatD::zeros(n, n);
+    let nf = n as f64;
+    for k in 0..n {
+        let s = if k == 0 { (1.0 / nf).sqrt() } else { (2.0 / nf).sqrt() };
+        for j in 0..n {
+            c[(k, j)] = s * (std::f64::consts::PI * (j as f64 + 0.5) * k as f64 / nf).cos();
+        }
+    }
+    c
+}
+
+/// Squared spatial frequencies `λ_k = (π k / N)²` used by the blurring
+/// schedule (heat dissipation in frequency space).
+pub fn frequencies_squared(n: usize) -> Vec<f64> {
+    (0..n).map(|k| (std::f64::consts::PI * k as f64 / n as f64).powi(2)).collect()
+}
+
+/// Separable 2-D DCT over a row-major `h×w` image: `Y = C_h X C_wᵀ`.
+pub struct Dct2 {
+    pub h: usize,
+    pub w: usize,
+    ch: MatD,
+    cw: MatD,
+}
+
+impl Dct2 {
+    pub fn new(h: usize, w: usize) -> Self {
+        Dct2 { h, w, ch: dct_matrix(h), cw: dct_matrix(w) }
+    }
+
+    /// Forward DCT (pixel -> frequency), out-of-place.
+    pub fn forward(&self, img: &[f64]) -> Vec<f64> {
+        self.apply(img, false)
+    }
+
+    /// Inverse DCT (frequency -> pixel).
+    pub fn inverse(&self, freq: &[f64]) -> Vec<f64> {
+        self.apply(freq, true)
+    }
+
+    fn apply(&self, x: &[f64], inverse: bool) -> Vec<f64> {
+        assert_eq!(x.len(), self.h * self.w);
+        let xm = MatD { n: self.h, m: self.w, data: x.to_vec() };
+        let out = if inverse {
+            // X = C_hᵀ Y C_w
+            self.ch.transpose().matmul(&xm).matmul(&self.cw)
+        } else {
+            // Y = C_h X C_wᵀ
+            self.ch.matmul(&xm).matmul(&self.cw.transpose())
+        };
+        out.data
+    }
+
+    /// Per-coefficient eigenvalues of the 2-D Laplacian blur:
+    /// `λ_{ij} = λ_i + λ_j` flattened row-major (the BDM dissipation rates).
+    pub fn blur_eigenvalues(&self) -> Vec<f64> {
+        let fh = frequencies_squared(self.h);
+        let fw = frequencies_squared(self.w);
+        let mut out = Vec::with_capacity(self.h * self.w);
+        for i in 0..self.h {
+            for j in 0..self.w {
+                out.push(fh[i] + fw[j]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{assert_allclose, rng::Rng};
+
+    #[test]
+    fn dct_matrix_is_orthonormal() {
+        for n in [1usize, 2, 4, 8, 16] {
+            let c = dct_matrix(n);
+            let ctc = c.transpose().matmul(&c);
+            assert!(
+                ctc.sub(&MatD::eye(n)).max_abs() < 1e-12,
+                "n={n}: CᵀC != I ({})",
+                ctc.sub(&MatD::eye(n)).max_abs()
+            );
+        }
+    }
+
+    #[test]
+    fn dct2_roundtrip() {
+        let mut rng = Rng::seed_from(31);
+        let d = Dct2::new(8, 8);
+        let img: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        let back = d.inverse(&d.forward(&img));
+        assert_allclose(&back, &img, 1e-12, 1e-12, "dct2 roundtrip");
+    }
+
+    #[test]
+    fn dct_of_constant_is_dc_only() {
+        let d = Dct2::new(4, 4);
+        let img = vec![2.5; 16];
+        let f = d.forward(&img);
+        assert!((f[0] - 2.5 * 4.0).abs() < 1e-12, "DC = mean * sqrt(h*w)");
+        for &v in &f[1..] {
+            assert!(v.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dct_preserves_l2_norm() {
+        let mut rng = Rng::seed_from(37);
+        let d = Dct2::new(8, 8);
+        let img: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        let f = d.forward(&img);
+        let n1: f64 = img.iter().map(|x| x * x).sum();
+        let n2: f64 = f.iter().map(|x| x * x).sum();
+        assert!((n1 - n2).abs() < 1e-10 * n1, "Parseval");
+    }
+
+    #[test]
+    fn blur_eigenvalues_monotone_per_row() {
+        let d = Dct2::new(8, 8);
+        let lam = d.blur_eigenvalues();
+        assert_eq!(lam[0], 0.0, "DC mode never dissipates");
+        for i in 1..8 {
+            assert!(lam[i] > lam[i - 1], "frequencies increase along a row");
+        }
+    }
+}

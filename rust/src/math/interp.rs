@@ -1,0 +1,306 @@
+//! Interpolation utilities:
+//!
+//! * Uniform-grid linear interpolation tables (the paper's Stage-I
+//!   strategy: "Since the output of numerical solvers are discrete in
+//!   time, we employ a linear interpolation to handle query in continuous
+//!   time" — App. C.3).
+//! * Lagrange basis polynomials `ℓ_j(τ) = Π_{k≠j} (τ−t_k)/(t_j−t_k)` for
+//!   the multistep predictor/corrector (Eqs. 39/44).
+
+/// A vector-valued function of time tabulated on a uniform grid, with
+/// linear interpolation between samples (and clamping at the ends).
+#[derive(Clone, Debug)]
+pub struct UniformTable {
+    pub t0: f64,
+    pub t1: f64,
+    /// values[i] is the sample at t0 + i*dt; each sample is a k-vector.
+    pub values: Vec<Vec<f64>>,
+    pub k: usize,
+}
+
+impl UniformTable {
+    /// Tabulate `f` at `n+1` uniformly spaced points on [t0, t1].
+    pub fn build<F: FnMut(f64, &mut [f64])>(t0: f64, t1: f64, n: usize, k: usize, mut f: F) -> Self {
+        assert!(n >= 1 && t1 > t0);
+        let dt = (t1 - t0) / n as f64;
+        let mut values = Vec::with_capacity(n + 1);
+        for i in 0..=n {
+            let mut v = vec![0.0; k];
+            f(t0 + i as f64 * dt, &mut v);
+            values.push(v);
+        }
+        UniformTable { t0, t1, values, k }
+    }
+
+    /// Build directly from precomputed rows (used when the samples come
+    /// out of a single ODE sweep rather than independent evaluations).
+    pub fn from_values(t0: f64, t1: f64, values: Vec<Vec<f64>>) -> Self {
+        assert!(values.len() >= 2);
+        let k = values[0].len();
+        UniformTable { t0, t1, values, k }
+    }
+
+    #[inline]
+    pub fn eval_into(&self, t: f64, out: &mut [f64]) {
+        let n = self.values.len() - 1;
+        let x = ((t - self.t0) / (self.t1 - self.t0) * n as f64).clamp(0.0, n as f64);
+        let i = (x as usize).min(n - 1);
+        let frac = x - i as f64;
+        let lo = &self.values[i];
+        let hi = &self.values[i + 1];
+        for j in 0..self.k {
+            out[j] = lo[j] + frac * (hi[j] - lo[j]);
+        }
+    }
+
+    pub fn eval(&self, t: f64) -> Vec<f64> {
+        let mut v = vec![0.0; self.k];
+        self.eval_into(t, &mut v);
+        v
+    }
+
+    /// Scalar convenience for k == 1 tables.
+    pub fn eval1(&self, t: f64) -> f64 {
+        debug_assert_eq!(self.k, 1);
+        let mut v = [0.0];
+        self.eval_into(t, &mut v);
+        v[0]
+    }
+}
+
+/// Two-segment table: a fine uniform grid on `[t0, knee]` and a coarse
+/// one on `[knee, t1]`. The CLD Stage-I ODEs (`Σ_t`, `R_t`, `Ψ̂`) are
+/// stiff near `t=0` (`Σ^{xx} ~ t³` makes `Σ⁻¹` blow up) but smooth
+/// afterwards; this keeps the paper's RK4-with-1e-6-step accuracy near
+/// the origin without paying for it across the whole horizon.
+#[derive(Clone, Debug)]
+pub struct TwoScaleTable {
+    pub fine: UniformTable,
+    pub coarse: UniformTable,
+    pub knee: f64,
+}
+
+impl TwoScaleTable {
+    pub fn new(fine: UniformTable, coarse: UniformTable) -> Self {
+        assert!((fine.t1 - coarse.t0).abs() < 1e-12, "segments must touch");
+        assert_eq!(fine.k, coarse.k);
+        TwoScaleTable { knee: fine.t1, fine, coarse }
+    }
+
+    #[inline]
+    pub fn eval_into(&self, t: f64, out: &mut [f64]) {
+        if t <= self.knee {
+            self.fine.eval_into(t, out)
+        } else {
+            self.coarse.eval_into(t, out)
+        }
+    }
+
+    pub fn eval(&self, t: f64) -> Vec<f64> {
+        let mut v = vec![0.0; self.fine.k];
+        self.eval_into(t, &mut v);
+        v
+    }
+
+    pub fn t0(&self) -> f64 {
+        self.fine.t0
+    }
+
+    pub fn t1(&self) -> f64 {
+        self.coarse.t1
+    }
+}
+
+/// Geometrically-spaced table: nodes at `t0·r^i`, linear interpolation in
+/// `ln t`. The right tool for Stage-I quantities with power-law behaviour
+/// near `t = 0` (CLD's `R_t`): uniform *relative* resolution means the
+/// interpolation error is a constant relative error across decades.
+#[derive(Clone, Debug)]
+pub struct LogTable {
+    pub t0: f64,
+    pub t1: f64,
+    ln_t0: f64,
+    ln_span: f64,
+    pub values: Vec<Vec<f64>>,
+    pub k: usize,
+}
+
+impl LogTable {
+    pub fn from_values(t0: f64, t1: f64, values: Vec<Vec<f64>>) -> Self {
+        assert!(t0 > 0.0 && t1 > t0 && values.len() >= 2);
+        let k = values[0].len();
+        LogTable { t0, t1, ln_t0: t0.ln(), ln_span: (t1 / t0).ln(), values, k }
+    }
+
+    /// The i-th node time (geometric spacing).
+    pub fn node(&self, i: usize, n: usize) -> f64 {
+        self.t0 * ((self.ln_span * i as f64 / n as f64).exp())
+    }
+
+    /// Catmull–Rom cubic interpolation in `ln t` (linear at the two
+    /// boundary cells). O(Δ⁴) error on smooth tables — the Stage-I
+    /// coefficient queries inherit RK4-level accuracy from the grid.
+    #[inline]
+    pub fn eval_into(&self, t: f64, out: &mut [f64]) {
+        let n = self.values.len() - 1;
+        let t = t.clamp(self.t0, self.t1);
+        let x = ((t.ln() - self.ln_t0) / self.ln_span * n as f64).clamp(0.0, n as f64);
+        let i = (x as usize).min(n - 1);
+        let s = x - i as f64;
+        if i == 0 || i + 2 > n {
+            let lo = &self.values[i];
+            let hi = &self.values[i + 1];
+            for j in 0..self.k {
+                out[j] = lo[j] + s * (hi[j] - lo[j]);
+            }
+            return;
+        }
+        let (p0, p1, p2, p3) =
+            (&self.values[i - 1], &self.values[i], &self.values[i + 1], &self.values[i + 2]);
+        for j in 0..self.k {
+            let (a, b, c, d) = (p0[j], p1[j], p2[j], p3[j]);
+            out[j] = 0.5
+                * (2.0 * b
+                    + s * ((c - a)
+                        + s * ((2.0 * a - 5.0 * b + 4.0 * c - d)
+                            + s * (3.0 * (b - c) + d - a))));
+        }
+    }
+
+    pub fn eval(&self, t: f64) -> Vec<f64> {
+        let mut v = vec![0.0; self.k];
+        self.eval_into(t, &mut v);
+        v
+    }
+}
+
+/// Evaluate the Lagrange basis `ℓ_j(τ)` over the nodes `ts`.
+/// Used by the q-step predictor (Eq. 39) / corrector (Eq. 44).
+pub fn lagrange_basis(ts: &[f64], j: usize, tau: f64) -> f64 {
+    let tj = ts[j];
+    let mut p = 1.0;
+    for (k, &tk) in ts.iter().enumerate() {
+        if k != j {
+            p *= (tau - tk) / (tj - tk);
+        }
+    }
+    p
+}
+
+/// Evaluate the full interpolating polynomial through `(ts[j], ys[j])`.
+pub fn lagrange_interp(ts: &[f64], ys: &[f64], tau: f64) -> f64 {
+    assert_eq!(ts.len(), ys.len());
+    (0..ts.len()).map(|j| ys[j] * lagrange_basis(ts, j, tau)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::close;
+
+    #[test]
+    fn table_roundtrips_linear_functions_exactly() {
+        let tab = UniformTable::build(0.0, 2.0, 10, 2, |t, v| {
+            v[0] = 3.0 * t - 1.0;
+            v[1] = -t;
+        });
+        for &t in &[0.0, 0.123, 0.77, 1.5, 2.0] {
+            let v = tab.eval(t);
+            assert!(close(v[0], 3.0 * t - 1.0, 1e-13, 1e-13));
+            assert!(close(v[1], -t, 1e-13, 1e-13));
+        }
+    }
+
+    #[test]
+    fn table_clamps_out_of_range() {
+        let tab = UniformTable::build(0.0, 1.0, 4, 1, |t, v| v[0] = t);
+        assert!(close(tab.eval1(-5.0), 0.0, 0.0, 1e-14));
+        assert!(close(tab.eval1(9.0), 1.0, 0.0, 1e-14));
+    }
+
+    #[test]
+    fn table_converges_quadratically() {
+        let f = |t: f64| (3.0 * t).sin();
+        let err = |n: usize| {
+            let tab = UniformTable::build(0.0, 1.0, n, 1, |t, v| v[0] = f(t));
+            let mut e = 0.0f64;
+            for i in 0..1000 {
+                let t = i as f64 / 999.0;
+                e = e.max((tab.eval1(t) - f(t)).abs());
+            }
+            e
+        };
+        assert!(err(100) / err(200) > 3.5, "linear interp should be O(h^2)");
+    }
+
+    #[test]
+    fn two_scale_table_dispatches_by_knee() {
+        let f = |t: f64| t * t * t;
+        let fine = UniformTable::build(0.0, 0.1, 1000, 1, |t, v| v[0] = f(t));
+        let coarse = UniformTable::build(0.1, 1.0, 100, 1, |t, v| v[0] = f(t));
+        let tab = TwoScaleTable::new(fine, coarse);
+        for &t in &[0.0, 0.05, 0.0999, 0.1, 0.3, 1.0] {
+            let v = tab.eval(t)[0];
+            assert!(close(v, f(t), 1e-3, 1e-9), "t={t}: {v} vs {}", f(t));
+        }
+        // Near zero the fine grid must be much more accurate than the
+        // coarse spacing would allow.
+        let t = 0.003;
+        assert!((tab.eval(t)[0] - f(t)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_table_uniform_relative_error_on_power_law() {
+        // f(t) = t^2.5 over four decades: relative error must stay small
+        // even at the bottom of the range.
+        let f = |t: f64| t.powf(2.5);
+        let n = 2048;
+        let t0: f64 = 1e-4;
+        let t1: f64 = 1.0;
+        let values: Vec<Vec<f64>> = (0..=n)
+            .map(|i| vec![f(t0 * ((t1 / t0).ln() * i as f64 / n as f64).exp())])
+            .collect();
+        let tab = LogTable::from_values(t0, t1, values);
+        for &t in &[1.3e-4, 1e-3, 3.7e-3, 0.02, 0.5, 1.0] {
+            let v = tab.eval(t)[0];
+            assert!(close(v, f(t), 1e-5, 0.0), "t={t}: {v} vs {}", f(t));
+        }
+    }
+
+    #[test]
+    fn log_table_clamps() {
+        let values = vec![vec![1.0], vec![2.0], vec![4.0]];
+        let tab = LogTable::from_values(0.1, 10.0, values);
+        assert_eq!(tab.eval(0.001)[0], 1.0);
+        assert_eq!(tab.eval(100.0)[0], 4.0);
+    }
+
+    #[test]
+    fn lagrange_partition_of_unity() {
+        let ts = [0.0, 0.3, 0.9, 1.4];
+        for &tau in &[-0.2, 0.1, 0.5, 1.2, 2.0] {
+            let s: f64 = (0..ts.len()).map(|j| lagrange_basis(&ts, j, tau)).sum();
+            assert!(close(s, 1.0, 1e-12, 1e-12), "tau={tau} s={s}");
+        }
+    }
+
+    #[test]
+    fn lagrange_reproduces_polynomials() {
+        // 3 nodes reproduce any quadratic exactly.
+        let ts = [0.1, 0.6, 1.1];
+        let f = |t: f64| 2.0 * t * t - t + 0.5;
+        let ys: Vec<f64> = ts.iter().map(|&t| f(t)).collect();
+        for &tau in &[0.0, 0.4, 0.9, 1.5] {
+            assert!(close(lagrange_interp(&ts, &ys, tau), f(tau), 1e-12, 1e-12));
+        }
+    }
+
+    #[test]
+    fn lagrange_interpolates_nodes() {
+        let ts = [0.0, 1.0, 2.0, 3.5];
+        let ys = [5.0, -1.0, 2.0, 0.0];
+        for j in 0..4 {
+            assert!(close(lagrange_interp(&ts, &ys, ts[j]), ys[j], 1e-12, 1e-12));
+        }
+    }
+}

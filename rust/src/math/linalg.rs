@@ -1,0 +1,320 @@
+//! Dense `d×d` linear algebra for the evaluation metrics (Fréchet
+//! distance needs a symmetric matrix square root of data-space
+//! covariances, `d` up to a few hundred) and for the DCT matrices used by
+//! the blurring diffusion model.
+//!
+//! Only what the repo needs: matmul, symmetric eigendecomposition
+//! (cyclic Jacobi — robust and dependency-free), SPD square root,
+//! Cholesky, and a couple of norms.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatD {
+    pub n: usize,
+    pub m: usize,
+    pub data: Vec<f64>,
+}
+
+impl MatD {
+    pub fn zeros(n: usize, m: usize) -> Self {
+        MatD { n, m, data: vec![0.0; n * m] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut a = MatD::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = 1.0;
+        }
+        a
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let n = rows.len();
+        let m = if n == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(n * m);
+        for r in rows {
+            assert_eq!(r.len(), m, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        MatD { n, m, data }
+    }
+
+    pub fn diag(v: &[f64]) -> Self {
+        let mut a = MatD::zeros(v.len(), v.len());
+        for (i, &x) in v.iter().enumerate() {
+            a[(i, i)] = x;
+        }
+        a
+    }
+
+    pub fn transpose(&self) -> MatD {
+        let mut t = MatD::zeros(self.m, self.n);
+        for i in 0..self.n {
+            for j in 0..self.m {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn matmul(&self, other: &MatD) -> MatD {
+        assert_eq!(self.m, other.n, "matmul: inner dims {} vs {}", self.m, other.n);
+        let mut out = MatD::zeros(self.n, other.m);
+        // ikj loop order for cache friendliness.
+        for i in 0..self.n {
+            for k in 0..self.m {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.m..(k + 1) * other.m];
+                let out_row = &mut out.data[i * other.m..(i + 1) * other.m];
+                for j in 0..other.m {
+                    out_row[j] += aik * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.m, x.len());
+        let mut y = vec![0.0; self.n];
+        for i in 0..self.n {
+            let row = &self.data[i * self.m..(i + 1) * self.m];
+            let mut acc = 0.0;
+            for j in 0..self.m {
+                acc += row[j] * x[j];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    pub fn add(&self, other: &MatD) -> MatD {
+        assert_eq!((self.n, self.m), (other.n, other.m));
+        MatD {
+            n: self.n,
+            m: self.m,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &MatD) -> MatD {
+        assert_eq!((self.n, self.m), (other.n, other.m));
+        MatD {
+            n: self.n,
+            m: self.m,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> MatD {
+        MatD { n: self.n, m: self.m, data: self.data.iter().map(|a| a * s).collect() }
+    }
+
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.n, self.m);
+        (0..self.n).map(|i| self[(i, i)]).sum()
+    }
+
+    pub fn frob(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// Symmetric eigendecomposition by cyclic Jacobi rotations.
+    /// Returns `(eigenvalues, V)` with `self = V diag(λ) Vᵀ`
+    /// (columns of `V` are eigenvectors).
+    pub fn sym_eig(&self) -> (Vec<f64>, MatD) {
+        assert_eq!(self.n, self.m, "sym_eig: square only");
+        let n = self.n;
+        let mut a = self.clone();
+        // Enforce exact symmetry.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = 0.5 * (a[(i, j)] + a[(j, i)]);
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        let mut v = MatD::eye(n);
+        let max_sweeps = 64;
+        for _sweep in 0..max_sweeps {
+            let mut off = 0.0;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    off += a[(i, j)] * a[(i, j)];
+                }
+            }
+            if off.sqrt() < 1e-14 * (1.0 + a.frob()) {
+                break;
+            }
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    let apq = a[(p, q)];
+                    if apq.abs() < 1e-300 {
+                        continue;
+                    }
+                    let app = a[(p, p)];
+                    let aqq = a[(q, q)];
+                    let theta = 0.5 * (aqq - app) / apq;
+                    let t = theta.signum() / (theta.abs() + (1.0 + theta * theta).sqrt());
+                    let c = 1.0 / (1.0 + t * t).sqrt();
+                    let s = t * c;
+                    // Apply the rotation J(p,q,θ): A <- JᵀAJ, V <- VJ.
+                    for k in 0..n {
+                        let akp = a[(k, p)];
+                        let akq = a[(k, q)];
+                        a[(k, p)] = c * akp - s * akq;
+                        a[(k, q)] = s * akp + c * akq;
+                    }
+                    for k in 0..n {
+                        let apk = a[(p, k)];
+                        let aqk = a[(q, k)];
+                        a[(p, k)] = c * apk - s * aqk;
+                        a[(q, k)] = s * apk + c * aqk;
+                    }
+                    for k in 0..n {
+                        let vkp = v[(k, p)];
+                        let vkq = v[(k, q)];
+                        v[(k, p)] = c * vkp - s * vkq;
+                        v[(k, q)] = s * vkp + c * vkq;
+                    }
+                }
+            }
+        }
+        let lam = (0..n).map(|i| a[(i, i)]).collect();
+        (lam, v)
+    }
+
+    /// Principal square root of a symmetric PSD matrix via eigendecomposition
+    /// (negative eigenvalues from numerical noise are clamped to zero).
+    pub fn sqrtm_psd(&self) -> MatD {
+        let (lam, v) = self.sym_eig();
+        let sq: Vec<f64> = lam.iter().map(|&l| l.max(0.0).sqrt()).collect();
+        v.matmul(&MatD::diag(&sq)).matmul(&v.transpose())
+    }
+
+    /// Cholesky factorisation (lower-triangular) of a symmetric PD matrix.
+    pub fn cholesky(&self) -> Option<MatD> {
+        assert_eq!(self.n, self.m);
+        let n = self.n;
+        let mut l = MatD::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return None;
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Some(l)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for MatD {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.m + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for MatD {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.m + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> MatD {
+        let mut a = MatD::zeros(n, n);
+        for x in a.data.iter_mut() {
+            *x = rng.normal();
+        }
+        let mut m = a.matmul(&a.transpose());
+        for i in 0..n {
+            m[(i, i)] += 0.5;
+        }
+        m
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::seed_from(7);
+        let a = random_spd(5, &mut rng);
+        let i5 = MatD::eye(5);
+        assert!(a.matmul(&i5).sub(&a).max_abs() < 1e-14);
+        assert!(i5.matmul(&a).sub(&a).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn sym_eig_reconstructs() {
+        let mut rng = Rng::seed_from(11);
+        for n in [2usize, 3, 8, 16] {
+            let m = random_spd(n, &mut rng);
+            let (lam, v) = m.sym_eig();
+            let rec = v.matmul(&MatD::diag(&lam)).matmul(&v.transpose());
+            assert!(
+                rec.sub(&m).max_abs() < 1e-9 * (1.0 + m.max_abs()),
+                "n={n}: reconstruction error {}",
+                rec.sub(&m).max_abs()
+            );
+            // V orthogonal
+            let vtv = v.transpose().matmul(&v);
+            assert!(vtv.sub(&MatD::eye(n)).max_abs() < 1e-10, "n={n}: V not orthogonal");
+            // all eigenvalues positive for SPD
+            assert!(lam.iter().all(|&l| l > 0.0), "n={n}: non-positive eigenvalue");
+        }
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        let mut rng = Rng::seed_from(13);
+        for n in [2usize, 4, 12] {
+            let m = random_spd(n, &mut rng);
+            let r = m.sqrtm_psd();
+            assert!(r.matmul(&r).sub(&m).max_abs() < 1e-9 * (1.0 + m.max_abs()));
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::seed_from(17);
+        let m = random_spd(6, &mut rng);
+        let l = m.cholesky().expect("SPD must factor");
+        assert!(l.matmul(&l.transpose()).sub(&m).max_abs() < 1e-10 * (1.0 + m.max_abs()));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let m = MatD::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(m.cholesky().is_none());
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::seed_from(19);
+        let a = random_spd(5, &mut rng);
+        let x: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let xs = MatD { n: 5, m: 1, data: x.clone() };
+        let via_mm = a.matmul(&xs).data;
+        crate::math::assert_allclose(&a.matvec(&x), &via_mm, 1e-13, 1e-13, "matvec");
+    }
+}

@@ -1,0 +1,346 @@
+//! Structured linear operators on the diffusion state.
+//!
+//! Every coefficient matrix in the three diffusion models has block
+//! structure that makes dense D×D algebra unnecessary:
+//!
+//! * VPSDE/DDPM: scalar multiples of `I_d` ([`LinOp::Scalar`]),
+//! * CLD: `M ⊗ I_d` with `M ∈ R^{2×2}` over `u = [x; v]` ([`LinOp::Block2`]),
+//! * BDM: diagonal per DCT frequency ([`LinOp::Diag`]).
+//!
+//! The Stage-I coefficient engine and the samplers are written once
+//! against this enum; each variant stores O(1) or O(d) data instead of
+//! O(D²), which is also what makes the coefficient tables cheap to cache.
+//! State layout convention: for `Block2`, `u = [x(0..d), v(0..d)]`.
+
+use std::sync::Arc;
+
+use crate::math::mat2::Mat2;
+
+/// A structured `D×D` linear operator.
+#[derive(Clone, Debug)]
+pub enum LinOp {
+    /// `s · I_D`.
+    Scalar(f64),
+    /// `diag(v)`, one entry per state dimension.
+    Diag(Arc<Vec<f64>>),
+    /// `M ⊗ I_d` acting on `u = [x; v]` (CLD).
+    Block2(Mat2),
+}
+
+impl LinOp {
+    pub fn ident() -> LinOp {
+        LinOp::Scalar(1.0)
+    }
+
+    pub fn zero() -> LinOp {
+        LinOp::Scalar(0.0)
+    }
+
+    pub fn diag(v: Vec<f64>) -> LinOp {
+        LinOp::Diag(Arc::new(v))
+    }
+
+    /// Apply to a state vector: `out = A u`. For `Block2` the state is
+    /// `[x; v]` with `d = u.len()/2`.
+    pub fn apply(&self, u: &[f64], out: &mut [f64]) {
+        assert_eq!(u.len(), out.len());
+        match self {
+            LinOp::Scalar(s) => {
+                for (o, &x) in out.iter_mut().zip(u) {
+                    *o = s * x;
+                }
+            }
+            LinOp::Diag(d) => {
+                assert_eq!(d.len(), u.len(), "Diag dim mismatch");
+                for i in 0..u.len() {
+                    out[i] = d[i] * u[i];
+                }
+            }
+            LinOp::Block2(m) => {
+                let d = u.len() / 2;
+                assert_eq!(u.len(), 2 * d);
+                let (x, v) = u.split_at(d);
+                let (ox, ov) = out.split_at_mut(d);
+                for i in 0..d {
+                    ox[i] = m.a * x[i] + m.b * v[i];
+                    ov[i] = m.c * x[i] + m.d * v[i];
+                }
+            }
+        }
+    }
+
+    /// `out += A u` (fused multiply-accumulate form used in the sampler
+    /// hot loop to avoid temporaries).
+    pub fn apply_add(&self, u: &[f64], out: &mut [f64]) {
+        match self {
+            LinOp::Scalar(s) => {
+                for (o, &x) in out.iter_mut().zip(u) {
+                    *o += s * x;
+                }
+            }
+            LinOp::Diag(d) => {
+                for i in 0..u.len() {
+                    out[i] += d[i] * u[i];
+                }
+            }
+            LinOp::Block2(m) => {
+                let d = u.len() / 2;
+                let (x, v) = u.split_at(d);
+                let (ox, ov) = out.split_at_mut(d);
+                for i in 0..d {
+                    ox[i] += m.a * x[i] + m.b * v[i];
+                    ov[i] += m.c * x[i] + m.d * v[i];
+                }
+            }
+        }
+    }
+
+    pub fn apply_vec(&self, u: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; u.len()];
+        self.apply(u, &mut out);
+        out
+    }
+
+    /// Operator composition `self · other` (matrix product).
+    pub fn matmul(&self, other: &LinOp) -> LinOp {
+        use LinOp::*;
+        match (self, other) {
+            (Scalar(a), Scalar(b)) => Scalar(a * b),
+            (Scalar(a), Diag(d)) | (Diag(d), Scalar(a)) => {
+                LinOp::diag(d.iter().map(|x| a * x).collect())
+            }
+            (Scalar(a), Block2(m)) | (Block2(m), Scalar(a)) => Block2(m.scale(*a)),
+            (Diag(a), Diag(b)) => {
+                assert_eq!(a.len(), b.len());
+                LinOp::diag(a.iter().zip(b.iter()).map(|(x, y)| x * y).collect())
+            }
+            (Block2(a), Block2(b)) => Block2(*a * *b),
+            _ => panic!("LinOp::matmul: incompatible structures {self:?} vs {other:?}"),
+        }
+    }
+
+    pub fn add(&self, other: &LinOp) -> LinOp {
+        use LinOp::*;
+        match (self, other) {
+            (Scalar(a), Scalar(b)) => Scalar(a + b),
+            (Scalar(a), Diag(d)) | (Diag(d), Scalar(a)) => {
+                LinOp::diag(d.iter().map(|x| a + x).collect())
+            }
+            (Scalar(a), Block2(m)) | (Block2(m), Scalar(a)) => Block2(*m + Mat2::scalar(*a)),
+            (Diag(a), Diag(b)) => {
+                assert_eq!(a.len(), b.len());
+                LinOp::diag(a.iter().zip(b.iter()).map(|(x, y)| x + y).collect())
+            }
+            (Block2(a), Block2(b)) => Block2(*a + *b),
+            _ => panic!("LinOp::add: incompatible structures"),
+        }
+    }
+
+    pub fn sub(&self, other: &LinOp) -> LinOp {
+        self.add(&other.scale(-1.0))
+    }
+
+    pub fn scale(&self, s: f64) -> LinOp {
+        match self {
+            LinOp::Scalar(a) => LinOp::Scalar(a * s),
+            LinOp::Diag(d) => LinOp::diag(d.iter().map(|x| x * s).collect()),
+            LinOp::Block2(m) => LinOp::Block2(m.scale(s)),
+        }
+    }
+
+    pub fn transpose(&self) -> LinOp {
+        match self {
+            LinOp::Block2(m) => LinOp::Block2(m.transpose()),
+            other => other.clone(),
+        }
+    }
+
+    pub fn inv(&self) -> LinOp {
+        match self {
+            LinOp::Scalar(a) => {
+                assert!(a.abs() > 1e-300, "LinOp::inv: zero scalar");
+                LinOp::Scalar(1.0 / a)
+            }
+            LinOp::Diag(d) => LinOp::diag(
+                d.iter()
+                    .map(|x| {
+                        assert!(x.abs() > 1e-300, "LinOp::inv: zero diagonal entry");
+                        1.0 / x
+                    })
+                    .collect(),
+            ),
+            LinOp::Block2(m) => LinOp::Block2(m.inv()),
+        }
+    }
+
+    /// Principal square root (symmetric-PSD semantics for `Block2`).
+    pub fn sqrt_spd(&self) -> LinOp {
+        match self {
+            LinOp::Scalar(a) => LinOp::Scalar(a.max(0.0).sqrt()),
+            LinOp::Diag(d) => LinOp::diag(d.iter().map(|x| x.max(0.0).sqrt()).collect()),
+            LinOp::Block2(m) => LinOp::Block2(m.sqrtm_spd()),
+        }
+    }
+
+    /// Cholesky factor (lower-triangular): the paper's `L_t` (App. C.2).
+    /// For scalar/diag operators this equals the square root.
+    pub fn cholesky(&self) -> LinOp {
+        match self {
+            LinOp::Block2(m) => LinOp::Block2(m.cholesky()),
+            other => other.sqrt_spd(),
+        }
+    }
+
+    /// Largest absolute entry (structure-aware) — used by tests/validators.
+    pub fn max_abs(&self) -> f64 {
+        match self {
+            LinOp::Scalar(a) => a.abs(),
+            LinOp::Diag(d) => d.iter().fold(0.0f64, |m, x| m.max(x.abs())),
+            LinOp::Block2(m) => m.max_abs(),
+        }
+    }
+
+    /// Structure-aware distance between two operators.
+    pub fn dist(&self, other: &LinOp) -> f64 {
+        self.sub(other).max_abs()
+    }
+
+    /// Trace of the operator acting on a `dim`-dimensional state.
+    pub fn trace(&self, dim: usize) -> f64 {
+        match self {
+            LinOp::Scalar(s) => s * dim as f64,
+            LinOp::Diag(d) => {
+                assert_eq!(d.len(), dim);
+                d.iter().sum()
+            }
+            LinOp::Block2(m) => m.trace() * (dim / 2) as f64,
+        }
+    }
+
+    /// log|det| of the operator on a `dim`-dimensional state.
+    pub fn logdet(&self, dim: usize) -> f64 {
+        match self {
+            LinOp::Scalar(s) => dim as f64 * s.abs().max(1e-300).ln(),
+            LinOp::Diag(d) => d.iter().map(|x| x.abs().max(1e-300).ln()).sum(),
+            LinOp::Block2(m) => (dim / 2) as f64 * m.det().abs().max(1e-300).ln(),
+        }
+    }
+
+    /// Draw `z ~ N(0, A Aᵀ)` given this operator as the factor `A`,
+    /// writing into `out` (used for injected sampler noise).
+    pub fn sample_noise(&self, rng: &mut crate::math::rng::Rng, out: &mut [f64]) {
+        match self {
+            LinOp::Scalar(s) => {
+                for o in out.iter_mut() {
+                    *o = s * rng.normal();
+                }
+            }
+            LinOp::Diag(d) => {
+                assert_eq!(d.len(), out.len());
+                for (o, &s) in out.iter_mut().zip(d.iter()) {
+                    *o = s * rng.normal();
+                }
+            }
+            LinOp::Block2(m) => {
+                let d = out.len() / 2;
+                let (ox, ov) = out.split_at_mut(d);
+                for i in 0..d {
+                    let z0 = rng.normal();
+                    let z1 = rng.normal();
+                    ox[i] = m.a * z0 + m.b * z1;
+                    ov[i] = m.c * z0 + m.d * z1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Rng;
+
+    #[test]
+    fn scalar_apply_and_compose() {
+        let a = LinOp::Scalar(2.0);
+        let b = LinOp::Scalar(-0.5);
+        let u = [1.0, 2.0, 3.0];
+        assert_eq!(a.apply_vec(&u), vec![2.0, 4.0, 6.0]);
+        assert_eq!(a.matmul(&b).apply_vec(&u), vec![-1.0, -2.0, -3.0]);
+    }
+
+    #[test]
+    fn block2_matches_dense_kron() {
+        // (M ⊗ I_2) on [x0,x1,v0,v1] must equal per-pair 2x2 action.
+        let m = Mat2::new(1.0, 2.0, 3.0, 4.0);
+        let op = LinOp::Block2(m);
+        let u = [10.0, 20.0, 1.0, 2.0]; // x=(10,20), v=(1,2)
+        let out = op.apply_vec(&u);
+        // per pair i: (x_i', v_i') = M (x_i, v_i)
+        assert_eq!(out, vec![10.0 + 2.0, 20.0 + 4.0, 30.0 + 4.0, 60.0 + 8.0]);
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let mut rng = Rng::seed_from(41);
+        let ops = [
+            LinOp::Scalar(1.7),
+            LinOp::diag(vec![0.5, -2.0, 3.0, 1.0]),
+            LinOp::Block2(Mat2::new(2.0, 0.3, -0.4, 1.5)),
+        ];
+        for op in &ops {
+            let u: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+            let v = op.inv().apply_vec(&op.apply_vec(&u));
+            crate::math::assert_allclose(&v, &u, 1e-12, 1e-12, "inv roundtrip");
+        }
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        let ops = [
+            LinOp::Scalar(4.0),
+            LinOp::diag(vec![1.0, 9.0, 0.25]),
+            LinOp::Block2(Mat2::new(2.0, 0.3, 0.3, 1.5)),
+        ];
+        for op in &ops {
+            let r = op.sqrt_spd();
+            assert!(r.matmul(&r).dist(op) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cholesky_factorizes() {
+        let sig = LinOp::Block2(Mat2::new(1.3, 0.4, 0.4, 2.0));
+        let l = sig.cholesky();
+        assert!(l.matmul(&l.transpose()).dist(&sig) < 1e-12);
+    }
+
+    #[test]
+    fn sample_noise_has_right_covariance() {
+        let mut rng = Rng::seed_from(43);
+        let m = Mat2::new(1.0, 0.0, 0.7, 0.5); // cov = L L^T = [[1, .7], [.7, .74]]
+        let op = LinOp::Block2(m);
+        let n = 100_000;
+        let mut acc = [0.0f64; 3]; // xx, xv, vv
+        let mut z = [0.0; 2];
+        for _ in 0..n {
+            op.sample_noise(&mut rng, &mut z);
+            acc[0] += z[0] * z[0];
+            acc[1] += z[0] * z[1];
+            acc[2] += z[1] * z[1];
+        }
+        let nf = n as f64;
+        assert!((acc[0] / nf - 1.0).abs() < 0.02);
+        assert!((acc[1] / nf - 0.7).abs() < 0.02);
+        assert!((acc[2] / nf - 0.74).abs() < 0.02);
+    }
+
+    #[test]
+    fn apply_add_accumulates() {
+        let op = LinOp::Scalar(3.0);
+        let u = [1.0, 1.0];
+        let mut out = vec![10.0, 20.0];
+        op.apply_add(&u, &mut out);
+        assert_eq!(out, vec![13.0, 23.0]);
+    }
+}

@@ -1,0 +1,251 @@
+//! Dense 2×2 matrices with the full algebra the CLD coefficient engine
+//! needs: products, inverses, matrix exponential (closed form), symmetric
+//! square root, and Frobenius norms.
+//!
+//! CLD state is `u = (x, v) ∈ R^{2d}` and every coefficient matrix in the
+//! paper (`F_t`, `G_tG_tᵀ`, `Σ_t`, `R_t`, `L_t`, `Ψ(t,s)`, `Ψ̂(t,s)`,
+//! `P_st`, `C_ij`) is of the form `M ⊗ I_d` with `M ∈ R^{2×2}`
+//! (paper Eq. 10 and App. C.3: "each of these coefficients corresponds to
+//! a 2×2 matrix"). This module is therefore the whole linear-algebra cost
+//! of CLD Stage-I preparation.
+
+use std::ops::{Add, Mul, Neg, Sub};
+
+/// Row-major 2×2 matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mat2 {
+    pub a: f64, // (0,0)
+    pub b: f64, // (0,1)
+    pub c: f64, // (1,0)
+    pub d: f64, // (1,1)
+}
+
+impl Mat2 {
+    pub const ZERO: Mat2 = Mat2 { a: 0.0, b: 0.0, c: 0.0, d: 0.0 };
+    pub const IDENT: Mat2 = Mat2 { a: 1.0, b: 0.0, c: 0.0, d: 1.0 };
+
+    pub fn new(a: f64, b: f64, c: f64, d: f64) -> Self {
+        Mat2 { a, b, c, d }
+    }
+
+    pub fn diag(x: f64, y: f64) -> Self {
+        Mat2::new(x, 0.0, 0.0, y)
+    }
+
+    pub fn scalar(x: f64) -> Self {
+        Mat2::diag(x, x)
+    }
+
+    pub fn det(&self) -> f64 {
+        self.a * self.d - self.b * self.c
+    }
+
+    pub fn trace(&self) -> f64 {
+        self.a + self.d
+    }
+
+    pub fn transpose(&self) -> Mat2 {
+        Mat2::new(self.a, self.c, self.b, self.d)
+    }
+
+    pub fn inv(&self) -> Mat2 {
+        let det = self.det();
+        assert!(det.abs() > 1e-300, "Mat2::inv: singular matrix {self:?}");
+        let s = 1.0 / det;
+        Mat2::new(self.d * s, -self.b * s, -self.c * s, self.a * s)
+    }
+
+    pub fn scale(&self, s: f64) -> Mat2 {
+        Mat2::new(self.a * s, self.b * s, self.c * s, self.d * s)
+    }
+
+    /// Apply to a column vector `(x, y)`.
+    pub fn apply(&self, x: f64, y: f64) -> (f64, f64) {
+        (self.a * x + self.b * y, self.c * x + self.d * y)
+    }
+
+    pub fn frob(&self) -> f64 {
+        (self.a * self.a + self.b * self.b + self.c * self.c + self.d * self.d).sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.a.abs().max(self.b.abs()).max(self.c.abs()).max(self.d.abs())
+    }
+
+    /// Matrix exponential, closed form via the Cayley–Hamilton / Putzer
+    /// formula: with `m = tr/2`, `s² = m² − det` the eigenvalue spread,
+    /// `exp(A) = e^m [ cosh(s)·I + sinh(s)/s · (A − m I) ]`
+    /// (trig branch when `s²<0`, series limit when `s≈0`).
+    pub fn expm(&self) -> Mat2 {
+        let m = 0.5 * self.trace();
+        let disc = m * m - self.det(); // s^2
+        let dev = *self - Mat2::scalar(m);
+        let (ch, shs) = if disc > 1e-24 {
+            let s = disc.sqrt();
+            (s.cosh(), s.sinh() / s)
+        } else if disc < -1e-24 {
+            let w = (-disc).sqrt();
+            (w.cos(), w.sin() / w)
+        } else {
+            // cosh(s) -> 1 + s^2/2, sinh(s)/s -> 1 + s^2/6
+            (1.0 + disc / 2.0, 1.0 + disc / 6.0)
+        };
+        (Mat2::scalar(ch) + dev.scale(shs)).scale(m.exp())
+    }
+
+    /// Principal square root of a symmetric positive-(semi)definite matrix:
+    /// `sqrt(M) = (M + √det · I) / √(tr + 2√det)`.
+    pub fn sqrtm_spd(&self) -> Mat2 {
+        debug_assert!((self.b - self.c).abs() <= 1e-9 * (1.0 + self.max_abs()), "sqrtm_spd: not symmetric: {self:?}");
+        let tau = self.det().max(0.0).sqrt();
+        let denom = (self.trace() + 2.0 * tau).max(0.0).sqrt();
+        if denom < 1e-300 {
+            return Mat2::ZERO;
+        }
+        (*self + Mat2::scalar(tau)).scale(1.0 / denom)
+    }
+
+    /// Cholesky factor (lower triangular) of a symmetric PD matrix:
+    /// the paper's `L_t` parameterization (App. C.2, Eq. 78).
+    pub fn cholesky(&self) -> Mat2 {
+        let l11 = self.a.max(0.0).sqrt();
+        assert!(l11 > 0.0, "cholesky: Σ^xx must be positive, got {self:?}");
+        let l21 = self.c / l11;
+        let l22 = (self.d - l21 * l21).max(0.0).sqrt();
+        Mat2::new(l11, 0.0, l21, l22)
+    }
+
+    /// Symmetrize: (M + Mᵀ)/2 — used to fight drift in Lyapunov ODE solves.
+    pub fn sym(&self) -> Mat2 {
+        let off = 0.5 * (self.b + self.c);
+        Mat2::new(self.a, off, off, self.d)
+    }
+
+    pub fn to_array(&self) -> [f64; 4] {
+        [self.a, self.b, self.c, self.d]
+    }
+
+    pub fn from_array(v: [f64; 4]) -> Mat2 {
+        Mat2::new(v[0], v[1], v[2], v[3])
+    }
+}
+
+impl Add for Mat2 {
+    type Output = Mat2;
+    fn add(self, o: Mat2) -> Mat2 {
+        Mat2::new(self.a + o.a, self.b + o.b, self.c + o.c, self.d + o.d)
+    }
+}
+
+impl Sub for Mat2 {
+    type Output = Mat2;
+    fn sub(self, o: Mat2) -> Mat2 {
+        Mat2::new(self.a - o.a, self.b - o.b, self.c - o.c, self.d - o.d)
+    }
+}
+
+impl Mul for Mat2 {
+    type Output = Mat2;
+    fn mul(self, o: Mat2) -> Mat2 {
+        Mat2::new(
+            self.a * o.a + self.b * o.c,
+            self.a * o.b + self.b * o.d,
+            self.c * o.a + self.d * o.c,
+            self.c * o.b + self.d * o.d,
+        )
+    }
+}
+
+impl Neg for Mat2 {
+    type Output = Mat2;
+    fn neg(self) -> Mat2 {
+        self.scale(-1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::close;
+
+    fn assert_mat_close(x: Mat2, y: Mat2, tol: f64, what: &str) {
+        assert!((x - y).max_abs() < tol, "{what}: {x:?} vs {y:?}");
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let m = Mat2::new(2.0, 1.0, -0.5, 3.0);
+        assert_mat_close(m * m.inv(), Mat2::IDENT, 1e-12, "m*m^-1");
+        assert_mat_close(m.inv() * m, Mat2::IDENT, 1e-12, "m^-1*m");
+    }
+
+    #[test]
+    fn expm_diagonal() {
+        let m = Mat2::diag(0.3, -1.2).expm();
+        assert!(close(m.a, 0.3f64.exp(), 1e-12, 0.0));
+        assert!(close(m.d, (-1.2f64).exp(), 1e-12, 0.0));
+        assert_eq!(m.b, 0.0);
+    }
+
+    #[test]
+    fn expm_rotation() {
+        // A = [[0, -w], [w, 0]] -> exp(A) = rotation by w.
+        let w: f64 = 0.7;
+        let m = Mat2::new(0.0, -w, w, 0.0).expm();
+        assert_mat_close(m, Mat2::new(w.cos(), -w.sin(), w.sin(), w.cos()), 1e-12, "rot");
+    }
+
+    #[test]
+    fn expm_nilpotent_limit() {
+        // A = [[0, 1], [0, 0]] has s = 0; exp(A) = I + A.
+        let m = Mat2::new(0.0, 1.0, 0.0, 0.0).expm();
+        assert_mat_close(m, Mat2::new(1.0, 1.0, 0.0, 1.0), 1e-10, "nilpotent");
+    }
+
+    #[test]
+    fn expm_matches_series() {
+        // Dense matrix vs 30-term Taylor series.
+        let a = Mat2::new(0.4, -0.3, 0.9, -0.2);
+        let mut acc = Mat2::IDENT;
+        let mut term = Mat2::IDENT;
+        for k in 1..30 {
+            term = (term * a).scale(1.0 / k as f64);
+            acc = acc + term;
+        }
+        assert_mat_close(a.expm(), acc, 1e-12, "series");
+    }
+
+    #[test]
+    fn sqrtm_spd_squares_back() {
+        let m = Mat2::new(2.0, 0.3, 0.3, 1.5);
+        let r = m.sqrtm_spd();
+        assert_mat_close(r * r, m, 1e-12, "sqrtm^2");
+    }
+
+    #[test]
+    fn sqrtm_of_singular() {
+        // rank-1 PSD: [[1, 1], [1, 1]].
+        let m = Mat2::new(1.0, 1.0, 1.0, 1.0);
+        let r = m.sqrtm_spd();
+        assert_mat_close(r * r, m, 1e-12, "singular sqrtm");
+    }
+
+    #[test]
+    fn cholesky_matches_paper_form() {
+        // Eq. 78: L = [[sqrt(Sxx), 0], [Sxv/sqrt(Sxx), sqrt((Sxx*Svv - Sxv^2)/Sxx)]].
+        let (sxx, sxv, svv) = (1.7, 0.4, 2.1);
+        let m = Mat2::new(sxx, sxv, sxv, svv);
+        let l = m.cholesky();
+        assert!(close(l.a, sxx.sqrt(), 1e-14, 0.0));
+        assert!(close(l.c, sxv / sxx.sqrt(), 1e-14, 0.0));
+        assert!(close(l.d, ((sxx * svv - sxv * sxv) / sxx).sqrt(), 1e-14, 0.0));
+        assert_mat_close(l * l.transpose(), m, 1e-12, "LL^T");
+    }
+
+    #[test]
+    fn expm_group_property() {
+        // exp(A)·exp(A) = exp(2A) for any A (same matrix commutes with itself).
+        let a = Mat2::new(0.1, 0.5, -0.4, 0.2);
+        assert_mat_close(a.expm() * a.expm(), a.scale(2.0).expm(), 1e-12, "group");
+    }
+}

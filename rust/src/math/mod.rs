@@ -1,0 +1,35 @@
+//! Numerical substrate: everything the coefficient engine, samplers and
+//! metrics need, implemented on `std` only (the build environment is
+//! offline; see DESIGN.md §7).
+
+pub mod mat2;
+pub mod linalg;
+pub mod linop;
+pub mod ode;
+pub mod quad;
+pub mod interp;
+pub mod rng;
+pub mod stats;
+pub mod dct;
+pub mod prop;
+
+pub use mat2::Mat2;
+pub use linalg::MatD;
+pub use linop::LinOp;
+pub use rng::Rng;
+
+/// Relative/absolute closeness check used across tests.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Assert two slices are element-wise close; panics with context otherwise.
+pub fn assert_allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(
+            close(x, y, rtol, atol),
+            "{what}: element {i} differs: {x} vs {y} (rtol={rtol}, atol={atol})"
+        );
+    }
+}

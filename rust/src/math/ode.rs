@@ -1,0 +1,285 @@
+//! ODE integrators used throughout:
+//!
+//! * Fixed-step classical RK4 for Stage-I coefficient ODEs (the paper
+//!   uses "RK4 with a step size 1e-6" for `R_t`/`Ψ̂` — App. C.3 Type I);
+//!   we expose the step size so the coefficient cache can trade accuracy
+//!   for preparation time.
+//! * Adaptive RK45 (Dormand–Prince) with NFE accounting for the paper's
+//!   "Prob.Flow, RK45" baseline (Table 3: the tolerance is tuned so the
+//!   real NFE lands near the target).
+
+/// Right-hand side `f(t, y) -> dy/dt` over a flat state vector.
+pub trait OdeRhs {
+    fn eval(&mut self, t: f64, y: &[f64], dy: &mut [f64]);
+}
+
+impl<F: FnMut(f64, &[f64], &mut [f64])> OdeRhs for F {
+    fn eval(&mut self, t: f64, y: &[f64], dy: &mut [f64]) {
+        self(t, y, dy)
+    }
+}
+
+/// One classical RK4 step from `t` with step `h` (may be negative for
+/// reverse-time integration), in place.
+pub fn rk4_step<R: OdeRhs>(rhs: &mut R, t: f64, h: f64, y: &mut [f64], scratch: &mut Rk4Scratch) {
+    let n = y.len();
+    scratch.ensure(n);
+    let Rk4Scratch { k1, k2, k3, k4, tmp } = scratch;
+    rhs.eval(t, y, k1);
+    for i in 0..n {
+        tmp[i] = y[i] + 0.5 * h * k1[i];
+    }
+    rhs.eval(t + 0.5 * h, tmp, k2);
+    for i in 0..n {
+        tmp[i] = y[i] + 0.5 * h * k2[i];
+    }
+    rhs.eval(t + 0.5 * h, tmp, k3);
+    for i in 0..n {
+        tmp[i] = y[i] + h * k3[i];
+    }
+    rhs.eval(t + h, tmp, k4);
+    for i in 0..n {
+        y[i] += h / 6.0 * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i] + k4[i]);
+    }
+}
+
+/// Reusable scratch buffers for `rk4_step` (hot path: no allocation).
+#[derive(Default)]
+pub struct Rk4Scratch {
+    k1: Vec<f64>,
+    k2: Vec<f64>,
+    k3: Vec<f64>,
+    k4: Vec<f64>,
+    tmp: Vec<f64>,
+}
+
+impl Rk4Scratch {
+    fn ensure(&mut self, n: usize) {
+        if self.k1.len() != n {
+            self.k1 = vec![0.0; n];
+            self.k2 = vec![0.0; n];
+            self.k3 = vec![0.0; n];
+            self.k4 = vec![0.0; n];
+            self.tmp = vec![0.0; n];
+        }
+    }
+}
+
+/// Integrate from `t0` to `t1` with `nsteps` RK4 steps, in place.
+pub fn rk4_integrate<R: OdeRhs>(rhs: &mut R, t0: f64, t1: f64, nsteps: usize, y: &mut [f64]) {
+    assert!(nsteps > 0);
+    let h = (t1 - t0) / nsteps as f64;
+    let mut scratch = Rk4Scratch::default();
+    let mut t = t0;
+    for _ in 0..nsteps {
+        rk4_step(rhs, t, h, y, &mut scratch);
+        t += h;
+    }
+}
+
+/// Result of an adaptive RK45 solve.
+pub struct Rk45Result {
+    /// Number of RHS evaluations (the paper's "NFE" for the RK45 baseline).
+    pub nfe: usize,
+    /// Number of accepted steps.
+    pub accepted: usize,
+    /// Number of rejected steps.
+    pub rejected: usize,
+}
+
+/// Dormand–Prince 5(4) adaptive integrator from `t0` to `t1` (either
+/// direction), controlling the per-step local error against
+/// `atol + rtol·|y|`. State updated in place.
+pub fn rk45_integrate<R: OdeRhs>(
+    rhs: &mut R,
+    t0: f64,
+    t1: f64,
+    rtol: f64,
+    atol: f64,
+    y: &mut [f64],
+) -> Rk45Result {
+    // Dormand–Prince coefficients.
+    const A: [[f64; 6]; 6] = [
+        [1.0 / 5.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+        [3.0 / 40.0, 9.0 / 40.0, 0.0, 0.0, 0.0, 0.0],
+        [44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0, 0.0, 0.0, 0.0],
+        [19372.0 / 6561.0, -25360.0 / 2187.0, 64448.0 / 6561.0, -212.0 / 729.0, 0.0, 0.0],
+        [9017.0 / 3168.0, -355.0 / 33.0, 46732.0 / 5247.0, 49.0 / 176.0, -5103.0 / 18656.0, 0.0],
+        [35.0 / 384.0, 0.0, 500.0 / 1113.0, 125.0 / 192.0, -2187.0 / 6784.0, 11.0 / 84.0],
+    ];
+    const C: [f64; 6] = [1.0 / 5.0, 3.0 / 10.0, 4.0 / 5.0, 8.0 / 9.0, 1.0, 1.0];
+    // 5th-order solution weights = last row of A; 4th-order (embedded):
+    const B4: [f64; 7] = [
+        5179.0 / 57600.0,
+        0.0,
+        7571.0 / 16695.0,
+        393.0 / 640.0,
+        -92097.0 / 339200.0,
+        187.0 / 2100.0,
+        1.0 / 40.0,
+    ];
+
+    let n = y.len();
+    let dir = if t1 >= t0 { 1.0 } else { -1.0 };
+    let total = (t1 - t0).abs();
+    let mut t = t0;
+    let mut h = dir * (total / 100.0).max(1e-12);
+    let mut k: Vec<Vec<f64>> = (0..7).map(|_| vec![0.0; n]).collect();
+    let mut ytmp = vec![0.0; n];
+    let mut res = Rk45Result { nfe: 0, accepted: 0, rejected: 0 };
+
+    rhs.eval(t, y, &mut k[0]);
+    res.nfe += 1;
+
+    let max_iter = 100_000;
+    for _ in 0..max_iter {
+        if (t - t1).abs() < 1e-14 || (t1 - t) * dir <= 0.0 {
+            break;
+        }
+        if ((t + h) - t1) * dir > 0.0 {
+            h = t1 - t;
+        }
+        // Stages 2..7.
+        for s in 0..6 {
+            for i in 0..n {
+                let mut acc = 0.0;
+                for (j, kj) in k.iter().enumerate().take(s + 1) {
+                    acc += A[s][j] * kj[i];
+                }
+                ytmp[i] = y[i] + h * acc;
+            }
+            rhs.eval(t + C[s] * h, &ytmp, &mut k[s + 1]);
+            res.nfe += 1;
+        }
+        // 5th order update lives in k-stage combination of row A[5] plus k7
+        // (FSAL: y5 uses A[5] over k1..k6, error uses B4 over k1..k7).
+        let mut err: f64 = 0.0;
+        for i in 0..n {
+            let mut y5 = 0.0;
+            for j in 0..6 {
+                y5 += A[5][j] * k[j][i];
+            }
+            let y5 = y[i] + h * y5;
+            let mut y4 = 0.0;
+            for (j, kj) in k.iter().enumerate() {
+                y4 += B4[j] * kj[i];
+            }
+            let y4 = y[i] + h * y4;
+            let sc = atol + rtol * y[i].abs().max(y5.abs());
+            let e = (y5 - y4) / sc;
+            err += e * e;
+            ytmp[i] = y5;
+        }
+        let err = (err / n as f64).sqrt();
+        if err <= 1.0 {
+            t += h;
+            y.copy_from_slice(&ytmp);
+            k.swap(0, 6); // FSAL: k7 becomes k1 of the next step
+            res.accepted += 1;
+        } else {
+            res.rejected += 1;
+        }
+        let fac = (0.9 * err.powf(-0.2)).clamp(0.2, 5.0);
+        h *= fac;
+        if h.abs() < 1e-14 * total.max(1.0) {
+            h = dir * 1e-14 * total.max(1.0);
+        }
+        if !err.is_finite() {
+            // bail out: halve aggressively
+            h *= 0.1;
+        }
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::close;
+
+    #[test]
+    fn rk4_exponential_decay() {
+        let mut y = vec![1.0];
+        rk4_integrate(&mut |_t: f64, y: &[f64], dy: &mut [f64]| dy[0] = -y[0], 0.0, 1.0, 100, &mut y);
+        assert!(close(y[0], (-1.0f64).exp(), 1e-9, 0.0), "{}", y[0]);
+    }
+
+    #[test]
+    fn rk4_reverse_time() {
+        // Integrate forward then back; should return to start.
+        let mut y = vec![0.3, -0.7];
+        let f = |t: f64, y: &[f64], dy: &mut [f64]| {
+            dy[0] = y[1] + t;
+            dy[1] = -y[0];
+        };
+        let y0 = y.clone();
+        rk4_integrate(&mut f.clone(), 0.0, 2.0, 400, &mut y);
+        rk4_integrate(&mut f.clone(), 2.0, 0.0, 400, &mut y);
+        crate::math::assert_allclose(&y, &y0, 1e-8, 1e-10, "roundtrip");
+    }
+
+    #[test]
+    fn rk4_order_four() {
+        // Error should shrink ~16x when steps double.
+        let f = |t: f64, _y: &[f64], dy: &mut [f64]| dy[0] = (3.0 * t).sin();
+        let exact = (1.0 - (3.0f64).cos()) / 3.0;
+        let run = |n: usize| {
+            let mut y = vec![0.0];
+            rk4_integrate(&mut f.clone(), 0.0, 1.0, n, &mut y);
+            (y[0] - exact).abs()
+        };
+        let e1 = run(20);
+        let e2 = run(40);
+        assert!(e1 / e2 > 12.0, "order too low: {} -> {}", e1, e2);
+    }
+
+    #[test]
+    fn rk45_harmonic_oscillator() {
+        let mut y = vec![1.0, 0.0];
+        let res = rk45_integrate(
+            &mut |_t: f64, y: &[f64], dy: &mut [f64]| {
+                dy[0] = y[1];
+                dy[1] = -y[0];
+            },
+            0.0,
+            std::f64::consts::TAU,
+            1e-9,
+            1e-12,
+            &mut y,
+        );
+        assert!(close(y[0], 1.0, 0.0, 1e-6), "{}", y[0]);
+        assert!(close(y[1], 0.0, 0.0, 1e-6), "{}", y[1]);
+        assert!(res.nfe > 10 && res.nfe < 10_000, "nfe={}", res.nfe);
+    }
+
+    #[test]
+    fn rk45_nfe_scales_with_tolerance() {
+        let run = |rtol: f64| {
+            let mut y = vec![1.0];
+            rk45_integrate(
+                &mut |t: f64, y: &[f64], dy: &mut [f64]| dy[0] = -y[0] * (5.0 * t).cos() * 3.0,
+                0.0,
+                4.0,
+                rtol,
+                rtol * 1e-2,
+                &mut y,
+            )
+            .nfe
+        };
+        assert!(run(1e-10) > run(1e-3), "tighter tolerance must cost more NFE");
+    }
+
+    #[test]
+    fn rk45_reverse_direction() {
+        let mut y = vec![2.0];
+        rk45_integrate(
+            &mut |_t: f64, y: &[f64], dy: &mut [f64]| dy[0] = y[0],
+            1.0,
+            0.0,
+            1e-10,
+            1e-12,
+            &mut y,
+        );
+        assert!(close(y[0], 2.0 * (-1.0f64).exp(), 1e-7, 0.0), "{}", y[0]);
+    }
+}

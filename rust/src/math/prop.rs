@@ -1,0 +1,120 @@
+//! Minimal in-repo property-testing harness (the offline build has no
+//! `proptest`). Seeded generators + many random cases + a failure report
+//! that includes the case index and seed so any failure replays
+//! deterministically with `PROP_SEED=<seed> PROP_CASE=<i>`.
+
+use crate::math::rng::Rng;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xD1FF_05E5)
+}
+
+/// Run a property: `gen` builds a random case, `check` returns
+/// `Err(message)` on violation. Panics with replay info on failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    check: impl Fn(&T) -> Result<(), String>,
+) {
+    let seed = base_seed();
+    let only: Option<usize> = std::env::var("PROP_CASE").ok().and_then(|s| s.parse().ok());
+    let cases = default_cases();
+    for i in 0..cases {
+        if let Some(c) = only {
+            if c != i {
+                continue;
+            }
+        }
+        let mut rng = Rng::seed_from(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let case = gen(&mut rng);
+        if let Err(msg) = check(&case) {
+            panic!(
+                "property '{name}' failed at case {i}/{cases}: {msg}\n\
+                 case: {case:?}\n\
+                 replay with PROP_SEED={seed} PROP_CASE={i}"
+            );
+        }
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use super::*;
+    use crate::math::mat2::Mat2;
+
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        rng.uniform_in(lo, hi)
+    }
+
+    /// A well-conditioned random 2×2 matrix.
+    pub fn mat2(rng: &mut Rng) -> Mat2 {
+        loop {
+            let m = Mat2::new(rng.normal(), rng.normal(), rng.normal(), rng.normal());
+            if m.det().abs() > 0.05 && m.max_abs() < 4.0 {
+                return m;
+            }
+        }
+    }
+
+    /// A random SPD 2×2 matrix with eigenvalues in [0.1, ~5].
+    pub fn spd2(rng: &mut Rng) -> Mat2 {
+        let a = mat2(rng);
+        a * a.transpose() + Mat2::scalar(0.1)
+    }
+
+    pub fn vecf(rng: &mut Rng, n: usize, scale: f64) -> Vec<f64> {
+        (0..n).map(|_| scale * rng.normal()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::mat2::Mat2;
+
+    #[test]
+    fn prop_mat2_inverse() {
+        check(
+            "mat2 inverse roundtrip",
+            gen::mat2,
+            |m| {
+                let err = (*m * m.inv() - Mat2::IDENT).max_abs();
+                if err < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("err={err}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_spd_sqrtm() {
+        check("spd sqrtm squares back", gen::spd2, |m| {
+            let r = m.sqrtm_spd();
+            let err = (r * r - *m).max_abs();
+            if err < 1e-9 * (1.0 + m.max_abs()) {
+                Ok(())
+            } else {
+                Err(format!("err={err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_expm_inverse_is_expm_neg() {
+        check("expm(A)^-1 = expm(-A)", gen::mat2, |m| {
+            let err = (m.expm().inv() - (-*m).expm()).max_abs();
+            if err < 1e-8 {
+                Ok(())
+            } else {
+                Err(format!("err={err}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,161 @@
+//! Numerical quadrature for the Stage-I "Type II" definite integrals
+//! (App. C.3): the exponential-integrator coefficients
+//! `C_ij = ∫ ½ Ψ(t_{i-1},τ) G_τG_τᵀ R_τ^{-T} ℓ_j(τ) dτ`.
+//!
+//! Gauss–Legendre is the default (the integrands are smooth in τ);
+//! composite Simpson is kept as a cross-check used by the tests and the
+//! plan validator.
+
+/// Gauss–Legendre nodes and weights on [-1, 1], computed by Newton
+/// iteration on the Legendre polynomial (standard Golub–Welsch-free
+/// construction; accurate to ~1e-15 for n ≤ 128).
+pub fn gauss_legendre(n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(n >= 1);
+    let mut nodes = vec![0.0; n];
+    let mut weights = vec![0.0; n];
+    let m = n.div_ceil(2);
+    for i in 0..m {
+        // Initial guess (Chebyshev-like).
+        let mut x = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+        let mut pp = 0.0;
+        for _ in 0..100 {
+            // Evaluate P_n(x) and P'_n(x) by recurrence.
+            let mut p0 = 1.0;
+            let mut p1 = x;
+            for k in 2..=n {
+                let kf = k as f64;
+                let p2 = ((2.0 * kf - 1.0) * x * p1 - (kf - 1.0) * p0) / kf;
+                p0 = p1;
+                p1 = p2;
+            }
+            // p1 = P_n, p0 = P_{n-1}
+            pp = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+            let dx = p1 / pp;
+            x -= dx;
+            if dx.abs() < 1e-16 {
+                break;
+            }
+        }
+        nodes[i] = -x;
+        nodes[n - 1 - i] = x;
+        let w = 2.0 / ((1.0 - x * x) * pp * pp);
+        weights[i] = w;
+        weights[n - 1 - i] = w;
+    }
+    if n % 2 == 1 {
+        nodes[n / 2] = 0.0;
+    }
+    (nodes, weights)
+}
+
+/// ∫_a^b f(τ) dτ with `n`-point Gauss–Legendre. Works for a > b
+/// (orientation carried by the affine map), which is exactly how the
+/// reverse-time coefficients `∫_{t_i}^{t_{i-1}}` are evaluated.
+pub fn integrate_gl<F: FnMut(f64) -> f64>(mut f: F, a: f64, b: f64, n: usize) -> f64 {
+    let (nodes, weights) = gauss_legendre(n);
+    let half = 0.5 * (b - a);
+    let mid = 0.5 * (a + b);
+    let mut acc = 0.0;
+    for (x, w) in nodes.iter().zip(weights.iter()) {
+        acc += w * f(mid + half * x);
+    }
+    acc * half
+}
+
+/// Vector-valued Gauss–Legendre: integrates `f: τ -> R^k` into `out`.
+pub fn integrate_gl_vec<F: FnMut(f64, &mut [f64])>(
+    mut f: F,
+    a: f64,
+    b: f64,
+    n: usize,
+    out: &mut [f64],
+) {
+    let (nodes, weights) = gauss_legendre(n);
+    let half = 0.5 * (b - a);
+    let mid = 0.5 * (a + b);
+    out.iter_mut().for_each(|x| *x = 0.0);
+    let mut buf = vec![0.0; out.len()];
+    for (x, w) in nodes.iter().zip(weights.iter()) {
+        f(mid + half * x, &mut buf);
+        for (o, v) in out.iter_mut().zip(buf.iter()) {
+            *o += w * v;
+        }
+    }
+    for o in out.iter_mut() {
+        *o *= half;
+    }
+}
+
+/// Composite Simpson's rule with `n` (even) subintervals — the slow,
+/// simple cross-check for Gauss–Legendre.
+pub fn integrate_simpson<F: FnMut(f64) -> f64>(mut f: F, a: f64, b: f64, n: usize) -> f64 {
+    let n = if n % 2 == 0 { n } else { n + 1 };
+    let h = (b - a) / n as f64;
+    let mut acc = f(a) + f(b);
+    for i in 1..n {
+        let c = if i % 2 == 1 { 4.0 } else { 2.0 };
+        acc += c * f(a + i as f64 * h);
+    }
+    acc * h / 3.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::close;
+
+    #[test]
+    fn gl_nodes_symmetric_and_weights_sum_to_two() {
+        for n in [1usize, 2, 3, 8, 16, 32, 64] {
+            let (x, w) = gauss_legendre(n);
+            let wsum: f64 = w.iter().sum();
+            assert!(close(wsum, 2.0, 1e-13, 0.0), "n={n} wsum={wsum}");
+            for i in 0..n {
+                assert!(close(x[i], -x[n - 1 - i], 0.0, 1e-13), "n={n} not symmetric");
+            }
+        }
+    }
+
+    #[test]
+    fn gl_exact_for_polynomials() {
+        // n-point GL is exact for degree 2n-1.
+        let n = 5;
+        let f = |x: f64| 3.0 * x.powi(9) - x.powi(8) + 2.0 * x.powi(3) - x + 4.0;
+        // exact integral over [-1,1]: odd terms vanish; -x^8: -2/9; +4: 8.
+        let exact = -2.0 / 9.0 + 8.0;
+        assert!(close(integrate_gl(f, -1.0, 1.0, n), exact, 1e-13, 0.0));
+    }
+
+    #[test]
+    fn gl_matches_simpson_on_smooth() {
+        let f = |x: f64| (2.0 * x).sin() * (-x).exp();
+        let g = integrate_gl(f, 0.2, 1.7, 32);
+        let s = integrate_simpson(f, 0.2, 1.7, 20_000);
+        assert!(close(g, s, 1e-10, 1e-12), "{g} vs {s}");
+    }
+
+    #[test]
+    fn gl_reversed_limits_flip_sign() {
+        let f = |x: f64| x * x + 1.0;
+        let a = integrate_gl(f, 0.0, 2.0, 16);
+        let b = integrate_gl(f, 2.0, 0.0, 16);
+        assert!(close(a, -b, 1e-13, 0.0));
+    }
+
+    #[test]
+    fn gl_vec_matches_scalar() {
+        let mut out = [0.0; 2];
+        integrate_gl_vec(
+            |t, o: &mut [f64]| {
+                o[0] = t.cos();
+                o[1] = t * t;
+            },
+            0.0,
+            1.0,
+            24,
+            &mut out,
+        );
+        assert!(close(out[0], 1.0f64.sin(), 1e-12, 0.0));
+        assert!(close(out[1], 1.0 / 3.0, 1e-12, 0.0));
+    }
+}

@@ -1,0 +1,196 @@
+//! Deterministic, seedable RNG for all stochastic samplers and workload
+//! generators: xoshiro256++ seeded through splitmix64, Gaussian variates
+//! via the polar Box–Muller method. Hand-rolled because the offline build
+//! has no `rand` crate; determinism across runs is a feature for the
+//! experiment harnesses (every table in EXPERIMENTS.md is reproducible
+//! bit-for-bit from its seed).
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    gauss_cache: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed from a single u64 (expanded by splitmix64 as recommended by
+    /// the xoshiro authors).
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)];
+        Rng { s, gauss_cache: None }
+    }
+
+    /// Derive an independent stream (for per-request / per-thread RNGs).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::seed_from(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = (s[0].wrapping_add(s[3])).rotate_left(23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 high bits -> [0,1) double.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via polar Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.gauss_cache.take() {
+            return v;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.gauss_cache = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for x in out.iter_mut() {
+            *x = self.normal();
+        }
+    }
+
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        self.fill_normal(&mut v);
+        v
+    }
+
+    /// Sample an index from unnormalised weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = self.uniform() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Exponential variate with the given rate (for Poisson arrivals in
+    /// the serving workload generator).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -self.uniform().max(1e-300).ln().max(f64::MIN) / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed_from(1);
+        let mut b = Rng::seed_from(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same == 0);
+    }
+
+    #[test]
+    fn uniform_in_range_and_roughly_uniform() {
+        let mut rng = Rng::seed_from(3);
+        let n = 100_000;
+        let mut mean = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            mean += u;
+        }
+        mean /= n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::seed_from(4);
+        let n = 200_000;
+        let (mut m, mut m2, mut m4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            m += x;
+            m2 += x * x;
+            m4 += x * x * x * x;
+        }
+        let nf = n as f64;
+        assert!((m / nf).abs() < 0.01);
+        assert!((m2 / nf - 1.0).abs() < 0.02);
+        assert!((m4 / nf - 3.0).abs() < 0.1, "kurtosis {}", m4 / nf);
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let mut rng = Rng::seed_from(5);
+        let w = [1.0, 3.0, 6.0];
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[rng.categorical(&w)] += 1;
+        }
+        for i in 0..3 {
+            let p = counts[i] as f64 / n as f64;
+            let expect = w[i] / 10.0;
+            assert!((p - expect).abs() < 0.01, "i={i} p={p} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn fork_streams_are_independent_ish() {
+        let mut root = Rng::seed_from(6);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

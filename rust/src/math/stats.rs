@@ -1,0 +1,193 @@
+//! Sample statistics: moment fits for the Fréchet metric, percentile
+//! summaries for the serving benchmarks, online accumulators.
+
+use crate::math::linalg::MatD;
+
+/// Mean vector of row-major samples (`n` rows of dimension `d`).
+pub fn mean(samples: &[f64], d: usize) -> Vec<f64> {
+    assert!(d > 0 && samples.len() % d == 0);
+    let n = samples.len() / d;
+    assert!(n > 0);
+    let mut mu = vec![0.0; d];
+    for row in samples.chunks_exact(d) {
+        for (m, &x) in mu.iter_mut().zip(row) {
+            *m += x;
+        }
+    }
+    for m in mu.iter_mut() {
+        *m /= n as f64;
+    }
+    mu
+}
+
+/// Sample covariance (denominator `n-1`) of row-major samples.
+pub fn covariance(samples: &[f64], d: usize) -> MatD {
+    let n = samples.len() / d;
+    assert!(n > 1, "covariance needs at least 2 samples");
+    let mu = mean(samples, d);
+    let mut c = MatD::zeros(d, d);
+    let mut diff = vec![0.0; d];
+    for row in samples.chunks_exact(d) {
+        for j in 0..d {
+            diff[j] = row[j] - mu[j];
+        }
+        for i in 0..d {
+            let di = diff[i];
+            let crow = &mut c.data[i * d..(i + 1) * d];
+            for j in 0..d {
+                crow[j] += di * diff[j];
+            }
+        }
+    }
+    c.scale(1.0 / (n as f64 - 1.0))
+}
+
+/// Welford online mean/variance accumulator (scalar).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Percentile of a sample set (linear interpolation between order
+/// statistics) — used for latency p50/p95/p99 in the serving benches.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() as f64 - 1.0);
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Summary of a latency/throughput measurement series.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from(xs: &[f64]) -> Summary {
+        let mut w = Welford::default();
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for &x in xs {
+            w.push(x);
+            min = min.min(x);
+            max = max.max(x);
+        }
+        Summary {
+            n: xs.len(),
+            mean: w.mean(),
+            std: w.std(),
+            min,
+            p50: percentile(xs, 50.0),
+            p95: percentile(xs, 95.0),
+            p99: percentile(xs, 99.0),
+            max,
+        }
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.4} std={:.4} min={:.4} p50={:.4} p95={:.4} p99={:.4} max={:.4}",
+            self.n, self.mean, self.std, self.min, self.p50, self.p95, self.p99, self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{close, rng::Rng};
+
+    #[test]
+    fn mean_and_cov_of_known_gaussian() {
+        let mut rng = Rng::seed_from(21);
+        let n = 60_000;
+        let d = 2;
+        // x = (z0, 0.5 z0 + z1): cov = [[1, .5], [.5, 1.25]]
+        let mut xs = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            let z0 = rng.normal();
+            let z1 = rng.normal();
+            xs.push(1.0 + z0);
+            xs.push(-2.0 + 0.5 * z0 + z1);
+        }
+        let mu = mean(&xs, d);
+        assert!(close(mu[0], 1.0, 0.0, 0.02), "{}", mu[0]);
+        assert!(close(mu[1], -2.0, 0.0, 0.02), "{}", mu[1]);
+        let c = covariance(&xs, d);
+        assert!(close(c[(0, 0)], 1.0, 0.0, 0.03));
+        assert!(close(c[(0, 1)], 0.5, 0.0, 0.03));
+        assert!(close(c[(1, 1)], 1.25, 0.0, 0.03));
+    }
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.5, -3.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        let m = xs.iter().sum::<f64>() / xs.len() as f64;
+        let v = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!(close(w.mean(), m, 1e-13, 0.0));
+        assert!(close(w.var(), v, 1e-13, 0.0));
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!(close(percentile(&xs, 25.0), 2.5, 1e-13, 0.0));
+    }
+}

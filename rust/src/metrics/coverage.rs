@@ -1,0 +1,95 @@
+//! Mode-coverage diagnostics for mixture ground truth: assign each sample
+//! to its nearest mode, count hits, report missing modes and the χ²
+//! statistic against the mixture weights. Low-NFE samplers fail here
+//! first (mode dropping), which FD can under-report.
+
+use crate::data::gmm::GmmSpec;
+
+#[derive(Clone, Debug)]
+pub struct Coverage {
+    /// Samples assigned to each mode.
+    pub counts: Vec<usize>,
+    /// Modes with zero assigned samples.
+    pub missing: usize,
+    /// χ² statistic of counts against expected weights.
+    pub chi2: f64,
+    /// Fraction of samples farther than `3σ + margin` from every mode
+    /// ("off-manifold" mass).
+    pub outliers: f64,
+}
+
+/// Compute coverage of `samples` (row-major n×d) against `spec`.
+pub fn coverage(samples: &[f64], spec: &GmmSpec) -> Coverage {
+    let d = spec.d;
+    let n = samples.len() / d;
+    assert!(n > 0);
+    let mut counts = vec![0usize; spec.n_modes()];
+    let mut outliers = 0usize;
+    let sd = spec.var.sqrt();
+    let thresh = (3.0 * sd + 0.5) * (d as f64).sqrt();
+    for row in samples.chunks_exact(d) {
+        let mut best = f64::INFINITY;
+        let mut arg = 0;
+        for (m, mu) in spec.means.iter().enumerate() {
+            let d2: f64 = row.iter().zip(mu).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d2 < best {
+                best = d2;
+                arg = m;
+            }
+        }
+        counts[arg] += 1;
+        if best.sqrt() > thresh {
+            outliers += 1;
+        }
+    }
+    let missing = counts.iter().filter(|&&c| c == 0).count();
+    let mut chi2 = 0.0;
+    for (c, w) in counts.iter().zip(&spec.weights) {
+        let expect = w * n as f64;
+        if expect > 0.0 {
+            chi2 += (*c as f64 - expect).powi(2) / expect;
+        }
+    }
+    Coverage { counts, missing, chi2, outliers: outliers as f64 / n as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::presets;
+    use crate::math::rng::Rng;
+
+    #[test]
+    fn true_samples_cover_all_modes() {
+        let spec = presets::gmm2d();
+        let mut rng = Rng::seed_from(1);
+        let xs = spec.sample(8_000, &mut rng);
+        let c = coverage(&xs, &spec);
+        assert_eq!(c.missing, 0);
+        assert!(c.outliers < 0.01, "outliers={}", c.outliers);
+        // χ² for 7 dof should be small for true samples (allow wide margin).
+        assert!(c.chi2 < 40.0, "chi2={}", c.chi2);
+    }
+
+    #[test]
+    fn collapse_is_detected() {
+        let spec = presets::gmm2d();
+        // All samples at mode 0.
+        let mut xs = Vec::new();
+        for _ in 0..1000 {
+            xs.extend_from_slice(&spec.means[0]);
+        }
+        let c = coverage(&xs, &spec);
+        assert_eq!(c.missing, spec.n_modes() - 1);
+        assert!(c.chi2 > 1000.0);
+    }
+
+    #[test]
+    fn garbage_is_outliers() {
+        let spec = presets::gmm2d();
+        let mut rng = Rng::seed_from(2);
+        let xs: Vec<f64> = (0..2000).map(|_| 30.0 + rng.normal()).collect();
+        let c = coverage(&xs, &spec);
+        assert!(c.outliers > 0.9);
+    }
+}

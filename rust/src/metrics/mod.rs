@@ -1,0 +1,18 @@
+//! Evaluation metrics.
+//!
+//! * [`frechet`] — the repo's FID analog: Fréchet distance between
+//!   Gaussian moment fits of generated samples and the *exact* moments of
+//!   the ground-truth mixture (identical functional form to FID; see
+//!   DESIGN.md §3 for why this is the right substitute on mixture data).
+//! * [`wasserstein`] — 1-D and sliced Wasserstein-1.
+//! * [`coverage`] — per-mode assignment counts / missing-mode detection
+//!   (mode collapse is what low-NFE samplers get wrong first).
+//! * [`nll`] — probability-flow NLL with the oracle's exact divergence
+//!   (paper App. C.8).
+
+pub mod frechet;
+pub mod wasserstein;
+pub mod coverage;
+pub mod nll;
+
+pub use frechet::{frechet_distance, frechet_to_spec};

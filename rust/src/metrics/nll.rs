@@ -1,0 +1,184 @@
+//! Probability-flow NLL (paper App. C.8).
+//!
+//! Along the probability-flow ODE (Eq. 7) the log-density evolves as the
+//! usual continuous normalizing flow:
+//! `d log p_t(u(t))/dt = −∇·[F_t u − ½ G_tG_tᵀ s(u,t)]
+//!                     = −tr F_t + ½ tr(G_tGᵀ ∇s)`,
+//! and with the exact mixture oracle the divergence is closed form
+//! (no Hutchinson estimator needed). We integrate data→noise and read the
+//! bound the way the paper does for CLD: `log p(x₀) ≥ E_v[log p(x₀,v₀)]
+//! + H(p(v₀))` with `v₀ ~ N(0, γM I)`.
+
+use std::sync::Arc;
+
+use crate::diffusion::process::Process;
+use crate::math::ode::rk45_integrate;
+use crate::score::oracle::GmmOracle;
+
+/// Exact prob-flow log-likelihood of a *state* `u` at t_min, in nats.
+pub fn state_logp(oracle: &GmmOracle, u0: &[f64], rtol: f64) -> f64 {
+    let proc: &Arc<dyn Process> = &oracle.proc;
+    let du = proc.dim_u();
+    assert_eq!(u0.len(), du);
+    let (t0, t1) = (proc.t_min(), proc.t_max());
+    // Augmented state [u, Δlogp].
+    let mut y = u0.to_vec();
+    y.push(0.0);
+    let o = oracle;
+    rk45_integrate(
+        &mut |t: f64, y: &[f64], dy: &mut [f64]| {
+            let u = &y[..du];
+            let s = o.score(t, u);
+            let f = proc.f_op(t);
+            let ggt = proc.ggt_op(t);
+            // du/dt = F u − ½ GGᵀ s
+            let mut drift = vec![0.0; du];
+            f.apply(u, &mut drift);
+            let mut gs = vec![0.0; du];
+            ggt.apply(&s, &mut gs);
+            for j in 0..du {
+                dy[j] = drift[j] - 0.5 * gs[j];
+            }
+            // dΔlogp/dt = tr F − ½ tr(GGᵀ ∇s). For our processes GGᵀ is
+            // scalar/diag/block2 and ∇s has matching structure only in
+            // trace form; we use tr(GGᵀ∇s) = Σ g²_jj (∇s)_jj which for
+            // scalar GGᵀ = g²·tr∇s. Structure-aware below.
+            let tr_f = f.trace(du);
+            let tr_ggt_js = match &ggt {
+                crate::math::linop::LinOp::Scalar(g2) => g2 * o.score_jacobian_trace(t, u),
+                _ => {
+                    // Generic fallback: finite-difference the needed
+                    // diagonal entries of ∇s weighted by GGᵀ's diagonal.
+                    let h = 1e-5;
+                    let diag: Vec<f64> = match &ggt {
+                        crate::math::linop::LinOp::Diag(d) => d.as_ref().clone(),
+                        crate::math::linop::LinOp::Block2(m) => {
+                            let half = du / 2;
+                            let mut v = vec![m.a; half];
+                            v.extend(vec![m.d; half]);
+                            v
+                        }
+                        crate::math::linop::LinOp::Scalar(_) => unreachable!(),
+                    };
+                    let mut acc = 0.0;
+                    let mut up = u.to_vec();
+                    let mut dn = u.to_vec();
+                    for j in 0..du {
+                        if diag[j] == 0.0 {
+                            continue;
+                        }
+                        up[j] += h;
+                        dn[j] -= h;
+                        let sj = (o.score(t, &up)[j] - o.score(t, &dn)[j]) / (2.0 * h);
+                        up[j] = u[j];
+                        dn[j] = u[j];
+                        acc += diag[j] * sj;
+                    }
+                    acc
+                }
+            };
+            dy[du] = tr_f - 0.5 * tr_ggt_js;
+        },
+        t0,
+        t1,
+        rtol,
+        rtol * 1e-2,
+        &mut y,
+    );
+    // log p_{t0}(u0) = log p_T(u(T)) + ∫_{t0}^{T} div dt  (change of vars
+    // integrating forward accumulates +∫ div; the sign is verified by the
+    // roundtrip test against the oracle's exact logp).
+    let log_pt = oracle.logp(t1, &y[..du]);
+    log_pt + y[du]
+}
+
+/// NLL in bits/dim of data points under the model, with CLD's velocity
+/// marginalization bound when `dim_u != dim_x` (App. C.8):
+/// `log p(x₀) ≥ E_{v₀}[log p(x₀, v₀)] + H(p(v₀))`.
+pub fn nll_bits_per_dim(
+    oracle: &GmmOracle,
+    xs: &[f64],
+    n_velocity_draws: usize,
+    rng: &mut crate::math::rng::Rng,
+    rtol: f64,
+) -> f64 {
+    let proc = &oracle.proc;
+    let d = proc.dim_x();
+    let du = proc.dim_u();
+    let n = xs.len() / d;
+    let mut total = 0.0;
+    for row in xs.chunks_exact(d) {
+        if du == d {
+            total += state_logp(oracle, row, rtol);
+        } else {
+            // CLD: draw v₀ ~ N(0, γM), average log p(x,v), add entropy.
+            let s0 = proc.sigma0();
+            let aug = du - d;
+            let mut acc = 0.0;
+            for _ in 0..n_velocity_draws.max(1) {
+                let mut u = proc.lift_data(row);
+                let mut noise = vec![0.0; du];
+                s0.sqrt_spd().sample_noise(rng, &mut noise);
+                for j in d..du {
+                    u[j] += noise[j];
+                }
+                acc += state_logp(oracle, &u, rtol);
+            }
+            acc /= n_velocity_draws.max(1) as f64;
+            // Entropy of N(0, γM I_aug).
+            let gm = match s0 {
+                crate::math::linop::LinOp::Block2(m) => m.d,
+                ref other => other.max_abs(),
+            };
+            let h = 0.5 * aug as f64 * (2.0 * std::f64::consts::PI * std::f64::consts::E * gm).ln();
+            total += acc + h;
+        }
+    }
+    // bits/dim = −logp / (d ln 2)
+    -total / (n as f64 * d as f64 * std::f64::consts::LN_2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gmm::GmmSpec;
+    use crate::diffusion::process::KtKind;
+    use crate::diffusion::Vpsde;
+
+    #[test]
+    fn prob_flow_logp_matches_exact_mixture_logp() {
+        // The CNF likelihood along the exact-score prob-flow must equal
+        // the analytic mixture log-density at t_min.
+        let proc = Arc::new(Vpsde::standard(1));
+        let spec = GmmSpec::new("m", vec![vec![-1.5], vec![1.5]], 0.04);
+        let o = GmmOracle::new(proc.clone(), spec, KtKind::R);
+        for &x in &[0.2f64, -1.4, 1.6] {
+            let got = state_logp(&o, &[x], 1e-8);
+            let exact = o.logp(proc.t_min(), &[x]);
+            assert!(
+                (got - exact).abs() < 2e-3 * (1.0 + exact.abs()),
+                "x={x}: CNF {got} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn nll_of_true_samples_near_mixture_entropy() {
+        let proc = Arc::new(Vpsde::standard(1));
+        let spec = GmmSpec::new("m", vec![vec![-1.5], vec![1.5]], 0.04);
+        let o = GmmOracle::new(proc.clone(), spec.clone(), KtKind::R);
+        let mut rng = crate::math::rng::Rng::seed_from(4);
+        let xs = spec.sample(20, &mut rng);
+        let bpd = nll_bits_per_dim(&o, &xs, 1, &mut rng, 1e-6);
+        // Ground truth −E[log p]/ln2: estimate directly from the spec.
+        let mut exact = 0.0;
+        for row in xs.chunks_exact(1) {
+            exact += spec.logpdf(row);
+        }
+        let exact_bpd = -exact / (20.0 * std::f64::consts::LN_2);
+        assert!(
+            (bpd - exact_bpd).abs() < 0.05 * (1.0 + exact_bpd.abs()),
+            "bpd {bpd} vs exact {exact_bpd}"
+        );
+    }
+}

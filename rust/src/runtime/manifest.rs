@@ -1,0 +1,111 @@
+//! `artifacts/manifest.json` — the contract between `python/compile` and
+//! the rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::diffusion::process::KtKind;
+use crate::util::json::Json;
+use crate::Result;
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub process: String,
+    pub dataset: String,
+    pub kt: KtKind,
+    pub dim_u: usize,
+    pub batch: usize,
+    pub final_loss: Option<f64>,
+    /// Frozen cross-layer probe: ε(u_row0, t) recorded by jax.
+    pub probe_t: f64,
+    pub probe_u_row0: Vec<f64>,
+    pub probe_eps_row0: Vec<f64>,
+    pub probe_seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let models_obj = j
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing models"))?;
+        let mut models = Vec::new();
+        for (name, m) in models_obj {
+            let get_str = |k: &str| {
+                m.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| anyhow::anyhow!("model {name}: missing {k}"))
+            };
+            let probe = m.get("probe").ok_or_else(|| anyhow::anyhow!("missing probe"))?;
+            models.push(ModelEntry {
+                name: name.clone(),
+                file: dir.join(get_str("file")?),
+                process: get_str("process")?,
+                dataset: get_str("dataset")?,
+                kt: get_str("kt")?.parse().map_err(|e| anyhow::anyhow!("{e}"))?,
+                dim_u: m.get("dim_u").and_then(|v| v.as_usize()).unwrap_or(0),
+                batch: m.get("batch").and_then(|v| v.as_usize()).unwrap_or(256),
+                final_loss: m.get("final_loss").and_then(|v| v.as_f64()),
+                probe_t: probe.get("t").and_then(|v| v.as_f64()).unwrap_or(0.5),
+                probe_u_row0: probe
+                    .get("u_row0")
+                    .and_then(|v| v.as_f64_vec())
+                    .unwrap_or_default(),
+                probe_eps_row0: probe
+                    .get("eps_row0")
+                    .and_then(|v| v.as_f64_vec())
+                    .unwrap_or_default(),
+                probe_seed: probe.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            });
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelEntry> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// Default artifacts directory (repo-root-relative, overridable).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("GDDIM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_minimal_manifest() {
+        let dir = std::env::temp_dir().join("gddim_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"batch": 256, "models": {"m1": {
+                "file": "m1.hlo.txt", "process": "cld", "dataset": "gmm2d",
+                "kt": "R", "dim_u": 4, "batch": 256, "final_loss": 0.12,
+                "probe": {"t": 0.5, "u_row0": [1, 2, 3, 4],
+                          "eps_row0": [0.1, 0.2, 0.3, 0.4], "seed": 1234}}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.get("m1").unwrap();
+        assert_eq!(e.dim_u, 4);
+        assert_eq!(e.kt, KtKind::R);
+        assert_eq!(e.probe_u_row0.len(), 4);
+        assert_eq!(e.probe_seed, 1234);
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt` + manifest)
+//! and serve them as [`ScoreModel`]s on the rust hot path.
+//!
+//! Interchange is HLO *text* — jax ≥ 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
+
+pub mod manifest;
+pub mod net;
+
+pub use manifest::Manifest;
+pub use net::NetScore;

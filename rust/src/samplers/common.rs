@@ -1,0 +1,109 @@
+//! Shared sampler plumbing: batched states, prior draws, trajectory
+//! recording, output container.
+
+use crate::diffusion::process::Process;
+use crate::math::linop::LinOp;
+use crate::math::rng::Rng;
+
+/// Result of a sampling run.
+pub struct SampleOutput {
+    /// Generated data-space samples, row-major `n × dim_x`.
+    pub xs: Vec<f64>,
+    /// Final state-space batch (`n × dim_u`) — useful for diagnostics.
+    pub us: Vec<f64>,
+    /// Score-network evaluations consumed (counted in *batched* calls ×1,
+    /// matching how the paper reports NFE).
+    pub nfe: usize,
+    /// Optional recorded trajectory of batch element 0.
+    pub traj: Option<Traj>,
+}
+
+/// Recorded trajectory of one sample (Fig. 1/3/5-style diagnostics).
+#[derive(Clone, Debug, Default)]
+pub struct Traj {
+    pub ts: Vec<f64>,
+    /// State at each recorded time (dim_u each).
+    pub us: Vec<Vec<f64>>,
+    /// ε_θ output at each recorded time (dim_u each; empty for samplers
+    /// that don't evaluate ε at that point).
+    pub eps: Vec<Vec<f64>>,
+}
+
+impl Traj {
+    pub fn push(&mut self, t: f64, u: &[f64], eps: &[f64]) {
+        self.ts.push(t);
+        self.us.push(u.to_vec());
+        self.eps.push(eps.to_vec());
+    }
+}
+
+/// Apply a LinOp to each row of a batched state.
+pub fn apply_rows(op: &LinOp, src: &[f64], dst: &mut [f64], du: usize) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (s, d) in src.chunks_exact(du).zip(dst.chunks_exact_mut(du)) {
+        op.apply(s, d);
+    }
+}
+
+/// `dst += op · src` per row.
+pub fn apply_add_rows(op: &LinOp, src: &[f64], dst: &mut [f64], du: usize) {
+    for (s, d) in src.chunks_exact(du).zip(dst.chunks_exact_mut(du)) {
+        op.apply_add(s, d);
+    }
+}
+
+/// Draw the prior batch `u(T) ~ p_T` (n × dim_u).
+pub fn draw_prior(proc: &dyn Process, n: usize, rng: &mut Rng) -> Vec<f64> {
+    let du = proc.dim_u();
+    let factor = proc.prior_factor();
+    let mut us = vec![0.0; n * du];
+    for row in us.chunks_exact_mut(du) {
+        factor.sample_noise(rng, row);
+    }
+    us
+}
+
+/// Project the final state batch to data space.
+pub fn project_batch(proc: &dyn Process, us: &[f64]) -> Vec<f64> {
+    let du = proc.dim_u();
+    let mut xs = Vec::with_capacity(us.len() / du * proc.dim_x());
+    for row in us.chunks_exact(du) {
+        xs.extend(proc.proj_data(row));
+    }
+    xs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diffusion::{Cld, Process, Vpsde};
+
+    #[test]
+    fn prior_moments_match_process() {
+        let proc = Vpsde::standard(3);
+        let mut rng = Rng::seed_from(31);
+        let us = draw_prior(&proc, 50_000, &mut rng);
+        let c = crate::math::stats::covariance(&us, 3);
+        for i in 0..3 {
+            assert!((c[(i, i)] - 1.0).abs() < 0.03, "{}", c[(i, i)]);
+        }
+    }
+
+    #[test]
+    fn cld_prior_has_mass_scaled_velocity() {
+        let proc = Cld::standard(2);
+        let mut rng = Rng::seed_from(32);
+        let us = draw_prior(&proc, 50_000, &mut rng);
+        let c = crate::math::stats::covariance(&us, 4);
+        assert!((c[(0, 0)] - 1.0).abs() < 0.03); // x variance 1
+        assert!((c[(2, 2)] - 0.25).abs() < 0.02); // v variance M
+    }
+
+    #[test]
+    fn project_batch_strips_velocity() {
+        let proc = Cld::standard(2);
+        let us = vec![1.0, 2.0, 9.0, 9.0, 3.0, 4.0, 9.0, 9.0];
+        let xs = project_batch(&proc, &us);
+        assert_eq!(xs, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Euler–Maruyama on the marginal-equivalent SDE (paper Eq. 6):
+//! `du = [F_t u − (1+λ²)/2 G_tG_tᵀ s_θ(u,t)]dt + λ G_t dw̄`,
+//! integrated backwards on the grid. λ=0 degenerates to plain Euler on
+//! the probability-flow ODE — the paper's weakest baseline, kept
+//! deliberately (Fig. 4's "Euler" curve and Table 2's "EM" row).
+
+use crate::diffusion::process::Process;
+use crate::diffusion::schedule::TimeGrid;
+use crate::math::rng::Rng;
+use crate::samplers::common::{draw_prior, project_batch, SampleOutput, Traj};
+use crate::score::model::ScoreModel;
+
+pub fn sample_em(
+    proc: &dyn Process,
+    model: &dyn ScoreModel,
+    grid: &TimeGrid,
+    lambda: f64,
+    n: usize,
+    rng: &mut Rng,
+    record_traj: bool,
+) -> SampleOutput {
+    let du = proc.dim_u();
+    let ts = &grid.ts;
+    let n_steps = grid.n_steps();
+    let mut u = draw_prior(proc, n, rng);
+    let mut eps = vec![0.0; n * du];
+    let mut score_buf = vec![0.0; du];
+    let mut drift = vec![0.0; du];
+    let mut nfe = 0usize;
+    let mut traj = record_traj.then(Traj::default);
+
+    for i in (1..=n_steps).rev() {
+        let t = ts[i];
+        let dt = ts[i - 1] - ts[i]; // negative
+        model.eps_batch(t, &u, &mut eps);
+        nfe += 1;
+        if let Some(tr) = traj.as_mut() {
+            tr.push(t, &u[..du], &eps[..du]);
+        }
+        let f = proc.f_op(t);
+        let ggt = proc.ggt_op(t);
+        let g = proc.g_op(t);
+        let kinv_t = proc.kt(model.kt_kind(), t).inv().transpose();
+        let half = 0.5 * (1.0 + lambda * lambda);
+        let sq = dt.abs().sqrt() * lambda;
+        for (row, erow) in u.chunks_exact_mut(du).zip(eps.chunks_exact(du)) {
+            // s = −K^{-T} ε
+            kinv_t.apply(erow, &mut score_buf);
+            for s in score_buf.iter_mut() {
+                *s = -*s;
+            }
+            // drift = F u − half·GGᵀ s
+            f.apply(row, &mut drift);
+            let mut gs = vec![0.0; du];
+            ggt.apply(&score_buf, &mut gs);
+            for j in 0..du {
+                row[j] += dt * (drift[j] - half * gs[j]);
+            }
+            if lambda > 0.0 {
+                let mut z = vec![0.0; du];
+                g.sample_noise(rng, &mut z);
+                for j in 0..du {
+                    row[j] += sq * z[j];
+                }
+            }
+        }
+    }
+    if let Some(tr) = traj.as_mut() {
+        tr.push(ts[0], &u[..du], &[]);
+    }
+    let xs = project_batch(proc, &u);
+    SampleOutput { xs, us: u, nfe, traj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::presets;
+    use crate::diffusion::process::KtKind;
+    use crate::diffusion::Vpsde;
+    use crate::metrics::frechet::frechet_to_spec;
+    use crate::score::oracle::GmmOracle;
+    use std::sync::Arc;
+
+    #[test]
+    fn em_converges_with_many_steps() {
+        let proc = Arc::new(Vpsde::standard(2));
+        let spec = presets::gmm2d();
+        let oracle = GmmOracle::new(proc.clone(), spec.clone(), KtKind::R);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 400);
+        let mut rng = Rng::seed_from(21);
+        let out = sample_em(proc.as_ref(), &oracle, &grid, 1.0, 2_000, &mut rng, false);
+        assert_eq!(out.nfe, 400);
+        let fd = frechet_to_spec(&out.xs, &spec);
+        assert!(fd < 0.5, "EM@400 FD = {fd}");
+    }
+
+    #[test]
+    fn em_is_bad_at_low_nfe() {
+        // The motivating failure: EM at small NFE is far worse than the
+        // exponential-integrator path (paper Tables 2–3).
+        let proc = Arc::new(Vpsde::standard(2));
+        let spec = presets::gmm2d();
+        let oracle = GmmOracle::new(proc.clone(), spec.clone(), KtKind::R);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 10);
+        let mut rng = Rng::seed_from(22);
+        let em = sample_em(proc.as_ref(), &oracle, &grid, 1.0, 2_000, &mut rng, false);
+        let fd_em = frechet_to_spec(&em.xs, &spec);
+
+        use crate::coeffs::plan::{PlanConfig, SamplerPlan};
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let mut rng = Rng::seed_from(22);
+        let gd = crate::samplers::gddim::sample_deterministic(
+            proc.as_ref(),
+            &plan,
+            &oracle,
+            2_000,
+            &mut rng,
+            false,
+        );
+        let fd_gd = frechet_to_spec(&gd.xs, &spec);
+        assert!(fd_gd < fd_em, "gDDIM {fd_gd} must beat EM {fd_em} at NFE 10");
+    }
+
+    #[test]
+    fn lambda_zero_is_deterministic() {
+        let proc = Arc::new(Vpsde::standard(1));
+        let oracle = GmmOracle::new(proc.clone(), presets::gmm2d_1d(), KtKind::R);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 50);
+        let mut r1 = Rng::seed_from(5);
+        let mut r2 = Rng::seed_from(5);
+        let a = sample_em(proc.as_ref(), &oracle, &grid, 0.0, 16, &mut r1, false);
+        let b = sample_em(proc.as_ref(), &oracle, &grid, 0.0, 16, &mut r2, false);
+        crate::math::assert_allclose(&a.xs, &b.xs, 0.0, 0.0, "λ=0 determinism");
+    }
+}

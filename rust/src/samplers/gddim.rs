@@ -1,0 +1,335 @@
+//! gDDIM — the paper's contribution (Sec. 4, App. B.2.4 Algo 1).
+//!
+//! * Deterministic (λ=0): exponential-integrator multistep predictor
+//!   (Eq. 19) with optional corrector pass (Eq. 45; Table 8's "PC").
+//! * Stochastic (λ>0): the exact linear-SDE solve under the Prop 5 score
+//!   approximator — the Gaussian update of Eq. 22 with noise cov Eq. 23.
+//!
+//! All coefficients come precomputed in a [`SamplerPlan`] (Stage I);
+//! the hot loop is pure BLAS-1-style arithmetic plus one score call per
+//! step, so coordinator overhead stays negligible relative to the model.
+
+use std::collections::VecDeque;
+
+use crate::coeffs::plan::SamplerPlan;
+use crate::diffusion::process::Process;
+use crate::math::rng::Rng;
+use crate::samplers::common::{
+    apply_add_rows, apply_rows, draw_prior, project_batch, SampleOutput, Traj,
+};
+use crate::score::model::ScoreModel;
+
+/// Run deterministic gDDIM (multistep predictor, optional PC).
+///
+/// NFE: `N` predictor-only, `2N−1` with corrector (paper Table 8).
+pub fn sample_deterministic(
+    proc: &dyn Process,
+    plan: &SamplerPlan,
+    model: &dyn ScoreModel,
+    n: usize,
+    rng: &mut Rng,
+    record_traj: bool,
+) -> SampleOutput {
+    assert_eq!(plan.cfg.lambda, 0.0, "use sample_stochastic for λ>0");
+    assert_eq!(model.kt_kind(), plan.cfg.kt, "plan/model K_t parameterization mismatch");
+    let du = proc.dim_u();
+    let ts = &plan.grid.ts;
+    let n_steps = plan.n_steps();
+    let with_corr = plan.cfg.with_corrector && !plan.corr.is_empty();
+
+    let mut u = draw_prior(proc, n, rng);
+    let mut nfe = 0usize;
+    let mut traj = record_traj.then(Traj::default);
+
+    // ε history: hist[0] is ε at the current time t_i, hist[1] at t_{i+1}, …
+    let mut hist: VecDeque<Vec<f64>> = VecDeque::new();
+    let mut eps0 = vec![0.0; n * du];
+    model.eps_batch(ts[n_steps], &u, &mut eps0);
+    nfe += 1;
+    if let Some(tr) = traj.as_mut() {
+        tr.push(ts[n_steps], &u[..du], &eps0[..du]);
+    }
+    hist.push_front(eps0);
+
+    let mut next = vec![0.0; n * du];
+    for i in (1..=n_steps).rev() {
+        let step = i - 1; // plan arrays are indexed by i−1
+        let coeffs = &plan.pred[step];
+        // Predictor: ū(t_{i−1}) = Ψ u(t_i) + Σ_j C_ij ε_j   (Eq. 19a)
+        apply_rows(&plan.psi[step], &u, &mut next, du);
+        for (j, c) in coeffs.iter().enumerate() {
+            apply_add_rows(c, &hist[j], &mut next, du);
+        }
+
+        if with_corr && i > 1 {
+            // ε̄ at the predicted state (paper Table 8: "PC adds one more
+            // correcting step after each predicting step except the last",
+            // for a total of 2N−1 NFE).
+            let mut eps_bar = vec![0.0; n * du];
+            model.eps_batch(ts[i - 1], &next, &mut eps_bar);
+            nfe += 1;
+            // Corrector (Eq. 45): rebuild from u(t_i) with ᶜC.
+            let cc = &plan.corr[step];
+            apply_rows(&plan.psi[step], &u, &mut next, du);
+            apply_add_rows(&cc[0], &eps_bar, &mut next, du);
+            for (jj, c) in cc.iter().enumerate().skip(1) {
+                apply_add_rows(c, &hist[jj - 1], &mut next, du);
+            }
+            std::mem::swap(&mut u, &mut next);
+            // Fresh ε at the corrected state feeds the next predictor.
+            let mut eps_new = vec![0.0; n * du];
+            model.eps_batch(ts[i - 1], &u, &mut eps_new);
+            nfe += 1;
+            hist.push_front(eps_new);
+        } else if with_corr {
+            // Final step: predictor only.
+            std::mem::swap(&mut u, &mut next);
+        } else {
+            std::mem::swap(&mut u, &mut next);
+            if i > 1 {
+                let mut eps_new = vec![0.0; n * du];
+                model.eps_batch(ts[i - 1], &u, &mut eps_new);
+                nfe += 1;
+                hist.push_front(eps_new);
+            }
+        }
+        while hist.len() > plan.cfg.q {
+            hist.pop_back();
+        }
+        if let Some(tr) = traj.as_mut() {
+            let e = hist.front().map(|h| &h[..du]).unwrap_or(&[]);
+            tr.push(ts[i - 1], &u[..du], e);
+        }
+    }
+
+    let xs = project_batch(proc, &u);
+    SampleOutput { xs, us: u, nfe, traj }
+}
+
+/// Run stochastic gDDIM (Eq. 22). Requires a plan built with λ > 0
+/// (which implies `K_t = R_t` and q = 1).
+pub fn sample_stochastic(
+    proc: &dyn Process,
+    plan: &SamplerPlan,
+    model: &dyn ScoreModel,
+    n: usize,
+    rng: &mut Rng,
+    record_traj: bool,
+) -> SampleOutput {
+    assert!(plan.cfg.lambda > 0.0, "use sample_deterministic for λ=0");
+    assert!(!plan.stoch_mean.is_empty());
+    let du = proc.dim_u();
+    let ts = &plan.grid.ts;
+    let n_steps = plan.n_steps();
+
+    let mut u = draw_prior(proc, n, rng);
+    let mut eps = vec![0.0; n * du];
+    let mut next = vec![0.0; n * du];
+    let mut noise = vec![0.0; du];
+    let mut nfe = 0usize;
+    let mut traj = record_traj.then(Traj::default);
+
+    for i in (1..=n_steps).rev() {
+        let step = i - 1;
+        model.eps_batch(ts[i], &u, &mut eps);
+        nfe += 1;
+        if let Some(tr) = traj.as_mut() {
+            tr.push(ts[i], &u[..du], &eps[..du]);
+        }
+        // mean: Ψ u + [Ψ̂ − Ψ]K_s ε   (Eq. 22)
+        apply_rows(&plan.psi[step], &u, &mut next, du);
+        apply_add_rows(&plan.stoch_mean[step], &eps, &mut next, du);
+        // noise: chol(P_st) z
+        for row in next.chunks_exact_mut(du) {
+            plan.stoch_noise[step].sample_noise(rng, &mut noise);
+            for j in 0..du {
+                row[j] += noise[j];
+            }
+        }
+        std::mem::swap(&mut u, &mut next);
+    }
+    if let Some(tr) = traj.as_mut() {
+        tr.push(ts[0], &u[..du], &[]);
+    }
+
+    let xs = project_batch(proc, &u);
+    SampleOutput { xs, us: u, nfe, traj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coeffs::plan::PlanConfig;
+    use crate::data::gmm::GmmSpec;
+    use crate::data::presets;
+    use crate::diffusion::process::KtKind;
+    use crate::diffusion::{Cld, TimeGrid, Vpsde};
+    use crate::metrics::frechet::frechet_to_spec;
+    use crate::score::oracle::GmmOracle;
+    use std::sync::Arc;
+
+    /// Paper Sec. 3: "DDIMs can recover the single data point in this toy
+    /// example in one step" — deterministic gDDIM, Dirac data, N=1.
+    #[test]
+    fn one_step_exact_recovery_on_dirac_vpsde() {
+        let proc = Arc::new(Vpsde::standard(2));
+        let spec = GmmSpec {
+            name: "dirac".into(),
+            d: 2,
+            weights: vec![1.0],
+            means: vec![vec![0.7, -1.2]],
+            var: 0.0,
+        };
+        let oracle = GmmOracle::new(proc.clone(), spec, KtKind::R);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 1);
+        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let mut rng = Rng::seed_from(100);
+        let out = sample_deterministic(proc.as_ref(), &plan, &oracle, 64, &mut rng, false);
+        assert_eq!(out.nfe, 1);
+        // Every sample lands (nearly) on the data point: the residual is
+        // O(α_{t_min}) from stopping at t_min rather than 0.
+        for row in out.xs.chunks_exact(2) {
+            assert!((row[0] - 0.7).abs() < 0.05, "{row:?}");
+            assert!((row[1] + 1.2).abs() < 0.05, "{row:?}");
+        }
+    }
+
+    /// Prop 4 analog on CLD: Gaussian (Dirac data + velocity Gaussian)
+    /// recovered in very few steps with K=R.
+    #[test]
+    fn few_step_recovery_on_dirac_cld() {
+        let proc = Arc::new(Cld::standard(1));
+        let spec = GmmSpec {
+            name: "dirac".into(),
+            d: 1,
+            weights: vec![1.0],
+            means: vec![vec![1.1]],
+            var: 0.0,
+        };
+        let oracle = GmmOracle::new(proc.clone(), spec, KtKind::R);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 2);
+        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let mut rng = Rng::seed_from(101);
+        let out = sample_deterministic(proc.as_ref(), &plan, &oracle, 64, &mut rng, false);
+        for row in out.xs.chunks_exact(1) {
+            assert!((row[0] - 1.1).abs() < 0.1, "{}", row[0]);
+        }
+    }
+
+    #[test]
+    fn matches_analytic_ddim_formula_on_vpsde() {
+        // Eq. 12: the update must equal the textbook DDIM step exactly.
+        let proc = Arc::new(Vpsde::standard(2));
+        let oracle = GmmOracle::new(proc.clone(), presets::gmm2d(), KtKind::R);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 5);
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        // Manual DDIM from the same prior draw:
+        let mut rng_a = Rng::seed_from(7);
+        let out = sample_deterministic(proc.as_ref(), &plan, &oracle, 4, &mut rng_a, false);
+        let mut rng_b = Rng::seed_from(7);
+        let mut u = crate::samplers::common::draw_prior(proc.as_ref(), 4, &mut rng_b);
+        let ts = &grid.ts;
+        for i in (1..=5).rev() {
+            let (s, t) = (ts[i], ts[i - 1]);
+            let (als, alt) = (proc.alpha(s), proc.alpha(t));
+            let ratio = (alt / als).sqrt();
+            let coef = (1.0 - alt).sqrt() - (1.0 - als).sqrt() * ratio;
+            let mut eps = vec![0.0; u.len()];
+            oracle.eps_batch(s, &u, &mut eps);
+            for (uu, ee) in u.iter_mut().zip(&eps) {
+                *uu = ratio * *uu + coef * *ee;
+            }
+        }
+        crate::math::assert_allclose(&out.us, &u, 1e-6, 1e-8, "gDDIM vs analytic DDIM");
+    }
+
+    #[test]
+    fn stochastic_reduces_to_deterministic_at_tiny_lambda() {
+        // Prop 7 at the sampler level: with the same RNG draws the λ→0
+        // stochastic path converges to the deterministic one.
+        let proc = Arc::new(Vpsde::standard(2));
+        let oracle = GmmOracle::new(proc.clone(), presets::gmm2d(), KtKind::R);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 10);
+        let det = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let sto = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::stochastic(1e-6));
+        let mut rng_a = Rng::seed_from(9);
+        let a = sample_deterministic(proc.as_ref(), &det, &oracle, 8, &mut rng_a, false);
+        let mut rng_b = Rng::seed_from(9);
+        let b = sample_stochastic(proc.as_ref(), &sto, &oracle, 8, &mut rng_b, false);
+        crate::math::assert_allclose(&a.xs, &b.xs, 1e-3, 1e-4, "λ→0 limit");
+    }
+
+    #[test]
+    fn multistep_beats_single_step_at_low_nfe() {
+        // The headline mechanism (Table 5): higher q → better quality at
+        // the same NFE, on CLD with the exact score.
+        let proc = Arc::new(Cld::standard(2));
+        let spec = presets::gmm2d();
+        let oracle = GmmOracle::new(proc.clone(), spec.clone(), KtKind::R);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 20);
+        let mut fds = Vec::new();
+        for q in [1usize, 2] {
+            let plan =
+                SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(q, KtKind::R));
+            let mut rng = Rng::seed_from(11);
+            let out = sample_deterministic(proc.as_ref(), &plan, &oracle, 2_000, &mut rng, false);
+            assert_eq!(out.nfe, 20);
+            fds.push(frechet_to_spec(&out.xs, &spec));
+        }
+        assert!(
+            fds[1] < fds[0],
+            "q=2 (FD {}) should beat q=1 (FD {}) at NFE 20",
+            fds[1],
+            fds[0]
+        );
+    }
+
+    #[test]
+    fn r_parameterization_beats_l_on_cld() {
+        // Table 1's core claim with the exact score.
+        let proc = Arc::new(Cld::standard(2));
+        let spec = presets::gmm2d();
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 20);
+        let mut fds = Vec::new();
+        for kt in [KtKind::R, KtKind::L] {
+            let oracle = GmmOracle::new(proc.clone(), spec.clone(), kt);
+            let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, kt));
+            let mut rng = Rng::seed_from(13);
+            let out = sample_deterministic(proc.as_ref(), &plan, &oracle, 2_000, &mut rng, false);
+            fds.push(frechet_to_spec(&out.xs, &spec));
+        }
+        assert!(
+            fds[0] < fds[1],
+            "K=R (FD {}) must beat K=L (FD {}) at NFE 20 on CLD",
+            fds[0],
+            fds[1]
+        );
+    }
+
+    #[test]
+    fn corrector_consumes_2n_minus_1_nfe() {
+        let proc = Arc::new(Vpsde::standard(2));
+        let oracle = GmmOracle::new(proc.clone(), presets::gmm2d(), KtKind::R);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 10);
+        let cfg = PlanConfig { q: 2, with_corrector: true, ..PlanConfig::default() };
+        let plan = SamplerPlan::build(proc.as_ref(), &grid, &cfg);
+        let mut rng = Rng::seed_from(14);
+        let out = sample_deterministic(proc.as_ref(), &plan, &oracle, 16, &mut rng, false);
+        assert_eq!(out.nfe, 2 * 10 - 1);
+    }
+
+    #[test]
+    fn trajectory_is_recorded_on_grid() {
+        let proc = Arc::new(Vpsde::standard(2));
+        let oracle = GmmOracle::new(proc.clone(), presets::gmm2d(), KtKind::R);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 6);
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+        let mut rng = Rng::seed_from(15);
+        let out = sample_deterministic(proc.as_ref(), &plan, &oracle, 2, &mut rng, true);
+        let tr = out.traj.unwrap();
+        assert_eq!(tr.ts.len(), 7);
+        assert!(tr.ts[0] > tr.ts[6], "recorded T → t_min");
+    }
+}

@@ -1,0 +1,25 @@
+//! Stage II — the samplers (paper App. C.4 "Online execution of gDDIM")
+//! plus every baseline the paper's evaluation compares against:
+//!
+//! | paper name                    | module       |
+//! |-------------------------------|--------------|
+//! | gDDIM (det., multistep P/PC)  | [`gddim`]    |
+//! | gDDIM (stochastic, Eq. 22)    | [`gddim`]    |
+//! | Euler–Maruyama on Eq. 6       | [`em`]       |
+//! | Ancestral sampling            | [`ancestral`]|
+//! | Prob.Flow RK45                | [`rk45`]     |
+//! | 2nd-order Heun (Karras-style) | [`heun`]     |
+//! | SSCS (Dockhorn et al., CLD)   | [`sscs`]     |
+//!
+//! All samplers share the batched-state conventions of [`common`] and
+//! report NFE so the benches reproduce the paper's FID-vs-NFE axes.
+
+pub mod common;
+pub mod gddim;
+pub mod em;
+pub mod ancestral;
+pub mod rk45;
+pub mod heun;
+pub mod sscs;
+
+pub use common::{SampleOutput, Traj};

@@ -1,0 +1,134 @@
+//! Adaptive "Prob.Flow, RK45" baseline (paper Table 3): Dormand–Prince
+//! on the probability-flow ODE (Eq. 7) over the whole batch, with the
+//! tolerance as the NFE knob ("we tune its tolerance hyperparameters so
+//! that the real NFE is close but not equal to the given NFE").
+
+use crate::diffusion::process::Process;
+use crate::math::ode::rk45_integrate;
+use crate::math::rng::Rng;
+use crate::samplers::common::{draw_prior, project_batch, SampleOutput};
+use crate::score::model::ScoreModel;
+
+pub fn sample_rk45(
+    proc: &dyn Process,
+    model: &dyn ScoreModel,
+    rtol: f64,
+    n: usize,
+    rng: &mut Rng,
+) -> SampleOutput {
+    let du = proc.dim_u();
+    let mut u = draw_prior(proc, n, rng);
+    let mut nfe = 0usize;
+    {
+        let mut eps = vec![0.0; n * du];
+        let mut score = vec![0.0; du];
+        let mut drift = vec![0.0; du];
+        let mut gs = vec![0.0; du];
+        let nfe_ref = &mut nfe;
+        rk45_integrate(
+            &mut |t: f64, y: &[f64], dy: &mut [f64]| {
+                *nfe_ref += 1;
+                model.eps_batch(t, y, &mut eps);
+                let f = proc.f_op(t);
+                let ggt = proc.ggt_op(t);
+                let kinv_t = proc.kt(model.kt_kind(), t).inv().transpose();
+                for ((yrow, erow), drow) in y
+                    .chunks_exact(du)
+                    .zip(eps.chunks_exact(du))
+                    .zip(dy.chunks_exact_mut(du))
+                {
+                    kinv_t.apply(erow, &mut score);
+                    for s in score.iter_mut() {
+                        *s = -*s;
+                    }
+                    f.apply(yrow, &mut drift);
+                    ggt.apply(&score, &mut gs);
+                    for j in 0..du {
+                        drow[j] = drift[j] - 0.5 * gs[j];
+                    }
+                }
+            },
+            proc.t_max(),
+            proc.t_min(),
+            rtol,
+            rtol * 1e-2,
+            &mut u,
+        );
+    }
+    let xs = project_batch(proc, &u);
+    SampleOutput { xs, us: u, nfe, traj: None }
+}
+
+/// Find an rtol whose actual NFE lands near `target_nfe` (the paper's
+/// Table 3 protocol), by bisection on log-rtol with a small probe batch.
+pub fn tune_rtol_for_nfe(
+    proc: &dyn Process,
+    model: &dyn ScoreModel,
+    target_nfe: usize,
+    seed: u64,
+) -> (f64, usize) {
+    let mut lo = 1e-12f64.ln();
+    let mut hi = 1e0f64.ln();
+    let mut best = (1e-3, usize::MAX);
+    for _ in 0..18 {
+        let mid = 0.5 * (lo + hi);
+        let rtol = mid.exp();
+        let mut rng = Rng::seed_from(seed);
+        let out = sample_rk45(proc, model, rtol, 8, &mut rng);
+        let diff = out.nfe.abs_diff(target_nfe);
+        if diff < best.1.abs_diff(target_nfe) {
+            best = (rtol, out.nfe);
+        }
+        if out.nfe > target_nfe {
+            lo = mid; // need looser tolerance
+        } else {
+            hi = mid;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::presets;
+    use crate::diffusion::process::KtKind;
+    use crate::diffusion::Vpsde;
+    use crate::metrics::frechet::frechet_to_spec;
+    use crate::score::oracle::GmmOracle;
+    use std::sync::Arc;
+
+    #[test]
+    fn rk45_tight_tolerance_is_accurate() {
+        let proc = Arc::new(Vpsde::standard(2));
+        let spec = presets::gmm2d();
+        let oracle = GmmOracle::new(proc.clone(), spec.clone(), KtKind::R);
+        let mut rng = Rng::seed_from(41);
+        let out = sample_rk45(proc.as_ref(), &oracle, 1e-6, 1_000, &mut rng);
+        let fd = frechet_to_spec(&out.xs, &spec);
+        assert!(fd < 0.2, "RK45 tight FD = {fd} (nfe={})", out.nfe);
+        assert!(out.nfe > 50);
+    }
+
+    #[test]
+    fn looser_tolerance_uses_fewer_nfe() {
+        let proc = Arc::new(Vpsde::standard(2));
+        let oracle = GmmOracle::new(proc.clone(), presets::gmm2d(), KtKind::R);
+        let mut r1 = Rng::seed_from(42);
+        let tight = sample_rk45(proc.as_ref(), &oracle, 1e-8, 64, &mut r1);
+        let mut r2 = Rng::seed_from(42);
+        let loose = sample_rk45(proc.as_ref(), &oracle, 1e-2, 64, &mut r2);
+        assert!(loose.nfe < tight.nfe, "{} vs {}", loose.nfe, tight.nfe);
+    }
+
+    #[test]
+    fn tuner_hits_target_roughly() {
+        let proc = Arc::new(Vpsde::standard(2));
+        let oracle = GmmOracle::new(proc.clone(), presets::gmm2d(), KtKind::R);
+        let (_rtol, nfe) = tune_rtol_for_nfe(proc.as_ref(), &oracle, 100, 7);
+        assert!(
+            nfe >= 40 && nfe <= 260,
+            "tuned NFE {nfe} should be in the ballpark of 100"
+        );
+    }
+}

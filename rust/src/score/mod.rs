@@ -1,0 +1,17 @@
+//! Score models.
+//!
+//! A [`ScoreModel`] produces the ε-prediction `ε_θ(u, t) = −K_tᵀ s(u, t)`
+//! under a declared `K_t` parameterization (paper Eq. 4). Two families:
+//!
+//! * [`oracle::GmmOracle`] — the *exact* score of a Gaussian-mixture data
+//!   distribution pushed through the forward SDE (closed form). This is
+//!   what validates Props 1–7 and runs every sampler comparison free of
+//!   training error.
+//! * [`net::NetScore`] (see [`crate::runtime`]) — a JAX/Pallas-trained
+//!   network AOT-compiled to HLO and executed through PJRT.
+
+pub mod oracle;
+pub mod model;
+
+pub use model::ScoreModel;
+pub use oracle::GmmOracle;

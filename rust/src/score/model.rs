@@ -1,0 +1,32 @@
+//! The [`ScoreModel`] trait — what samplers consume.
+
+use crate::diffusion::process::KtKind;
+
+/// A batched ε-prediction model: `ε(u, t) = −K_tᵀ ∇log p_t(u)` for the
+/// parameterization `K_t` declared by [`ScoreModel::kt_kind`].
+///
+/// Batching convention: `us` is row-major `n × dim_u`, `out` likewise.
+/// Implementations must be `Send + Sync` (the server fans batches across
+/// worker threads).
+pub trait ScoreModel: Send + Sync {
+    /// State dimension D this model operates on.
+    fn dim_u(&self) -> usize;
+
+    /// Which `K_t` the ε output is parameterized by.
+    fn kt_kind(&self) -> KtKind;
+
+    /// Evaluate ε for a batch of states at one shared time `t`.
+    fn eps_batch(&self, t: f64, us: &[f64], out: &mut [f64]);
+
+    /// Convenience single-state evaluation.
+    fn eps(&self, t: f64, u: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; u.len()];
+        self.eps_batch(t, u, &mut out);
+        out
+    }
+
+    /// Human-readable identifier for logs/benches.
+    fn describe(&self) -> String {
+        format!("score-model(dim={})", self.dim_u())
+    }
+}

@@ -1,0 +1,351 @@
+//! Exact score oracle for Gaussian-mixture data (paper Eq. 15).
+//!
+//! For data `p₀ = Σ_m w_m N(μ_m, σ²I_d)` pushed through the linear SDE,
+//! the marginal at time `t` is again a mixture:
+//! `p_t(u) = Σ_m w_m N(u; Ψ(t,0)·lift(μ_m), C_t)` with the *shared*
+//! component covariance `C_t = Ψ(t,0)·lift(σ²I)·Ψ(t,0)ᵀ + Σ_t`, so
+//!
+//! ```text
+//!   ∇log p_t(u) = Σ_m w̃_m(u) · (−C_t⁻¹ (u − μ_m(t))),
+//!   w̃_m ∝ w_m · exp(−½‖L_C⁻¹(u − μ_m(t))‖²)          (Eq. 15)
+//! ```
+//!
+//! The Jacobian trace (needed by the probability-flow NLL, App. C.8) is
+//! also closed form:
+//! `tr ∇s = −tr C⁻¹ + Σ w̃_m‖s_m‖² − ‖s‖²`.
+
+use std::sync::Arc;
+
+use crate::data::gmm::GmmSpec;
+use crate::diffusion::process::{KtKind, Process};
+use crate::math::linop::LinOp;
+use crate::score::model::ScoreModel;
+
+/// Cached per-`t` quantities (the oracle is called many times at the same
+/// grid times; recomputing the 2×2/diag algebra is cheap but the lifted
+/// means are O(M·D)).
+struct TimeCache {
+    t: f64,
+    /// L_C⁻¹ with C = L_C L_Cᵀ.
+    l_inv: LinOp,
+    /// C⁻¹ = L_C⁻ᵀ L_C⁻¹.
+    c_inv: LinOp,
+    /// −K_tᵀ (for the ε conversion).
+    neg_kt_t: LinOp,
+    /// Component means at time t (row-major M × D).
+    mus: Vec<f64>,
+}
+
+/// Exact mixture score for a [`GmmSpec`] under a [`Process`].
+pub struct GmmOracle {
+    pub proc: Arc<dyn Process>,
+    pub spec: GmmSpec,
+    pub kt: KtKind,
+    cache: std::sync::Mutex<Option<Arc<TimeCache>>>,
+    /// Number of ε evaluations served (batch counts once per row).
+    pub calls: std::sync::atomic::AtomicU64,
+}
+
+impl GmmOracle {
+    pub fn new(proc: Arc<dyn Process>, spec: GmmSpec, kt: KtKind) -> Self {
+        assert_eq!(proc.dim_x(), spec.d, "process/data dimension mismatch");
+        GmmOracle {
+            proc,
+            spec,
+            kt,
+            cache: std::sync::Mutex::new(None),
+            calls: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    fn cache_for(&self, t: f64) -> Arc<TimeCache> {
+        {
+            let g = self.cache.lock().unwrap();
+            if let Some(c) = g.as_ref() {
+                if c.t == t {
+                    return c.clone();
+                }
+            }
+        }
+        let du = self.proc.dim_u();
+        let psi0 = self.proc.psi(t, 0.0);
+        // C_t = Ψ lift(σ²) Ψᵀ + Σ_t
+        let c = psi0
+            .matmul(&self.proc.lift_cov(self.spec.var))
+            .matmul(&psi0.transpose())
+            .add(&self.proc.sigma(t));
+        let l = c.cholesky();
+        let l_inv = l.inv();
+        let c_inv = l_inv.transpose().matmul(&l_inv);
+        let neg_kt_t = self.proc.kt(self.kt, t).transpose().scale(-1.0);
+        let mut mus = Vec::with_capacity(self.spec.n_modes() * du);
+        let mut tmp = vec![0.0; du];
+        for m in &self.spec.means {
+            let lifted = self.proc.lift_data(m);
+            psi0.apply(&lifted, &mut tmp);
+            mus.extend_from_slice(&tmp);
+        }
+        let cache = Arc::new(TimeCache { t, l_inv, c_inv, neg_kt_t, mus });
+        *self.cache.lock().unwrap() = Some(cache.clone());
+        cache
+    }
+
+    /// Exact score `∇log p_t(u)` for a single state.
+    pub fn score(&self, t: f64, u: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; u.len()];
+        self.score_into(t, u, &mut out, None);
+        out
+    }
+
+    /// Score with optional responsibility output (for the NLL Jacobian).
+    fn score_into(&self, t: f64, u: &[f64], out: &mut [f64], mut resp: Option<&mut Vec<f64>>) {
+        let cache = self.cache_for(t);
+        let du = u.len();
+        let m_count = self.spec.n_modes();
+        // log w̃_m (unnormalised): log w_m − ½ ‖L⁻¹(u − μ_m)‖².
+        let mut logw = vec![0.0; m_count];
+        let mut diff = vec![0.0; du];
+        let mut white = vec![0.0; du];
+        let mut best = f64::NEG_INFINITY;
+        for m in 0..m_count {
+            let mu = &cache.mus[m * du..(m + 1) * du];
+            for j in 0..du {
+                diff[j] = u[j] - mu[j];
+            }
+            cache.l_inv.apply(&diff, &mut white);
+            let d2: f64 = white.iter().map(|x| x * x).sum();
+            logw[m] = self.spec.weights[m].max(1e-300).ln() - 0.5 * d2;
+            best = best.max(logw[m]);
+        }
+        let mut total = 0.0;
+        for lw in logw.iter_mut() {
+            *lw = (*lw - best).exp();
+            total += *lw;
+        }
+        // score = −C⁻¹ (u − Σ w̃ μ_m)  (since C is shared across modes)
+        let mut mean_mu = vec![0.0; du];
+        for m in 0..m_count {
+            let w = logw[m] / total;
+            let mu = &cache.mus[m * du..(m + 1) * du];
+            for j in 0..du {
+                mean_mu[j] += w * mu[j];
+            }
+        }
+        for j in 0..du {
+            diff[j] = u[j] - mean_mu[j];
+        }
+        cache.c_inv.apply(&diff, out);
+        for o in out.iter_mut() {
+            *o = -*o;
+        }
+        if let Some(r) = resp.as_deref_mut() {
+            r.clear();
+            r.extend(logw.iter().map(|w| w / total));
+        }
+    }
+
+    /// Trace of the score Jacobian `tr ∇_u s(u,t)` — exact, for NLL.
+    pub fn score_jacobian_trace(&self, t: f64, u: &[f64]) -> f64 {
+        let cache = self.cache_for(t);
+        let du = u.len();
+        let m_count = self.spec.n_modes();
+        let mut resp = Vec::with_capacity(m_count);
+        let mut s = vec![0.0; du];
+        self.score_into(t, u, &mut s, Some(&mut resp));
+        // s_m = −C⁻¹(u − μ_m); tr ∇s = −tr C⁻¹ + Σ w̃‖s_m‖² − ‖s‖².
+        let mut diff = vec![0.0; du];
+        let mut sm = vec![0.0; du];
+        let mut acc = -cache.c_inv.trace(du);
+        for m in 0..m_count {
+            let mu = &cache.mus[m * du..(m + 1) * du];
+            for j in 0..du {
+                diff[j] = u[j] - mu[j];
+            }
+            cache.c_inv.apply(&diff, &mut sm);
+            let n2: f64 = sm.iter().map(|x| x * x).sum();
+            acc += resp[m] * n2;
+        }
+        acc -= s.iter().map(|x| x * x).sum::<f64>();
+        acc
+    }
+
+    /// Exact log-density of the diffused mixture at time t (NLL tests).
+    pub fn logp(&self, t: f64, u: &[f64]) -> f64 {
+        let cache = self.cache_for(t);
+        let du = u.len();
+        let psi0 = self.proc.psi(t, 0.0);
+        let c = psi0
+            .matmul(&self.proc.lift_cov(self.spec.var))
+            .matmul(&psi0.transpose())
+            .add(&self.proc.sigma(t));
+        let logdet = c.logdet(du);
+        let log_norm = -0.5 * (du as f64 * (2.0 * std::f64::consts::PI).ln() + logdet);
+        let mut diff = vec![0.0; du];
+        let mut white = vec![0.0; du];
+        let mut best = f64::NEG_INFINITY;
+        let logs: Vec<f64> = (0..self.spec.n_modes())
+            .map(|m| {
+                let mu = &cache.mus[m * du..(m + 1) * du];
+                for j in 0..du {
+                    diff[j] = u[j] - mu[j];
+                }
+                cache.l_inv.apply(&diff, &mut white);
+                let d2: f64 = white.iter().map(|x| x * x).sum();
+                let l = self.spec.weights[m].max(1e-300).ln() + log_norm - 0.5 * d2;
+                best = best.max(l);
+                l
+            })
+            .collect();
+        best + logs.iter().map(|l| (l - best).exp()).sum::<f64>().ln()
+    }
+}
+
+impl ScoreModel for GmmOracle {
+    fn dim_u(&self) -> usize {
+        self.proc.dim_u()
+    }
+
+    fn kt_kind(&self) -> KtKind {
+        self.kt
+    }
+
+    fn eps_batch(&self, t: f64, us: &[f64], out: &mut [f64]) {
+        let du = self.proc.dim_u();
+        assert_eq!(us.len() % du, 0);
+        let n = us.len() / du;
+        self.calls.fetch_add(n as u64, std::sync::atomic::Ordering::Relaxed);
+        let cache = self.cache_for(t);
+        let mut score = vec![0.0; du];
+        for (row_in, row_out) in us.chunks_exact(du).zip(out.chunks_exact_mut(du)) {
+            self.score_into(t, row_in, &mut score, None);
+            cache.neg_kt_t.apply(&score, row_out);
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("oracle({}/{}, K={})", self.proc.name(), self.spec.name, self.kt.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::presets;
+    use crate::diffusion::{Cld, Vpsde};
+    use crate::math::rng::Rng;
+
+    fn fd_score(o: &GmmOracle, t: f64, u: &[f64]) -> Vec<f64> {
+        // Finite-difference ∇log p_t via the closed-form logp.
+        let h = 1e-5;
+        (0..u.len())
+            .map(|j| {
+                let mut up = u.to_vec();
+                let mut dn = u.to_vec();
+                up[j] += h;
+                dn[j] -= h;
+                (o.logp(t, &up) - o.logp(t, &dn)) / (2.0 * h)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn score_matches_logp_gradient_vpsde() {
+        let proc = Arc::new(Vpsde::standard(2));
+        let o = GmmOracle::new(proc, presets::gmm2d(), KtKind::R);
+        let mut rng = Rng::seed_from(10);
+        for &t in &[0.05, 0.3, 0.9] {
+            for _ in 0..5 {
+                let u: Vec<f64> = (0..2).map(|_| 3.0 * rng.normal()).collect();
+                let s = o.score(t, &u);
+                let fd = fd_score(&o, t, &u);
+                crate::math::assert_allclose(&s, &fd, 1e-4, 1e-6, "vpsde score vs FD");
+            }
+        }
+    }
+
+    #[test]
+    fn score_matches_logp_gradient_cld() {
+        let proc = Arc::new(Cld::standard(2));
+        let o = GmmOracle::new(proc, presets::gmm2d(), KtKind::R);
+        let mut rng = Rng::seed_from(11);
+        for &t in &[0.05, 0.5] {
+            for _ in 0..5 {
+                let u: Vec<f64> = (0..4).map(|_| 2.0 * rng.normal()).collect();
+                let s = o.score(t, &u);
+                let fd = fd_score(&o, t, &u);
+                crate::math::assert_allclose(&s, &fd, 1e-4, 1e-5, "cld score vs FD");
+            }
+        }
+    }
+
+    #[test]
+    fn jacobian_trace_matches_fd() {
+        let proc = Arc::new(Vpsde::standard(2));
+        let o = GmmOracle::new(proc, presets::gmm2d(), KtKind::R);
+        let mut rng = Rng::seed_from(12);
+        for &t in &[0.1, 0.6] {
+            let u: Vec<f64> = (0..2).map(|_| 3.0 * rng.normal()).collect();
+            let h = 1e-5;
+            let mut tr = 0.0;
+            for j in 0..2 {
+                let mut up = u.clone();
+                let mut dn = u.clone();
+                up[j] += h;
+                dn[j] -= h;
+                tr += (o.score(t, &up)[j] - o.score(t, &dn)[j]) / (2.0 * h);
+            }
+            let got = o.score_jacobian_trace(t, &u);
+            assert!(
+                (got - tr).abs() < 1e-3 * (1.0 + tr.abs()),
+                "t={t}: {got} vs FD {tr}"
+            );
+        }
+    }
+
+    #[test]
+    fn eps_is_neg_ktt_score() {
+        let proc = Arc::new(Cld::standard(2));
+        let o = GmmOracle::new(proc.clone(), presets::gmm2d(), KtKind::L);
+        let t = 0.4;
+        let u = vec![0.5, -0.2, 0.1, 0.3];
+        let eps = o.eps(t, &u);
+        let s = o.score(t, &u);
+        let manual = proc.kt(KtKind::L, t).transpose().scale(-1.0).apply_vec(&s);
+        crate::math::assert_allclose(&eps, &manual, 1e-12, 1e-12, "eps conversion");
+    }
+
+    #[test]
+    fn single_dirac_score_is_linear() {
+        // One Dirac mode: score = −Σ_t⁻¹(u − Ψμ) exactly (Prop 1 setup).
+        let proc = Arc::new(Vpsde::standard(1));
+        let spec = GmmSpec {
+            name: "dirac".into(),
+            d: 1,
+            weights: vec![1.0],
+            means: vec![vec![1.5]],
+            var: 0.0,
+        };
+        let o = GmmOracle::new(proc.clone(), spec, KtKind::R);
+        let t = 0.5;
+        let alpha = proc.alpha(t);
+        for &u in &[-1.0, 0.0, 2.0] {
+            let s = o.score(t, &[u])[0];
+            let expect = -(u - alpha.sqrt() * 1.5) / (1.0 - alpha);
+            assert!((s - expect).abs() < 1e-10, "{s} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let proc = Arc::new(Cld::standard(2));
+        let o = GmmOracle::new(proc, presets::gmm2d(), KtKind::R);
+        let mut rng = Rng::seed_from(13);
+        let us: Vec<f64> = (0..12).map(|_| rng.normal()).collect(); // 3 states of dim 4
+        let mut out = vec![0.0; 12];
+        o.eps_batch(0.3, &us, &mut out);
+        for i in 0..3 {
+            let single = o.eps(0.3, &us[i * 4..(i + 1) * 4]);
+            crate::math::assert_allclose(&out[i * 4..(i + 1) * 4], &single, 1e-13, 1e-13, "batch");
+        }
+    }
+}

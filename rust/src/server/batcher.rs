@@ -1,0 +1,174 @@
+//! Dynamic batcher: coalesce same-key requests into one sampler run.
+//!
+//! Policy (vLLM-flavoured, adapted to one-shot generation requests):
+//! a batch closes when (a) the accumulated sample count reaches
+//! `max_batch`, or (b) `max_wait` has elapsed since the *oldest* queued
+//! request, or (c) the queue is drained and `flush()` is called.
+//! FIFO per key; requests never split across keys.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::server::request::Envelope;
+
+pub struct BatcherConfig {
+    /// Maximum total samples per sampler invocation.
+    pub max_batch: usize,
+    /// Deadline from the oldest waiting request.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 4096, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Per-key FIFO queue with deadline-or-size batch cuts.
+pub struct KeyQueue {
+    pub cfg: BatcherConfig,
+    queue: VecDeque<Envelope>,
+    queued_samples: usize,
+}
+
+impl KeyQueue {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        KeyQueue { cfg, queue: VecDeque::new(), queued_samples: 0 }
+    }
+
+    pub fn push(&mut self, env: Envelope) {
+        self.queued_samples += env.req.n;
+        self.queue.push_back(env);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Would a cut fire now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        self.queued_samples >= self.cfg.max_batch
+            || now.duration_since(self.queue[0].enqueued) >= self.cfg.max_wait
+    }
+
+    /// Cut a batch: FIFO prefix with total samples ≤ max_batch (always at
+    /// least one request, even an oversized one — it runs alone).
+    pub fn cut(&mut self) -> Vec<Envelope> {
+        let mut out = Vec::new();
+        let mut total = 0usize;
+        while let Some(front) = self.queue.front() {
+            let n = front.req.n;
+            if !out.is_empty() && total + n > self.cfg.max_batch {
+                break;
+            }
+            total += n;
+            self.queued_samples -= n;
+            out.push(self.queue.pop_front().unwrap());
+            if total >= self.cfg.max_batch {
+                break;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::request::{GenRequest, PlanKey};
+    use std::sync::mpsc::channel;
+
+    fn env(id: u64, n: usize) -> Envelope {
+        let (tx, _rx) = channel();
+        Envelope {
+            req: GenRequest { id, n, key: PlanKey::gddim("vpsde", "gmm2d", 10, 2), seed: id },
+            reply: tx,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn cuts_fifo_prefix_up_to_max_batch() {
+        let mut q = KeyQueue::new(BatcherConfig { max_batch: 100, max_wait: Duration::ZERO });
+        for i in 0..5 {
+            q.push(env(i, 40));
+        }
+        // 40 + 40 = 80; adding the third (120) would exceed 100 → cut at 2.
+        let batch = q.cut();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn cut_semantics_exact() {
+        let mut q = KeyQueue::new(BatcherConfig { max_batch: 100, max_wait: Duration::ZERO });
+        for i in 0..5 {
+            q.push(env(i, 40));
+        }
+        let batch = q.cut();
+        let total: usize = batch.iter().map(|e| e.req.n).sum();
+        assert!(total <= 120 && !batch.is_empty());
+        // FIFO: ids must be increasing from 0.
+        for (k, e) in batch.iter().enumerate() {
+            assert_eq!(e.req.id, k as u64);
+        }
+    }
+
+    #[test]
+    fn oversized_request_runs_alone() {
+        let mut q = KeyQueue::new(BatcherConfig { max_batch: 10, max_wait: Duration::ZERO });
+        q.push(env(0, 500));
+        q.push(env(1, 5));
+        let batch = q.cut();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].req.id, 0);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn ready_respects_deadline() {
+        let mut q = KeyQueue::new(BatcherConfig {
+            max_batch: 1000,
+            max_wait: Duration::from_millis(50),
+        });
+        q.push(env(0, 1));
+        let now = Instant::now();
+        assert!(!q.ready(now));
+        assert!(q.ready(now + Duration::from_millis(60)));
+    }
+
+    #[test]
+    fn ready_respects_size() {
+        let mut q = KeyQueue::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(100),
+        });
+        q.push(env(0, 4));
+        assert!(!q.ready(Instant::now()));
+        q.push(env(1, 4));
+        assert!(q.ready(Instant::now()));
+    }
+
+    #[test]
+    fn no_request_lost() {
+        let mut q = KeyQueue::new(BatcherConfig { max_batch: 64, max_wait: Duration::ZERO });
+        for i in 0..23 {
+            q.push(env(i, 7));
+        }
+        let mut seen = Vec::new();
+        while !q.is_empty() {
+            for e in q.cut() {
+                seen.push(e.req.id);
+            }
+        }
+        let expect: Vec<u64> = (0..23).collect();
+        assert_eq!(seen, expect, "every request exactly once, in order");
+    }
+}

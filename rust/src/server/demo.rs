@@ -1,0 +1,54 @@
+//! `gddim serve` — drive the sampling service with a synthetic workload
+//! and print the metrics report (also used by `examples/serve_demo.rs`).
+
+use std::time::Duration;
+
+use crate::server::batcher::BatcherConfig;
+use crate::server::request::{GenRequest, PlanKey};
+use crate::server::router::{oracle_factory, Router};
+use crate::util::cli::Args;
+use crate::workload::{ClosedLoop, WorkloadSpec};
+
+pub fn run(args: &Args) {
+    let workers = args.get_usize("workers", 4);
+    let n_requests = args.get_usize("requests", 64);
+    let samples = args.get_usize("samples", 128);
+    let nfe = args.get_usize("nfe", 20);
+    let rate = args.get_f64("rate", 200.0);
+    let max_wait_ms = args.get_u64("max-wait-ms", 5);
+
+    let router = Router::new(
+        workers,
+        BatcherConfig {
+            max_batch: args.get_usize("max-batch", 4096),
+            max_wait: Duration::from_millis(max_wait_ms),
+        },
+        oracle_factory(),
+    );
+
+    let spec = WorkloadSpec {
+        n_requests,
+        samples_per_request: samples,
+        rate_per_sec: rate,
+        keys: vec![
+            PlanKey::gddim("vpsde", "gmm2d", nfe, 2),
+            PlanKey::gddim("cld", "gmm2d", nfe, 2),
+        ],
+        seed: args.get_u64("seed", 0),
+    };
+    println!(
+        "serving {} requests × {} samples (poisson {:.0} req/s, {} workers, NFE {})…",
+        n_requests, samples, rate, workers, nfe
+    );
+    let gen = ClosedLoop::new(spec);
+    let responses = gen.drive(&router, |id, key, n, seed| GenRequest {
+        id,
+        n,
+        key: key.clone(),
+        seed,
+    });
+    println!("{}", router.metrics().report());
+    let ok = responses.iter().filter(|r| !r.xs.is_empty()).count();
+    println!("responses with data: {ok}/{n_requests}");
+    router.shutdown();
+}

@@ -1,0 +1,116 @@
+//! Server observability: per-request latency, batch occupancy, NFE and
+//! throughput counters (lock-guarded; the hot path touches them once per
+//! batch, not per sample).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::math::stats::Summary;
+
+#[derive(Default)]
+struct Inner {
+    latencies: Vec<f64>,
+    batch_sizes: Vec<f64>,
+    samples_done: u64,
+    requests_done: u64,
+    batches_done: u64,
+    nfe_total: u64,
+    started: Option<Instant>,
+}
+
+#[derive(Default)]
+pub struct ServerMetrics {
+    inner: Mutex<Inner>,
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start_clock(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if g.started.is_none() {
+            g.started = Some(Instant::now());
+        }
+    }
+
+    pub fn record_batch(&self, n_requests: usize, n_samples: usize, nfe: usize, latencies: &[f64]) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies.extend_from_slice(latencies);
+        g.batch_sizes.push(n_requests as f64);
+        g.samples_done += n_samples as u64;
+        g.requests_done += n_requests as u64;
+        g.batches_done += 1;
+        g.nfe_total += nfe as u64;
+    }
+
+    pub fn report(&self) -> MetricsReport {
+        let g = self.inner.lock().unwrap();
+        let elapsed = g.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        MetricsReport {
+            latency: if g.latencies.is_empty() { None } else { Some(Summary::from(&g.latencies)) },
+            mean_batch_requests: if g.batch_sizes.is_empty() {
+                0.0
+            } else {
+                g.batch_sizes.iter().sum::<f64>() / g.batch_sizes.len() as f64
+            },
+            requests_done: g.requests_done,
+            samples_done: g.samples_done,
+            batches_done: g.batches_done,
+            nfe_total: g.nfe_total,
+            samples_per_sec: if elapsed > 0.0 { g.samples_done as f64 / elapsed } else { 0.0 },
+            elapsed,
+        }
+    }
+}
+
+pub struct MetricsReport {
+    pub latency: Option<Summary>,
+    pub mean_batch_requests: f64,
+    pub requests_done: u64,
+    pub samples_done: u64,
+    pub batches_done: u64,
+    pub nfe_total: u64,
+    pub samples_per_sec: f64,
+    pub elapsed: f64,
+}
+
+impl std::fmt::Display for MetricsReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "requests={} samples={} batches={} mean-batch={:.1} req NFE-total={}",
+            self.requests_done,
+            self.samples_done,
+            self.batches_done,
+            self.mean_batch_requests,
+            self.nfe_total
+        )?;
+        writeln!(f, "throughput={:.0} samples/s over {:.2}s", self.samples_per_sec, self.elapsed)?;
+        if let Some(l) = &self.latency {
+            write!(f, "latency(s): {l}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = ServerMetrics::new();
+        m.start_clock();
+        m.record_batch(3, 300, 50, &[0.1, 0.2, 0.3]);
+        m.record_batch(1, 100, 50, &[0.4]);
+        let r = m.report();
+        assert_eq!(r.requests_done, 4);
+        assert_eq!(r.samples_done, 400);
+        assert_eq!(r.batches_done, 2);
+        assert_eq!(r.nfe_total, 100);
+        assert_eq!(r.latency.unwrap().n, 4);
+        assert!((r.mean_batch_requests - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,21 @@
+//! The batched sampling service — the L3 "serving" coordinator.
+//!
+//! Clients submit [`request::GenRequest`]s; the [`router::Router`] groups
+//! them by *plan key* (process, dataset, sampler config, NFE), the
+//! [`batcher`] coalesces compatible requests into one batched sampler run
+//! (score-model batching is where all the throughput is), worker threads
+//! execute runs, and per-request latency/throughput metrics come back
+//! through [`metrics::ServerMetrics`].
+//!
+//! Thread-based (std::thread + mpsc): the offline build has no tokio, and
+//! the workload (CPU-bound numeric batches, few queues) fits the
+//! one-thread-per-worker model exactly.
+
+pub mod request;
+pub mod batcher;
+pub mod router;
+pub mod metrics;
+pub mod demo;
+
+pub use request::{GenRequest, GenResponse, PlanKey};
+pub use router::Router;

@@ -1,0 +1,80 @@
+//! Request/response types for the sampling service.
+
+use std::sync::mpsc::Sender;
+
+use crate::diffusion::process::KtKind;
+
+/// What a client asks for.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    /// Unique id assigned by the client (echoed back).
+    pub id: u64,
+    /// Number of samples wanted.
+    pub n: usize,
+    /// Sampling configuration (requests with equal keys are batchable).
+    pub key: PlanKey,
+    /// RNG seed for this request's share of the batch.
+    pub seed: u64,
+}
+
+/// The batchable part of a request: requests with identical keys run in
+/// one sampler invocation.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub process: String,
+    pub dataset: String,
+    pub sampler: SamplerKind,
+    pub nfe: usize,
+    pub q: usize,
+    pub kt: KtKind,
+    /// λ × 1000 (integerized so the key is hashable).
+    pub lambda_milli: u32,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SamplerKind {
+    GddimDet,
+    GddimSde,
+    Em,
+    Ancestral,
+}
+
+impl PlanKey {
+    pub fn gddim(process: &str, dataset: &str, nfe: usize, q: usize) -> PlanKey {
+        PlanKey {
+            process: process.to_string(),
+            dataset: dataset.to_string(),
+            sampler: SamplerKind::GddimDet,
+            nfe,
+            q,
+            kt: KtKind::R,
+            lambda_milli: 0,
+        }
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda_milli as f64 / 1000.0
+    }
+}
+
+/// What the client gets back.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    /// Generated samples, row-major n × dim_x.
+    pub xs: Vec<f64>,
+    pub dim_x: usize,
+    /// NFE consumed by the batch this request rode in.
+    pub nfe: usize,
+    /// Queueing + execution latency (seconds).
+    pub latency: f64,
+    /// How many requests shared the batch (observability).
+    pub batch_size: usize,
+}
+
+/// Internal envelope: request + reply channel + enqueue timestamp.
+pub struct Envelope {
+    pub req: GenRequest,
+    pub reply: Sender<GenResponse>,
+    pub enqueued: std::time::Instant,
+}

@@ -1,0 +1,352 @@
+//! Request router + worker pool.
+//!
+//! `submit()` enqueues into the per-key [`KeyQueue`]; worker threads scan
+//! for ready queues (size or deadline cut), execute one batched sampler
+//! run per cut, and fan results back out to the per-request reply
+//! channels. Stage-I plans and score models are built once per key and
+//! cached ([`Prepared`]), so steady-state request cost is pure Stage-II.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coeffs::plan::{PlanConfig, SamplerPlan};
+use crate::data::presets;
+use crate::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
+use crate::math::rng::Rng;
+use crate::samplers;
+use crate::score::model::ScoreModel;
+use crate::score::oracle::GmmOracle;
+use crate::server::batcher::{BatcherConfig, KeyQueue};
+use crate::server::metrics::ServerMetrics;
+use crate::server::request::{Envelope, GenRequest, GenResponse, PlanKey, SamplerKind};
+
+/// Everything needed to execute one key's batches.
+pub struct Prepared {
+    pub proc: Arc<dyn Process>,
+    pub model: Arc<dyn ScoreModel>,
+    pub plan: Option<Arc<SamplerPlan>>,
+    pub grid: TimeGrid,
+    pub dim_x: usize,
+}
+
+/// Builds [`Prepared`] state for a key. The default factory uses the
+/// exact-score oracle; the serving demo swaps in PJRT-backed nets.
+pub type PreparedFactory = dyn Fn(&PlanKey) -> Arc<Prepared> + Send + Sync;
+
+/// Default factory: oracle scores on the named preset dataset.
+pub fn oracle_factory() -> Box<PreparedFactory> {
+    Box::new(|key: &PlanKey| {
+        let spec = presets::by_name(&key.dataset).expect("unknown dataset");
+        let proc: Arc<dyn Process> = match key.process.as_str() {
+            "vpsde" => Arc::new(Vpsde::standard(spec.d)),
+            "cld" => Arc::new(Cld::standard(spec.d)),
+            "bdm" => {
+                let side = (spec.d as f64).sqrt() as usize;
+                Arc::new(Bdm::standard(side, side))
+            }
+            other => panic!("unknown process {other}"),
+        };
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), key.nfe);
+        let model: Arc<dyn ScoreModel> =
+            Arc::new(GmmOracle::new(proc.clone(), spec.clone(), key.kt));
+        let plan = match key.sampler {
+            SamplerKind::GddimDet => Some(Arc::new(SamplerPlan::build(
+                proc.as_ref(),
+                &grid,
+                &PlanConfig { q: key.q, kt: key.kt, ..PlanConfig::default() },
+            ))),
+            SamplerKind::GddimSde => Some(Arc::new(SamplerPlan::build(
+                proc.as_ref(),
+                &grid,
+                &PlanConfig::stochastic(key.lambda().max(0.1)),
+            ))),
+            _ => None,
+        };
+        Arc::new(Prepared { dim_x: proc.dim_x(), proc, model, plan, grid })
+    })
+}
+
+struct Shared {
+    queues: Mutex<HashMap<PlanKey, KeyQueue>>,
+    cv: Condvar,
+    stop: AtomicBool,
+    prepared: Mutex<HashMap<PlanKey, Arc<Prepared>>>,
+    factory: Box<PreparedFactory>,
+    pub metrics: ServerMetrics,
+    batcher_max_batch: usize,
+    batcher_max_wait: Duration,
+}
+
+/// The sampling service.
+pub struct Router {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Router {
+    pub fn new(n_workers: usize, cfg: BatcherConfig, factory: Box<PreparedFactory>) -> Router {
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            prepared: Mutex::new(HashMap::new()),
+            factory,
+            metrics: ServerMetrics::new(),
+            batcher_max_batch: cfg.max_batch,
+            batcher_max_wait: cfg.max_wait,
+        });
+        shared.metrics.start_clock();
+        let workers = (0..n_workers.max(1))
+            .map(|w| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("gddim-worker-{w}"))
+                    .spawn(move || worker_loop(sh))
+                    .unwrap()
+            })
+            .collect();
+        Router { shared, workers }
+    }
+
+    /// Enqueue a request; the receiver yields exactly one response.
+    pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
+        let (tx, rx) = channel();
+        let env = Envelope { req, reply: tx, enqueued: Instant::now() };
+        {
+            let mut qs = self.shared.queues.lock().unwrap();
+            qs.entry(env.req.key.clone())
+                .or_insert_with(|| {
+                    KeyQueue::new(BatcherConfig {
+                        max_batch: self.shared.batcher_max_batch,
+                        max_wait: self.shared.batcher_max_wait,
+                    })
+                })
+                .push(env);
+        }
+        self.shared.cv.notify_one();
+        rx
+    }
+
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.shared.metrics
+    }
+
+    /// Graceful shutdown: drain queues, stop workers.
+    pub fn shutdown(mut self) {
+        // Wait for queues to drain.
+        loop {
+            let empty = {
+                let qs = self.shared.queues.lock().unwrap();
+                qs.values().all(|q| q.is_empty())
+            };
+            if empty {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        // Find (or wait for) a ready queue.
+        let batch = {
+            let mut qs = sh.queues.lock().unwrap();
+            loop {
+                if sh.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let now = Instant::now();
+                let ready_key = qs
+                    .iter()
+                    .filter(|(_, q)| q.ready(now))
+                    .map(|(k, _)| k.clone())
+                    .next();
+                if let Some(key) = ready_key {
+                    break qs.get_mut(&key).unwrap().cut();
+                }
+                // Sleep briefly (deadline granularity) or until notified.
+                let (guard, _timeout) =
+                    sh.cv.wait_timeout(qs, Duration::from_millis(1)).unwrap();
+                qs = guard;
+            }
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        execute_batch(&sh, batch);
+    }
+}
+
+fn prepared_for(sh: &Shared, key: &PlanKey) -> Arc<Prepared> {
+    if let Some(p) = sh.prepared.lock().unwrap().get(key) {
+        return p.clone();
+    }
+    // Build outside the lock (plan construction can take milliseconds).
+    let built = (sh.factory)(key);
+    sh.prepared.lock().unwrap().entry(key.clone()).or_insert(built).clone()
+}
+
+fn execute_batch(sh: &Shared, batch: Vec<Envelope>) {
+    let key = batch[0].req.key.clone();
+    let prep = prepared_for(sh, &key);
+    let total_n: usize = batch.iter().map(|e| e.req.n).sum();
+    let mut rng = Rng::seed_from(batch.iter().fold(0xBA7C4 ^ total_n as u64, |acc, e| {
+        acc.wrapping_mul(0x100000001B3).wrapping_add(e.req.seed)
+    }));
+
+    let out = match key.sampler {
+        SamplerKind::GddimDet => samplers::gddim::sample_deterministic(
+            prep.proc.as_ref(),
+            prep.plan.as_ref().unwrap(),
+            prep.model.as_ref(),
+            total_n,
+            &mut rng,
+            false,
+        ),
+        SamplerKind::GddimSde => samplers::gddim::sample_stochastic(
+            prep.proc.as_ref(),
+            prep.plan.as_ref().unwrap(),
+            prep.model.as_ref(),
+            total_n,
+            &mut rng,
+            false,
+        ),
+        SamplerKind::Em => samplers::em::sample_em(
+            prep.proc.as_ref(),
+            prep.model.as_ref(),
+            &prep.grid,
+            key.lambda(),
+            total_n,
+            &mut rng,
+            false,
+        ),
+        SamplerKind::Ancestral => samplers::ancestral::sample_ancestral(
+            prep.proc.as_ref(),
+            prep.model.as_ref(),
+            &prep.grid,
+            total_n,
+            &mut rng,
+        ),
+    };
+
+    // Record metrics *before* fanning out responses: a client that has
+    // received its response must observe it in the counters.
+    let now = Instant::now();
+    let n_requests = batch.len();
+    let latencies: Vec<f64> = batch
+        .iter()
+        .map(|env| now.duration_since(env.enqueued).as_secs_f64())
+        .collect();
+    sh.metrics.record_batch(n_requests, total_n, out.nfe, &latencies);
+
+    // Fan out per-request slices.
+    let dim_x = prep.dim_x;
+    let mut offset = 0usize;
+    for (env, latency) in batch.into_iter().zip(latencies) {
+        let n = env.req.n;
+        let xs = out.xs[offset * dim_x..(offset + n) * dim_x].to_vec();
+        offset += n;
+        let _ = env.reply.send(GenResponse {
+            id: env.req.id,
+            xs,
+            dim_x,
+            nfe: out.nfe,
+            latency,
+            batch_size: n_requests,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key() -> PlanKey {
+        PlanKey::gddim("vpsde", "gmm2d", 10, 2)
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let router = Router::new(2, BatcherConfig::default(), oracle_factory());
+        let rx = router.submit(GenRequest { id: 7, n: 32, key: key(), seed: 1 });
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.xs.len(), 32 * 2);
+        assert_eq!(resp.nfe, 10);
+        router.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_all_served_exactly_once() {
+        let router = Router::new(3, BatcherConfig::default(), oracle_factory());
+        let mut rxs = Vec::new();
+        for id in 0..24u64 {
+            rxs.push((id, router.submit(GenRequest { id, n: 16, key: key(), seed: id })));
+        }
+        for (id, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.xs.len(), 16 * 2);
+        }
+        let report = router.metrics().report();
+        assert_eq!(report.requests_done, 24);
+        assert_eq!(report.samples_done, 24 * 16);
+        router.shutdown();
+    }
+
+    #[test]
+    fn batching_actually_happens() {
+        // Long deadline + many small same-key requests → shared batches.
+        let router = Router::new(
+            1,
+            BatcherConfig { max_batch: 1024, max_wait: Duration::from_millis(30) },
+            oracle_factory(),
+        );
+        let mut rxs = Vec::new();
+        for id in 0..16u64 {
+            rxs.push(router.submit(GenRequest { id, n: 8, key: key(), seed: id }));
+        }
+        let mut max_batch = 0usize;
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            max_batch = max_batch.max(resp.batch_size);
+        }
+        assert!(max_batch > 1, "expected coalesced batches, got max {max_batch}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn different_keys_do_not_mix() {
+        let router = Router::new(2, BatcherConfig::default(), oracle_factory());
+        let k1 = PlanKey::gddim("vpsde", "gmm2d", 10, 1);
+        let k2 = PlanKey::gddim("cld", "gmm2d", 10, 2);
+        let r1 = router.submit(GenRequest { id: 1, n: 8, key: k1, seed: 0 });
+        let r2 = router.submit(GenRequest { id: 2, n: 8, key: k2, seed: 0 });
+        let a = r1.recv_timeout(Duration::from_secs(60)).unwrap();
+        let b = r2.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(a.dim_x, 2);
+        assert_eq!(b.dim_x, 2);
+        assert_eq!(a.batch_size, 1);
+        assert_eq!(b.batch_size, 1);
+        router.shutdown();
+    }
+}

@@ -1,0 +1,130 @@
+//! Benchmark timing harness (offline build: no criterion).
+//!
+//! `time_it` runs warmup + measured iterations and reports a
+//! [`crate::math::stats::Summary`] of per-iteration wall time; the
+//! table/figure benches use [`Table`] to print paper-shaped rows into
+//! both stdout and (optionally) a results file under `bench_results/`.
+
+use std::time::Instant;
+
+use crate::math::stats::Summary;
+
+/// Time `f` for `iters` measured iterations after `warmup` unmeasured
+/// ones; returns per-iteration seconds.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::from(&samples)
+}
+
+/// Adaptive variant: keeps iterating until `min_time` seconds of samples
+/// or `max_iters` reached (criterion-ish behaviour for microbenches).
+pub fn time_until<F: FnMut()>(min_time: f64, max_iters: usize, mut f: F) -> Summary {
+    // Warmup.
+    f();
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < min_time && samples.len() < max_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::from(&samples)
+}
+
+/// A printable results table with paper-style layout.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!("{c:>w$} | ", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let total: usize = widths.iter().map(|w| w + 3).sum::<usize>() + 1;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Print to stdout and append to `bench_results/<name>.txt`.
+    pub fn emit(&self, name: &str) {
+        let text = self.render();
+        println!("{text}");
+        let _ = std::fs::create_dir_all("bench_results");
+        let _ = std::fs::write(format!("bench_results/{name}.txt"), &text);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_counts_iters() {
+        let mut n = 0;
+        let s = time_it(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut t = Table::new("Tab X", &["K_t", "20", "50"]);
+        t.row(vec!["L_t".into(), "368".into(), "3.31".into()]);
+        t.row(vec!["R_t".into(), "3.90".into(), "2.26".into()]);
+        let r = t.render();
+        assert!(r.contains("Tab X"));
+        assert!(r.contains("L_t"));
+        assert!(r.contains("2.26"));
+        assert_eq!(r.matches('\n').count() >= 5, true);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,7 @@
+//! Non-numerical utilities: JSON (for the artifact manifest and dataset
+//! configs shared with the python layer), a tiny CLI argument parser, and
+//! the benchmark timing harness (the offline build has no criterion).
+
+pub mod json;
+pub mod cli;
+pub mod bench;

@@ -1,0 +1,95 @@
+//! Workload generation for the serving benches: Poisson arrivals over a
+//! mix of plan keys, driven open- or closed-loop against a [`Router`].
+
+use std::time::{Duration, Instant};
+
+use crate::math::rng::Rng;
+use crate::server::request::{GenRequest, GenResponse, PlanKey};
+use crate::server::router::Router;
+
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub n_requests: usize,
+    pub samples_per_request: usize,
+    /// Poisson arrival rate (requests/second). `f64::INFINITY` = burst.
+    pub rate_per_sec: f64,
+    /// Keys are drawn round-robin.
+    pub keys: Vec<PlanKey>,
+    pub seed: u64,
+}
+
+/// Drives a workload and collects all responses (closed loop at the end:
+/// every request is awaited, arrival times follow the Poisson clock).
+pub struct ClosedLoop {
+    pub spec: WorkloadSpec,
+}
+
+impl ClosedLoop {
+    pub fn new(spec: WorkloadSpec) -> Self {
+        ClosedLoop { spec }
+    }
+
+    pub fn drive(
+        &self,
+        router: &Router,
+        make: impl Fn(u64, &PlanKey, usize, u64) -> GenRequest,
+    ) -> Vec<GenResponse> {
+        let mut rng = Rng::seed_from(self.spec.seed);
+        let start = Instant::now();
+        let mut next_arrival = 0.0f64;
+        let mut rxs = Vec::with_capacity(self.spec.n_requests);
+        for id in 0..self.spec.n_requests as u64 {
+            if self.spec.rate_per_sec.is_finite() {
+                next_arrival += rng.exponential(self.spec.rate_per_sec);
+                let target = Duration::from_secs_f64(next_arrival);
+                let elapsed = start.elapsed();
+                if target > elapsed {
+                    std::thread::sleep(target - elapsed);
+                }
+            }
+            let key = &self.spec.keys[id as usize % self.spec.keys.len()];
+            let req = make(id, key, self.spec.samples_per_request, id);
+            rxs.push(router.submit(req));
+        }
+        rxs.into_iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(300)).expect("response"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::batcher::BatcherConfig;
+    use crate::server::router::oracle_factory;
+
+    #[test]
+    fn burst_workload_completes() {
+        let router = Router::new(2, BatcherConfig::default(), oracle_factory());
+        let spec = WorkloadSpec {
+            n_requests: 10,
+            samples_per_request: 8,
+            rate_per_sec: f64::INFINITY,
+            keys: vec![PlanKey::gddim("vpsde", "gmm2d", 5, 1)],
+            seed: 3,
+        };
+        let out = ClosedLoop::new(spec).drive(&router, |id, key, n, seed| GenRequest {
+            id,
+            n,
+            key: key.clone(),
+            seed,
+        });
+        assert_eq!(out.len(), 10);
+        assert!(out.iter().all(|r| r.xs.len() == 8 * 2));
+        router.shutdown();
+    }
+
+    #[test]
+    fn poisson_interarrivals_have_expected_mean() {
+        let mut rng = Rng::seed_from(9);
+        let n = 50_000;
+        let rate = 40.0;
+        let mean: f64 = (0..n).map(|_| rng.exponential(rate)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.002, "mean={mean}");
+    }
+}

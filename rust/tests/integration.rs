@@ -1,0 +1,142 @@
+//! Cross-module integration tests (`cargo test --test integration`).
+//!
+//! The PJRT tests are gated on `artifacts/manifest.json` existing (built
+//! by `make artifacts`); everything else runs standalone.
+
+use std::sync::Arc;
+
+use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
+use gddim::data::presets;
+use gddim::diffusion::process::KtKind;
+use gddim::diffusion::{Cld, Process, TimeGrid, Vpsde};
+use gddim::math::rng::Rng;
+use gddim::metrics::frechet::frechet_to_spec;
+use gddim::runtime::{Manifest, NetScore};
+use gddim::score::model::ScoreModel;
+use gddim::score::oracle::GmmOracle;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Manifest::default_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Full-stack smoke without PJRT: plan → sample → metric, both processes.
+#[test]
+fn end_to_end_oracle_pipeline() {
+    for (proc, dataset) in [("vpsde", "gmm2d"), ("cld", "gmm2d")] {
+        let spec = presets::by_name(dataset).unwrap();
+        let p: Arc<dyn Process> = match proc {
+            "vpsde" => Arc::new(Vpsde::standard(spec.d)),
+            _ => Arc::new(Cld::standard(spec.d)),
+        };
+        let oracle = GmmOracle::new(p.clone(), spec.clone(), KtKind::R);
+        let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 30);
+        let plan = SamplerPlan::build(p.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+        let mut rng = Rng::seed_from(1);
+        let out = gddim::samplers::gddim::sample_deterministic(
+            p.as_ref(),
+            &plan,
+            &oracle,
+            1500,
+            &mut rng,
+            false,
+        );
+        let fd = frechet_to_spec(&out.xs, &spec);
+        assert!(fd < 0.5, "{proc}: FD {fd}");
+    }
+}
+
+/// Determinism across identical runs (same seed ⇒ identical samples).
+#[test]
+fn sampling_is_reproducible() {
+    let spec = presets::gmm2d();
+    let p = Arc::new(Cld::standard(spec.d));
+    let oracle = GmmOracle::new(p.clone(), spec, KtKind::R);
+    let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 10);
+    let plan = SamplerPlan::build(p.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+    let run = || {
+        let mut rng = Rng::seed_from(42);
+        gddim::samplers::gddim::sample_deterministic(p.as_ref(), &plan, &oracle, 64, &mut rng, false)
+            .xs
+    };
+    assert_eq!(run(), run());
+}
+
+/// PJRT: every exported model loads, compiles, and reproduces the
+/// jax-recorded probe row bit-near-exactly.
+#[test]
+fn pjrt_models_match_manifest_probes() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping (no artifacts; run `make artifacts`)");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    assert!(!manifest.models.is_empty());
+    let client = xla::PjRtClient::cpu().unwrap();
+    for entry in &manifest.models {
+        let net = NetScore::load(&client, entry).unwrap();
+        let err = net.probe_error().unwrap();
+        assert!(err < 1e-3, "{}: probe error {err}", entry.name);
+    }
+}
+
+/// PJRT: learned-score sampling produces usable samples (quality sanity,
+/// not paper-grade — nets are small and trained briefly at build time).
+#[test]
+fn pjrt_learned_score_sampling_works() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping (no artifacts)");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let Some(entry) = manifest.get("vpsde_gmm2d") else {
+        eprintln!("skipping (vpsde_gmm2d not exported)");
+        return;
+    };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let net = NetScore::load(&client, entry).unwrap();
+    let spec = presets::gmm2d();
+    let p = Arc::new(Vpsde::standard(spec.d));
+    let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 30);
+    let plan = SamplerPlan::build(p.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+    let mut rng = Rng::seed_from(3);
+    let out = gddim::samplers::gddim::sample_deterministic(
+        p.as_ref(),
+        &plan,
+        &net as &dyn ScoreModel,
+        512,
+        &mut rng,
+        false,
+    );
+    let fd = frechet_to_spec(&out.xs, &spec);
+    // Generous bound: small net, short training. The oracle scores ~0.02.
+    assert!(fd < 8.0, "learned-score FD suspiciously bad: {fd}");
+    let cov = gddim::metrics::coverage::coverage(&out.xs, &spec);
+    assert!(cov.missing <= 2, "learned net dropped {} modes", cov.missing);
+}
+
+/// The server serves PJRT-free oracle traffic correctly under load.
+#[test]
+fn server_under_mixed_load() {
+    use gddim::server::batcher::BatcherConfig;
+    use gddim::server::request::{GenRequest, PlanKey};
+    use gddim::server::router::{oracle_factory, Router};
+    let router = Router::new(4, BatcherConfig::default(), oracle_factory());
+    let keys = [
+        PlanKey::gddim("vpsde", "gmm2d", 10, 2),
+        PlanKey::gddim("cld", "gmm2d", 10, 2),
+        PlanKey::gddim("cld", "hard2d", 20, 1),
+    ];
+    let mut rxs = Vec::new();
+    for id in 0..30u64 {
+        let key = keys[id as usize % keys.len()].clone();
+        rxs.push((id, router.submit(GenRequest { id, n: 16, key, seed: id })));
+    }
+    for (id, rx) in rxs {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.xs.len(), 16 * resp.dim_x);
+        assert!(resp.xs.iter().all(|x| x.is_finite()));
+    }
+    router.shutdown();
+}
