@@ -1,0 +1,19 @@
+"""Test-session guards for offline / JAX-less runners.
+
+The kernel, model, and train/AOT suites all import JAX at module scope;
+on a runner without JAX (or with a broken CUDA/Pallas install) that is a
+collection *error*, not a skip. Ignore those files up front so CI reports
+a green "skipped" python job instead of a red import crash, and force the
+CPU platform so Pallas kernels run in interpret mode everywhere.
+"""
+
+import importlib.util
+import os
+
+# Deterministic, device-free CI: run JAX on CPU (Pallas falls back to
+# interpret mode there) unless the caller explicitly overrides it.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+collect_ignore_glob = []
+if importlib.util.find_spec("jax") is None:
+    collect_ignore_glob = ["test_*.py"]

@@ -3,14 +3,21 @@
 //! Reports batch occupancy, samples/s, and latency percentiles at several
 //! arrival rates, plus a batching on/off comparison.
 
+use std::sync::Arc;
 use std::time::Duration;
 
+use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
+use gddim::data::presets;
+use gddim::diffusion::process::KtKind;
+use gddim::diffusion::{Cld, Process, TimeGrid};
+use gddim::engine::{Engine, Job, SamplerSpec};
+use gddim::score::oracle::GmmOracle;
 use gddim::server::batcher::BatcherConfig;
 use gddim::server::request::{GenRequest, PlanKey};
 use gddim::server::router::{oracle_factory, Router};
 use gddim::util::bench::Table;
 use gddim::util::cli::Args;
-use gddim::workload::{ClosedLoop, WorkloadSpec};
+use gddim::workload::{engine_throughput, ClosedLoop, WorkloadSpec};
 
 fn run_once(rate: f64, max_wait_ms: u64, n_requests: usize, samples: usize) -> (f64, f64, f64, f64) {
     let router = Router::new(
@@ -60,4 +67,44 @@ fn main() {
         }
     }
     t.emit("serving");
+
+    engine_scaling(&args);
+}
+
+/// Engine worker-scaling sweep: one fixed batched job, increasing pool
+/// sizes. The headline number for the sharded engine — samples/s must
+/// grow from 1 worker to 4 on any multicore box.
+fn engine_scaling(args: &Args) {
+    let n = args.get_usize("engine-batch", 8192);
+    let nfe = args.get_usize("nfe", 20);
+    let spec = presets::gmm2d();
+    let proc = Arc::new(Cld::standard(spec.d));
+    let oracle = GmmOracle::new(proc.clone(), spec, KtKind::R);
+    let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), nfe);
+    let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+    let job = Job {
+        proc: proc.as_ref(),
+        model: &oracle,
+        sampler: SamplerSpec::GddimDet(&plan),
+        n,
+        seed: 11,
+    };
+    let mut t = Table::new(
+        "Engine scaling: sharded gDDIM job (CLD NFE=20), samples/s by worker count",
+        &["workers", "samples/s", "speedup vs 1"],
+    );
+    let mut base = 0.0f64;
+    for workers in [1usize, 2, 4, 8] {
+        let engine = Engine::new(workers);
+        let tput = engine_throughput(&engine, &job, 3);
+        if workers == 1 {
+            base = tput;
+        }
+        t.row(vec![
+            workers.to_string(),
+            format!("{tput:.0}"),
+            format!("{:.2}x", tput / base.max(1e-9)),
+        ]);
+    }
+    t.emit("serving_engine");
 }

@@ -1,0 +1,339 @@
+//! The sharded parallel sampling engine.
+//!
+//! Few-NFE sampling makes per-request work small enough that coordinator
+//! throughput — not the score model — becomes the serving bottleneck.
+//! This module turns one batched sampling job into data-parallel work:
+//!
+//! 1. **Shard**: the batch of `n` samples is split into *fixed-size*
+//!    shards. The shard layout depends only on `(n, shard_size)` — never
+//!    on the worker count — so the output is stable under any pool size.
+//! 2. **Seed**: every shard gets its own [`Rng`] stream, derived from the
+//!    job seed by index. Stream derivation is a pure function of
+//!    `(seed, shard_index)`, which makes the merged output bit-identical
+//!    for 1 worker and for N workers.
+//! 3. **Execute**: a `std::thread::scope` worker pool pulls shard indices
+//!    off an atomic counter (work stealing by construction — a slow shard
+//!    never blocks the others) and runs the configured Stage-II sampler
+//!    on its slice of the batch.
+//! 4. **Merge**: shard outputs are concatenated in shard order. NFE is
+//!    reported per shard (max across shards), matching the paper's
+//!    convention that a batched score call counts once.
+//!
+//! The engine holds no threads between jobs: scoped threads make the
+//! borrow story trivial (`&dyn Process`, `&SamplerPlan` etc. are shared
+//! by reference, no `Arc` churn) and a pool spin-up is ~µs next to a
+//! sampler run.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coeffs::plan::SamplerPlan;
+use crate::diffusion::process::Process;
+use crate::diffusion::schedule::TimeGrid;
+use crate::math::rng::Rng;
+use crate::samplers;
+use crate::samplers::common::SampleOutput;
+use crate::score::model::ScoreModel;
+
+/// Engine tuning knobs.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Worker threads used to execute shards (1 = run inline).
+    pub workers: usize,
+    /// Rows per shard. Fixed (not derived from the worker count) so that
+    /// the shard layout — and therefore the merged output — is identical
+    /// for every pool size. Smaller shards = better load balance, more
+    /// per-shard fixed cost (score-call batching shrinks with the shard).
+    pub shard_size: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { workers: 1, shard_size: 256 }
+    }
+}
+
+/// Which Stage-II sampler a [`Job`] runs on each shard.
+pub enum SamplerSpec<'a> {
+    /// Deterministic gDDIM (multistep predictor / PC) on a prebuilt plan.
+    GddimDet(&'a SamplerPlan),
+    /// Stochastic gDDIM (λ > 0) on a prebuilt plan.
+    GddimSde(&'a SamplerPlan),
+    /// Euler–Maruyama on the marginal-equivalent SDE (λ = 0: plain Euler).
+    Em { grid: &'a TimeGrid, lambda: f64 },
+    /// Generalized ancestral sampling.
+    Ancestral { grid: &'a TimeGrid },
+    /// 2nd-order Heun on the probability-flow ODE.
+    Heun { grid: &'a TimeGrid },
+    /// Symmetric splitting CLD sampler.
+    Sscs { grid: &'a TimeGrid },
+}
+
+/// One batched sampling job: everything a shard needs, by reference.
+pub struct Job<'a> {
+    pub proc: &'a dyn Process,
+    pub model: &'a dyn ScoreModel,
+    pub sampler: SamplerSpec<'a>,
+    /// Total samples to generate across all shards.
+    pub n: usize,
+    /// Base seed; shard `i` samples from stream `i` of this seed.
+    pub seed: u64,
+}
+
+/// The worker pool. Cheap to construct; holds no threads between jobs.
+pub struct Engine {
+    pub cfg: EngineConfig,
+}
+
+impl Engine {
+    /// An engine with `workers` threads and the default shard size.
+    pub fn new(workers: usize) -> Engine {
+        Engine::with_config(EngineConfig { workers, ..EngineConfig::default() })
+    }
+
+    pub fn with_config(cfg: EngineConfig) -> Engine {
+        Engine { cfg }
+    }
+
+    /// Derive the per-shard RNG streams for `(seed, n_shards)`. Pure
+    /// function of its inputs — the determinism contract of the engine.
+    fn shard_rngs(seed: u64, n_shards: usize) -> Vec<Rng> {
+        let mut root = Rng::seed_from(seed);
+        (0..n_shards).map(|i| root.fork(i as u64)).collect()
+    }
+
+    /// Run one job: shard, execute on the pool, merge deterministically.
+    pub fn run(&self, job: &Job<'_>) -> SampleOutput {
+        if job.n == 0 {
+            // An empty request is a valid (if silly) thing for a client to
+            // send; panicking here would take a dispatcher thread with it.
+            return SampleOutput { xs: Vec::new(), us: Vec::new(), nfe: 0, traj: None };
+        }
+        let shard_size = self.cfg.shard_size.max(1);
+        let n_shards = job.n.div_ceil(shard_size);
+        let rngs = Engine::shard_rngs(job.seed, n_shards);
+        let shard_n =
+            |i: usize| -> usize { shard_size.min(job.n - i * shard_size) };
+
+        let results: Vec<Mutex<Option<SampleOutput>>> =
+            (0..n_shards).map(|_| Mutex::new(None)).collect();
+        let workers = self.cfg.workers.clamp(1, n_shards);
+        if workers == 1 {
+            // Inline fast path: same shard walk, no thread setup.
+            for (i, rng) in rngs.iter().enumerate() {
+                *results[i].lock().unwrap() = Some(run_shard(job, shard_n(i), rng.clone()));
+            }
+        } else {
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_shards {
+                            break;
+                        }
+                        let out = run_shard(job, shard_n(i), rngs[i].clone());
+                        *results[i].lock().unwrap() = Some(out);
+                    });
+                }
+            });
+        }
+
+        // Merge in shard order — deterministic regardless of which worker
+        // finished first.
+        let mut xs = Vec::with_capacity(job.n * job.proc.dim_x());
+        let mut us = Vec::with_capacity(job.n * job.proc.dim_u());
+        let mut nfe = 0usize;
+        for cell in results {
+            let out = cell.into_inner().unwrap().expect("engine: shard never executed");
+            xs.extend_from_slice(&out.xs);
+            us.extend_from_slice(&out.us);
+            nfe = nfe.max(out.nfe);
+        }
+        SampleOutput { xs, us, nfe, traj: None }
+    }
+}
+
+/// Execute one shard with its own RNG stream.
+fn run_shard(job: &Job<'_>, n: usize, mut rng: Rng) -> SampleOutput {
+    match &job.sampler {
+        SamplerSpec::GddimDet(plan) => {
+            samplers::gddim::sample_deterministic(job.proc, plan, job.model, n, &mut rng, false)
+        }
+        SamplerSpec::GddimSde(plan) => {
+            samplers::gddim::sample_stochastic(job.proc, plan, job.model, n, &mut rng, false)
+        }
+        SamplerSpec::Em { grid, lambda } => {
+            samplers::em::sample_em(job.proc, job.model, grid, *lambda, n, &mut rng, false)
+        }
+        SamplerSpec::Ancestral { grid } => {
+            samplers::ancestral::sample_ancestral(job.proc, job.model, grid, n, &mut rng)
+        }
+        SamplerSpec::Heun { grid } => {
+            samplers::heun::sample_heun(job.proc, job.model, grid, n, &mut rng)
+        }
+        SamplerSpec::Sscs { grid } => {
+            samplers::sscs::sample_sscs(job.proc, job.model, grid, n, &mut rng)
+        }
+    }
+}
+
+/// Compile-time Send/Sync audit for everything the engine shares across
+/// worker threads by reference. A regression here (e.g. an `Rc` or a
+/// non-`Sync` cache sneaking into a plan or model) fails the build, not
+/// a run.
+#[allow(dead_code)]
+fn send_sync_audit() {
+    fn assert_send_sync<T: Send + Sync + ?Sized>() {}
+    assert_send_sync::<dyn Process>();
+    assert_send_sync::<dyn ScoreModel>();
+    assert_send_sync::<SamplerPlan>();
+    assert_send_sync::<TimeGrid>();
+    assert_send_sync::<SampleOutput>();
+    assert_send_sync::<Engine>();
+    assert_send_sync::<Job<'_>>();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coeffs::plan::PlanConfig;
+    use crate::data::presets;
+    use crate::diffusion::process::KtKind;
+    use crate::diffusion::{Cld, TimeGrid, Vpsde};
+    use crate::metrics::frechet::frechet_to_spec;
+    use crate::score::oracle::GmmOracle;
+    use std::sync::Arc;
+
+    fn cld_setup() -> (Arc<Cld>, crate::data::gmm::GmmSpec, GmmOracle) {
+        let spec = presets::gmm2d();
+        let proc = Arc::new(Cld::standard(spec.d));
+        let oracle = GmmOracle::new(proc.clone(), spec.clone(), KtKind::R);
+        (proc, spec, oracle)
+    }
+
+    #[test]
+    fn merged_output_is_bit_identical_across_worker_counts() {
+        // The acceptance contract: N=1 and N=4 workers must produce the
+        // exact same bytes for the same seed.
+        let (proc, _spec, oracle) = cld_setup();
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 15);
+        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+        let run = |workers: usize| {
+            let engine = Engine::with_config(EngineConfig { workers, shard_size: 128 });
+            engine.run(&Job {
+                proc: proc.as_ref(),
+                model: &oracle,
+                sampler: SamplerSpec::GddimDet(&plan),
+                n: 700, // 6 shards, last one ragged
+                seed: 0xC0FFEE,
+            })
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.xs, b.xs, "merged xs must be bit-identical");
+        assert_eq!(a.us, b.us, "merged us must be bit-identical");
+        assert_eq!(a.nfe, b.nfe);
+    }
+
+    #[test]
+    fn stochastic_sampler_is_also_worker_count_invariant() {
+        let (proc, _spec, oracle) = cld_setup();
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 10);
+        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::stochastic(0.5));
+        let run = |workers: usize| {
+            let engine = Engine::with_config(EngineConfig { workers, shard_size: 64 });
+            engine.run(&Job {
+                proc: proc.as_ref(),
+                model: &oracle,
+                sampler: SamplerSpec::GddimSde(&plan),
+                n: 300,
+                seed: 9,
+            })
+        };
+        assert_eq!(run(1).xs, run(3).xs);
+    }
+
+    #[test]
+    fn sharded_quality_matches_unsharded() {
+        // Sharding changes the RNG consumption pattern but not the
+        // distribution: FD must stay in the same band as a direct run.
+        let (proc, spec, oracle) = cld_setup();
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 25);
+        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+        let engine = Engine::with_config(EngineConfig { workers: 4, shard_size: 256 });
+        let out = engine.run(&Job {
+            proc: proc.as_ref(),
+            model: &oracle,
+            sampler: SamplerSpec::GddimDet(&plan),
+            n: 2_000,
+            seed: 3,
+        });
+        assert_eq!(out.xs.len(), 2_000 * spec.d);
+        assert_eq!(out.nfe, 25, "per-shard NFE, paper convention");
+        let fd = frechet_to_spec(&out.xs, &spec);
+        assert!(fd < 0.5, "sharded FD = {fd}");
+    }
+
+    #[test]
+    fn shards_use_distinct_rng_streams() {
+        // Two shards of the same job must not be copies of each other.
+        let (proc, spec, oracle) = cld_setup();
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 8);
+        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let engine = Engine::with_config(EngineConfig { workers: 2, shard_size: 32 });
+        let out = engine.run(&Job {
+            proc: proc.as_ref(),
+            model: &oracle,
+            sampler: SamplerSpec::GddimDet(&plan),
+            n: 64,
+            seed: 1,
+        });
+        let d = spec.d;
+        let (a, b) = out.xs.split_at(32 * d);
+        assert_ne!(a, b, "shard outputs must come from independent streams");
+    }
+
+    #[test]
+    fn every_baseline_runs_through_the_engine() {
+        let (proc, spec, oracle) = cld_setup();
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 12);
+        let engine = Engine::with_config(EngineConfig { workers: 2, shard_size: 16 });
+        let specs: Vec<SamplerSpec<'_>> = vec![
+            SamplerSpec::Em { grid: &grid, lambda: 1.0 },
+            SamplerSpec::Ancestral { grid: &grid },
+            SamplerSpec::Heun { grid: &grid },
+            SamplerSpec::Sscs { grid: &grid },
+        ];
+        for sampler in specs {
+            let out = engine.run(&Job {
+                proc: proc.as_ref(),
+                model: &oracle,
+                sampler,
+                n: 40,
+                seed: 2,
+            });
+            assert_eq!(out.xs.len(), 40 * spec.d);
+            assert!(out.xs.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn oversized_worker_count_is_clamped() {
+        // More workers than shards must not deadlock or panic.
+        let spec = presets::gmm2d();
+        let proc = Arc::new(Vpsde::standard(spec.d));
+        let oracle = GmmOracle::new(proc.clone(), spec.clone(), KtKind::R);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 5);
+        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let engine = Engine::with_config(EngineConfig { workers: 16, shard_size: 512 });
+        let out = engine.run(&Job {
+            proc: proc.as_ref(),
+            model: &oracle,
+            sampler: SamplerSpec::GddimDet(&plan),
+            n: 10, // a single shard
+            seed: 4,
+        });
+        assert_eq!(out.xs.len(), 10 * spec.d);
+    }
+}

@@ -110,7 +110,10 @@ pub fn fig4(args: &Args) {
         "Fig 4: hard 2-D mixture, exact score (FD | missing modes /25)",
         &["Sampler", "10", "20", "50"],
     );
-    let rows: Vec<(String, Box<dyn Fn(usize) -> crate::samplers::common::SampleOutput>)> = vec![
+    // The `'a` bound matters: the closures borrow the local setup, so the
+    // trait objects must not default to 'static.
+    type Runner<'a> = Box<dyn Fn(usize) -> crate::samplers::common::SampleOutput + 'a>;
+    let rows: Vec<(String, Runner<'_>)> = vec![
         (
             "Euler (prob-flow)".into(),
             Box::new(|nfe| run_em(&s, 0.0, nfe, n, 81)),

@@ -24,7 +24,10 @@
 //!   mode coverage, probability-flow NLL.
 //! * [`data`] — synthetic datasets shared with the python build layer.
 //! * [`runtime`] — the PJRT client wrapper that loads `artifacts/*.hlo.txt`.
-//! * [`server`] — a batched sampling service (router + dynamic batcher).
+//! * [`engine`] — the sharded parallel sampling engine: fixed-size shards,
+//!   per-shard RNG streams, deterministic merge, `std::thread` worker pool.
+//! * [`server`] — a batched sampling service (router + dynamic batcher +
+//!   the engine as its execution backend).
 //! * [`exp`] — experiment harnesses regenerating every paper table/figure.
 
 pub mod math;
@@ -36,9 +39,48 @@ pub mod score;
 pub mod samplers;
 pub mod metrics;
 pub mod runtime;
+pub mod engine;
 pub mod server;
 pub mod workload;
 pub mod exp;
 
+/// Crate-wide error type. The build is offline and std-only (no
+/// `anyhow`), and every fallible path in this crate is I/O- or
+/// parse-shaped, so a message string is the whole contract.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error(s.to_string())
+    }
+}
+
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = std::result::Result<T, Error>;

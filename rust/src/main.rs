@@ -14,6 +14,7 @@ use gddim::data::presets;
 use gddim::diffusion::process::KtKind;
 use gddim::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
 use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
+use gddim::engine::{Engine, Job, SamplerSpec};
 use gddim::metrics::coverage::coverage;
 use gddim::metrics::frechet::frechet_to_spec;
 use gddim::math::rng::Rng;
@@ -36,7 +37,9 @@ fn main() {
                 "usage: gddim <gen-configs|selfcheck|sample|coeffs|exp|serve> [--flags]\n\
                  sample flags: --process vpsde|cld|bdm --dataset gmm2d|hard2d|spiral2d|blobs8|faces8\n\
                  \u{20}              --sampler gddim|gddim-sde|em|ancestral|rk45|heun|sscs\n\
-                 \u{20}              --nfe N --q Q --kt R|L --lambda L --n N --seed S --corrector"
+                 \u{20}              --nfe N --q Q --kt R|L --lambda L --n N --seed S --corrector\n\
+                 \u{20}              --workers W   (engine shard-pool size; rk45 runs unsharded)\n\
+                 serve flags:  --workers W --dispatchers D --requests R --samples S --rate RPS"
             );
         }
     }
@@ -119,11 +122,16 @@ fn sample(args: &Args) {
     let n = args.get_usize("n", 2000);
     let seed = args.get_u64("seed", 0);
     let sampler = args.get_or("sampler", "gddim");
+    let workers = args.get_usize("workers", 1);
     let oracle = GmmOracle::new(proc.clone(), spec.clone(), kt);
     let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), nfe);
-    let mut rng = Rng::seed_from(seed);
+    let engine = Engine::new(workers);
 
+    // Grid samplers all route through the engine (sharded, seeded per
+    // shard); adaptive RK45 has data-dependent control flow and runs the
+    // whole batch unsharded.
     let t0 = std::time::Instant::now();
+    let plan;
     let out = match sampler.as_str() {
         "gddim" => {
             let cfg = PlanConfig {
@@ -132,56 +140,72 @@ fn sample(args: &Args) {
                 with_corrector: args.has("corrector"),
                 ..PlanConfig::default()
             };
-            let plan = SamplerPlan::build(proc.as_ref(), &grid, &cfg);
-            gddim::samplers::gddim::sample_deterministic(
-                proc.as_ref(),
-                &plan,
-                &oracle,
+            plan = SamplerPlan::build(proc.as_ref(), &grid, &cfg);
+            engine.run(&Job {
+                proc: proc.as_ref(),
+                model: &oracle,
+                sampler: SamplerSpec::GddimDet(&plan),
                 n,
-                &mut rng,
-                false,
-            )
+                seed,
+            })
         }
         "gddim-sde" => {
-            let plan =
+            plan =
                 SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::stochastic(lambda.max(0.1)));
-            gddim::samplers::gddim::sample_stochastic(
+            engine.run(&Job {
+                proc: proc.as_ref(),
+                model: &oracle,
+                sampler: SamplerSpec::GddimSde(&plan),
+                n,
+                seed,
+            })
+        }
+        "em" => engine.run(&Job {
+            proc: proc.as_ref(),
+            model: &oracle,
+            sampler: SamplerSpec::Em { grid: &grid, lambda },
+            n,
+            seed,
+        }),
+        "ancestral" => engine.run(&Job {
+            proc: proc.as_ref(),
+            model: &oracle,
+            sampler: SamplerSpec::Ancestral { grid: &grid },
+            n,
+            seed,
+        }),
+        "heun" => engine.run(&Job {
+            proc: proc.as_ref(),
+            model: &oracle,
+            sampler: SamplerSpec::Heun { grid: &grid },
+            n,
+            seed,
+        }),
+        "sscs" => engine.run(&Job {
+            proc: proc.as_ref(),
+            model: &oracle,
+            sampler: SamplerSpec::Sscs { grid: &grid },
+            n,
+            seed,
+        }),
+        "rk45" => {
+            let mut rng = Rng::seed_from(seed);
+            gddim::samplers::rk45::sample_rk45(
                 proc.as_ref(),
-                &plan,
                 &oracle,
+                args.get_f64("rtol", 1e-4),
                 n,
                 &mut rng,
-                false,
             )
         }
-        "em" => gddim::samplers::em::sample_em(
-            proc.as_ref(),
-            &oracle,
-            &grid,
-            lambda,
-            n,
-            &mut rng,
-            false,
-        ),
-        "ancestral" => {
-            gddim::samplers::ancestral::sample_ancestral(proc.as_ref(), &oracle, &grid, n, &mut rng)
-        }
-        "rk45" => gddim::samplers::rk45::sample_rk45(
-            proc.as_ref(),
-            &oracle,
-            args.get_f64("rtol", 1e-4),
-            n,
-            &mut rng,
-        ),
-        "heun" => gddim::samplers::heun::sample_heun(proc.as_ref(), &oracle, &grid, n, &mut rng),
-        "sscs" => gddim::samplers::sscs::sample_sscs(proc.as_ref(), &oracle, &grid, n, &mut rng),
         other => panic!("unknown sampler {other}"),
     };
     let wall = t0.elapsed().as_secs_f64();
     let fd = frechet_to_spec(&out.xs, &spec);
     let cov = coverage(&out.xs, &spec);
     println!(
-        "process={proc_name} dataset={dataset} sampler={sampler} kt={} q={q} λ={lambda}\n\
+        "process={proc_name} dataset={dataset} sampler={sampler} kt={} q={q} λ={lambda} \
+         workers={workers}\n\
          NFE={} FD={fd:.4} missing-modes={}/{} outliers={:.3} wall={wall:.2}s",
         kt.label(),
         out.nfe,

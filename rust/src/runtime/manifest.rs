@@ -5,7 +5,7 @@ use std::path::{Path, PathBuf};
 
 use crate::diffusion::process::KtKind;
 use crate::util::json::Json;
-use crate::Result;
+use crate::{Error, Result};
 
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
@@ -34,26 +34,26 @@ impl Manifest {
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let text = std::fs::read_to_string(dir.join("manifest.json"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| Error::msg(format!("manifest parse: {e}")))?;
         let models_obj = j
             .get("models")
             .and_then(|m| m.as_obj())
-            .ok_or_else(|| anyhow::anyhow!("manifest missing models"))?;
+            .ok_or_else(|| Error::msg("manifest missing models"))?;
         let mut models = Vec::new();
         for (name, m) in models_obj {
             let get_str = |k: &str| {
                 m.get(k)
                     .and_then(|v| v.as_str())
                     .map(|s| s.to_string())
-                    .ok_or_else(|| anyhow::anyhow!("model {name}: missing {k}"))
+                    .ok_or_else(|| Error::msg(format!("model {name}: missing {k}")))
             };
-            let probe = m.get("probe").ok_or_else(|| anyhow::anyhow!("missing probe"))?;
+            let probe = m.get("probe").ok_or_else(|| Error::msg("missing probe"))?;
             models.push(ModelEntry {
                 name: name.clone(),
                 file: dir.join(get_str("file")?),
                 process: get_str("process")?,
                 dataset: get_str("dataset")?,
-                kt: get_str("kt")?.parse().map_err(|e| anyhow::anyhow!("{e}"))?,
+                kt: get_str("kt")?.parse().map_err(Error::msg)?,
                 dim_u: m.get("dim_u").and_then(|v| v.as_usize()).unwrap_or(0),
                 batch: m.get("batch").and_then(|v| v.as_usize()).unwrap_or(256),
                 final_loss: m.get("final_loss").and_then(|v| v.as_f64()),

@@ -1,12 +1,20 @@
 //! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt` + manifest)
-//! and serve them as [`ScoreModel`]s on the rust hot path.
+//! and serve them as [`ScoreModel`](crate::score::ScoreModel)s on the
+//! rust hot path.
 //!
 //! Interchange is HLO *text* — jax ≥ 0.5 serialized protos carry 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
+//!
+//! The executor itself ([`net::NetScore`]) sits behind the `pjrt` cargo
+//! feature: it needs an external `xla` binding crate that the offline
+//! std-only build does not vendor. The manifest parser is always
+//! available (it is plain JSON) so the artifact contract stays testable.
 
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod net;
 
 pub use manifest::Manifest;
+#[cfg(feature = "pjrt")]
 pub use net::NetScore;

@@ -10,7 +10,7 @@ use std::sync::Mutex;
 use crate::diffusion::process::KtKind;
 use crate::runtime::manifest::ModelEntry;
 use crate::score::model::ScoreModel;
-use crate::Result;
+use crate::{Error, Result};
 
 pub struct NetScore {
     exe: Mutex<xla::PjRtLoadedExecutable>,
@@ -32,10 +32,11 @@ impl NetScore {
     /// Compile the model on the shared CPU PJRT client.
     pub fn load(client: &xla::PjRtClient, entry: &ModelEntry) -> Result<NetScore> {
         let proto = xla::HloModuleProto::from_text_file(
-            entry.file.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
-        )?;
+            entry.file.to_str().ok_or_else(|| Error::msg("bad path"))?,
+        )
+        .map_err(|e| Error::msg(format!("hlo parse: {e:?}")))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
+        let exe = client.compile(&comp).map_err(|e| Error::msg(format!("compile: {e:?}")))?;
         Ok(NetScore {
             exe: Mutex::new(exe),
             entry: entry.clone(),
@@ -45,17 +46,20 @@ impl NetScore {
 
     /// Run one fixed-size batch through PJRT.
     fn run_chunk(&self, t: f64, chunk: &[f32], out: &mut [f32]) -> Result<()> {
+        let xe = |e: xla::Error| Error::msg(format!("pjrt: {e:?}"));
         let b = self.entry.batch;
         let d = self.entry.dim_u;
         debug_assert_eq!(chunk.len(), b * d);
-        let u = xla::Literal::vec1(chunk).reshape(&[b as i64, d as i64])?;
-        let t_lit = xla::Literal::vec1(&[t as f32]).reshape(&[])?;
+        let u = xla::Literal::vec1(chunk).reshape(&[b as i64, d as i64]).map_err(xe)?;
+        let t_lit = xla::Literal::vec1(&[t as f32]).reshape(&[]).map_err(xe)?;
         let exe = self.exe.lock().unwrap();
-        let result = exe.execute::<xla::Literal>(&[u, t_lit])?[0][0].to_literal_sync()?;
+        let result = exe.execute::<xla::Literal>(&[u, t_lit]).map_err(xe)?[0][0]
+            .to_literal_sync()
+            .map_err(xe)?;
         drop(exe);
         // aot.py lowers with return_tuple=True → 1-tuple.
-        let tuple = result.to_tuple1()?;
-        let values = tuple.to_vec::<f32>()?;
+        let tuple = result.to_tuple1().map_err(xe)?;
+        let values = tuple.to_vec::<f32>().map_err(xe)?;
         out.copy_from_slice(&values);
         Ok(())
     }

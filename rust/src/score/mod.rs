@@ -7,8 +7,8 @@
 //!   distribution pushed through the forward SDE (closed form). This is
 //!   what validates Props 1–7 and runs every sampler comparison free of
 //!   training error.
-//! * [`net::NetScore`] (see [`crate::runtime`]) — a JAX/Pallas-trained
-//!   network AOT-compiled to HLO and executed through PJRT.
+//! * `runtime::net::NetScore` (behind the `pjrt` cargo feature) — a
+//!   JAX/Pallas-trained network AOT-compiled to HLO, executed via PJRT.
 
 pub mod oracle;
 pub mod model;

@@ -3,6 +3,7 @@
 
 use std::time::Duration;
 
+use crate::engine::Engine;
 use crate::server::batcher::BatcherConfig;
 use crate::server::request::{GenRequest, PlanKey};
 use crate::server::router::{oracle_factory, Router};
@@ -11,14 +12,16 @@ use crate::workload::{ClosedLoop, WorkloadSpec};
 
 pub fn run(args: &Args) {
     let workers = args.get_usize("workers", 4);
+    let dispatchers = args.get_usize("dispatchers", 2);
     let n_requests = args.get_usize("requests", 64);
     let samples = args.get_usize("samples", 128);
     let nfe = args.get_usize("nfe", 20);
     let rate = args.get_f64("rate", 200.0);
     let max_wait_ms = args.get_u64("max-wait-ms", 5);
 
-    let router = Router::new(
-        workers,
+    let router = Router::with_engine(
+        dispatchers,
+        Engine::new(workers),
         BatcherConfig {
             max_batch: args.get_usize("max-batch", 4096),
             max_wait: Duration::from_millis(max_wait_ms),
@@ -37,8 +40,9 @@ pub fn run(args: &Args) {
         seed: args.get_u64("seed", 0),
     };
     println!(
-        "serving {} requests × {} samples (poisson {:.0} req/s, {} workers, NFE {})…",
-        n_requests, samples, rate, workers, nfe
+        "serving {} requests × {} samples (poisson {:.0} req/s, {} engine workers, \
+         {} dispatchers, NFE {})…",
+        n_requests, samples, rate, workers, dispatchers, nfe
     );
     let gen = ClosedLoop::new(spec);
     let responses = gen.drive(&router, |id, key, n, seed| GenRequest {

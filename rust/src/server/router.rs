@@ -1,10 +1,11 @@
-//! Request router + worker pool.
+//! Request router + dispatch pool + sharded execution engine.
 //!
-//! `submit()` enqueues into the per-key [`KeyQueue`]; worker threads scan
-//! for ready queues (size or deadline cut), execute one batched sampler
-//! run per cut, and fan results back out to the per-request reply
-//! channels. Stage-I plans and score models are built once per key and
-//! cached ([`Prepared`]), so steady-state request cost is pure Stage-II.
+//! `submit()` enqueues into the per-key [`KeyQueue`]; dispatcher threads
+//! scan for ready queues (size or deadline cut), hand each cut batch to
+//! the shared [`Engine`] — which shards it across its own worker pool —
+//! and fan results back out to the per-request reply channels. Stage-I
+//! plans and score models are built once per key and cached
+//! ([`Prepared`]), so steady-state request cost is pure Stage-II.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -15,8 +16,7 @@ use std::time::{Duration, Instant};
 use crate::coeffs::plan::{PlanConfig, SamplerPlan};
 use crate::data::presets;
 use crate::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
-use crate::math::rng::Rng;
-use crate::samplers;
+use crate::engine::{Engine, Job, SamplerSpec};
 use crate::score::model::ScoreModel;
 use crate::score::oracle::GmmOracle;
 use crate::server::batcher::{BatcherConfig, KeyQueue};
@@ -75,6 +75,7 @@ struct Shared {
     stop: AtomicBool,
     prepared: Mutex<HashMap<PlanKey, Arc<Prepared>>>,
     factory: Box<PreparedFactory>,
+    engine: Engine,
     pub metrics: ServerMetrics,
     batcher_max_batch: usize,
     batcher_max_wait: Duration,
@@ -87,23 +88,40 @@ pub struct Router {
 }
 
 impl Router {
+    /// `n_workers` concurrent batches, each executed unsharded (a
+    /// 1-worker engine) — the same total thread budget as the
+    /// pre-engine router, so existing call sites keep their thread
+    /// profile. Use [`Router::with_engine`] to shard *within* batches;
+    /// note dispatchers × engine workers multiply.
     pub fn new(n_workers: usize, cfg: BatcherConfig, factory: Box<PreparedFactory>) -> Router {
+        Router::with_engine(n_workers, Engine::new(1), cfg, factory)
+    }
+
+    /// Full control: `n_dispatchers` threads cut and route batches, and
+    /// every cut batch is sharded across `engine`'s worker pool.
+    pub fn with_engine(
+        n_dispatchers: usize,
+        engine: Engine,
+        cfg: BatcherConfig,
+        factory: Box<PreparedFactory>,
+    ) -> Router {
         let shared = Arc::new(Shared {
             queues: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
             stop: AtomicBool::new(false),
             prepared: Mutex::new(HashMap::new()),
             factory,
+            engine,
             metrics: ServerMetrics::new(),
             batcher_max_batch: cfg.max_batch,
             batcher_max_wait: cfg.max_wait,
         });
         shared.metrics.start_clock();
-        let workers = (0..n_workers.max(1))
+        let workers = (0..n_dispatchers.max(1))
             .map(|w| {
                 let sh = shared.clone();
                 std::thread::Builder::new()
-                    .name(format!("gddim-worker-{w}"))
+                    .name(format!("gddim-dispatch-{w}"))
                     .spawn(move || worker_loop(sh))
                     .unwrap()
             })
@@ -209,44 +227,26 @@ fn execute_batch(sh: &Shared, batch: Vec<Envelope>) {
     let key = batch[0].req.key.clone();
     let prep = prepared_for(sh, &key);
     let total_n: usize = batch.iter().map(|e| e.req.n).sum();
-    let mut rng = Rng::seed_from(batch.iter().fold(0xBA7C4 ^ total_n as u64, |acc, e| {
+    // Batch seed: a deterministic fold of the member requests' seeds, so
+    // identical traffic replays identically; the engine derives per-shard
+    // streams from it.
+    let seed = batch.iter().fold(0xBA7C4 ^ total_n as u64, |acc, e| {
         acc.wrapping_mul(0x100000001B3).wrapping_add(e.req.seed)
-    }));
+    });
 
-    let out = match key.sampler {
-        SamplerKind::GddimDet => samplers::gddim::sample_deterministic(
-            prep.proc.as_ref(),
-            prep.plan.as_ref().unwrap(),
-            prep.model.as_ref(),
-            total_n,
-            &mut rng,
-            false,
-        ),
-        SamplerKind::GddimSde => samplers::gddim::sample_stochastic(
-            prep.proc.as_ref(),
-            prep.plan.as_ref().unwrap(),
-            prep.model.as_ref(),
-            total_n,
-            &mut rng,
-            false,
-        ),
-        SamplerKind::Em => samplers::em::sample_em(
-            prep.proc.as_ref(),
-            prep.model.as_ref(),
-            &prep.grid,
-            key.lambda(),
-            total_n,
-            &mut rng,
-            false,
-        ),
-        SamplerKind::Ancestral => samplers::ancestral::sample_ancestral(
-            prep.proc.as_ref(),
-            prep.model.as_ref(),
-            &prep.grid,
-            total_n,
-            &mut rng,
-        ),
+    let sampler = match key.sampler {
+        SamplerKind::GddimDet => SamplerSpec::GddimDet(prep.plan.as_deref().unwrap()),
+        SamplerKind::GddimSde => SamplerSpec::GddimSde(prep.plan.as_deref().unwrap()),
+        SamplerKind::Em => SamplerSpec::Em { grid: &prep.grid, lambda: key.lambda() },
+        SamplerKind::Ancestral => SamplerSpec::Ancestral { grid: &prep.grid },
     };
+    let out = sh.engine.run(&Job {
+        proc: prep.proc.as_ref(),
+        model: prep.model.as_ref(),
+        sampler,
+        n: total_n,
+        seed,
+    });
 
     // Record metrics *before* fanning out responses: a client that has
     // received its response must observe it in the counters.
@@ -331,6 +331,22 @@ mod tests {
             max_batch = max_batch.max(resp.batch_size);
         }
         assert!(max_batch > 1, "expected coalesced batches, got max {max_batch}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn with_engine_shards_large_batches() {
+        use crate::engine::EngineConfig;
+        let router = Router::with_engine(
+            1,
+            Engine::with_config(EngineConfig { workers: 4, shard_size: 64 }),
+            BatcherConfig::default(),
+            oracle_factory(),
+        );
+        let rx = router.submit(GenRequest { id: 1, n: 500, key: key(), seed: 3 });
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.xs.len(), 500 * 2);
+        assert!(resp.xs.iter().all(|x| x.is_finite()));
         router.shutdown();
     }
 

@@ -1,8 +1,10 @@
 //! Workload generation for the serving benches: Poisson arrivals over a
-//! mix of plan keys, driven open- or closed-loop against a [`Router`].
+//! mix of plan keys, driven open- or closed-loop against a [`Router`],
+//! plus a direct [`Engine`] throughput driver for worker-scaling sweeps.
 
 use std::time::{Duration, Instant};
 
+use crate::engine::{Engine, Job};
 use crate::math::rng::Rng;
 use crate::server::request::{GenRequest, GenResponse, PlanKey};
 use crate::server::router::Router;
@@ -57,6 +59,20 @@ impl ClosedLoop {
     }
 }
 
+/// Drive one engine job back-to-back `repeats` times and report steady
+/// throughput in samples/second. The serving and micro benches use this
+/// for the worker-scaling sweep (`--workers 1` vs `--workers N`).
+pub fn engine_throughput(engine: &Engine, job: &Job<'_>, repeats: usize) -> f64 {
+    assert!(repeats > 0);
+    // One warmup run outside the clock (plan caches, allocator, pages).
+    let _ = engine.run(job);
+    let t0 = Instant::now();
+    for _ in 0..repeats {
+        let _ = engine.run(job);
+    }
+    (repeats * job.n) as f64 / t0.elapsed().as_secs_f64()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,6 +98,32 @@ mod tests {
         assert_eq!(out.len(), 10);
         assert!(out.iter().all(|r| r.xs.len() == 8 * 2));
         router.shutdown();
+    }
+
+    #[test]
+    fn engine_throughput_reports_positive_rate() {
+        use crate::coeffs::plan::{PlanConfig, SamplerPlan};
+        use crate::data::presets;
+        use crate::diffusion::process::KtKind;
+        use crate::diffusion::{Cld, Process, TimeGrid};
+        use crate::engine::SamplerSpec;
+        use crate::score::oracle::GmmOracle;
+        use std::sync::Arc;
+        let spec = presets::gmm2d();
+        let proc = Arc::new(Cld::standard(spec.d));
+        let oracle = GmmOracle::new(proc.clone(), spec, KtKind::R);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 5);
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let engine = Engine::new(2);
+        let job = Job {
+            proc: proc.as_ref(),
+            model: &oracle,
+            sampler: SamplerSpec::GddimDet(&plan),
+            n: 128,
+            seed: 1,
+        };
+        assert!(engine_throughput(&engine, &job, 2) > 0.0);
     }
 
     #[test]

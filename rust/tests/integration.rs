@@ -1,7 +1,8 @@
 //! Cross-module integration tests (`cargo test --test integration`).
 //!
-//! The PJRT tests are gated on `artifacts/manifest.json` existing (built
-//! by `make artifacts`); everything else runs standalone.
+//! The PJRT tests are gated on the `pjrt` cargo feature *and* on
+//! `artifacts/manifest.json` existing (built by the python layer);
+//! everything else runs standalone on the std-only build.
 
 use std::sync::Arc;
 
@@ -9,16 +10,12 @@ use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
 use gddim::data::presets;
 use gddim::diffusion::process::KtKind;
 use gddim::diffusion::{Cld, Process, TimeGrid, Vpsde};
+use gddim::engine::{Engine, EngineConfig, Job, SamplerSpec};
 use gddim::math::rng::Rng;
+use gddim::metrics::coverage::coverage;
 use gddim::metrics::frechet::frechet_to_spec;
-use gddim::runtime::{Manifest, NetScore};
-use gddim::score::model::ScoreModel;
+use gddim::metrics::wasserstein::sliced_w1;
 use gddim::score::oracle::GmmOracle;
-
-fn artifacts_dir() -> Option<std::path::PathBuf> {
-    let dir = Manifest::default_dir();
-    dir.join("manifest.json").exists().then_some(dir)
-}
 
 /// Full-stack smoke without PJRT: plan → sample → metric, both processes.
 #[test]
@@ -62,57 +59,66 @@ fn sampling_is_reproducible() {
     assert_eq!(run(), run());
 }
 
-/// PJRT: every exported model loads, compiles, and reproduces the
-/// jax-recorded probe row bit-near-exactly.
+/// Golden-value regression for `sample_deterministic` on the GMM oracle:
+/// a fixed seed must keep landing inside fixed Fréchet/Wasserstein/mode
+/// bounds. This is the tripwire for silent numeric drift anywhere in
+/// Stage I or Stage II — the bounds are several × tighter than "worked at
+/// all" but loose enough to survive libm differences across platforms.
 #[test]
-fn pjrt_models_match_manifest_probes() {
-    let Some(dir) = artifacts_dir() else {
-        eprintln!("skipping (no artifacts; run `make artifacts`)");
-        return;
-    };
-    let manifest = Manifest::load(&dir).unwrap();
-    assert!(!manifest.models.is_empty());
-    let client = xla::PjRtClient::cpu().unwrap();
-    for entry in &manifest.models {
-        let net = NetScore::load(&client, entry).unwrap();
-        let err = net.probe_error().unwrap();
-        assert!(err < 1e-3, "{}: probe error {err}", entry.name);
-    }
-}
-
-/// PJRT: learned-score sampling produces usable samples (quality sanity,
-/// not paper-grade — nets are small and trained briefly at build time).
-#[test]
-fn pjrt_learned_score_sampling_works() {
-    let Some(dir) = artifacts_dir() else {
-        eprintln!("skipping (no artifacts)");
-        return;
-    };
-    let manifest = Manifest::load(&dir).unwrap();
-    let Some(entry) = manifest.get("vpsde_gmm2d") else {
-        eprintln!("skipping (vpsde_gmm2d not exported)");
-        return;
-    };
-    let client = xla::PjRtClient::cpu().unwrap();
-    let net = NetScore::load(&client, entry).unwrap();
+fn gddim_golden_regression_on_gmm_oracle() {
     let spec = presets::gmm2d();
-    let p = Arc::new(Vpsde::standard(spec.d));
-    let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 30);
+    let p = Arc::new(Cld::standard(spec.d));
+    let oracle = GmmOracle::new(p.clone(), spec.clone(), KtKind::R);
+    let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 25);
     let plan = SamplerPlan::build(p.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
-    let mut rng = Rng::seed_from(3);
+    let mut rng = Rng::seed_from(0x601D);
     let out = gddim::samplers::gddim::sample_deterministic(
         p.as_ref(),
         &plan,
-        &net as &dyn ScoreModel,
-        512,
+        &oracle,
+        4000,
         &mut rng,
         false,
     );
+    assert_eq!(out.nfe, 25);
+
     let fd = frechet_to_spec(&out.xs, &spec);
-    // Generous bound: small net, short training. The oracle scores ~0.02.
-    assert!(fd < 8.0, "learned-score FD suspiciously bad: {fd}");
-    let cov = gddim::metrics::coverage::coverage(&out.xs, &spec);
-    assert!(cov.missing <= 2, "learned net dropped {} modes", cov.missing);
+    assert!(fd < 0.35, "golden FD bound blown: {fd}");
+
+    // Sliced W1 against fresh ground-truth draws (sees mode structure FD
+    // cannot).
+    let mut rng_truth = Rng::seed_from(0x7247);
+    let truth = spec.sample(4000, &mut rng_truth);
+    let w1 = sliced_w1(&out.xs, &truth, spec.d, 32, &mut rng_truth);
+    assert!(w1 < 0.5, "golden sliced-W1 bound blown: {w1}");
+
+    // All 8 modes present, essentially no off-manifold mass.
+    let cov = coverage(&out.xs, &spec);
+    assert_eq!(cov.missing, 0, "mode dropped under fixed seed");
+    assert!(cov.outliers < 0.02, "outlier mass {}", cov.outliers);
+}
+
+/// The engine acceptance contract, end to end: merged output bit-identical
+/// for 1 vs 4 workers on a fixed seed.
+#[test]
+fn engine_is_worker_count_invariant() {
+    let spec = presets::gmm2d();
+    let p = Arc::new(Cld::standard(spec.d));
+    let oracle = GmmOracle::new(p.clone(), spec, KtKind::R);
+    let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 12);
+    let plan = SamplerPlan::build(p.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+    let run = |workers: usize| {
+        Engine::with_config(EngineConfig { workers, shard_size: 128 }).run(&Job {
+            proc: p.as_ref(),
+            model: &oracle,
+            sampler: SamplerSpec::GddimDet(&plan),
+            n: 1000,
+            seed: 7,
+        })
+    };
+    let (a, b) = (run(1), run(4));
+    assert_eq!(a.xs, b.xs);
+    assert_eq!(a.us, b.us);
 }
 
 /// The server serves PJRT-free oracle traffic correctly under load.
@@ -139,4 +145,69 @@ fn server_under_mixed_load() {
         assert!(resp.xs.iter().all(|x| x.is_finite()));
     }
     router.shutdown();
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use gddim::runtime::{Manifest, NetScore};
+    use gddim::score::model::ScoreModel;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = Manifest::default_dir();
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    /// PJRT: every exported model loads, compiles, and reproduces the
+    /// jax-recorded probe row bit-near-exactly.
+    #[test]
+    fn pjrt_models_match_manifest_probes() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping (no artifacts; run `make artifacts`)");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        assert!(!manifest.models.is_empty());
+        let client = xla::PjRtClient::cpu().unwrap();
+        for entry in &manifest.models {
+            let net = NetScore::load(&client, entry).unwrap();
+            let err = net.probe_error().unwrap();
+            assert!(err < 1e-3, "{}: probe error {err}", entry.name);
+        }
+    }
+
+    /// PJRT: learned-score sampling produces usable samples (quality
+    /// sanity, not paper-grade — nets are small and trained briefly).
+    #[test]
+    fn pjrt_learned_score_sampling_works() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping (no artifacts)");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let Some(entry) = manifest.get("vpsde_gmm2d") else {
+            eprintln!("skipping (vpsde_gmm2d not exported)");
+            return;
+        };
+        let client = xla::PjRtClient::cpu().unwrap();
+        let net = NetScore::load(&client, entry).unwrap();
+        let spec = presets::gmm2d();
+        let p = Arc::new(Vpsde::standard(spec.d));
+        let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 30);
+        let plan = SamplerPlan::build(p.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+        let mut rng = Rng::seed_from(3);
+        let out = gddim::samplers::gddim::sample_deterministic(
+            p.as_ref(),
+            &plan,
+            &net as &dyn ScoreModel,
+            512,
+            &mut rng,
+            false,
+        );
+        let fd = frechet_to_spec(&out.xs, &spec);
+        // Generous bound: small net, short training. The oracle scores ~0.02.
+        assert!(fd < 8.0, "learned-score FD suspiciously bad: {fd}");
+        let cov = coverage(&out.xs, &spec);
+        assert!(cov.missing <= 2, "learned net dropped {} modes", cov.missing);
+    }
 }
