@@ -14,10 +14,12 @@ use gddim::engine::{Engine, Job, SamplerSpec};
 use gddim::score::oracle::GmmOracle;
 use gddim::server::batcher::BatcherConfig;
 use gddim::server::request::{GenRequest, PlanKey};
-use gddim::server::router::{oracle_factory, Router};
+use gddim::server::router::{oracle_factory, Router, RouterConfig};
 use gddim::util::bench::Table;
 use gddim::util::cli::Args;
-use gddim::workload::{engine_throughput, ClosedLoop, WorkloadSpec};
+use gddim::workload::{
+    engine_throughput, max_rate_under_slo, open_loop_probe, ClosedLoop, WorkloadSpec,
+};
 
 fn run_once(rate: f64, max_wait_ms: u64, n_requests: usize, samples: usize) -> (f64, f64, f64, f64) {
     let router = Router::new(
@@ -69,6 +71,63 @@ fn main() {
     t.emit("serving");
 
     engine_scaling(&args);
+    open_loop_slo(&args);
+}
+
+/// Open-loop SLO bench: inject at fixed rates regardless of completion
+/// (tail latency is *not* hidden by arrival backoff, unlike the closed
+/// loop above) and report queueing/service/total percentiles plus the
+/// max injection rate whose total-latency p99 meets the SLO. Each rate
+/// point runs `workload::open_loop_probe` — the same harness as the
+/// `gddim workload` subcommand — against a 4-dispatcher, 1-worker-engine
+/// router (the closed-loop bench's thread budget).
+fn open_loop_slo(args: &Args) {
+    let n_requests = args.get_usize("open-requests", 40);
+    let samples = args.get_usize("samples", 64);
+    let slo_ms = args.get_f64("slo-ms", 100.0);
+    let rates: Vec<f64> = match args.get("rates") {
+        Some(list) => list.split(',').map(|s| s.trim().parse().expect("bad --rates")).collect(),
+        None => vec![50.0, 200.0, 800.0],
+    };
+    let mut t = Table::new(
+        "Open-loop SLO: fixed-rate injection (gDDIM CLD NFE=20), latency percentiles",
+        &["rate(req/s)", "done", "queue p95(s)", "service p95(s)", "p50(s)", "p99(s)", "SLO"],
+    );
+    let sweep = max_rate_under_slo(&rates, slo_ms / 1e3, |rate| {
+        let (report, _metrics) = open_loop_probe(
+            RouterConfig { dispatchers: 4, ..RouterConfig::default() },
+            1,
+            BatcherConfig { max_batch: 4096, max_wait: Duration::from_millis(2) },
+            WorkloadSpec {
+                n_requests,
+                samples_per_request: samples,
+                rate_per_sec: rate,
+                keys: vec![PlanKey::gddim("cld", "gmm2d", 20, 2)],
+                seed: 13,
+            },
+            true,
+        );
+        report
+    });
+    // A rate point can complete zero requests (every response timed out):
+    // its summaries are None, shown as "-" rather than panicking.
+    let cell = |v: Option<f64>| v.map_or_else(|| "-".into(), |x| format!("{x:.4}"));
+    for p in &sweep.points {
+        t.row(vec![
+            format!("{:.0}", p.rate),
+            format!("{}/{}", p.report.completed, p.report.issued),
+            cell(p.report.queueing.as_ref().map(|s| s.p95)),
+            cell(p.report.service.as_ref().map(|s| s.p95)),
+            cell(p.report.total.as_ref().map(|s| s.p50)),
+            cell(p.report.total.as_ref().map(|s| s.p99)),
+            if p.meets_slo { "ok".into() } else { "MISS".into() },
+        ]);
+    }
+    t.emit("serving_open_loop");
+    match sweep.max_rate {
+        Some(r) => println!("max rate under SLO (p99 ≤ {slo_ms:.0}ms): {r:.0} req/s"),
+        None => println!("no probed rate met the SLO (p99 ≤ {slo_ms:.0}ms)"),
+    }
 }
 
 /// Engine worker-scaling sweep: one fixed batched job, increasing pool

@@ -11,21 +11,34 @@
 //!    job seed by index. Stream derivation is a pure function of
 //!    `(seed, shard_index)`, which makes the merged output bit-identical
 //!    for 1 worker and for N workers.
-//! 3. **Execute**: a `std::thread::scope` worker pool pulls shard indices
-//!    off an atomic counter (work stealing by construction — a slow shard
-//!    never blocks the others) and runs the configured Stage-II sampler
-//!    on its slice of the batch.
+//! 3. **Execute**: a *persistent* worker pool (threads spawned once in
+//!    [`Engine::with_config`], fed through an `mpsc` job queue) runs the
+//!    configured Stage-II sampler on each shard. Whichever worker is free
+//!    pulls the next shard — work stealing by construction, so a slow
+//!    shard never blocks the others — and signals a per-job condvar when
+//!    its slot is filled.
 //! 4. **Merge**: shard outputs are concatenated in shard order. NFE is
 //!    reported per shard (max across shards), matching the paper's
 //!    convention that a batched score call counts once.
 //!
-//! The engine holds no threads between jobs: scoped threads make the
-//! borrow story trivial (`&dyn Process`, `&SamplerPlan` etc. are shared
-//! by reference, no `Arc` churn) and a pool spin-up is ~µs next to a
-//! sampler run.
+//! The pool is long-lived: at high request rates (the serving router
+//! shares one engine across all dispatcher threads) a per-job
+//! `thread::scope` spawn is measurable coordinator overhead, and Stage-I
+//! plans being "calculated once and used everywhere" (App. C.3) means
+//! dispatch cost is a real fraction of a few-NFE request. Jobs still pass
+//! everything by reference: [`Engine::run`] blocks until every shard of
+//! its job has completed, which is what makes handing borrowed data to
+//! long-lived threads sound (see the safety notes on [`JobPtr`]).
+//!
+//! `workers <= 1` keeps the historical inline fast path: no threads are
+//! ever spawned and shards run on the caller thread, byte-for-byte
+//! equivalent to the pooled execution.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::coeffs::plan::SamplerPlan;
 use crate::diffusion::process::Process;
@@ -38,7 +51,8 @@ use crate::score::model::ScoreModel;
 /// Engine tuning knobs.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
-    /// Worker threads used to execute shards (1 = run inline).
+    /// Worker threads kept alive by the pool (0 or 1 = run inline on the
+    /// caller thread, no threads spawned).
     pub workers: usize,
     /// Rows per shard. Fixed (not derived from the worker count) so that
     /// the shard layout — and therefore the merged output — is identical
@@ -80,9 +94,158 @@ pub struct Job<'a> {
     pub seed: u64,
 }
 
-/// The worker pool. Cheap to construct; holds no threads between jobs.
+/// A shard result as stored by a worker: the sampler output, or the
+/// panic message if the shard panicked (re-raised by [`Engine::run`]
+/// after the whole job has drained, never inside a worker).
+type ShardResult = Result<SampleOutput, String>;
+
+/// Per-job result collector: one slot per shard, a `done` count, and a
+/// condvar [`Engine::run`] parks on until `done == slots.len()`.
+struct Batch {
+    inner: Mutex<BatchInner>,
+    cv: Condvar,
+}
+
+struct BatchInner {
+    slots: Vec<Option<ShardResult>>,
+    done: usize,
+}
+
+impl Batch {
+    fn new(n_shards: usize) -> Batch {
+        Batch {
+            inner: Mutex::new(BatchInner {
+                slots: (0..n_shards).map(|_| None).collect(),
+                done: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// Lifetime-erased pointer to the job a shard belongs to.
+///
+/// SAFETY contract (upheld by `Engine::run`): the `Job` behind this
+/// pointer outlives every `ShardTask` that references it, because `run`
+/// does not return — and therefore the caller's borrows stay live —
+/// until `Batch::done` equals the shard count, and workers bump `done`
+/// strictly after their last use of the pointer. Workers never touch the
+/// pointer after filling their slot.
+#[derive(Clone, Copy)]
+struct JobPtr(*const Job<'static>);
+
+// SAFETY: the pointee is only dereferenced while `Engine::run` keeps the
+// underlying `Job` (and everything it borrows) alive, and `Job` itself is
+// `Send + Sync` (see `send_sync_audit`).
+unsafe impl Send for JobPtr {}
+
+/// One unit of pool work: run shard `idx` (`n` rows, its own RNG stream)
+/// of the job behind `job`, then fill `batch.slots[idx]` and signal.
+struct ShardTask {
+    job: JobPtr,
+    idx: usize,
+    n: usize,
+    rng: Rng,
+    batch: Arc<Batch>,
+}
+
+/// The long-lived worker pool: an injector queue plus the worker handles.
+/// Dropping the sender closes the queue; workers observe the disconnect
+/// and exit, and `Engine::drop` joins them.
+struct Pool {
+    tx: Mutex<Sender<ShardTask>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Engine-level counters. All atomics: the hot path (one bump per shard)
+/// never takes a lock.
+struct EngineMetrics {
+    jobs: AtomicU64,
+    shards: AtomicU64,
+    queue_depth: AtomicUsize,
+    peak_queue_depth: AtomicUsize,
+    /// Per-worker nanoseconds spent inside `run_shard` (slot 0 doubles as
+    /// the caller-thread bucket on the inline path).
+    busy_ns: Vec<AtomicU64>,
+    started: Instant,
+}
+
+impl EngineMetrics {
+    fn new(slots: usize) -> EngineMetrics {
+        EngineMetrics {
+            jobs: AtomicU64::new(0),
+            shards: AtomicU64::new(0),
+            queue_depth: AtomicUsize::new(0),
+            peak_queue_depth: AtomicUsize::new(0),
+            busy_ns: (0..slots).map(|_| AtomicU64::new(0)).collect(),
+            started: Instant::now(),
+        }
+    }
+
+    fn queue_push(&self) {
+        let depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    fn queue_pop(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn busy_add(&self, worker: usize, d: Duration) {
+        self.busy_ns[worker].fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time snapshot of the engine counters (see [`Engine::stats`]).
+#[derive(Clone, Debug)]
+pub struct EngineStats {
+    /// Configured pool size (0/1 = inline execution, no pool threads).
+    pub workers: usize,
+    /// Jobs accepted by [`Engine::run`] (empty jobs included).
+    pub jobs_run: u64,
+    /// Shards executed across all jobs.
+    pub shards_executed: u64,
+    /// High-water mark of shards queued but not yet picked up.
+    pub peak_queue_depth: usize,
+    /// Seconds each worker spent executing shards (index 0 is the caller
+    /// thread when running inline).
+    pub worker_busy_secs: Vec<f64>,
+    /// Seconds since the engine (and its pool) was constructed.
+    pub uptime_secs: f64,
+}
+
+impl EngineStats {
+    /// Fraction of the engine's uptime each worker spent busy, in [0, 1].
+    pub fn busy_shares(&self) -> Vec<f64> {
+        let up = self.uptime_secs.max(1e-12);
+        self.worker_busy_secs.iter().map(|b| (b / up).clamp(0.0, 1.0)).collect()
+    }
+}
+
+impl std::fmt::Display for EngineStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "engine: workers={} jobs={} shards={} peak-queue={} busy-share=[",
+            self.workers, self.jobs_run, self.shards_executed, self.peak_queue_depth
+        )?;
+        for (i, s) in self.busy_shares().iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{s:.2}")?;
+        }
+        write!(f, "] uptime={:.2}s", self.uptime_secs)
+    }
+}
+
+/// The sampling engine. `workers >= 2` spawns a persistent worker pool at
+/// construction; jobs are sharded onto it by [`Engine::run`] and the pool
+/// is torn down (queue closed, threads joined) on drop.
 pub struct Engine {
     pub cfg: EngineConfig,
+    pool: Option<Pool>,
+    metrics: Arc<EngineMetrics>,
 }
 
 impl Engine {
@@ -91,8 +254,43 @@ impl Engine {
         Engine::with_config(EngineConfig { workers, ..EngineConfig::default() })
     }
 
+    /// Build the engine; for `workers >= 2` this spawns the pool threads
+    /// once, up front — `run` never spawns.
     pub fn with_config(cfg: EngineConfig) -> Engine {
-        Engine { cfg }
+        let metrics = Arc::new(EngineMetrics::new(cfg.workers.max(1)));
+        let pool = (cfg.workers >= 2).then(|| {
+            let (tx, rx) = channel::<ShardTask>();
+            let rx = Arc::new(Mutex::new(rx));
+            let handles = (0..cfg.workers)
+                .map(|w| {
+                    let rx = Arc::clone(&rx);
+                    let m = Arc::clone(&metrics);
+                    std::thread::Builder::new()
+                        .name(format!("gddim-engine-{w}"))
+                        .spawn(move || pool_worker(&rx, &m, w))
+                        .expect("engine: failed to spawn pool worker")
+                })
+                .collect();
+            Pool { tx: Mutex::new(tx), handles }
+        });
+        Engine { cfg, pool, metrics }
+    }
+
+    /// Snapshot the engine counters.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            workers: self.cfg.workers,
+            jobs_run: self.metrics.jobs.load(Ordering::Relaxed),
+            shards_executed: self.metrics.shards.load(Ordering::Relaxed),
+            peak_queue_depth: self.metrics.peak_queue_depth.load(Ordering::Relaxed),
+            worker_busy_secs: self
+                .metrics
+                .busy_ns
+                .iter()
+                .map(|ns| ns.load(Ordering::Relaxed) as f64 * 1e-9)
+                .collect(),
+            uptime_secs: self.metrics.started.elapsed().as_secs_f64(),
+        }
     }
 
     /// Derive the per-shard RNG streams for `(seed, n_shards)`. Pure
@@ -102,55 +300,142 @@ impl Engine {
         (0..n_shards).map(|i| root.fork(i as u64)).collect()
     }
 
-    /// Run one job: shard, execute on the pool, merge deterministically.
+    /// Run one job: shard, execute (inline or on the pool), merge in
+    /// shard order. Blocks until every shard has completed; panics (after
+    /// the job has fully drained) if any shard panicked.
     pub fn run(&self, job: &Job<'_>) -> SampleOutput {
         if job.n == 0 {
             // An empty request is a valid (if silly) thing for a client to
             // send; panicking here would take a dispatcher thread with it.
+            self.metrics.jobs.fetch_add(1, Ordering::Relaxed);
             return SampleOutput { xs: Vec::new(), us: Vec::new(), nfe: 0, traj: None };
         }
+        self.metrics.jobs.fetch_add(1, Ordering::Relaxed);
         let shard_size = self.cfg.shard_size.max(1);
         let n_shards = job.n.div_ceil(shard_size);
         let rngs = Engine::shard_rngs(job.seed, n_shards);
         let shard_n =
             |i: usize| -> usize { shard_size.min(job.n - i * shard_size) };
 
-        let results: Vec<Mutex<Option<SampleOutput>>> =
-            (0..n_shards).map(|_| Mutex::new(None)).collect();
-        let workers = self.cfg.workers.clamp(1, n_shards);
-        if workers == 1 {
-            // Inline fast path: same shard walk, no thread setup.
-            for (i, rng) in rngs.iter().enumerate() {
-                *results[i].lock().unwrap() = Some(run_shard(job, shard_n(i), rng.clone()));
+        let mut slots: Vec<Option<ShardResult>> = match &self.pool {
+            None => {
+                // Inline fast path: same shard walk, caller thread, no
+                // queue. Bit-identical to pooled execution by the shard /
+                // seed / merge construction.
+                rngs.into_iter()
+                    .enumerate()
+                    .map(|(i, rng)| {
+                        let t0 = Instant::now();
+                        let out = run_shard(job, shard_n(i), rng);
+                        self.metrics.busy_add(0, t0.elapsed());
+                        self.metrics.shards.fetch_add(1, Ordering::Relaxed);
+                        Some(Ok(out))
+                    })
+                    .collect()
             }
-        } else {
-            let next = AtomicUsize::new(0);
-            std::thread::scope(|scope| {
-                for _ in 0..workers {
-                    scope.spawn(|| loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n_shards {
-                            break;
-                        }
-                        let out = run_shard(job, shard_n(i), rngs[i].clone());
-                        *results[i].lock().unwrap() = Some(out);
-                    });
+            Some(pool) => {
+                let batch = Arc::new(Batch::new(n_shards));
+                // SAFETY: we erase the job's lifetime to hand it to the
+                // long-lived pool threads. This is sound because this very
+                // function waits (below) until `done == n_shards` before
+                // returning, and every worker bumps `done` only after its
+                // last use of the pointer — so the borrow can never be
+                // outlived. See `JobPtr`.
+                let job_ptr =
+                    JobPtr(job as *const Job<'_> as *const Job<'static>);
+                {
+                    // One lock for the whole job keeps its shards
+                    // contiguous in the queue even with several
+                    // dispatchers submitting concurrently.
+                    let tx = pool.tx.lock().unwrap();
+                    for (i, rng) in rngs.into_iter().enumerate() {
+                        self.metrics.queue_push();
+                        tx.send(ShardTask {
+                            job: job_ptr,
+                            idx: i,
+                            n: shard_n(i),
+                            rng,
+                            batch: Arc::clone(&batch),
+                        })
+                        .expect("engine: pool queue closed while engine alive");
+                    }
                 }
-            });
-        }
+                let mut g = batch.inner.lock().unwrap();
+                while g.done < n_shards {
+                    g = batch.cv.wait(g).unwrap();
+                }
+                std::mem::take(&mut g.slots)
+            }
+        };
 
         // Merge in shard order — deterministic regardless of which worker
-        // finished first.
+        // finished first. A panicked shard is re-raised here, strictly
+        // after the wait above: by then no worker holds the job pointer.
         let mut xs = Vec::with_capacity(job.n * job.proc.dim_x());
         let mut us = Vec::with_capacity(job.n * job.proc.dim_u());
         let mut nfe = 0usize;
-        for cell in results {
-            let out = cell.into_inner().unwrap().expect("engine: shard never executed");
-            xs.extend_from_slice(&out.xs);
-            us.extend_from_slice(&out.us);
-            nfe = nfe.max(out.nfe);
+        for cell in slots.iter_mut() {
+            match cell.take().expect("engine: shard never executed") {
+                Ok(out) => {
+                    xs.extend_from_slice(&out.xs);
+                    us.extend_from_slice(&out.us);
+                    nfe = nfe.max(out.nfe);
+                }
+                Err(msg) => panic!("engine: shard panicked: {msg}"),
+            }
         }
         SampleOutput { xs, us, nfe, traj: None }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        if let Some(Pool { tx, handles }) = self.pool.take() {
+            // Closing the channel is the shutdown signal: recv() starts
+            // returning Err and each worker exits its loop.
+            drop(tx);
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Pool worker loop: pull shard tasks until the queue closes. Panics in
+/// sampler code are caught and parked in the result slot — a worker never
+/// dies mid-pool, and the panic resurfaces on the job's caller thread.
+fn pool_worker(rx: &Mutex<Receiver<ShardTask>>, metrics: &EngineMetrics, widx: usize) {
+    loop {
+        // Holding the lock across recv() is the single-consumer handoff:
+        // exactly one idle worker waits on the channel, the rest queue on
+        // the mutex. Err = sender dropped = engine shutdown.
+        let task = match rx.lock().unwrap().recv() {
+            Ok(t) => t,
+            Err(_) => return,
+        };
+        metrics.queue_pop();
+        let ShardTask { job, idx, n, rng, batch } = task;
+        let t0 = Instant::now();
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: `Engine::run` keeps the job alive until this shard
+            // (and all its siblings) are marked done below.
+            let job: &Job<'_> = unsafe { &*job.0 };
+            run_shard(job, n, rng)
+        }))
+        .map_err(|e| {
+            e.downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| e.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string())
+        });
+        metrics.busy_add(widx, t0.elapsed());
+        metrics.shards.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut g = batch.inner.lock().unwrap();
+            g.slots[idx] = Some(result);
+            g.done += 1;
+        }
+        batch.cv.notify_all();
     }
 }
 
@@ -185,6 +470,7 @@ fn run_shard(job: &Job<'_>, n: usize, mut rng: Rng) -> SampleOutput {
 #[allow(dead_code)]
 fn send_sync_audit() {
     fn assert_send_sync<T: Send + Sync + ?Sized>() {}
+    fn assert_send<T: Send>() {}
     assert_send_sync::<dyn Process>();
     assert_send_sync::<dyn ScoreModel>();
     assert_send_sync::<SamplerPlan>();
@@ -192,6 +478,7 @@ fn send_sync_audit() {
     assert_send_sync::<SampleOutput>();
     assert_send_sync::<Engine>();
     assert_send_sync::<Job<'_>>();
+    assert_send::<ShardTask>();
 }
 
 #[cfg(test)]
@@ -212,10 +499,19 @@ mod tests {
         (proc, spec, oracle)
     }
 
+    /// Pool size used by the concurrency-heavy tests; CI runs the suite a
+    /// second time with `GDDIM_TEST_WORKERS=4` to exercise real contention.
+    fn test_workers() -> usize {
+        std::env::var("GDDIM_TEST_WORKERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(2)
+    }
+
     #[test]
     fn merged_output_is_bit_identical_across_worker_counts() {
-        // The acceptance contract: N=1 and N=4 workers must produce the
-        // exact same bytes for the same seed.
+        // The acceptance contract: 1/2/4/8 workers must produce the exact
+        // same bytes for the same seed.
         let (proc, _spec, oracle) = cld_setup();
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 15);
         let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
@@ -230,10 +526,12 @@ mod tests {
             })
         };
         let a = run(1);
-        let b = run(4);
-        assert_eq!(a.xs, b.xs, "merged xs must be bit-identical");
-        assert_eq!(a.us, b.us, "merged us must be bit-identical");
-        assert_eq!(a.nfe, b.nfe);
+        for workers in [2usize, 4, 8] {
+            let b = run(workers);
+            assert_eq!(a.xs, b.xs, "merged xs must be bit-identical at {workers} workers");
+            assert_eq!(a.us, b.us, "merged us must be bit-identical at {workers} workers");
+            assert_eq!(a.nfe, b.nfe);
+        }
     }
 
     #[test]
@@ -319,8 +617,9 @@ mod tests {
     }
 
     #[test]
-    fn oversized_worker_count_is_clamped() {
-        // More workers than shards must not deadlock or panic.
+    fn oversized_worker_count_is_harmless() {
+        // More workers than shards must not deadlock or panic: the extra
+        // pool threads simply never see a task.
         let spec = presets::gmm2d();
         let proc = Arc::new(Vpsde::standard(spec.d));
         let oracle = GmmOracle::new(proc.clone(), spec.clone(), KtKind::R);
@@ -335,5 +634,135 @@ mod tests {
             seed: 4,
         });
         assert_eq!(out.xs.len(), 10 * spec.d);
+    }
+
+    #[test]
+    fn empty_job_is_served_without_touching_the_pool() {
+        let (proc, _spec, oracle) = cld_setup();
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 5);
+        for workers in [0usize, 1, 4] {
+            let engine = Engine::with_config(EngineConfig { workers, shard_size: 64 });
+            let out = engine.run(&Job {
+                proc: proc.as_ref(),
+                model: &oracle,
+                sampler: SamplerSpec::Ancestral { grid: &grid },
+                n: 0,
+                seed: 0,
+            });
+            assert!(out.xs.is_empty() && out.us.is_empty() && out.nfe == 0);
+            assert_eq!(engine.stats().jobs_run, 1);
+            assert_eq!(engine.stats().shards_executed, 0);
+        }
+    }
+
+    #[test]
+    fn zero_workers_falls_back_to_inline_and_matches_pooled() {
+        let (proc, _spec, oracle) = cld_setup();
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 8);
+        let run = |workers: usize| {
+            let engine = Engine::with_config(EngineConfig { workers, shard_size: 32 });
+            engine.run(&Job {
+                proc: proc.as_ref(),
+                model: &oracle,
+                sampler: SamplerSpec::Ancestral { grid: &grid },
+                n: 100,
+                seed: 17,
+            })
+        };
+        let zero = run(0);
+        assert_eq!(zero.xs, run(1).xs, "0 workers must run inline like 1");
+        assert_eq!(zero.xs, run(3).xs, "inline and pooled must agree");
+    }
+
+    #[test]
+    fn drop_while_idle_shuts_the_pool_down_cleanly() {
+        // Never-used pool: construct and drop. A shutdown bug (worker not
+        // observing the closed queue) hangs this test rather than failing
+        // an assert — that's the point.
+        let engine = Engine::with_config(EngineConfig { workers: 4, shard_size: 64 });
+        drop(engine);
+
+        // Used-then-idle pool: run a job, let the pool go idle, drop.
+        let (proc, _spec, oracle) = cld_setup();
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 6);
+        let engine = Engine::with_config(EngineConfig { workers: 4, shard_size: 16 });
+        let _ = engine.run(&Job {
+            proc: proc.as_ref(),
+            model: &oracle,
+            sampler: SamplerSpec::Ancestral { grid: &grid },
+            n: 64,
+            seed: 5,
+        });
+        assert_eq!(engine.stats().shards_executed, 4);
+        drop(engine);
+    }
+
+    #[test]
+    fn many_small_jobs_stress_no_shard_lost_or_duplicated() {
+        // Router-style usage: several caller threads share one engine and
+        // hammer it with small jobs. Every job's output must be byte-equal
+        // to the single-threaded reference — which is only possible if no
+        // shard is lost, duplicated, or cross-wired between jobs.
+        let (proc, _spec, oracle) = cld_setup();
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 6);
+        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let make_job = |seed: u64| Job {
+            proc: proc.as_ref(),
+            model: &oracle,
+            sampler: SamplerSpec::GddimDet(&plan),
+            n: 40, // 5 shards of 8
+            seed,
+        };
+        let reference = Engine::with_config(EngineConfig { workers: 1, shard_size: 8 });
+        let expected: Vec<Vec<f64>> =
+            (0..100u64).map(|seed| reference.run(&make_job(seed)).xs).collect();
+
+        let shared =
+            Engine::with_config(EngineConfig { workers: test_workers(), shard_size: 8 });
+        std::thread::scope(|scope| {
+            for caller in 0..4u64 {
+                let shared = &shared;
+                let expected = &expected;
+                let make_job = &make_job;
+                scope.spawn(move || {
+                    for k in 0..25u64 {
+                        let seed = caller * 25 + k;
+                        let out = shared.run(&make_job(seed));
+                        assert_eq!(
+                            out.xs, expected[seed as usize],
+                            "job seed {seed} diverged under the shared pool"
+                        );
+                    }
+                });
+            }
+        });
+        let stats = shared.stats();
+        assert_eq!(stats.jobs_run, 100);
+        assert_eq!(stats.shards_executed, 500, "every shard exactly once");
+    }
+
+    #[test]
+    fn counters_track_jobs_shards_and_busy_time() {
+        let (proc, _spec, oracle) = cld_setup();
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 8);
+        let engine = Engine::with_config(EngineConfig { workers: 2, shard_size: 16 });
+        for seed in 0..3u64 {
+            let _ = engine.run(&Job {
+                proc: proc.as_ref(),
+                model: &oracle,
+                sampler: SamplerSpec::Ancestral { grid: &grid },
+                n: 48, // 3 shards
+                seed,
+            });
+        }
+        let s = engine.stats();
+        assert_eq!(s.jobs_run, 3);
+        assert_eq!(s.shards_executed, 9);
+        assert!(s.peak_queue_depth >= 1 && s.peak_queue_depth <= 9);
+        assert_eq!(s.worker_busy_secs.len(), 2);
+        assert!(s.worker_busy_secs.iter().sum::<f64>() > 0.0);
+        assert!(s.busy_shares().iter().all(|b| (0.0..=1.0).contains(b)));
+        let line = s.to_string();
+        assert!(line.contains("jobs=3") && line.contains("shards=9"), "{line}");
     }
 }

@@ -25,9 +25,11 @@
 //! * [`data`] — synthetic datasets shared with the python build layer.
 //! * [`runtime`] — the PJRT client wrapper that loads `artifacts/*.hlo.txt`.
 //! * [`engine`] — the sharded parallel sampling engine: fixed-size shards,
-//!   per-shard RNG streams, deterministic merge, `std::thread` worker pool.
+//!   per-shard RNG streams, deterministic merge, a persistent worker pool
+//!   (mpsc job queue, condvar result collection, counters).
 //! * [`server`] — a batched sampling service (router + dynamic batcher +
-//!   the engine as its execution backend).
+//!   LRU plan cache + the engine as its execution backend).
+//! * [`workload`] — closed- and open-loop (SLO-at-rate) workload drivers.
 //! * [`exp`] — experiment harnesses regenerating every paper table/figure.
 
 pub mod math;

@@ -7,6 +7,7 @@
 //!   exp <table1|...|nll>   regenerate a paper table/figure (also via `cargo bench`)
 //!   coeffs                 time Stage-I plan construction (App. C.3 "within 1 min")
 //!   serve                  run the batched sampling service demo
+//!   workload               open-loop SLO workload: rate sweep + latency percentiles
 
 use std::sync::Arc;
 
@@ -32,14 +33,17 @@ fn main() {
         "coeffs" => coeffs(&args),
         "exp" => exp(&args),
         "serve" => serve(&args),
+        "workload" => workload(&args),
         _ => {
             eprintln!(
-                "usage: gddim <gen-configs|selfcheck|sample|coeffs|exp|serve> [--flags]\n\
+                "usage: gddim <gen-configs|selfcheck|sample|coeffs|exp|serve|workload> [--flags]\n\
                  sample flags: --process vpsde|cld|bdm --dataset gmm2d|hard2d|spiral2d|blobs8|faces8\n\
                  \u{20}              --sampler gddim|gddim-sde|em|ancestral|rk45|heun|sscs\n\
                  \u{20}              --nfe N --q Q --kt R|L --lambda L --n N --seed S --corrector\n\
-                 \u{20}              --workers W   (engine shard-pool size; rk45 runs unsharded)\n\
-                 serve flags:  --workers W --dispatchers D --requests R --samples S --rate RPS"
+                 \u{20}              --workers W   (persistent engine pool size; rk45 runs unsharded)\n\
+                 serve flags:  --workers W --dispatchers D --requests R --samples S --rate RPS\n\
+                 workload flags: --rates R1,R2,.. (or --rate R) --slo-ms M --poisson\n\
+                 \u{20}                --requests R --samples S --nfe N --workers W --dispatchers D"
             );
         }
     }
@@ -244,4 +248,8 @@ fn exp(args: &Args) {
 
 fn serve(args: &Args) {
     gddim::server::demo::run(args);
+}
+
+fn workload(args: &Args) {
+    gddim::workload::run_cli(args);
 }

@@ -157,6 +157,53 @@ mod tests {
     }
 
     #[test]
+    fn size_cut_counts_samples_not_requests() {
+        // Coalescing is by accumulated *samples*: 3 requests of 4 cross a
+        // max_batch of 10 (the threshold request is included in the cut).
+        let mut q = KeyQueue::new(BatcherConfig { max_batch: 10, max_wait: Duration::from_secs(9) });
+        q.push(env(0, 4));
+        q.push(env(1, 4));
+        assert!(!q.ready(Instant::now()), "8 < 10: not ready");
+        q.push(env(2, 4));
+        assert!(q.ready(Instant::now()), "12 >= 10: size cut fires");
+        let batch = q.cut();
+        assert_eq!(batch.len(), 2, "cut never exceeds max_batch: the 3rd request stays queued");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn partial_cuts_keep_sample_accounting_consistent() {
+        // After a partial cut the remaining queue must still fire a size
+        // cut at the same threshold — i.e. queued_samples tracks pops.
+        let mut q = KeyQueue::new(BatcherConfig { max_batch: 80, max_wait: Duration::from_secs(9) });
+        for i in 0..6 {
+            q.push(env(i, 40)); // 240 samples queued
+        }
+        assert_eq!(q.cut().len(), 2); // 80 out
+        assert!(q.ready(Instant::now()), "160 samples still ≥ max_batch");
+        assert_eq!(q.cut().len(), 2);
+        assert_eq!(q.cut().len(), 2);
+        assert!(q.is_empty());
+        assert!(!q.ready(Instant::now()), "drained queue must not fire");
+    }
+
+    #[test]
+    fn deadline_applies_to_oldest_not_newest() {
+        let mut q = KeyQueue::new(BatcherConfig {
+            max_batch: 1000,
+            max_wait: Duration::from_millis(50),
+        });
+        q.push(env(0, 1));
+        let now = Instant::now();
+        // A fresh request arriving later must not reset the clock of the
+        // oldest one.
+        q.push(env(1, 1));
+        assert!(q.ready(now + Duration::from_millis(60)), "oldest request's deadline rules");
+        let batch = q.cut();
+        assert_eq!(batch.len(), 2, "deadline cut takes everything under max_batch");
+    }
+
+    #[test]
     fn no_request_lost() {
         let mut q = KeyQueue::new(BatcherConfig { max_batch: 64, max_wait: Duration::ZERO });
         for i in 0..23 {

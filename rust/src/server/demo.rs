@@ -1,12 +1,13 @@
 //! `gddim serve` — drive the sampling service with a synthetic workload
-//! and print the metrics report (also used by `examples/serve_demo.rs`).
+//! and print the metrics report, including the engine pool's counters
+//! (also used by `examples/serve_demo.rs`).
 
 use std::time::Duration;
 
 use crate::engine::Engine;
 use crate::server::batcher::BatcherConfig;
 use crate::server::request::{GenRequest, PlanKey};
-use crate::server::router::{oracle_factory, Router};
+use crate::server::router::{oracle_factory, Router, RouterConfig};
 use crate::util::cli::Args;
 use crate::workload::{ClosedLoop, WorkloadSpec};
 
@@ -19,8 +20,11 @@ pub fn run(args: &Args) {
     let rate = args.get_f64("rate", 200.0);
     let max_wait_ms = args.get_u64("max-wait-ms", 5);
 
-    let router = Router::with_engine(
-        dispatchers,
+    let router = Router::with_options(
+        RouterConfig {
+            dispatchers,
+            plan_cache_capacity: args.get_usize("plan-cache", 64),
+        },
         Engine::new(workers),
         BatcherConfig {
             max_batch: args.get_usize("max-batch", 4096),
@@ -51,7 +55,10 @@ pub fn run(args: &Args) {
         key: key.clone(),
         seed,
     });
-    println!("{}", router.metrics().report());
+    // `report()` (vs `metrics().report()`) folds in the engine snapshot:
+    // jobs/shards, peak queue depth, per-worker busy shares.
+    println!("{}", router.report());
+    println!("plan cache: {} key(s) resident", router.plan_cache_len());
     let ok = responses.iter().filter(|r| !r.xs.is_empty()).count();
     println!("responses with data: {ok}/{n_requests}");
     router.shutdown();

@@ -1,0 +1,130 @@
+//! A small LRU cache for the router's Stage-I plan cache.
+//!
+//! Hand-rolled (offline build: no `lru` crate) and deliberately simple:
+//! recency is a monotone tick per entry and eviction scans for the
+//! minimum. That is O(capacity) per insert-at-capacity, which is the
+//! right trade at the capacities a plan cache runs at (tens of entries,
+//! each worth milliseconds of Stage-I rebuild) — no intrusive list to get
+//! wrong.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+pub struct LruCache<K, V> {
+    cap: usize,
+    tick: u64,
+    map: HashMap<K, (V, u64)>,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> LruCache<K, V> {
+    /// A cache holding at most `cap` entries (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> LruCache<K, V> {
+        LruCache { cap: cap.max(1), tick: 0, map: HashMap::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Look up `key`, marking it most-recently-used on a hit.
+    pub fn get(&mut self, key: &K) -> Option<V> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|(v, t)| {
+            *t = tick;
+            v.clone()
+        })
+    }
+
+    /// Insert `key → value`, evicting the least-recently-used entry if the
+    /// cache is at capacity and `key` is new. Returns the evicted key, if
+    /// any (observability: the router counts plan rebuilds).
+    pub fn insert(&mut self, key: K, value: V) -> Option<K> {
+        self.tick += 1;
+        let mut evicted = None;
+        if !self.map.contains_key(&key) && self.map.len() >= self.cap {
+            if let Some(lru) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, t))| *t)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&lru);
+                evicted = Some(lru);
+            }
+        }
+        self.map.insert(key, (value, self.tick));
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recently_used_first() {
+        let mut c: LruCache<&str, u32> = LruCache::new(2);
+        assert_eq!(c.insert("a", 1), None);
+        assert_eq!(c.insert("b", 2), None);
+        // Touch "a": now "b" is the LRU entry.
+        assert_eq!(c.get(&"a"), Some(1));
+        assert_eq!(c.insert("c", 3), Some("b"));
+        assert!(c.contains(&"a") && c.contains(&"c") && !c.contains(&"b"));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn eviction_order_follows_access_sequence() {
+        let mut c: LruCache<u32, u32> = LruCache::new(3);
+        for k in 0..3 {
+            c.insert(k, k);
+        }
+        // Recency now 0 < 1 < 2; each new key evicts the current minimum.
+        assert_eq!(c.insert(3, 3), Some(0));
+        assert_eq!(c.insert(4, 4), Some(1));
+        c.get(&3); // protect 3; next eviction takes 2
+        assert_eq!(c.insert(5, 5), Some(2));
+        assert!(c.contains(&3) && c.contains(&4) && c.contains(&5));
+    }
+
+    #[test]
+    fn reinserting_existing_key_does_not_evict() {
+        let mut c: LruCache<&str, u32> = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        assert_eq!(c.insert("a", 10), None, "overwrite is not an eviction");
+        assert_eq!(c.get(&"a"), Some(10));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn miss_does_not_perturb_recency() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.insert(1, 1);
+        c.insert(2, 2);
+        assert_eq!(c.get(&99), None);
+        assert_eq!(c.insert(3, 3), Some(1), "misses must not bump anything");
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one() {
+        let mut c: LruCache<u32, u32> = LruCache::new(0);
+        assert_eq!(c.capacity(), 1);
+        c.insert(1, 1);
+        assert_eq!(c.insert(2, 2), Some(1));
+        assert_eq!(c.len(), 1);
+    }
+}

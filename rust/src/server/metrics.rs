@@ -5,6 +5,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::engine::EngineStats;
 use crate::math::stats::Summary;
 
 #[derive(Default)]
@@ -46,9 +47,17 @@ impl ServerMetrics {
     }
 
     pub fn report(&self) -> MetricsReport {
+        self.report_with_engine(None)
+    }
+
+    /// Like [`ServerMetrics::report`], with an engine counter snapshot
+    /// attached (the router passes its shared engine's stats here so one
+    /// report covers both serving and execution layers).
+    pub fn report_with_engine(&self, engine: Option<EngineStats>) -> MetricsReport {
         let g = self.inner.lock().unwrap();
         let elapsed = g.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
         MetricsReport {
+            engine,
             latency: if g.latencies.is_empty() { None } else { Some(Summary::from(&g.latencies)) },
             mean_batch_requests: if g.batch_sizes.is_empty() {
                 0.0
@@ -66,6 +75,9 @@ impl ServerMetrics {
 }
 
 pub struct MetricsReport {
+    /// Execution-layer counters (jobs/shards/queue depth/worker busy
+    /// shares), when the caller has an engine to snapshot.
+    pub engine: Option<EngineStats>,
     pub latency: Option<Summary>,
     pub mean_batch_requests: f64,
     pub requests_done: u64,
@@ -88,6 +100,9 @@ impl std::fmt::Display for MetricsReport {
             self.nfe_total
         )?;
         writeln!(f, "throughput={:.0} samples/s over {:.2}s", self.samples_per_sec, self.elapsed)?;
+        if let Some(e) = &self.engine {
+            writeln!(f, "{e}")?;
+        }
         if let Some(l) = &self.latency {
             write!(f, "latency(s): {l}")?;
         }
@@ -112,5 +127,19 @@ mod tests {
         assert_eq!(r.nfe_total, 100);
         assert_eq!(r.latency.unwrap().n, 4);
         assert!((r.mean_batch_requests - 2.0).abs() < 1e-12);
+        assert!(r.engine.is_none(), "plain report carries no engine snapshot");
+    }
+
+    #[test]
+    fn engine_snapshot_rides_the_report() {
+        use crate::engine::Engine;
+        let m = ServerMetrics::new();
+        m.start_clock();
+        m.record_batch(1, 10, 5, &[0.1]);
+        let engine = Engine::new(1);
+        let r = m.report_with_engine(Some(engine.stats()));
+        let e = r.engine.as_ref().unwrap();
+        assert_eq!(e.jobs_run, 0);
+        assert!(r.to_string().contains("engine: workers=1"), "{r}");
     }
 }

@@ -13,9 +13,10 @@
 
 pub mod request;
 pub mod batcher;
+pub mod lru;
 pub mod router;
 pub mod metrics;
 pub mod demo;
 
 pub use request::{GenRequest, GenResponse, PlanKey};
-pub use router::Router;
+pub use router::{Router, RouterConfig};

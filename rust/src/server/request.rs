@@ -66,8 +66,14 @@ pub struct GenResponse {
     pub dim_x: usize,
     /// NFE consumed by the batch this request rode in.
     pub nfe: usize,
-    /// Queueing + execution latency (seconds).
+    /// End-to-end latency (seconds): `queue_latency + service_latency`.
     pub latency: f64,
+    /// Time spent queued before the batch was cut and execution started
+    /// (seconds) — this is the component that explodes under overload.
+    pub queue_latency: f64,
+    /// Time spent preparing + executing the batch this request rode in
+    /// (seconds); identical for all members of one batch.
+    pub service_latency: f64,
     /// How many requests shared the batch (observability).
     pub batch_size: usize,
 }

@@ -20,7 +20,8 @@ use crate::engine::{Engine, Job, SamplerSpec};
 use crate::score::model::ScoreModel;
 use crate::score::oracle::GmmOracle;
 use crate::server::batcher::{BatcherConfig, KeyQueue};
-use crate::server::metrics::ServerMetrics;
+use crate::server::lru::LruCache;
+use crate::server::metrics::{MetricsReport, ServerMetrics};
 use crate::server::request::{Envelope, GenRequest, GenResponse, PlanKey, SamplerKind};
 
 /// Everything needed to execute one key's batches.
@@ -69,11 +70,29 @@ pub fn oracle_factory() -> Box<PreparedFactory> {
     })
 }
 
+/// Router-level knobs (the batcher has its own [`BatcherConfig`]).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Threads cutting and routing batches.
+    pub dispatchers: usize,
+    /// Capacity of the [`Prepared`] plan cache. Bounded (LRU) so a
+    /// long-tailed key population can't grow the cache without bound;
+    /// an evicted key just pays Stage-I again on its next request
+    /// (App. C.3: milliseconds, not a correctness event).
+    pub plan_cache_capacity: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { dispatchers: 2, plan_cache_capacity: 64 }
+    }
+}
+
 struct Shared {
     queues: Mutex<HashMap<PlanKey, KeyQueue>>,
     cv: Condvar,
     stop: AtomicBool,
-    prepared: Mutex<HashMap<PlanKey, Arc<Prepared>>>,
+    prepared: Mutex<LruCache<PlanKey, Arc<Prepared>>>,
     factory: Box<PreparedFactory>,
     engine: Engine,
     pub metrics: ServerMetrics,
@@ -105,11 +124,22 @@ impl Router {
         cfg: BatcherConfig,
         factory: Box<PreparedFactory>,
     ) -> Router {
+        let rcfg = RouterConfig { dispatchers: n_dispatchers, ..RouterConfig::default() };
+        Router::with_options(rcfg, engine, cfg, factory)
+    }
+
+    /// Everything configurable, including the plan-cache bound.
+    pub fn with_options(
+        rcfg: RouterConfig,
+        engine: Engine,
+        cfg: BatcherConfig,
+        factory: Box<PreparedFactory>,
+    ) -> Router {
         let shared = Arc::new(Shared {
             queues: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
             stop: AtomicBool::new(false),
-            prepared: Mutex::new(HashMap::new()),
+            prepared: Mutex::new(LruCache::new(rcfg.plan_cache_capacity)),
             factory,
             engine,
             metrics: ServerMetrics::new(),
@@ -117,7 +147,7 @@ impl Router {
             batcher_max_wait: cfg.max_wait,
         });
         shared.metrics.start_clock();
-        let workers = (0..n_dispatchers.max(1))
+        let workers = (0..rcfg.dispatchers.max(1))
             .map(|w| {
                 let sh = shared.clone();
                 std::thread::Builder::new()
@@ -150,6 +180,23 @@ impl Router {
 
     pub fn metrics(&self) -> &ServerMetrics {
         &self.shared.metrics
+    }
+
+    /// One report covering both layers: server counters plus a snapshot
+    /// of the shared engine's pool counters.
+    pub fn report(&self) -> MetricsReport {
+        self.shared.metrics.report_with_engine(Some(self.shared.engine.stats()))
+    }
+
+    /// Entries currently held by the Stage-I plan cache (observability +
+    /// eviction tests).
+    pub fn plan_cache_len(&self) -> usize {
+        self.shared.prepared.lock().unwrap().len()
+    }
+
+    /// Whether `key`'s Stage-I state is currently cached.
+    pub fn plan_cache_contains(&self, key: &PlanKey) -> bool {
+        self.shared.prepared.lock().unwrap().contains(key)
     }
 
     /// Graceful shutdown: drain queues, stop workers.
@@ -216,14 +263,25 @@ fn worker_loop(sh: Arc<Shared>) {
 
 fn prepared_for(sh: &Shared, key: &PlanKey) -> Arc<Prepared> {
     if let Some(p) = sh.prepared.lock().unwrap().get(key) {
-        return p.clone();
+        return p;
     }
     // Build outside the lock (plan construction can take milliseconds).
     let built = (sh.factory)(key);
-    sh.prepared.lock().unwrap().entry(key.clone()).or_insert(built).clone()
+    let mut cache = sh.prepared.lock().unwrap();
+    // Another dispatcher may have built the same key while we did; keep
+    // the first build so every batch of a key sees one Prepared.
+    if let Some(p) = cache.get(key) {
+        return p;
+    }
+    cache.insert(key.clone(), built.clone());
+    built
 }
 
 fn execute_batch(sh: &Shared, batch: Vec<Envelope>) {
+    // The queueing/service split is measured here: everything before
+    // `t_exec` is queueing (batcher wait + dispatcher pickup), everything
+    // after — plan lookup/build + engine run — is service.
+    let t_exec = Instant::now();
     let key = batch[0].req.key.clone();
     let prep = prepared_for(sh, &key);
     let total_n: usize = batch.iter().map(|e| e.req.n).sum();
@@ -251,17 +309,19 @@ fn execute_batch(sh: &Shared, batch: Vec<Envelope>) {
     // Record metrics *before* fanning out responses: a client that has
     // received its response must observe it in the counters.
     let now = Instant::now();
+    let service = now.duration_since(t_exec).as_secs_f64();
     let n_requests = batch.len();
-    let latencies: Vec<f64> = batch
+    let queue_lats: Vec<f64> = batch
         .iter()
-        .map(|env| now.duration_since(env.enqueued).as_secs_f64())
+        .map(|env| t_exec.duration_since(env.enqueued).as_secs_f64())
         .collect();
+    let latencies: Vec<f64> = queue_lats.iter().map(|q| q + service).collect();
     sh.metrics.record_batch(n_requests, total_n, out.nfe, &latencies);
 
     // Fan out per-request slices.
     let dim_x = prep.dim_x;
     let mut offset = 0usize;
-    for (env, latency) in batch.into_iter().zip(latencies) {
+    for (env, queue_latency) in batch.into_iter().zip(queue_lats) {
         let n = env.req.n;
         let xs = out.xs[offset * dim_x..(offset + n) * dim_x].to_vec();
         offset += n;
@@ -270,7 +330,9 @@ fn execute_batch(sh: &Shared, batch: Vec<Envelope>) {
             xs,
             dim_x,
             nfe: out.nfe,
-            latency,
+            latency: queue_latency + service,
+            queue_latency,
+            service_latency: service,
             batch_size: n_requests,
         });
     }
@@ -347,6 +409,69 @@ mod tests {
         let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
         assert_eq!(resp.xs.len(), 500 * 2);
         assert!(resp.xs.iter().all(|x| x.is_finite()));
+        router.shutdown();
+    }
+
+    #[test]
+    fn plan_cache_evicts_least_recently_used_key() {
+        let router = Router::with_options(
+            RouterConfig { dispatchers: 1, plan_cache_capacity: 2 },
+            Engine::new(1),
+            BatcherConfig::default(),
+            oracle_factory(),
+        );
+        let k1 = PlanKey::gddim("vpsde", "gmm2d", 5, 1);
+        let k2 = PlanKey::gddim("cld", "gmm2d", 5, 1);
+        let k3 = PlanKey::gddim("vpsde", "gmm2d", 8, 1);
+        for k in [&k1, &k2, &k3] {
+            let rx = router.submit(GenRequest { id: 0, n: 4, key: k.clone(), seed: 0 });
+            rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        }
+        assert_eq!(router.plan_cache_len(), 2, "cache must stay at capacity");
+        assert!(!router.plan_cache_contains(&k1), "oldest key must be evicted");
+        assert!(router.plan_cache_contains(&k2) && router.plan_cache_contains(&k3));
+        // A request for the evicted key rebuilds it (evicting k2, now LRU).
+        let rx = router.submit(GenRequest { id: 9, n: 4, key: k1.clone(), seed: 0 });
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.xs.len(), 4 * 2);
+        assert!(router.plan_cache_contains(&k1));
+        assert!(!router.plan_cache_contains(&k2));
+        router.shutdown();
+    }
+
+    #[test]
+    fn latency_split_adds_up() {
+        let router = Router::new(1, BatcherConfig::default(), oracle_factory());
+        let rx = router.submit(GenRequest { id: 0, n: 64, key: key(), seed: 1 });
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(resp.queue_latency >= 0.0 && resp.service_latency > 0.0);
+        assert!(
+            (resp.queue_latency + resp.service_latency - resp.latency).abs() < 1e-9,
+            "queue {} + service {} != total {}",
+            resp.queue_latency,
+            resp.service_latency,
+            resp.latency
+        );
+        router.shutdown();
+    }
+
+    #[test]
+    fn report_includes_engine_counters() {
+        use crate::engine::EngineConfig;
+        let router = Router::with_engine(
+            1,
+            Engine::with_config(EngineConfig { workers: 2, shard_size: 32 }),
+            BatcherConfig::default(),
+            oracle_factory(),
+        );
+        let rx = router.submit(GenRequest { id: 0, n: 100, key: key(), seed: 1 });
+        rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let report = router.report();
+        let e = report.engine.as_ref().expect("router report carries engine stats");
+        assert_eq!(e.workers, 2);
+        assert_eq!(e.jobs_run, 1);
+        assert_eq!(e.shards_executed, 4, "100 samples / shard_size 32 = 4 shards");
+        assert!(report.to_string().contains("engine: workers=2"));
         router.shutdown();
     }
 

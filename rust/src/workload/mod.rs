@@ -1,11 +1,22 @@
 //! Workload generation for the serving benches: Poisson arrivals over a
 //! mix of plan keys, driven open- or closed-loop against a [`Router`],
 //! plus a direct [`Engine`] throughput driver for worker-scaling sweeps.
+//!
+//! The two loop disciplines answer different questions:
+//!
+//! * [`ClosedLoop`] waits for every response before reporting — good for
+//!   throughput, but under overload its effective arrival rate silently
+//!   degrades to the service rate, which *hides* tail latency.
+//! * [`OpenLoop`] injects requests on a schedule fixed before the run
+//!   starts, regardless of completions — the standard SLO methodology
+//!   (queueing delay is allowed to grow without bound, and the p99 shows
+//!   it). [`max_rate_under_slo`] sweeps rates against a latency target.
 
 use std::time::{Duration, Instant};
 
 use crate::engine::{Engine, Job};
 use crate::math::rng::Rng;
+use crate::math::stats::Summary;
 use crate::server::request::{GenRequest, GenResponse, PlanKey};
 use crate::server::router::Router;
 
@@ -13,7 +24,7 @@ use crate::server::router::Router;
 pub struct WorkloadSpec {
     pub n_requests: usize,
     pub samples_per_request: usize,
-    /// Poisson arrival rate (requests/second). `f64::INFINITY` = burst.
+    /// Arrival rate (requests/second). `f64::INFINITY` = burst.
     pub rate_per_sec: f64,
     /// Keys are drawn round-robin.
     pub keys: Vec<PlanKey>,
@@ -59,18 +70,372 @@ impl ClosedLoop {
     }
 }
 
-/// Drive one engine job back-to-back `repeats` times and report steady
-/// throughput in samples/second. The serving and micro benches use this
-/// for the worker-scaling sweep (`--workers 1` vs `--workers N`).
+/// Open-loop driver: the injection schedule is computed *before* the run
+/// from `(rate, seed)` alone, and requests are submitted at those times
+/// whether or not earlier ones have completed. Responses are collected
+/// afterwards; per-request queueing and service latency come from the
+/// router's own timestamps, so serial collection does not distort them.
+///
+/// Latencies are charged from the request's **scheduled** arrival time:
+/// if the injecting thread itself falls behind the schedule, the lag is
+/// added to that request's queueing latency rather than silently
+/// excluded (the classic coordinated-omission error, which would let an
+/// overloaded run report a flattering p99).
+pub struct OpenLoop {
+    pub spec: WorkloadSpec,
+    /// `false` = evenly spaced arrivals at exactly `rate_per_sec`;
+    /// `true` = Poisson arrivals with that mean rate (seeded, so the
+    /// schedule is still deterministic).
+    pub poisson: bool,
+    /// Per-response collection timeout; a request unanswered within it is
+    /// counted in [`OpenLoopRun::dropped`] rather than hanging the bench.
+    pub timeout: Duration,
+}
+
+impl OpenLoop {
+    pub fn new(spec: WorkloadSpec) -> OpenLoop {
+        OpenLoop { spec, poisson: false, timeout: Duration::from_secs(300) }
+    }
+
+    pub fn poisson(spec: WorkloadSpec) -> OpenLoop {
+        OpenLoop { poisson: true, ..OpenLoop::new(spec) }
+    }
+
+    /// The arrival schedule (seconds from run start), a pure function of
+    /// the spec — this is what makes the workload replayable.
+    pub fn schedule(&self) -> Vec<f64> {
+        let n = self.spec.n_requests;
+        if !self.spec.rate_per_sec.is_finite() {
+            return vec![0.0; n]; // burst: everything at t=0
+        }
+        assert!(self.spec.rate_per_sec > 0.0, "open loop needs a positive rate");
+        if self.poisson {
+            let mut rng = Rng::seed_from(self.spec.seed);
+            let mut t = 0.0f64;
+            (0..n)
+                .map(|_| {
+                    t += rng.exponential(self.spec.rate_per_sec);
+                    t
+                })
+                .collect()
+        } else {
+            (0..n).map(|i| i as f64 / self.spec.rate_per_sec).collect()
+        }
+    }
+
+    pub fn drive(
+        &self,
+        router: &Router,
+        make: impl Fn(u64, &PlanKey, usize, u64) -> GenRequest,
+    ) -> OpenLoopRun {
+        let schedule = self.schedule();
+        let start = Instant::now();
+        let mut rxs = Vec::with_capacity(schedule.len());
+        let mut lags = Vec::with_capacity(schedule.len());
+        for (i, &at) in schedule.iter().enumerate() {
+            let target = Duration::from_secs_f64(at);
+            let elapsed = start.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+            // Injector lag: how far behind its own schedule the submit
+            // happens. Charged to the request below.
+            lags.push((start.elapsed().as_secs_f64() - at).max(0.0));
+            let id = i as u64;
+            let key = &self.spec.keys[i % self.spec.keys.len()];
+            rxs.push(router.submit(make(id, key, self.spec.samples_per_request, id)));
+        }
+        let inject_elapsed = start.elapsed().as_secs_f64();
+        let mut responses = Vec::with_capacity(rxs.len());
+        let mut dropped = 0usize;
+        for (i, rx) in rxs.into_iter().enumerate() {
+            match rx.recv_timeout(self.timeout) {
+                Ok(mut r) => {
+                    // Coordinated-omission correction: the clock starts at
+                    // the scheduled arrival, so a late submit inflates the
+                    // request's queueing (and total) latency.
+                    r.queue_latency += lags[i];
+                    r.latency += lags[i];
+                    responses.push(r);
+                }
+                Err(_) => dropped += 1,
+            }
+        }
+        OpenLoopRun {
+            offered_rate: self.spec.rate_per_sec,
+            issued: schedule.len(),
+            dropped,
+            inject_elapsed,
+            max_inject_lag: lags.iter().cloned().fold(0.0, f64::max),
+            elapsed: start.elapsed().as_secs_f64(),
+            responses,
+        }
+    }
+}
+
+/// Raw outcome of one open-loop run (responses kept for fine-grained
+/// assertions; [`OpenLoopRun::report`] condenses them).
+pub struct OpenLoopRun {
+    pub offered_rate: f64,
+    pub issued: usize,
+    pub dropped: usize,
+    /// Seconds the injection phase took (≈ last schedule entry unless the
+    /// submitting thread itself fell behind).
+    pub inject_elapsed: f64,
+    /// Worst injector lag behind the schedule (already charged into the
+    /// affected requests' queueing latency; surfaced for observability).
+    pub max_inject_lag: f64,
+    /// Seconds until the last response was collected (or timed out).
+    pub elapsed: f64,
+    pub responses: Vec<GenResponse>,
+}
+
+impl OpenLoopRun {
+    pub fn report(&self) -> OpenLoopReport {
+        let pull = |f: fn(&GenResponse) -> f64| -> Option<Summary> {
+            if self.responses.is_empty() {
+                None
+            } else {
+                Some(Summary::from(&self.responses.iter().map(f).collect::<Vec<f64>>()))
+            }
+        };
+        OpenLoopReport {
+            offered_rate: self.offered_rate,
+            issued: self.issued,
+            completed: self.responses.len(),
+            dropped: self.dropped,
+            max_inject_lag: self.max_inject_lag,
+            achieved_rate: if self.elapsed > 0.0 {
+                self.responses.len() as f64 / self.elapsed
+            } else {
+                0.0
+            },
+            elapsed: self.elapsed,
+            queueing: pull(|r| r.queue_latency),
+            service: pull(|r| r.service_latency),
+            total: pull(|r| r.latency),
+        }
+    }
+}
+
+/// Condensed open-loop results: completion counts, achieved rate, and
+/// p50/p95/p99 for queueing, service, and total latency.
+#[derive(Clone, Debug)]
+pub struct OpenLoopReport {
+    pub offered_rate: f64,
+    pub issued: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    /// Worst injector lag behind the schedule (already folded into the
+    /// queueing/total summaries — see [`OpenLoop`] on coordinated
+    /// omission).
+    pub max_inject_lag: f64,
+    pub achieved_rate: f64,
+    pub elapsed: f64,
+    pub queueing: Option<Summary>,
+    pub service: Option<Summary>,
+    pub total: Option<Summary>,
+}
+
+impl OpenLoopReport {
+    /// SLO check used by [`max_rate_under_slo`]: every issued request
+    /// completed and total-latency p99 is within `slo_secs`.
+    pub fn meets_slo(&self, slo_secs: f64) -> bool {
+        self.dropped == 0
+            && self.completed == self.issued
+            && self.total.as_ref().is_some_and(|t| t.p99 <= slo_secs)
+    }
+}
+
+impl std::fmt::Display for OpenLoopReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let rate = if self.offered_rate.is_finite() {
+            format!("{:.0} req/s", self.offered_rate)
+        } else {
+            "burst".to_string()
+        };
+        writeln!(
+            f,
+            "open-loop @ {rate}: issued={} completed={} dropped={} achieved={:.0} req/s \
+             over {:.2}s (max inject lag {:.4}s)",
+            self.issued,
+            self.completed,
+            self.dropped,
+            self.achieved_rate,
+            self.elapsed,
+            self.max_inject_lag
+        )?;
+        if let (Some(q), Some(s), Some(t)) = (&self.queueing, &self.service, &self.total) {
+            writeln!(f, "  queueing(s): p50={:.4} p95={:.4} p99={:.4}", q.p50, q.p95, q.p99)?;
+            writeln!(f, "  service(s):  p50={:.4} p95={:.4} p99={:.4}", s.p50, s.p95, s.p99)?;
+            write!(
+                f,
+                "  total(s):    p50={:.4} p95={:.4} p99={:.4} max={:.4}",
+                t.p50, t.p95, t.p99, t.max
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// One rate point of an SLO sweep.
+pub struct SloPoint {
+    pub rate: f64,
+    pub report: OpenLoopReport,
+    pub meets_slo: bool,
+}
+
+/// Result of [`max_rate_under_slo`]: every probed point plus the highest
+/// rate whose p99 stayed within the SLO.
+pub struct SloSweep {
+    pub slo_secs: f64,
+    pub points: Vec<SloPoint>,
+    pub max_rate: Option<f64>,
+}
+
+/// One self-contained open-loop probe: build a fresh oracle-backed
+/// router, warm the plan cache for every key (Stage-I builds must not
+/// land on the first arrivals — App. C.3), drive the run, tear the
+/// router down. The per-rate harness shared by `gddim workload` and
+/// `cargo bench --bench serving`; returns the open-loop report plus the
+/// router's combined server+engine metrics.
+pub fn open_loop_probe(
+    rcfg: crate::server::router::RouterConfig,
+    engine_workers: usize,
+    bcfg: crate::server::batcher::BatcherConfig,
+    spec: WorkloadSpec,
+    poisson: bool,
+) -> (OpenLoopReport, crate::server::metrics::MetricsReport) {
+    let router = Router::with_options(
+        rcfg,
+        Engine::new(engine_workers),
+        bcfg,
+        crate::server::router::oracle_factory(),
+    );
+    for key in &spec.keys {
+        let rx = router.submit(GenRequest { id: u64::MAX, n: 1, key: key.clone(), seed: 0 });
+        let _ = rx.recv_timeout(Duration::from_secs(60));
+    }
+    let driver = if poisson { OpenLoop::poisson(spec) } else { OpenLoop::new(spec) };
+    let run = driver.drive(&router, |id, key, n, seed| GenRequest {
+        id,
+        n,
+        key: key.clone(),
+        seed,
+    });
+    let report = run.report();
+    let metrics = router.report();
+    router.shutdown();
+    (report, metrics)
+}
+
+/// Probe `rates` (each via `run_at`, typically [`open_loop_probe`]) and
+/// report the maximum rate meeting `p99 ≤ slo_secs`.
+pub fn max_rate_under_slo(
+    rates: &[f64],
+    slo_secs: f64,
+    mut run_at: impl FnMut(f64) -> OpenLoopReport,
+) -> SloSweep {
+    let mut points = Vec::with_capacity(rates.len());
+    let mut max_rate: Option<f64> = None;
+    for &rate in rates {
+        let report = run_at(rate);
+        let meets_slo = report.meets_slo(slo_secs);
+        if meets_slo {
+            max_rate = Some(max_rate.map_or(rate, |m| m.max(rate)));
+        }
+        points.push(SloPoint { rate, report, meets_slo });
+    }
+    SloSweep { slo_secs, points, max_rate }
+}
+
+/// Drive one engine job back-to-back and report steady throughput in
+/// samples/second. The *first* of the `repeats` runs is the warm-up
+/// (pool spin-up, plan caches, allocator, pages) and is excluded from the
+/// timed window, so cold-start cost cannot skew the rate; with
+/// `repeats == 1` the single run is necessarily both. Exactly `repeats`
+/// jobs are executed — there is no hidden extra run.
 pub fn engine_throughput(engine: &Engine, job: &Job<'_>, repeats: usize) -> f64 {
     assert!(repeats > 0);
-    // One warmup run outside the clock (plan caches, allocator, pages).
-    let _ = engine.run(job);
-    let t0 = Instant::now();
-    for _ in 0..repeats {
+    let mut t0 = Instant::now();
+    let mut timed = 0usize;
+    for r in 0..repeats {
         let _ = engine.run(job);
+        if r == 0 && repeats > 1 {
+            t0 = Instant::now(); // warm-up done; open the timed window
+        } else {
+            timed += 1;
+        }
     }
-    (repeats * job.n) as f64 / t0.elapsed().as_secs_f64()
+    (timed * job.n) as f64 / t0.elapsed().as_secs_f64().max(1e-12)
+}
+
+/// `gddim workload` — open-loop SLO characterization from the CLI: sweep
+/// injection rates against a fresh router each, print per-rate latency
+/// percentiles and the max rate meeting the SLO.
+pub fn run_cli(args: &crate::util::cli::Args) {
+    let workers = args.get_usize("workers", 4);
+    let dispatchers = args.get_usize("dispatchers", 2);
+    let n_requests = args.get_usize("requests", 64);
+    let samples = args.get_usize("samples", 64);
+    let nfe = args.get_usize("nfe", 20);
+    let slo_ms = args.get_f64("slo-ms", 50.0);
+    let seed = args.get_u64("seed", 0);
+    let poisson = args.has("poisson");
+    let rates: Vec<f64> = match args.get("rates") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().parse().expect("bad --rates entry"))
+            .collect(),
+        None => vec![args.get_f64("rate", 200.0)],
+    };
+
+    use crate::server::batcher::BatcherConfig;
+    use crate::server::router::RouterConfig;
+
+    println!(
+        "open-loop workload: {} requests × {} samples, NFE {}, {} workers, {} dispatchers, \
+         SLO p99 ≤ {:.0}ms, arrivals {}",
+        n_requests,
+        samples,
+        nfe,
+        workers,
+        dispatchers,
+        slo_ms,
+        if poisson { "poisson" } else { "uniform" },
+    );
+    let keys = vec![
+        PlanKey::gddim("vpsde", "gmm2d", nfe, 2),
+        PlanKey::gddim("cld", "gmm2d", nfe, 2),
+    ];
+    let sweep = max_rate_under_slo(&rates, slo_ms / 1e3, |rate| {
+        let (report, metrics) = open_loop_probe(
+            RouterConfig {
+                dispatchers,
+                plan_cache_capacity: args.get_usize("plan-cache", 64),
+            },
+            workers,
+            BatcherConfig {
+                max_batch: args.get_usize("max-batch", 4096),
+                max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 5)),
+            },
+            WorkloadSpec {
+                n_requests,
+                samples_per_request: samples,
+                rate_per_sec: rate,
+                keys: keys.clone(),
+                seed,
+            },
+            poisson,
+        );
+        println!("{report}");
+        println!("{metrics}");
+        report
+    });
+    match sweep.max_rate {
+        Some(r) => println!("max rate under SLO (p99 ≤ {:.0}ms): {r:.0} req/s", slo_ms),
+        None => println!("no probed rate met the SLO (p99 ≤ {:.0}ms)", slo_ms),
+    }
 }
 
 #[cfg(test)]
@@ -124,6 +489,212 @@ mod tests {
             seed: 1,
         };
         assert!(engine_throughput(&engine, &job, 2) > 0.0);
+        assert!(engine_throughput(&engine, &job, 1) > 0.0, "repeats=1 must not divide by zero");
+    }
+
+    /// An ε-model that counts invocations (and optionally sleeps a fixed
+    /// time per call): the instrument behind the warm-up-exclusion and
+    /// open-loop accounting tests.
+    struct CountingModel {
+        d: usize,
+        calls: std::sync::atomic::AtomicUsize,
+        pause: Duration,
+    }
+
+    impl CountingModel {
+        fn new(d: usize, pause: Duration) -> Self {
+            CountingModel { d, calls: std::sync::atomic::AtomicUsize::new(0), pause }
+        }
+
+        fn calls(&self) -> usize {
+            self.calls.load(std::sync::atomic::Ordering::SeqCst)
+        }
+    }
+
+    impl crate::score::model::ScoreModel for CountingModel {
+        fn dim_u(&self) -> usize {
+            self.d
+        }
+
+        fn kt_kind(&self) -> crate::diffusion::process::KtKind {
+            crate::diffusion::process::KtKind::R
+        }
+
+        fn eps_batch(&self, _t: f64, _us: &[f64], out: &mut [f64]) {
+            self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            if !self.pause.is_zero() {
+                std::thread::sleep(self.pause);
+            }
+            out.fill(0.0);
+        }
+    }
+
+    #[test]
+    fn engine_throughput_runs_exactly_repeats_jobs() {
+        use crate::diffusion::{Process, TimeGrid, Vpsde};
+        use crate::engine::SamplerSpec;
+        let proc = Vpsde::standard(2);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 4);
+        let model = CountingModel::new(2, Duration::ZERO);
+        let engine = Engine::new(1);
+        let job = Job {
+            proc: &proc,
+            model: &model,
+            sampler: SamplerSpec::Ancestral { grid: &grid },
+            n: 16,
+            seed: 2,
+        };
+        // Calibrate ε-calls per run, then check the driver adds none.
+        let _ = engine.run(&job);
+        let per_run = model.calls();
+        assert!(per_run > 0);
+        let before = model.calls();
+        let _ = engine_throughput(&engine, &job, 3);
+        assert_eq!(
+            model.calls() - before,
+            3 * per_run,
+            "engine_throughput must execute exactly `repeats` jobs (warm-up \
+             is the first repeat, not an extra run)"
+        );
+    }
+
+    #[test]
+    fn open_loop_schedule_is_deterministic_and_rate_true() {
+        let spec = WorkloadSpec {
+            n_requests: 100,
+            samples_per_request: 1,
+            rate_per_sec: 50.0,
+            keys: vec![PlanKey::gddim("vpsde", "gmm2d", 5, 1)],
+            seed: 11,
+        };
+        let uniform = OpenLoop::new(spec.clone());
+        assert_eq!(uniform.schedule(), uniform.schedule());
+        let sched = uniform.schedule();
+        assert_eq!(sched[0], 0.0);
+        assert!((sched[99] - 99.0 / 50.0).abs() < 1e-12, "uniform spacing at the rate");
+
+        let poisson = OpenLoop::poisson(spec.clone());
+        assert_eq!(poisson.schedule(), poisson.schedule(), "poisson schedule is seeded");
+        let p = poisson.schedule();
+        assert!(p.windows(2).all(|w| w[1] > w[0]), "arrival times increase");
+        // Mean inter-arrival ≈ 1/rate (100 draws: generous band).
+        let mean_gap = p[99] / 99.0;
+        assert!((mean_gap - 0.02).abs() < 0.01, "mean gap {mean_gap}");
+
+        let burst = OpenLoop::new(WorkloadSpec { rate_per_sec: f64::INFINITY, ..spec });
+        assert!(burst.schedule().iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn open_loop_accounting_on_fixed_cost_engine() {
+        use crate::coeffs::plan::{PlanConfig, SamplerPlan};
+        use crate::diffusion::process::KtKind;
+        use crate::diffusion::{Process, TimeGrid, Vpsde};
+        use crate::server::router::Prepared;
+        use std::sync::Arc;
+
+        // A synthetic fixed-cost backend: every ε call sleeps PAUSE, so a
+        // request's service latency is ≈ NFE × PAUSE and the open-loop
+        // accounting can be checked against a known floor.
+        const NFE: usize = 4;
+        const PAUSE: Duration = Duration::from_millis(2);
+        let factory: Box<crate::server::router::PreparedFactory> =
+            Box::new(move |key: &PlanKey| {
+                let proc = Arc::new(Vpsde::standard(2));
+                let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), key.nfe);
+                let plan = SamplerPlan::build(
+                    proc.as_ref(),
+                    &grid,
+                    &PlanConfig::deterministic(key.q, KtKind::R),
+                );
+                Arc::new(Prepared {
+                    dim_x: proc.dim_x(),
+                    model: Arc::new(CountingModel::new(proc.dim_u(), PAUSE)),
+                    plan: Some(Arc::new(plan)),
+                    grid,
+                    proc,
+                })
+            });
+        let router = Router::new(
+            1,
+            BatcherConfig { max_batch: 4096, max_wait: Duration::from_millis(1) },
+            factory,
+        );
+        let spec = WorkloadSpec {
+            n_requests: 12,
+            samples_per_request: 4,
+            rate_per_sec: 500.0,
+            keys: vec![PlanKey::gddim("vpsde", "gmm2d", NFE, 1)],
+            seed: 5,
+        };
+        let run = OpenLoop::new(spec).drive(&router, |id, key, n, seed| GenRequest {
+            id,
+            n,
+            key: key.clone(),
+            seed,
+        });
+        assert_eq!(run.issued, 12);
+        assert_eq!(run.responses.len(), 12, "open loop must collect every response");
+        assert_eq!(run.dropped, 0);
+        assert!(run.max_inject_lag >= 0.0 && run.max_inject_lag.is_finite());
+        for r in &run.responses {
+            assert!(r.queue_latency >= 0.0 && r.service_latency > 0.0);
+            assert!(
+                (r.queue_latency + r.service_latency - r.latency).abs() < 1e-9,
+                "latency split must add up exactly"
+            );
+        }
+        let report = run.report();
+        let service = report.service.as_ref().unwrap();
+        let floor = (NFE as f64) * PAUSE.as_secs_f64();
+        assert!(
+            service.p50 >= 0.5 * floor,
+            "service p50 {} below the fixed-cost floor {}",
+            service.p50,
+            floor
+        );
+        let (q, t) = (report.queueing.as_ref().unwrap(), report.total.as_ref().unwrap());
+        assert!(t.p50 >= service.p50, "total dominates service pointwise");
+        assert!(q.p50 <= t.p50);
+        for s in [q, service, t] {
+            assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn max_rate_under_slo_picks_the_highest_passing_rate() {
+        // Synthetic reports: p99 grows linearly with rate, so an SLO of
+        // 0.1s passes 10/20/40 and fails 80.
+        let fake = |rate: f64| {
+            let p99 = rate / 400.0; // 0.025, 0.05, 0.1 → pass; 0.2 → fail
+            let lat = Summary::from(&[p99; 4]);
+            OpenLoopReport {
+                offered_rate: rate,
+                issued: 8,
+                completed: 8,
+                dropped: 0,
+                max_inject_lag: 0.0,
+                achieved_rate: rate,
+                elapsed: 1.0,
+                queueing: Some(lat.clone()),
+                service: Some(lat.clone()),
+                total: Some(lat),
+            }
+        };
+        let sweep = max_rate_under_slo(&[10.0, 20.0, 40.0, 80.0], 0.1, fake);
+        assert_eq!(sweep.max_rate, Some(40.0));
+        assert_eq!(sweep.points.len(), 4);
+        assert!(sweep.points[2].meets_slo && !sweep.points[3].meets_slo);
+
+        // A dropped request disqualifies a rate even with a good p99.
+        let dropping = |rate: f64| OpenLoopReport {
+            dropped: 1,
+            completed: 7,
+            ..fake(rate)
+        };
+        let sweep = max_rate_under_slo(&[10.0], 0.1, dropping);
+        assert_eq!(sweep.max_rate, None);
     }
 
     #[test]

@@ -98,8 +98,21 @@ fn gddim_golden_regression_on_gmm_oracle() {
     assert!(cov.outliers < 0.02, "outlier mass {}", cov.outliers);
 }
 
+/// Pool size the concurrency-heavy tests use. Defaults to 2 (the
+/// small-pool path) so the plain `cargo test -q` CI pass and the second
+/// pass with `GDDIM_TEST_WORKERS=4` exercise different contention
+/// regimes — keep in sync with `engine::tests::test_workers`.
+fn test_workers() -> usize {
+    std::env::var("GDDIM_TEST_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2)
+}
+
 /// The engine acceptance contract, end to end: merged output bit-identical
-/// for 1 vs 4 workers on a fixed seed.
+/// across 1/2/4/8-worker pools (and the CI-selected pool size) on a fixed
+/// seed. 1 worker is the inline no-pool path, so this also locks pooled
+/// execution to the pre-pool implementation's bytes.
 #[test]
 fn engine_is_worker_count_invariant() {
     let spec = presets::gmm2d();
@@ -116,9 +129,93 @@ fn engine_is_worker_count_invariant() {
             seed: 7,
         })
     };
-    let (a, b) = (run(1), run(4));
-    assert_eq!(a.xs, b.xs);
-    assert_eq!(a.us, b.us);
+    let a = run(1);
+    for workers in [2usize, 4, 8, test_workers()] {
+        let b = run(workers);
+        assert_eq!(a.xs, b.xs, "xs diverged at {workers} workers");
+        assert_eq!(a.us, b.us, "us diverged at {workers} workers");
+        assert_eq!(a.nfe, b.nfe);
+    }
+}
+
+/// Pool reuse across jobs: one long-lived engine serving many jobs
+/// back-to-back must give each job the same bytes as a fresh
+/// single-worker engine (no RNG/state leakage between jobs, no lost or
+/// duplicated shards).
+#[test]
+fn persistent_pool_is_stateless_across_jobs() {
+    let spec = presets::gmm2d();
+    let p = Arc::new(Cld::standard(spec.d));
+    let oracle = GmmOracle::new(p.clone(), spec, KtKind::R);
+    let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 8);
+    let plan = SamplerPlan::build(p.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+    let pooled = Engine::with_config(EngineConfig { workers: test_workers(), shard_size: 64 });
+    for seed in 0..12u64 {
+        let make = || Job {
+            proc: p.as_ref(),
+            model: &oracle,
+            sampler: SamplerSpec::GddimDet(&plan),
+            n: 200,
+            seed,
+        };
+        let fresh = Engine::with_config(EngineConfig { workers: 1, shard_size: 64 });
+        assert_eq!(
+            pooled.run(&make()).xs,
+            fresh.run(&make()).xs,
+            "job seed {seed} differs between pooled and fresh engines"
+        );
+    }
+    let stats = pooled.stats();
+    assert_eq!(stats.jobs_run, 12);
+    assert_eq!(stats.shards_executed, 12 * 4, "200 samples / 64 per shard = 4 shards per job");
+}
+
+/// Sampler-level consistency: on the exact oracle, deterministic gDDIM
+/// and generalized ancestral sampling target the same data distribution,
+/// so their sample means must agree (Prop. 1/2 territory — gDDIM's
+/// marginal matching). Checked on both VPSDE and CLD.
+#[test]
+fn gddim_and_ancestral_agree_on_the_mean() {
+    let spec = presets::gmm2d();
+    let n = 4000;
+    for proc_name in ["vpsde", "cld"] {
+        let p: Arc<dyn Process> = match proc_name {
+            "vpsde" => Arc::new(Vpsde::standard(spec.d)),
+            _ => Arc::new(Cld::standard(spec.d)),
+        };
+        let oracle = GmmOracle::new(p.clone(), spec.clone(), KtKind::R);
+        let engine = Engine::with_config(EngineConfig { workers: 2, shard_size: 1024 });
+        let grid_g = TimeGrid::uniform(p.t_min(), p.t_max(), 30);
+        let plan = SamplerPlan::build(p.as_ref(), &grid_g, &PlanConfig::deterministic(2, KtKind::R));
+        let out_gddim = engine.run(&Job {
+            proc: p.as_ref(),
+            model: &oracle,
+            sampler: SamplerSpec::GddimDet(&plan),
+            n,
+            seed: 0xA11CE,
+        });
+        let grid_a = TimeGrid::uniform(p.t_min(), p.t_max(), 120);
+        let out_ancestral = engine.run(&Job {
+            proc: p.as_ref(),
+            model: &oracle,
+            sampler: SamplerSpec::Ancestral { grid: &grid_a },
+            n,
+            seed: 0xB0B,
+        });
+        let mg = gddim::math::stats::mean(&out_gddim.xs, spec.d);
+        let ma = gddim::math::stats::mean(&out_ancestral.xs, spec.d);
+        // Bound: ≈4σ of the two-sample mean-difference noise at n=4000
+        // (per-dim std ≈ 2.8), while a single dropped mode would shift a
+        // mean by ~0.5 — well outside it.
+        for dim in 0..spec.d {
+            assert!(
+                (mg[dim] - ma[dim]).abs() < 0.3,
+                "{proc_name} dim {dim}: gddim mean {} vs ancestral mean {}",
+                mg[dim],
+                ma[dim]
+            );
+        }
+    }
 }
 
 /// The server serves PJRT-free oracle traffic correctly under load.
