@@ -99,19 +99,21 @@ fn main() {
 
     // Engine scaling: the same sharded job with 1 vs 4 workers.
     {
-        use gddim::engine::{Engine, Job, SamplerSpec};
+        use gddim::engine::{Engine, Job};
+        use gddim::samplers::GddimDet;
         let proc = Arc::new(Cld::standard(2));
         let oracle = GmmOracle::new(proc.clone(), presets::gmm2d(), KtKind::R);
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 20);
         let plan =
             SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+        let sampler = GddimDet { plan: &plan };
         for workers in [1usize, 4] {
             let engine = Engine::new(workers);
             let s = time_until(0.5, 50, || {
                 let _ = engine.run(&Job {
                     proc: proc.as_ref(),
                     model: &oracle,
-                    sampler: SamplerSpec::GddimDet(&plan),
+                    sampler: &sampler,
                     n: 4096,
                     seed: 5,
                 });

@@ -10,7 +10,8 @@ use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
 use gddim::data::presets;
 use gddim::diffusion::process::KtKind;
 use gddim::diffusion::{Cld, Process, TimeGrid};
-use gddim::engine::{Engine, Job, SamplerSpec};
+use gddim::engine::{Engine, Job};
+use gddim::samplers::GddimDet;
 use gddim::score::oracle::GmmOracle;
 use gddim::server::batcher::BatcherConfig;
 use gddim::server::request::{GenRequest, PlanKey};
@@ -141,10 +142,11 @@ fn engine_scaling(args: &Args) {
     let oracle = GmmOracle::new(proc.clone(), spec, KtKind::R);
     let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), nfe);
     let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+    let sampler = GddimDet { plan: &plan };
     let job = Job {
         proc: proc.as_ref(),
         model: &oracle,
-        sampler: SamplerSpec::GddimDet(&plan),
+        sampler: &sampler,
         n,
         seed: 11,
     };

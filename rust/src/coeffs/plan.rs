@@ -5,14 +5,17 @@
 //! (for `i = N, N−1, …, 1`) updates the state from `t_i` to `t_{i−1}`.
 //! Arrays below are indexed by `i−1 ∈ [0, N)`.
 
+use std::collections::BTreeMap;
+
 use crate::diffusion::process::{KtKind, Process};
 use crate::diffusion::schedule::TimeGrid;
 use crate::coeffs::linop_integrate::{integrate_linop_composite, solve_linop_ode};
 use crate::math::interp::lagrange_basis;
 use crate::math::linop::LinOp;
+use crate::util::json::Json;
 
 /// Configuration of a sampling run's coefficients.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PlanConfig {
     /// Multistep order q (q = 1 is the plain exponential integrator /
     /// deterministic gDDIM of Eq. 18; the paper's tables write this as
@@ -221,6 +224,164 @@ impl SamplerPlan {
     pub fn n_steps(&self) -> usize {
         self.grid.n_steps()
     }
+
+    /// Serialize the full coefficient bundle for the plan-cache
+    /// persistence format (App. C.3: "calculated once and used
+    /// everywhere" — here, across process restarts). Floats are written
+    /// in shortest-roundtrip form, so [`SamplerPlan::from_json`] rebuilds
+    /// a plan whose sampler output is bit-identical to the original's.
+    pub fn to_json(&self) -> Json {
+        let ops = |v: &[LinOp]| Json::Arr(v.iter().map(LinOp::to_json).collect());
+        let nested =
+            |v: &[Vec<LinOp>]| Json::Arr(v.iter().map(|row| ops(row)).collect());
+        let mut cfg = BTreeMap::new();
+        cfg.insert("q".to_string(), Json::Num(self.cfg.q as f64));
+        cfg.insert("lambda".to_string(), Json::Num(self.cfg.lambda));
+        cfg.insert("kt".to_string(), Json::Str(self.cfg.kt.token().to_string()));
+        cfg.insert("with_corrector".to_string(), Json::Bool(self.cfg.with_corrector));
+        cfg.insert("gl_points".to_string(), Json::Num(self.cfg.gl_points as f64));
+        cfg.insert("gl_pieces".to_string(), Json::Num(self.cfg.gl_pieces as f64));
+        cfg.insert("ode_steps".to_string(), Json::Num(self.cfg.ode_steps as f64));
+        let mut obj = BTreeMap::new();
+        obj.insert("cfg".to_string(), Json::Obj(cfg));
+        obj.insert(
+            "ts".to_string(),
+            Json::Arr(self.grid.ts.iter().map(|&t| Json::Num(t)).collect()),
+        );
+        obj.insert("psi".to_string(), ops(&self.psi));
+        obj.insert("pred".to_string(), nested(&self.pred));
+        obj.insert("corr".to_string(), nested(&self.corr));
+        obj.insert("stoch_mean".to_string(), ops(&self.stoch_mean));
+        obj.insert("stoch_noise".to_string(), ops(&self.stoch_noise));
+        obj.insert("kt_nodes".to_string(), ops(&self.kt_nodes));
+        obj.insert("kt_inv_t_nodes".to_string(), ops(&self.kt_inv_t_nodes));
+        Json::Obj(obj)
+    }
+
+    /// Inverse of [`SamplerPlan::to_json`] (with structural validation);
+    /// `build_seconds` is 0 for a loaded plan.
+    pub fn from_json(j: &Json) -> crate::Result<SamplerPlan> {
+        let field =
+            |k: &str| j.get(k).ok_or_else(|| crate::Error::msg(format!("plan: missing `{k}`")));
+        let ops = |k: &str| -> crate::Result<Vec<LinOp>> {
+            field(k)?
+                .as_arr()
+                .ok_or_else(|| crate::Error::msg(format!("plan: `{k}` not an array")))?
+                .iter()
+                .map(LinOp::from_json)
+                .collect()
+        };
+        let nested = |k: &str| -> crate::Result<Vec<Vec<LinOp>>> {
+            field(k)?
+                .as_arr()
+                .ok_or_else(|| crate::Error::msg(format!("plan: `{k}` not an array")))?
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .ok_or_else(|| crate::Error::msg(format!("plan: `{k}` row not an array")))?
+                        .iter()
+                        .map(LinOp::from_json)
+                        .collect()
+                })
+                .collect()
+        };
+        let cj = field("cfg")?;
+        let cfg_num = |k: &str| {
+            cj.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| crate::Error::msg(format!("plan cfg: missing `{k}`")))
+        };
+        let cfg = PlanConfig {
+            q: cfg_num("q")? as usize,
+            lambda: cfg_num("lambda")?,
+            kt: cj
+                .get("kt")
+                .and_then(Json::as_str)
+                .ok_or_else(|| crate::Error::msg("plan cfg: missing `kt`"))?
+                .parse()
+                .map_err(crate::Error::msg)?,
+            with_corrector: matches!(cj.get("with_corrector"), Some(Json::Bool(true))),
+            gl_points: cfg_num("gl_points")? as usize,
+            gl_pieces: cfg_num("gl_pieces")? as usize,
+            ode_steps: cfg_num("ode_steps")? as usize,
+        };
+        let ts = field("ts")?
+            .as_f64_vec()
+            .ok_or_else(|| crate::Error::msg("plan: `ts` not numbers"))?;
+        let grid = TimeGrid { ts };
+        if !grid.is_valid() {
+            return Err(crate::Error::msg("plan: persisted time grid is not increasing"));
+        }
+        let plan = SamplerPlan {
+            cfg,
+            psi: ops("psi")?,
+            pred: nested("pred")?,
+            corr: nested("corr")?,
+            stoch_mean: ops("stoch_mean")?,
+            stoch_noise: ops("stoch_noise")?,
+            kt_nodes: ops("kt_nodes")?,
+            kt_inv_t_nodes: ops("kt_inv_t_nodes")?,
+            build_seconds: 0.0,
+            grid,
+        };
+        let n = plan.grid.n_steps();
+        if plan.cfg.q == 0 {
+            return Err(crate::Error::msg("plan: q must be >= 1"));
+        }
+        if plan.psi.len() != n
+            || plan.pred.len() != n
+            || plan.kt_nodes.len() != n + 1
+            || plan.kt_inv_t_nodes.len() != n + 1
+            || (plan.cfg.with_corrector && plan.corr.len() != n)
+            || (plan.cfg.lambda > 0.0
+                && (plan.stoch_mean.len() != n || plan.stoch_noise.len() != n))
+        {
+            return Err(crate::Error::msg("plan: persisted arrays inconsistent with grid"));
+        }
+        // Per-row lengths must match the warm-start schedule `build` uses
+        // (q_cur shrinks near t_N) — an over-long row would index past
+        // the sampler's ε history at serve time.
+        for (idx, row) in plan.pred.iter().enumerate() {
+            let i = idx + 1;
+            if row.len() != plan.cfg.q.min(n - i + 1) {
+                return Err(crate::Error::msg("plan: predictor row length inconsistent"));
+            }
+        }
+        for (idx, row) in plan.corr.iter().enumerate() {
+            let i = idx + 1;
+            let q_cur = plan.cfg.q.min(n - i + 2).max(2).min(n - i + 2);
+            if row.len() != q_cur {
+                return Err(crate::Error::msg("plan: corrector row length inconsistent"));
+            }
+        }
+        // Every operator of one plan acts on the same state space: all
+        // must share psi[0]'s structure (and dimension, for Diag) or a
+        // tampered file would panic `LinOp::apply` inside a worker.
+        let same_shape = |a: &LinOp, b: &LinOp| -> bool {
+            match (a, b) {
+                (LinOp::Scalar(_), LinOp::Scalar(_)) => true,
+                (LinOp::Block2(_), LinOp::Block2(_)) => true,
+                (LinOp::Diag(x), LinOp::Diag(y)) => x.len() == y.len(),
+                _ => false,
+            }
+        };
+        let anchor = plan.psi[0].clone();
+        let all = plan
+            .psi
+            .iter()
+            .chain(plan.pred.iter().flatten())
+            .chain(plan.corr.iter().flatten())
+            .chain(plan.stoch_mean.iter())
+            .chain(plan.stoch_noise.iter())
+            .chain(plan.kt_nodes.iter())
+            .chain(plan.kt_inv_t_nodes.iter());
+        for op in all {
+            if !same_shape(op, &anchor) {
+                return Err(crate::Error::msg("plan: mixed operator structures/dimensions"));
+            }
+        }
+        Ok(plan)
+    }
 }
 
 #[cfg(test)]
@@ -300,6 +461,76 @@ mod tests {
             }
             assert!(sum.dist(&single.pred[i][0]) < 1e-9 * (1.0 + single.pred[i][0].max_abs()));
         }
+    }
+
+    #[test]
+    fn json_round_trip_preserves_every_coefficient() {
+        // Scalar (VPSDE), Block2 (CLD), and Diag (BDM) plans, with and
+        // without corrector / stochastic parts, must survive persistence
+        // with zero drift in any operator.
+        let grids_and_plans: Vec<SamplerPlan> = {
+            let vp = Vpsde::standard(1);
+            let cld = Cld::standard(1);
+            let bdm = crate::diffusion::Bdm::standard(2, 2);
+            let gv = TimeGrid::uniform(vp.t_min, vp.t_max, 6);
+            let gc = TimeGrid::uniform(cld.t_min(), cld.t_max(), 6);
+            let gb = TimeGrid::uniform(bdm.t_min(), bdm.t_max(), 4);
+            vec![
+                SamplerPlan::build(&vp, &gv, &PlanConfig::deterministic(2, KtKind::R)),
+                SamplerPlan::build(&vp, &gv, &PlanConfig::stochastic(0.7)),
+                SamplerPlan::build(
+                    &cld,
+                    &gc,
+                    &PlanConfig { q: 2, with_corrector: true, ..PlanConfig::default() },
+                ),
+                SamplerPlan::build(&bdm, &gb, &PlanConfig::deterministic(1, KtKind::L)),
+            ]
+        };
+        for plan in grids_and_plans {
+            let text = plan.to_json().to_string_pretty();
+            let back = SamplerPlan::from_json(
+                &crate::util::json::Json::parse(&text).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back.cfg.q, plan.cfg.q);
+            assert_eq!(back.cfg.kt, plan.cfg.kt);
+            assert_eq!(back.cfg.lambda.to_bits(), plan.cfg.lambda.to_bits());
+            assert_eq!(back.grid.ts, plan.grid.ts);
+            let pairs = |a: &[LinOp], b: &[LinOp]| {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.dist(y), 0.0, "operator drifted through JSON");
+                }
+            };
+            pairs(&back.psi, &plan.psi);
+            pairs(&back.stoch_mean, &plan.stoch_mean);
+            pairs(&back.stoch_noise, &plan.stoch_noise);
+            pairs(&back.kt_nodes, &plan.kt_nodes);
+            pairs(&back.kt_inv_t_nodes, &plan.kt_inv_t_nodes);
+            for (a, b) in back.pred.iter().zip(&plan.pred) {
+                pairs(a, b);
+            }
+            for (a, b) in back.corr.iter().zip(&plan.corr) {
+                pairs(a, b);
+            }
+            assert_eq!(back.corr.len(), plan.corr.len());
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_inconsistent_payloads() {
+        let p = Vpsde::standard(1);
+        let grid = TimeGrid::uniform(p.t_min, p.t_max, 4);
+        let plan = SamplerPlan::build(&p, &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let mut j = plan.to_json();
+        // Truncate psi: array length no longer matches the grid.
+        if let Json::Obj(obj) = &mut j {
+            if let Some(Json::Arr(psi)) = obj.get_mut("psi") {
+                psi.pop();
+            }
+        }
+        assert!(SamplerPlan::from_json(&j).is_err());
+        assert!(SamplerPlan::from_json(&Json::Null).is_err());
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! A forward process is `du = F_t u dt + G_t dw` (Eq. 1) with Gaussian
 //! transition `p_{0t}(u(t)|u(0)) = N(Ψ(t,0) u(0) + …, Σ_t)`; everything a
 //! sampler or the Stage-I coefficient engine needs is a handful of
-//! time-indexed structured matrices exposed here as [`LinOp`]s.
+//! time-indexed structured matrices exposed here as
+//! [`LinOp`](crate::math::linop::LinOp)s.
 
 pub mod process;
 pub mod vpsde;

@@ -39,6 +39,16 @@ impl KtKind {
             KtKind::SqrtSigma => "sqrt(Sigma)",
         }
     }
+
+    /// Short machine token; round-trips through the `FromStr` impl
+    /// (used by the sampler-spec grammar and plan persistence).
+    pub fn token(&self) -> &'static str {
+        match self {
+            KtKind::R => "R",
+            KtKind::L => "L",
+            KtKind::SqrtSigma => "sqrt",
+        }
+    }
 }
 
 impl std::str::FromStr for KtKind {

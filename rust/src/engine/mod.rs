@@ -12,11 +12,15 @@
 //!    `(seed, shard_index)`, which makes the merged output bit-identical
 //!    for 1 worker and for N workers.
 //! 3. **Execute**: a *persistent* worker pool (threads spawned once in
-//!    [`Engine::with_config`], fed through an `mpsc` job queue) runs the
-//!    configured Stage-II sampler on each shard. Whichever worker is free
-//!    pulls the next shard — work stealing by construction, so a slow
-//!    shard never blocks the others — and signals a per-job condvar when
-//!    its slot is filled.
+//!    [`Engine::with_config`], fed through an `mpsc` job queue) drives the
+//!    job's [`Sampler`] state machine on each shard — step by step, with
+//!    every score evaluation crossing the explicit
+//!    [`ScoreRequest`](crate::samplers::ScoreRequest) boundary (see
+//!    [`run_shard`]'s source), which is the hook for coalescing score
+//!    calls across jobs that share `(process, dataset, t)`. Whichever
+//!    worker is free pulls the next shard — work stealing by
+//!    construction, so a slow shard never blocks the others — and signals
+//!    a per-job condvar when its slot is filled.
 //! 4. **Merge**: shard outputs are concatenated in shard order. NFE is
 //!    reported per shard (max across shards), matching the paper's
 //!    convention that a batched score call counts once.
@@ -44,8 +48,8 @@ use crate::coeffs::plan::SamplerPlan;
 use crate::diffusion::process::Process;
 use crate::diffusion::schedule::TimeGrid;
 use crate::math::rng::Rng;
-use crate::samplers;
 use crate::samplers::common::SampleOutput;
+use crate::samplers::{model_score, Sampler, SamplerSpec};
 use crate::score::model::ScoreModel;
 
 /// Engine tuning knobs.
@@ -67,27 +71,14 @@ impl Default for EngineConfig {
     }
 }
 
-/// Which Stage-II sampler a [`Job`] runs on each shard.
-pub enum SamplerSpec<'a> {
-    /// Deterministic gDDIM (multistep predictor / PC) on a prebuilt plan.
-    GddimDet(&'a SamplerPlan),
-    /// Stochastic gDDIM (λ > 0) on a prebuilt plan.
-    GddimSde(&'a SamplerPlan),
-    /// Euler–Maruyama on the marginal-equivalent SDE (λ = 0: plain Euler).
-    Em { grid: &'a TimeGrid, lambda: f64 },
-    /// Generalized ancestral sampling.
-    Ancestral { grid: &'a TimeGrid },
-    /// 2nd-order Heun on the probability-flow ODE.
-    Heun { grid: &'a TimeGrid },
-    /// Symmetric splitting CLD sampler.
-    Sscs { grid: &'a TimeGrid },
-}
-
-/// One batched sampling job: everything a shard needs, by reference.
+/// One batched sampling job: everything a shard needs, by reference. Any
+/// [`Sampler`] impl works here — the seven paper samplers come from
+/// [`SamplerSpec::instantiate`] or are built directly (e.g.
+/// `samplers::GddimDet { plan: &plan }`).
 pub struct Job<'a> {
     pub proc: &'a dyn Process,
     pub model: &'a dyn ScoreModel,
-    pub sampler: SamplerSpec<'a>,
+    pub sampler: &'a dyn Sampler,
     /// Total samples to generate across all shards.
     pub n: usize,
     /// Base seed; shard `i` samples from stream `i` of this seed.
@@ -439,28 +430,22 @@ fn pool_worker(rx: &Mutex<Receiver<ShardTask>>, metrics: &EngineMetrics, widx: u
     }
 }
 
-/// Execute one shard with its own RNG stream.
+/// Execute one shard with its own RNG stream by driving the job's
+/// [`Sampler`] state machine step by step.
+///
+/// The engine owns this loop (rather than calling [`Sampler::run`]) on
+/// purpose: every score evaluation of every sampler funnels through the
+/// `score` closure below, so a future scheduler can swap in a boundary
+/// that coalesces same-`t` requests across concurrent jobs without
+/// touching any sampler. With the plain [`model_score`] boundary the
+/// loop is byte-identical to `Sampler::run`.
 fn run_shard(job: &Job<'_>, n: usize, mut rng: Rng) -> SampleOutput {
-    match &job.sampler {
-        SamplerSpec::GddimDet(plan) => {
-            samplers::gddim::sample_deterministic(job.proc, plan, job.model, n, &mut rng, false)
-        }
-        SamplerSpec::GddimSde(plan) => {
-            samplers::gddim::sample_stochastic(job.proc, plan, job.model, n, &mut rng, false)
-        }
-        SamplerSpec::Em { grid, lambda } => {
-            samplers::em::sample_em(job.proc, job.model, grid, *lambda, n, &mut rng, false)
-        }
-        SamplerSpec::Ancestral { grid } => {
-            samplers::ancestral::sample_ancestral(job.proc, job.model, grid, n, &mut rng)
-        }
-        SamplerSpec::Heun { grid } => {
-            samplers::heun::sample_heun(job.proc, job.model, grid, n, &mut rng)
-        }
-        SamplerSpec::Sscs { grid } => {
-            samplers::sscs::sample_sscs(job.proc, job.model, grid, n, &mut rng)
-        }
+    let mut state = job.sampler.init(job.proc, job.model, n, &mut rng, false);
+    let mut score = model_score(job.model);
+    for i in (1..=job.sampler.n_steps()).rev() {
+        state.step(i, &mut score, &mut rng);
     }
+    state.finish()
 }
 
 /// Compile-time Send/Sync audit for everything the engine shares across
@@ -470,15 +455,18 @@ fn run_shard(job: &Job<'_>, n: usize, mut rng: Rng) -> SampleOutput {
 #[allow(dead_code)]
 fn send_sync_audit() {
     fn assert_send_sync<T: Send + Sync + ?Sized>() {}
-    fn assert_send<T: Send>() {}
+    fn assert_send<T: Send + ?Sized>() {}
     assert_send_sync::<dyn Process>();
     assert_send_sync::<dyn ScoreModel>();
+    assert_send_sync::<dyn Sampler>();
     assert_send_sync::<SamplerPlan>();
+    assert_send_sync::<SamplerSpec>();
     assert_send_sync::<TimeGrid>();
     assert_send_sync::<SampleOutput>();
     assert_send_sync::<Engine>();
     assert_send_sync::<Job<'_>>();
     assert_send::<ShardTask>();
+    assert_send::<dyn crate::samplers::SamplerState>();
 }
 
 #[cfg(test)]
@@ -489,6 +477,7 @@ mod tests {
     use crate::diffusion::process::KtKind;
     use crate::diffusion::{Cld, TimeGrid, Vpsde};
     use crate::metrics::frechet::frechet_to_spec;
+    use crate::samplers::{Ancestral, Em, GddimDet, GddimSde, Heun, Rk45, Sscs};
     use crate::score::oracle::GmmOracle;
     use std::sync::Arc;
 
@@ -520,7 +509,7 @@ mod tests {
             engine.run(&Job {
                 proc: proc.as_ref(),
                 model: &oracle,
-                sampler: SamplerSpec::GddimDet(&plan),
+                sampler: &GddimDet { plan: &plan },
                 n: 700, // 6 shards, last one ragged
                 seed: 0xC0FFEE,
             })
@@ -544,7 +533,7 @@ mod tests {
             engine.run(&Job {
                 proc: proc.as_ref(),
                 model: &oracle,
-                sampler: SamplerSpec::GddimSde(&plan),
+                sampler: &GddimSde { plan: &plan },
                 n: 300,
                 seed: 9,
             })
@@ -563,7 +552,7 @@ mod tests {
         let out = engine.run(&Job {
             proc: proc.as_ref(),
             model: &oracle,
-            sampler: SamplerSpec::GddimDet(&plan),
+            sampler: &GddimDet { plan: &plan },
             n: 2_000,
             seed: 3,
         });
@@ -583,7 +572,7 @@ mod tests {
         let out = engine.run(&Job {
             proc: proc.as_ref(),
             model: &oracle,
-            sampler: SamplerSpec::GddimDet(&plan),
+            sampler: &GddimDet { plan: &plan },
             n: 64,
             seed: 1,
         });
@@ -597,17 +586,18 @@ mod tests {
         let (proc, spec, oracle) = cld_setup();
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 12);
         let engine = Engine::with_config(EngineConfig { workers: 2, shard_size: 16 });
-        let specs: Vec<SamplerSpec<'_>> = vec![
-            SamplerSpec::Em { grid: &grid, lambda: 1.0 },
-            SamplerSpec::Ancestral { grid: &grid },
-            SamplerSpec::Heun { grid: &grid },
-            SamplerSpec::Sscs { grid: &grid },
+        let samplers: Vec<Box<dyn Sampler + '_>> = vec![
+            Box::new(Em { grid: &grid, lambda: 1.0 }),
+            Box::new(Ancestral { grid: &grid }),
+            Box::new(Heun { grid: &grid }),
+            Box::new(Sscs { grid: &grid }),
+            Box::new(Rk45 { rtol: 1e-3 }),
         ];
-        for sampler in specs {
+        for sampler in &samplers {
             let out = engine.run(&Job {
                 proc: proc.as_ref(),
                 model: &oracle,
-                sampler,
+                sampler: sampler.as_ref(),
                 n: 40,
                 seed: 2,
             });
@@ -629,7 +619,7 @@ mod tests {
         let out = engine.run(&Job {
             proc: proc.as_ref(),
             model: &oracle,
-            sampler: SamplerSpec::GddimDet(&plan),
+            sampler: &GddimDet { plan: &plan },
             n: 10, // a single shard
             seed: 4,
         });
@@ -645,7 +635,7 @@ mod tests {
             let out = engine.run(&Job {
                 proc: proc.as_ref(),
                 model: &oracle,
-                sampler: SamplerSpec::Ancestral { grid: &grid },
+                sampler: &Ancestral { grid: &grid },
                 n: 0,
                 seed: 0,
             });
@@ -664,7 +654,7 @@ mod tests {
             engine.run(&Job {
                 proc: proc.as_ref(),
                 model: &oracle,
-                sampler: SamplerSpec::Ancestral { grid: &grid },
+                sampler: &Ancestral { grid: &grid },
                 n: 100,
                 seed: 17,
             })
@@ -689,7 +679,7 @@ mod tests {
         let _ = engine.run(&Job {
             proc: proc.as_ref(),
             model: &oracle,
-            sampler: SamplerSpec::Ancestral { grid: &grid },
+            sampler: &Ancestral { grid: &grid },
             n: 64,
             seed: 5,
         });
@@ -706,10 +696,11 @@ mod tests {
         let (proc, _spec, oracle) = cld_setup();
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 6);
         let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let sampler = GddimDet { plan: &plan };
         let make_job = |seed: u64| Job {
             proc: proc.as_ref(),
             model: &oracle,
-            sampler: SamplerSpec::GddimDet(&plan),
+            sampler: &sampler,
             n: 40, // 5 shards of 8
             seed,
         };
@@ -750,7 +741,7 @@ mod tests {
             let _ = engine.run(&Job {
                 proc: proc.as_ref(),
                 model: &oracle,
-                sampler: SamplerSpec::Ancestral { grid: &grid },
+                sampler: &Ancestral { grid: &grid },
                 n: 48, // 3 shards
                 seed,
             });

@@ -7,6 +7,7 @@ use crate::diffusion::process::KtKind;
 use crate::diffusion::TimeGrid;
 use crate::exp::helpers::*;
 use crate::math::rng::Rng;
+use crate::samplers::{GddimDet, GddimSde, Sampler};
 use crate::util::bench::Table;
 use crate::util::cli::Args;
 
@@ -60,7 +61,7 @@ fn run_gddim_traj(s: &Setup, kt: KtKind, nfe: usize) -> crate::samplers::common:
     let plan = SamplerPlan::build(s.proc.as_ref(), &grid, &PlanConfig::deterministic(1, kt));
     let o = oracle(s, kt);
     let mut rng = Rng::seed_from(71);
-    crate::samplers::gddim::sample_deterministic(s.proc.as_ref(), &plan, &o, 1, &mut rng, true)
+    GddimDet { plan: &plan }.run(s.proc.as_ref(), &o, 1, &mut rng, true)
 }
 
 /// Fig. 2 — ε_GT smoothness on the 1-D two-Gaussian toy (VPSDE): the
@@ -82,14 +83,7 @@ pub fn fig2(args: &Args) {
     );
     for k in 0..5u64 {
         let mut rng = Rng::seed_from(100 + k);
-        let out = crate::samplers::gddim::sample_deterministic(
-            proc.as_ref(),
-            &plan,
-            &o,
-            1,
-            &mut rng,
-            true,
-        );
+        let out = GddimDet { plan: &plan }.run(proc.as_ref(), &o, 1, &mut rng, true);
         let traj = out.traj.unwrap();
         let tv = traj_tv(&traj.eps, 0);
         let tail_start = traj.eps.len() * 4 / 5;
@@ -148,14 +142,7 @@ pub fn fig5(args: &Args) {
     for lam in [0.05, 0.3, 0.6, 1.0] {
         let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::stochastic(lam));
         let mut rng = Rng::seed_from(91);
-        let out = crate::samplers::gddim::sample_stochastic(
-            proc.as_ref(),
-            &plan,
-            &o,
-            1,
-            &mut rng,
-            true,
-        );
+        let out = GddimSde { plan: &plan }.run(proc.as_ref(), &o, 1, &mut rng, true);
         let traj = out.traj.unwrap();
         let rough: f64 = traj.us.windows(2).map(|w| (w[1][0] - w[0][0]).abs()).sum();
         let tv = traj_tv(&traj.eps[..traj.eps.len() - 1].to_vec(), 0);

@@ -10,6 +10,7 @@ use crate::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
 use crate::math::rng::Rng;
 use crate::metrics::frechet::frechet_to_spec;
 use crate::samplers::common::SampleOutput;
+use crate::samplers::{Ancestral, Em, GddimDet, GddimSde, Heun, Rk45, Sampler};
 use crate::score::oracle::GmmOracle;
 use crate::util::cli::Args;
 
@@ -50,7 +51,7 @@ pub fn fd(out: &SampleOutput, spec: &GmmSpec) -> f64 {
     frechet_to_spec(&out.xs, spec)
 }
 
-/// Run deterministic gDDIM with a fresh plan.
+/// Run deterministic gDDIM with a fresh plan (trait path).
 pub fn run_gddim(
     s: &Setup,
     kt: KtKind,
@@ -65,7 +66,7 @@ pub fn run_gddim(
     let plan = SamplerPlan::build(s.proc.as_ref(), &grid, &cfg);
     let o = oracle(s, kt);
     let mut rng = Rng::seed_from(seed);
-    crate::samplers::gddim::sample_deterministic(s.proc.as_ref(), &plan, &o, n, &mut rng, false)
+    GddimDet { plan: &plan }.run(s.proc.as_ref(), &o, n, &mut rng, false)
 }
 
 pub fn run_gddim_sde(s: &Setup, lambda: f64, nfe: usize, n: usize, seed: u64) -> SampleOutput {
@@ -73,35 +74,35 @@ pub fn run_gddim_sde(s: &Setup, lambda: f64, nfe: usize, n: usize, seed: u64) ->
     let plan = SamplerPlan::build(s.proc.as_ref(), &grid, &PlanConfig::stochastic(lambda));
     let o = oracle(s, KtKind::R);
     let mut rng = Rng::seed_from(seed);
-    crate::samplers::gddim::sample_stochastic(s.proc.as_ref(), &plan, &o, n, &mut rng, false)
+    GddimSde { plan: &plan }.run(s.proc.as_ref(), &o, n, &mut rng, false)
 }
 
 pub fn run_em(s: &Setup, lambda: f64, nfe: usize, n: usize, seed: u64) -> SampleOutput {
     let grid = TimeGrid::uniform(s.proc.t_min(), s.proc.t_max(), nfe);
     let o = oracle(s, KtKind::R);
     let mut rng = Rng::seed_from(seed);
-    crate::samplers::em::sample_em(s.proc.as_ref(), &o, &grid, lambda, n, &mut rng, false)
+    Em { grid: &grid, lambda }.run(s.proc.as_ref(), &o, n, &mut rng, false)
 }
 
 pub fn run_ancestral(s: &Setup, nfe: usize, n: usize, seed: u64) -> SampleOutput {
     let grid = TimeGrid::uniform(s.proc.t_min(), s.proc.t_max(), nfe);
     let o = oracle(s, KtKind::R);
     let mut rng = Rng::seed_from(seed);
-    crate::samplers::ancestral::sample_ancestral(s.proc.as_ref(), &o, &grid, n, &mut rng)
+    Ancestral { grid: &grid }.run(s.proc.as_ref(), &o, n, &mut rng, false)
 }
 
 pub fn run_heun(s: &Setup, nfe_grid: usize, n: usize, seed: u64) -> SampleOutput {
     let grid = TimeGrid::uniform(s.proc.t_min(), s.proc.t_max(), nfe_grid);
     let o = oracle(s, KtKind::R);
     let mut rng = Rng::seed_from(seed);
-    crate::samplers::heun::sample_heun(s.proc.as_ref(), &o, &grid, n, &mut rng)
+    Heun { grid: &grid }.run(s.proc.as_ref(), &o, n, &mut rng, false)
 }
 
 pub fn run_rk45_at(s: &Setup, target_nfe: usize, n: usize, seed: u64) -> SampleOutput {
     let o = oracle(s, KtKind::R);
     let (rtol, _) = crate::samplers::rk45::tune_rtol_for_nfe(s.proc.as_ref(), &o, target_nfe, seed);
     let mut rng = Rng::seed_from(seed);
-    crate::samplers::rk45::sample_rk45(s.proc.as_ref(), &o, rtol, n, &mut rng)
+    Rk45 { rtol }.run(s.proc.as_ref(), &o, n, &mut rng, false)
 }
 
 /// Total variation of a recorded ε-trajectory component (smoothness

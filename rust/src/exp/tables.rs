@@ -7,6 +7,7 @@
 
 use crate::diffusion::process::KtKind;
 use crate::exp::helpers::*;
+use crate::samplers::{Sampler, Sscs};
 use crate::metrics::coverage::coverage;
 use crate::util::bench::Table;
 use crate::util::cli::Args;
@@ -173,7 +174,7 @@ pub fn table7(args: &Args) {
         let grid = crate::diffusion::TimeGrid::uniform(s.proc.t_min(), s.proc.t_max(), 150);
         let o = oracle(&s, KtKind::R);
         let mut rng = crate::math::rng::Rng::seed_from(41);
-        crate::samplers::sscs::sample_sscs(s.proc.as_ref(), &o, &grid, n, &mut rng)
+        Sscs { grid: &grid }.run(s.proc.as_ref(), &o, n, &mut rng, false)
     };
     t.row(vec!["SSCS (λ=1)".into(), sscs.nfe.to_string(), format!("{:.3}", fd(&sscs, &s.spec))]);
     t.emit("table7");

@@ -17,9 +17,11 @@
 //! * [`score`] — score models: exact oracles for mixture data (closed
 //!   form, used to validate Props 1–7) and PJRT-backed neural nets
 //!   AOT-compiled from JAX/Pallas.
-//! * [`samplers`] — "Stage II": gDDIM (deterministic + stochastic,
-//!   multistep predictor-corrector) and every baseline the paper
-//!   compares against (EM, ancestral, RK45 probability flow, Heun, SSCS).
+//! * [`samplers`] — "Stage II": the step-level [`samplers::Sampler`]
+//!   trait and the owned [`samplers::SamplerSpec`], implemented by gDDIM
+//!   (deterministic + stochastic, multistep predictor-corrector) and
+//!   every baseline the paper compares against (EM, ancestral, RK45
+//!   probability flow, Heun, SSCS).
 //! * [`metrics`] — Fréchet distance (the repo's FID analog), Wasserstein,
 //!   mode coverage, probability-flow NLL.
 //! * [`data`] — synthetic datasets shared with the python build layer.

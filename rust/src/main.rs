@@ -15,10 +15,10 @@ use gddim::data::presets;
 use gddim::diffusion::process::KtKind;
 use gddim::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
 use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
-use gddim::engine::{Engine, Job, SamplerSpec};
+use gddim::engine::{Engine, Job};
 use gddim::metrics::coverage::coverage;
 use gddim::metrics::frechet::frechet_to_spec;
-use gddim::math::rng::Rng;
+use gddim::samplers::{OrderedF64, SamplerSpec};
 use gddim::score::oracle::GmmOracle;
 use gddim::util::cli::Args;
 use gddim::util::json::Json;
@@ -39,11 +39,14 @@ fn main() {
                 "usage: gddim <gen-configs|selfcheck|sample|coeffs|exp|serve|workload> [--flags]\n\
                  sample flags: --process vpsde|cld|bdm --dataset gmm2d|hard2d|spiral2d|blobs8|faces8\n\
                  \u{20}              --sampler gddim|gddim-sde|em|ancestral|rk45|heun|sscs\n\
-                 \u{20}              --nfe N --q Q --kt R|L --lambda L --n N --seed S --corrector\n\
-                 \u{20}              --workers W   (persistent engine pool size; rk45 runs unsharded)\n\
+                 \u{20}                        (or full spec grammar, e.g. \"em:lambda=0.5\")\n\
+                 \u{20}              --nfe N --q Q --kt R|L --lambda L --rtol R --n N --seed S --corrector\n\
+                 \u{20}              --workers W   (persistent engine pool size)\n\
                  serve flags:  --workers W --dispatchers D --requests R --samples S --rate RPS\n\
+                 \u{20}              --samplers SPEC+SPEC+.. --plan-cache-dir DIR\n\
                  workload flags: --rates R1,R2,.. (or --rate R) --slo-ms M --poisson\n\
-                 \u{20}                --requests R --samples S --nfe N --workers W --dispatchers D"
+                 \u{20}                --requests R --samples S --nfe N --workers W --dispatchers D\n\
+                 \u{20}                --samplers SPEC+SPEC+.. --plan-cache-dir DIR"
             );
         }
     }
@@ -114,104 +117,83 @@ fn selfcheck() {
     }
 }
 
+/// Resolve the CLI sampler flags into one owned spec. Bare names pick up
+/// `--q/--kt/--lambda/--rtol/--corrector`; a full spec-grammar string
+/// (e.g. `"em:lambda=0.5"`) is passed through verbatim.
+fn spec_from_args(args: &Args) -> Result<SamplerSpec, gddim::Error> {
+    let sampler = args.get_or("sampler", "gddim");
+    let kt: KtKind = args.get_or("kt", "R").parse().map_err(gddim::Error::msg)?;
+    let q = args.get_usize("q", 2);
+    let lambda = args.get_f64("lambda", 0.0);
+    let rtol = args.get_f64("rtol", 1e-4);
+    // Reject "nan"/"inf" here (f64 parses them) so the bare-flag path
+    // errors cleanly like the grammar path, instead of asserting inside
+    // OrderedF64.
+    if !lambda.is_finite() {
+        return Err(gddim::Error::msg("--lambda must be finite"));
+    }
+    if !rtol.is_finite() {
+        return Err(gddim::Error::msg("--rtol must be finite"));
+    }
+    match sampler.as_str() {
+        "gddim" => Ok(SamplerSpec::GddimDet { q, kt, corrector: args.has("corrector") }),
+        "gddim-sde" => Ok(SamplerSpec::GddimSde { lambda: OrderedF64::new(lambda.max(0.1)) }),
+        "em" => Ok(SamplerSpec::Em { lambda: OrderedF64::new(lambda) }),
+        "ancestral" => Ok(SamplerSpec::Ancestral),
+        "heun" => Ok(SamplerSpec::Heun),
+        "sscs" => Ok(SamplerSpec::Sscs),
+        "rk45" => Ok(SamplerSpec::Rk45 { rtol: OrderedF64::new(rtol) }),
+        grammar => SamplerSpec::parse(grammar),
+    }
+}
+
 fn sample(args: &Args) {
     let dataset = args.get_or("dataset", "gmm2d");
     let spec = presets::by_name(&dataset).expect("unknown dataset");
     let proc_name = args.get_or("process", "cld");
     let proc = build_process(&proc_name, spec.d);
-    let kt: KtKind = args.get_or("kt", "R").parse().unwrap();
     let nfe = args.get_usize("nfe", 50);
-    let q = args.get_usize("q", 2);
-    let lambda = args.get_f64("lambda", 0.0);
     let n = args.get_usize("n", 2000);
     let seed = args.get_u64("seed", 0);
-    let sampler = args.get_or("sampler", "gddim");
     let workers = args.get_usize("workers", 1);
-    let oracle = GmmOracle::new(proc.clone(), spec.clone(), kt);
+
+    // One owned spec drives everything: validation, Stage-I plan
+    // construction, oracle parameterization, and the engine job. All
+    // seven samplers shard through the engine (RK45 adapts per shard).
+    let sampler_spec = match spec_from_args(args).and_then(|s| {
+        s.validate(&proc_name)?;
+        Ok(s)
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let oracle = GmmOracle::new(proc.clone(), spec.clone(), sampler_spec.model_kt());
     let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), nfe);
     let engine = Engine::new(workers);
 
-    // Grid samplers all route through the engine (sharded, seeded per
-    // shard); adaptive RK45 has data-dependent control flow and runs the
-    // whole batch unsharded.
     let t0 = std::time::Instant::now();
-    let plan;
-    let out = match sampler.as_str() {
-        "gddim" => {
-            let cfg = PlanConfig {
-                q,
-                kt,
-                with_corrector: args.has("corrector"),
-                ..PlanConfig::default()
-            };
-            plan = SamplerPlan::build(proc.as_ref(), &grid, &cfg);
-            engine.run(&Job {
-                proc: proc.as_ref(),
-                model: &oracle,
-                sampler: SamplerSpec::GddimDet(&plan),
-                n,
-                seed,
-            })
-        }
-        "gddim-sde" => {
-            plan =
-                SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::stochastic(lambda.max(0.1)));
-            engine.run(&Job {
-                proc: proc.as_ref(),
-                model: &oracle,
-                sampler: SamplerSpec::GddimSde(&plan),
-                n,
-                seed,
-            })
-        }
-        "em" => engine.run(&Job {
-            proc: proc.as_ref(),
-            model: &oracle,
-            sampler: SamplerSpec::Em { grid: &grid, lambda },
-            n,
-            seed,
-        }),
-        "ancestral" => engine.run(&Job {
-            proc: proc.as_ref(),
-            model: &oracle,
-            sampler: SamplerSpec::Ancestral { grid: &grid },
-            n,
-            seed,
-        }),
-        "heun" => engine.run(&Job {
-            proc: proc.as_ref(),
-            model: &oracle,
-            sampler: SamplerSpec::Heun { grid: &grid },
-            n,
-            seed,
-        }),
-        "sscs" => engine.run(&Job {
-            proc: proc.as_ref(),
-            model: &oracle,
-            sampler: SamplerSpec::Sscs { grid: &grid },
-            n,
-            seed,
-        }),
-        "rk45" => {
-            let mut rng = Rng::seed_from(seed);
-            gddim::samplers::rk45::sample_rk45(
-                proc.as_ref(),
-                &oracle,
-                args.get_f64("rtol", 1e-4),
-                n,
-                &mut rng,
-            )
-        }
-        other => panic!("unknown sampler {other}"),
-    };
+    let plan = sampler_spec
+        .plan_config()
+        .map(|cfg| SamplerPlan::build(proc.as_ref(), &grid, &cfg));
+    let sampler = sampler_spec
+        .instantiate(plan.as_ref(), &grid)
+        .expect("validated spec must instantiate");
+    let out = engine.run(&Job {
+        proc: proc.as_ref(),
+        model: &oracle,
+        sampler: sampler.as_ref(),
+        n,
+        seed,
+    });
     let wall = t0.elapsed().as_secs_f64();
     let fd = frechet_to_spec(&out.xs, &spec);
     let cov = coverage(&out.xs, &spec);
     println!(
-        "process={proc_name} dataset={dataset} sampler={sampler} kt={} q={q} λ={lambda} \
-         workers={workers}\n\
+        "process={proc_name} dataset={dataset} sampler={sampler_spec} workers={workers}\n\
          NFE={} FD={fd:.4} missing-modes={}/{} outliers={:.3} wall={wall:.2}s",
-        kt.label(),
         out.nfe,
         cov.missing,
         spec.n_modes(),

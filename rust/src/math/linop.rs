@@ -226,6 +226,55 @@ impl LinOp {
         }
     }
 
+    /// JSON form for the Stage-I plan persistence format: a one-key
+    /// object tagging the structure (`{"s": x}`, `{"d": [..]}`,
+    /// `{"b2": [a,b,c,d]}`). Numbers print in Rust's shortest-roundtrip
+    /// form, so [`LinOp::from_json`] reconstructs the exact bits.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut obj = std::collections::BTreeMap::new();
+        match self {
+            LinOp::Scalar(s) => {
+                obj.insert("s".to_string(), Json::Num(*s));
+            }
+            LinOp::Diag(d) => {
+                obj.insert(
+                    "d".to_string(),
+                    Json::Arr(d.iter().map(|&x| Json::Num(x)).collect()),
+                );
+            }
+            LinOp::Block2(m) => {
+                obj.insert(
+                    "b2".to_string(),
+                    Json::Arr(m.to_array().iter().map(|&x| Json::Num(x)).collect()),
+                );
+            }
+        }
+        Json::Obj(obj)
+    }
+
+    /// Inverse of [`LinOp::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> crate::Result<LinOp> {
+        if let Some(s) = j.get("s") {
+            return s
+                .as_f64()
+                .map(LinOp::Scalar)
+                .ok_or_else(|| crate::Error::msg("LinOp: scalar not a number"));
+        }
+        if let Some(d) = j.get("d") {
+            let v = d.as_f64_vec().ok_or_else(|| crate::Error::msg("LinOp: diag not numbers"))?;
+            return Ok(LinOp::diag(v));
+        }
+        if let Some(b) = j.get("b2") {
+            let v = b.as_f64_vec().ok_or_else(|| crate::Error::msg("LinOp: b2 not numbers"))?;
+            if v.len() != 4 {
+                return Err(crate::Error::msg("LinOp: b2 needs 4 entries"));
+            }
+            return Ok(LinOp::Block2(Mat2::new(v[0], v[1], v[2], v[3])));
+        }
+        Err(crate::Error::msg("LinOp: expected one of `s`, `d`, `b2`"))
+    }
+
     /// Draw `z ~ N(0, A Aᵀ)` given this operator as the factor `A`,
     /// writing into `out` (used for injected sampler noise).
     pub fn sample_noise(&self, rng: &mut crate::math::rng::Rng, out: &mut [f64]) {
@@ -333,6 +382,22 @@ mod tests {
         assert!((acc[0] / nf - 1.0).abs() < 0.02);
         assert!((acc[1] / nf - 0.7).abs() < 0.02);
         assert!((acc[2] / nf - 0.74).abs() < 0.02);
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_exact() {
+        let ops = [
+            LinOp::Scalar(0.1 + 0.2), // a value with a non-terminating decimal
+            LinOp::diag(vec![1.0 / 3.0, -2.5e-17, 4.0]),
+            LinOp::Block2(Mat2::new(std::f64::consts::PI, -0.0, 1e-300, 7.0)),
+        ];
+        for op in &ops {
+            let text = op.to_json().to_string_pretty();
+            let back =
+                LinOp::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.sub(op).max_abs(), 0.0, "bits drifted through {text}");
+        }
+        assert!(LinOp::from_json(&crate::util::json::Json::Null).is_err());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
 //!
-//! The executor itself ([`net::NetScore`]) sits behind the `pjrt` cargo
+//! The executor itself (`net::NetScore`) sits behind the `pjrt` cargo
 //! feature: it needs an external `xla` binding crate that the offline
 //! std-only build does not vendor. The manifest parser is always
 //! available (it is plain JSON) so the artifact contract stays testable.

@@ -17,6 +17,7 @@ use crate::diffusion::schedule::TimeGrid;
 use crate::math::linop::LinOp;
 use crate::math::rng::Rng;
 use crate::samplers::common::{apply_rows, draw_prior, project_batch, SampleOutput};
+use crate::samplers::{Sampler, SamplerState, ScoreFn, ScoreRequest};
 use crate::score::model::ScoreModel;
 
 struct StepOps {
@@ -61,6 +62,97 @@ fn build_steps(proc: &dyn Process, grid: &TimeGrid, kt: crate::diffusion::KtKind
         .collect()
 }
 
+/// Generalized ancestral sampling on a time grid.
+pub struct Ancestral<'a> {
+    pub grid: &'a TimeGrid,
+}
+
+struct AncestralState<'a> {
+    proc: &'a dyn Process,
+    grid: &'a TimeGrid,
+    steps: Vec<StepOps>,
+    du: usize,
+    u: Vec<f64>,
+    eps: Vec<f64>,
+    zhat: Vec<f64>,
+    next: Vec<f64>,
+    keps: Vec<f64>,
+    noise: Vec<f64>,
+    nfe: usize,
+}
+
+impl Sampler for Ancestral<'_> {
+    fn n_steps(&self) -> usize {
+        self.grid.n_steps()
+    }
+
+    fn init<'a>(
+        &'a self,
+        proc: &'a dyn Process,
+        model: &'a dyn ScoreModel,
+        n: usize,
+        rng: &mut Rng,
+        _record_traj: bool,
+    ) -> Box<dyn SamplerState + 'a> {
+        let du = proc.dim_u();
+        let steps = build_steps(proc, self.grid, model.kt_kind());
+        let u = draw_prior(proc, n, rng);
+        Box::new(AncestralState {
+            proc,
+            grid: self.grid,
+            steps,
+            du,
+            eps: vec![0.0; n * du],
+            zhat: vec![0.0; n * du],
+            next: vec![0.0; n * du],
+            keps: vec![0.0; du],
+            noise: vec![0.0; du],
+            u,
+            nfe: 0,
+        })
+    }
+}
+
+impl SamplerState for AncestralState<'_> {
+    fn step(&mut self, i: usize, score: &mut ScoreFn<'_>, rng: &mut Rng) {
+        let du = self.du;
+        let ops = &self.steps[i - 1];
+        score(ScoreRequest { t: self.grid.ts[i], u: &self.u }, &mut self.eps);
+        self.nfe += 1;
+        // ẑ = u − K_s ε
+        for ((zrow, urow), erow) in self
+            .zhat
+            .chunks_exact_mut(du)
+            .zip(self.u.chunks_exact(du))
+            .zip(self.eps.chunks_exact(du))
+        {
+            ops.kt.apply(erow, &mut self.keps);
+            for j in 0..du {
+                zrow[j] = urow[j] - self.keps[j];
+            }
+        }
+        // u ← mean_z ẑ + gain u (+ noise except at the final step)
+        apply_rows(&ops.mean_z, &self.zhat, &mut self.next, du);
+        for (nrow, urow) in self.next.chunks_exact_mut(du).zip(self.u.chunks_exact(du)) {
+            ops.gain.apply_add(urow, nrow);
+            if i > 1 {
+                ops.noise.sample_noise(rng, &mut self.noise);
+                for j in 0..du {
+                    nrow[j] += self.noise[j];
+                }
+            }
+        }
+        std::mem::swap(&mut self.u, &mut self.next);
+    }
+
+    fn finish(self: Box<Self>) -> SampleOutput {
+        let xs = project_batch(self.proc, &self.u);
+        SampleOutput { xs, us: self.u, nfe: self.nfe, traj: None }
+    }
+}
+
+/// Run ancestral sampling — thin wrapper over [`Ancestral`]; prefer the
+/// [`Sampler`] trait for new code.
 pub fn sample_ancestral(
     proc: &dyn Process,
     model: &dyn ScoreModel,
@@ -68,47 +160,7 @@ pub fn sample_ancestral(
     n: usize,
     rng: &mut Rng,
 ) -> SampleOutput {
-    let du = proc.dim_u();
-    let steps = build_steps(proc, grid, model.kt_kind());
-    let n_steps = grid.n_steps();
-    let mut u = draw_prior(proc, n, rng);
-    let mut eps = vec![0.0; n * du];
-    let mut zhat = vec![0.0; n * du];
-    let mut next = vec![0.0; n * du];
-    let mut keps = vec![0.0; du];
-    let mut noise = vec![0.0; du];
-    let mut nfe = 0;
-
-    for i in (1..=n_steps).rev() {
-        let ops = &steps[i - 1];
-        model.eps_batch(grid.ts[i], &u, &mut eps);
-        nfe += 1;
-        // ẑ = u − K_s ε
-        for ((zrow, urow), erow) in zhat
-            .chunks_exact_mut(du)
-            .zip(u.chunks_exact(du))
-            .zip(eps.chunks_exact(du))
-        {
-            ops.kt.apply(erow, &mut keps);
-            for j in 0..du {
-                zrow[j] = urow[j] - keps[j];
-            }
-        }
-        // u ← mean_z ẑ + gain u (+ noise except at the final step)
-        apply_rows(&ops.mean_z, &zhat, &mut next, du);
-        for (nrow, urow) in next.chunks_exact_mut(du).zip(u.chunks_exact(du)) {
-            ops.gain.apply_add(urow, nrow);
-            if i > 1 {
-                ops.noise.sample_noise(rng, &mut noise);
-                for j in 0..du {
-                    nrow[j] += noise[j];
-                }
-            }
-        }
-        std::mem::swap(&mut u, &mut next);
-    }
-    let xs = project_batch(proc, &u);
-    SampleOutput { xs, us: u, nfe, traj: None }
+    Ancestral { grid }.run(proc, model, n, rng, false)
 }
 
 #[cfg(test)]

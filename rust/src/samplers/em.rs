@@ -4,57 +4,95 @@
 //! the probability-flow ODE — the paper's weakest baseline, kept
 //! deliberately (Fig. 4's "Euler" curve and Table 2's "EM" row).
 
-use crate::diffusion::process::Process;
+use crate::diffusion::process::{KtKind, Process};
 use crate::diffusion::schedule::TimeGrid;
 use crate::math::rng::Rng;
 use crate::samplers::common::{draw_prior, project_batch, SampleOutput, Traj};
+use crate::samplers::{Sampler, SamplerState, ScoreFn, ScoreRequest};
 use crate::score::model::ScoreModel;
 
-pub fn sample_em(
-    proc: &dyn Process,
-    model: &dyn ScoreModel,
-    grid: &TimeGrid,
-    lambda: f64,
-    n: usize,
-    rng: &mut Rng,
-    record_traj: bool,
-) -> SampleOutput {
-    let du = proc.dim_u();
-    let ts = &grid.ts;
-    let n_steps = grid.n_steps();
-    let mut u = draw_prior(proc, n, rng);
-    let mut eps = vec![0.0; n * du];
-    let mut score_buf = vec![0.0; du];
-    let mut drift = vec![0.0; du];
-    let mut nfe = 0usize;
-    let mut traj = record_traj.then(Traj::default);
+/// Euler–Maruyama on the marginal-equivalent SDE (λ=0: plain Euler on
+/// the probability-flow ODE).
+pub struct Em<'a> {
+    pub grid: &'a TimeGrid,
+    pub lambda: f64,
+}
 
-    for i in (1..=n_steps).rev() {
+struct EmState<'a> {
+    proc: &'a dyn Process,
+    grid: &'a TimeGrid,
+    kt: KtKind,
+    lambda: f64,
+    du: usize,
+    u: Vec<f64>,
+    eps: Vec<f64>,
+    score_buf: Vec<f64>,
+    drift: Vec<f64>,
+    nfe: usize,
+    traj: Option<Traj>,
+}
+
+impl Sampler for Em<'_> {
+    fn n_steps(&self) -> usize {
+        self.grid.n_steps()
+    }
+
+    fn init<'a>(
+        &'a self,
+        proc: &'a dyn Process,
+        model: &'a dyn ScoreModel,
+        n: usize,
+        rng: &mut Rng,
+        record_traj: bool,
+    ) -> Box<dyn SamplerState + 'a> {
+        let du = proc.dim_u();
+        let u = draw_prior(proc, n, rng);
+        Box::new(EmState {
+            proc,
+            grid: self.grid,
+            kt: model.kt_kind(),
+            lambda: self.lambda,
+            du,
+            eps: vec![0.0; n * du],
+            score_buf: vec![0.0; du],
+            drift: vec![0.0; du],
+            u,
+            nfe: 0,
+            traj: record_traj.then(Traj::default),
+        })
+    }
+}
+
+impl SamplerState for EmState<'_> {
+    fn step(&mut self, i: usize, score: &mut ScoreFn<'_>, rng: &mut Rng) {
+        let ts = &self.grid.ts;
+        let du = self.du;
+        let lambda = self.lambda;
         let t = ts[i];
         let dt = ts[i - 1] - ts[i]; // negative
-        model.eps_batch(t, &u, &mut eps);
-        nfe += 1;
-        if let Some(tr) = traj.as_mut() {
-            tr.push(t, &u[..du], &eps[..du]);
+        score(ScoreRequest { t, u: &self.u }, &mut self.eps);
+        self.nfe += 1;
+        if let Some(tr) = self.traj.as_mut() {
+            tr.push(t, &self.u[..du], &self.eps[..du]);
         }
-        let f = proc.f_op(t);
-        let ggt = proc.ggt_op(t);
-        let g = proc.g_op(t);
-        let kinv_t = proc.kt(model.kt_kind(), t).inv().transpose();
+        let f = self.proc.f_op(t);
+        let ggt = self.proc.ggt_op(t);
+        let g = self.proc.g_op(t);
+        let kinv_t = self.proc.kt(self.kt, t).inv().transpose();
         let half = 0.5 * (1.0 + lambda * lambda);
         let sq = dt.abs().sqrt() * lambda;
-        for (row, erow) in u.chunks_exact_mut(du).zip(eps.chunks_exact(du)) {
+        for (row, erow) in self.u.chunks_exact_mut(du).zip(self.eps.chunks_exact(du)) {
             // s = −K^{-T} ε
-            kinv_t.apply(erow, &mut score_buf);
-            for s in score_buf.iter_mut() {
+            kinv_t.apply(erow, &mut self.score_buf);
+            for s in self.score_buf.iter_mut() {
                 *s = -*s;
             }
             // drift = F u − half·GGᵀ s
-            f.apply(row, &mut drift);
+            f.apply(row, &mut self.drift);
             let mut gs = vec![0.0; du];
-            ggt.apply(&score_buf, &mut gs);
+            ggt.apply(&self.score_buf, &mut gs);
             for j in 0..du {
-                row[j] += dt * (drift[j] - half * gs[j]);
+                row[j] += dt * (self.drift[j] - half * gs[j]);
             }
             if lambda > 0.0 {
                 let mut z = vec![0.0; du];
@@ -65,11 +103,28 @@ pub fn sample_em(
             }
         }
     }
-    if let Some(tr) = traj.as_mut() {
-        tr.push(ts[0], &u[..du], &[]);
+
+    fn finish(mut self: Box<Self>) -> SampleOutput {
+        if let Some(tr) = self.traj.as_mut() {
+            tr.push(self.grid.ts[0], &self.u[..self.du], &[]);
+        }
+        let xs = project_batch(self.proc, &self.u);
+        SampleOutput { xs, us: self.u, nfe: self.nfe, traj: self.traj }
     }
-    let xs = project_batch(proc, &u);
-    SampleOutput { xs, us: u, nfe, traj }
+}
+
+/// Run Euler–Maruyama — thin wrapper over [`Em`]; prefer the [`Sampler`]
+/// trait for new code.
+pub fn sample_em(
+    proc: &dyn Process,
+    model: &dyn ScoreModel,
+    grid: &TimeGrid,
+    lambda: f64,
+    n: usize,
+    rng: &mut Rng,
+    record_traj: bool,
+) -> SampleOutput {
+    Em { grid, lambda }.run(proc, model, n, rng, record_traj)
 }
 
 #[cfg(test)]

@@ -17,11 +17,218 @@ use crate::math::rng::Rng;
 use crate::samplers::common::{
     apply_add_rows, apply_rows, draw_prior, project_batch, SampleOutput, Traj,
 };
+use crate::samplers::{Sampler, SamplerState, ScoreFn, ScoreRequest};
 use crate::score::model::ScoreModel;
 
-/// Run deterministic gDDIM (multistep predictor, optional PC).
+/// Deterministic gDDIM (multistep predictor, optional PC) on a prebuilt
+/// Stage-I plan.
 ///
 /// NFE: `N` predictor-only, `2N−1` with corrector (paper Table 8).
+pub struct GddimDet<'a> {
+    pub plan: &'a SamplerPlan,
+}
+
+struct DetState<'a> {
+    plan: &'a SamplerPlan,
+    proc: &'a dyn Process,
+    du: usize,
+    with_corr: bool,
+    u: Vec<f64>,
+    next: Vec<f64>,
+    /// ε history: hist[0] is ε at the current time t_i, hist[1] at t_{i+1}, …
+    hist: VecDeque<Vec<f64>>,
+    nfe: usize,
+    traj: Option<Traj>,
+}
+
+impl Sampler for GddimDet<'_> {
+    fn n_steps(&self) -> usize {
+        self.plan.n_steps()
+    }
+
+    fn init<'a>(
+        &'a self,
+        proc: &'a dyn Process,
+        model: &'a dyn ScoreModel,
+        n: usize,
+        rng: &mut Rng,
+        record_traj: bool,
+    ) -> Box<dyn SamplerState + 'a> {
+        assert_eq!(self.plan.cfg.lambda, 0.0, "use GddimSde for λ>0");
+        assert_eq!(
+            model.kt_kind(),
+            self.plan.cfg.kt,
+            "plan/model K_t parameterization mismatch"
+        );
+        let du = proc.dim_u();
+        let u = draw_prior(proc, n, rng);
+        Box::new(DetState {
+            plan: self.plan,
+            proc,
+            du,
+            with_corr: self.plan.cfg.with_corrector && !self.plan.corr.is_empty(),
+            next: vec![0.0; n * du],
+            hist: VecDeque::new(),
+            u,
+            nfe: 0,
+            traj: record_traj.then(Traj::default),
+        })
+    }
+}
+
+impl SamplerState for DetState<'_> {
+    fn step(&mut self, i: usize, score: &mut ScoreFn<'_>, _rng: &mut Rng) {
+        let ts = &self.plan.grid.ts;
+        let du = self.du;
+        if self.hist.is_empty() {
+            // First step: seed the ε history at t_N.
+            debug_assert_eq!(i, self.plan.n_steps(), "gDDIM steps count down from n_steps");
+            let mut eps0 = vec![0.0; self.u.len()];
+            score(ScoreRequest { t: ts[self.plan.n_steps()], u: &self.u }, &mut eps0);
+            self.nfe += 1;
+            if let Some(tr) = self.traj.as_mut() {
+                tr.push(ts[self.plan.n_steps()], &self.u[..du], &eps0[..du]);
+            }
+            self.hist.push_front(eps0);
+        }
+        let step = i - 1; // plan arrays are indexed by i−1
+        let coeffs = &self.plan.pred[step];
+        // Predictor: ū(t_{i−1}) = Ψ u(t_i) + Σ_j C_ij ε_j   (Eq. 19a)
+        apply_rows(&self.plan.psi[step], &self.u, &mut self.next, du);
+        for (j, c) in coeffs.iter().enumerate() {
+            apply_add_rows(c, &self.hist[j], &mut self.next, du);
+        }
+
+        if self.with_corr && i > 1 {
+            // ε̄ at the predicted state (paper Table 8: "PC adds one more
+            // correcting step after each predicting step except the last",
+            // for a total of 2N−1 NFE).
+            let mut eps_bar = vec![0.0; self.u.len()];
+            score(ScoreRequest { t: ts[i - 1], u: &self.next }, &mut eps_bar);
+            self.nfe += 1;
+            // Corrector (Eq. 45): rebuild from u(t_i) with ᶜC.
+            let cc = &self.plan.corr[step];
+            apply_rows(&self.plan.psi[step], &self.u, &mut self.next, du);
+            apply_add_rows(&cc[0], &eps_bar, &mut self.next, du);
+            for (jj, c) in cc.iter().enumerate().skip(1) {
+                apply_add_rows(c, &self.hist[jj - 1], &mut self.next, du);
+            }
+            std::mem::swap(&mut self.u, &mut self.next);
+            // Fresh ε at the corrected state feeds the next predictor.
+            let mut eps_new = vec![0.0; self.u.len()];
+            score(ScoreRequest { t: ts[i - 1], u: &self.u }, &mut eps_new);
+            self.nfe += 1;
+            self.hist.push_front(eps_new);
+        } else if self.with_corr {
+            // Final step: predictor only.
+            std::mem::swap(&mut self.u, &mut self.next);
+        } else {
+            std::mem::swap(&mut self.u, &mut self.next);
+            if i > 1 {
+                let mut eps_new = vec![0.0; self.u.len()];
+                score(ScoreRequest { t: ts[i - 1], u: &self.u }, &mut eps_new);
+                self.nfe += 1;
+                self.hist.push_front(eps_new);
+            }
+        }
+        while self.hist.len() > self.plan.cfg.q {
+            self.hist.pop_back();
+        }
+        if let Some(tr) = self.traj.as_mut() {
+            let e = self.hist.front().map(|h| &h[..du]).unwrap_or(&[]);
+            tr.push(ts[i - 1], &self.u[..du], e);
+        }
+    }
+
+    fn finish(self: Box<Self>) -> SampleOutput {
+        let xs = project_batch(self.proc, &self.u);
+        SampleOutput { xs, us: self.u, nfe: self.nfe, traj: self.traj }
+    }
+}
+
+/// Stochastic gDDIM (Eq. 22) on a plan built with λ > 0 (which implies
+/// `K_t = R_t` and q = 1).
+pub struct GddimSde<'a> {
+    pub plan: &'a SamplerPlan,
+}
+
+struct SdeState<'a> {
+    plan: &'a SamplerPlan,
+    proc: &'a dyn Process,
+    du: usize,
+    u: Vec<f64>,
+    eps: Vec<f64>,
+    next: Vec<f64>,
+    noise: Vec<f64>,
+    nfe: usize,
+    traj: Option<Traj>,
+}
+
+impl Sampler for GddimSde<'_> {
+    fn n_steps(&self) -> usize {
+        self.plan.n_steps()
+    }
+
+    fn init<'a>(
+        &'a self,
+        proc: &'a dyn Process,
+        _model: &'a dyn ScoreModel,
+        n: usize,
+        rng: &mut Rng,
+        record_traj: bool,
+    ) -> Box<dyn SamplerState + 'a> {
+        assert!(self.plan.cfg.lambda > 0.0, "use GddimDet for λ=0");
+        assert!(!self.plan.stoch_mean.is_empty());
+        let du = proc.dim_u();
+        let u = draw_prior(proc, n, rng);
+        Box::new(SdeState {
+            plan: self.plan,
+            proc,
+            du,
+            eps: vec![0.0; n * du],
+            next: vec![0.0; n * du],
+            noise: vec![0.0; du],
+            u,
+            nfe: 0,
+            traj: record_traj.then(Traj::default),
+        })
+    }
+}
+
+impl SamplerState for SdeState<'_> {
+    fn step(&mut self, i: usize, score: &mut ScoreFn<'_>, rng: &mut Rng) {
+        let ts = &self.plan.grid.ts;
+        let du = self.du;
+        let step = i - 1;
+        score(ScoreRequest { t: ts[i], u: &self.u }, &mut self.eps);
+        self.nfe += 1;
+        if let Some(tr) = self.traj.as_mut() {
+            tr.push(ts[i], &self.u[..du], &self.eps[..du]);
+        }
+        // mean: Ψ u + [Ψ̂ − Ψ]K_s ε   (Eq. 22)
+        apply_rows(&self.plan.psi[step], &self.u, &mut self.next, du);
+        apply_add_rows(&self.plan.stoch_mean[step], &self.eps, &mut self.next, du);
+        // noise: chol(P_st) z
+        for row in self.next.chunks_exact_mut(du) {
+            self.plan.stoch_noise[step].sample_noise(rng, &mut self.noise);
+            for j in 0..du {
+                row[j] += self.noise[j];
+            }
+        }
+        std::mem::swap(&mut self.u, &mut self.next);
+    }
+
+    fn finish(mut self: Box<Self>) -> SampleOutput {
+        if let Some(tr) = self.traj.as_mut() {
+            tr.push(self.plan.grid.ts[0], &self.u[..self.du], &[]);
+        }
+        let xs = project_batch(self.proc, &self.u);
+        SampleOutput { xs, us: self.u, nfe: self.nfe, traj: self.traj }
+    }
+}
+
+/// Run deterministic gDDIM — thin wrapper over [`GddimDet`]; prefer the
+/// [`Sampler`] trait for new code.
 pub fn sample_deterministic(
     proc: &dyn Process,
     plan: &SamplerPlan,
@@ -30,84 +237,11 @@ pub fn sample_deterministic(
     rng: &mut Rng,
     record_traj: bool,
 ) -> SampleOutput {
-    assert_eq!(plan.cfg.lambda, 0.0, "use sample_stochastic for λ>0");
-    assert_eq!(model.kt_kind(), plan.cfg.kt, "plan/model K_t parameterization mismatch");
-    let du = proc.dim_u();
-    let ts = &plan.grid.ts;
-    let n_steps = plan.n_steps();
-    let with_corr = plan.cfg.with_corrector && !plan.corr.is_empty();
-
-    let mut u = draw_prior(proc, n, rng);
-    let mut nfe = 0usize;
-    let mut traj = record_traj.then(Traj::default);
-
-    // ε history: hist[0] is ε at the current time t_i, hist[1] at t_{i+1}, …
-    let mut hist: VecDeque<Vec<f64>> = VecDeque::new();
-    let mut eps0 = vec![0.0; n * du];
-    model.eps_batch(ts[n_steps], &u, &mut eps0);
-    nfe += 1;
-    if let Some(tr) = traj.as_mut() {
-        tr.push(ts[n_steps], &u[..du], &eps0[..du]);
-    }
-    hist.push_front(eps0);
-
-    let mut next = vec![0.0; n * du];
-    for i in (1..=n_steps).rev() {
-        let step = i - 1; // plan arrays are indexed by i−1
-        let coeffs = &plan.pred[step];
-        // Predictor: ū(t_{i−1}) = Ψ u(t_i) + Σ_j C_ij ε_j   (Eq. 19a)
-        apply_rows(&plan.psi[step], &u, &mut next, du);
-        for (j, c) in coeffs.iter().enumerate() {
-            apply_add_rows(c, &hist[j], &mut next, du);
-        }
-
-        if with_corr && i > 1 {
-            // ε̄ at the predicted state (paper Table 8: "PC adds one more
-            // correcting step after each predicting step except the last",
-            // for a total of 2N−1 NFE).
-            let mut eps_bar = vec![0.0; n * du];
-            model.eps_batch(ts[i - 1], &next, &mut eps_bar);
-            nfe += 1;
-            // Corrector (Eq. 45): rebuild from u(t_i) with ᶜC.
-            let cc = &plan.corr[step];
-            apply_rows(&plan.psi[step], &u, &mut next, du);
-            apply_add_rows(&cc[0], &eps_bar, &mut next, du);
-            for (jj, c) in cc.iter().enumerate().skip(1) {
-                apply_add_rows(c, &hist[jj - 1], &mut next, du);
-            }
-            std::mem::swap(&mut u, &mut next);
-            // Fresh ε at the corrected state feeds the next predictor.
-            let mut eps_new = vec![0.0; n * du];
-            model.eps_batch(ts[i - 1], &u, &mut eps_new);
-            nfe += 1;
-            hist.push_front(eps_new);
-        } else if with_corr {
-            // Final step: predictor only.
-            std::mem::swap(&mut u, &mut next);
-        } else {
-            std::mem::swap(&mut u, &mut next);
-            if i > 1 {
-                let mut eps_new = vec![0.0; n * du];
-                model.eps_batch(ts[i - 1], &u, &mut eps_new);
-                nfe += 1;
-                hist.push_front(eps_new);
-            }
-        }
-        while hist.len() > plan.cfg.q {
-            hist.pop_back();
-        }
-        if let Some(tr) = traj.as_mut() {
-            let e = hist.front().map(|h| &h[..du]).unwrap_or(&[]);
-            tr.push(ts[i - 1], &u[..du], e);
-        }
-    }
-
-    let xs = project_batch(proc, &u);
-    SampleOutput { xs, us: u, nfe, traj }
+    GddimDet { plan }.run(proc, model, n, rng, record_traj)
 }
 
-/// Run stochastic gDDIM (Eq. 22). Requires a plan built with λ > 0
-/// (which implies `K_t = R_t` and q = 1).
+/// Run stochastic gDDIM — thin wrapper over [`GddimSde`]; prefer the
+/// [`Sampler`] trait for new code.
 pub fn sample_stochastic(
     proc: &dyn Process,
     plan: &SamplerPlan,
@@ -116,44 +250,7 @@ pub fn sample_stochastic(
     rng: &mut Rng,
     record_traj: bool,
 ) -> SampleOutput {
-    assert!(plan.cfg.lambda > 0.0, "use sample_deterministic for λ=0");
-    assert!(!plan.stoch_mean.is_empty());
-    let du = proc.dim_u();
-    let ts = &plan.grid.ts;
-    let n_steps = plan.n_steps();
-
-    let mut u = draw_prior(proc, n, rng);
-    let mut eps = vec![0.0; n * du];
-    let mut next = vec![0.0; n * du];
-    let mut noise = vec![0.0; du];
-    let mut nfe = 0usize;
-    let mut traj = record_traj.then(Traj::default);
-
-    for i in (1..=n_steps).rev() {
-        let step = i - 1;
-        model.eps_batch(ts[i], &u, &mut eps);
-        nfe += 1;
-        if let Some(tr) = traj.as_mut() {
-            tr.push(ts[i], &u[..du], &eps[..du]);
-        }
-        // mean: Ψ u + [Ψ̂ − Ψ]K_s ε   (Eq. 22)
-        apply_rows(&plan.psi[step], &u, &mut next, du);
-        apply_add_rows(&plan.stoch_mean[step], &eps, &mut next, du);
-        // noise: chol(P_st) z
-        for row in next.chunks_exact_mut(du) {
-            plan.stoch_noise[step].sample_noise(rng, &mut noise);
-            for j in 0..du {
-                row[j] += noise[j];
-            }
-        }
-        std::mem::swap(&mut u, &mut next);
-    }
-    if let Some(tr) = traj.as_mut() {
-        tr.push(ts[0], &u[..du], &[]);
-    }
-
-    let xs = project_batch(proc, &u);
-    SampleOutput { xs, us: u, nfe, traj }
+    GddimSde { plan }.run(proc, model, n, rng, record_traj)
 }
 
 #[cfg(test)]

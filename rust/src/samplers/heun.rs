@@ -4,44 +4,124 @@
 //! each step does an Euler predictor + trapezoidal correction; the final
 //! step falls back to Euler (Karras convention), so NFE = 2N−1.
 
-use crate::diffusion::process::Process;
+use crate::diffusion::process::{KtKind, Process};
 use crate::diffusion::schedule::TimeGrid;
 use crate::math::rng::Rng;
 use crate::samplers::common::{draw_prior, project_batch, SampleOutput};
+use crate::samplers::{Sampler, SamplerState, ScoreFn, ScoreRequest};
 use crate::score::model::ScoreModel;
 
-/// Probability-flow drift for a whole batch.
+/// Probability-flow drift for a whole batch (ε via the score boundary).
 fn drift_batch(
     proc: &dyn Process,
-    model: &dyn ScoreModel,
+    kt: KtKind,
+    score: &mut ScoreFn<'_>,
     t: f64,
     u: &[f64],
     out: &mut [f64],
     eps: &mut [f64],
 ) {
     let du = proc.dim_u();
-    model.eps_batch(t, u, eps);
+    score(ScoreRequest { t, u }, eps);
     let f = proc.f_op(t);
     let ggt = proc.ggt_op(t);
-    let kinv_t = proc.kt(model.kt_kind(), t).inv().transpose();
-    let mut score = vec![0.0; du];
+    let kinv_t = proc.kt(kt, t).inv().transpose();
+    let mut s_buf = vec![0.0; du];
     let mut fu = vec![0.0; du];
     let mut gs = vec![0.0; du];
     for ((urow, erow), orow) in
         u.chunks_exact(du).zip(eps.chunks_exact(du)).zip(out.chunks_exact_mut(du))
     {
-        kinv_t.apply(erow, &mut score);
-        for s in score.iter_mut() {
+        kinv_t.apply(erow, &mut s_buf);
+        for s in s_buf.iter_mut() {
             *s = -*s;
         }
         f.apply(urow, &mut fu);
-        ggt.apply(&score, &mut gs);
+        ggt.apply(&s_buf, &mut gs);
         for j in 0..du {
             orow[j] = fu[j] - 0.5 * gs[j];
         }
     }
 }
 
+/// 2nd-order Heun on the probability-flow ODE.
+pub struct Heun<'a> {
+    pub grid: &'a TimeGrid,
+}
+
+struct HeunState<'a> {
+    proc: &'a dyn Process,
+    grid: &'a TimeGrid,
+    kt: KtKind,
+    u: Vec<f64>,
+    k1: Vec<f64>,
+    k2: Vec<f64>,
+    mid: Vec<f64>,
+    eps: Vec<f64>,
+    nfe: usize,
+}
+
+impl Sampler for Heun<'_> {
+    fn n_steps(&self) -> usize {
+        self.grid.n_steps()
+    }
+
+    fn init<'a>(
+        &'a self,
+        proc: &'a dyn Process,
+        model: &'a dyn ScoreModel,
+        n: usize,
+        rng: &mut Rng,
+        _record_traj: bool,
+    ) -> Box<dyn SamplerState + 'a> {
+        let du = proc.dim_u();
+        let u = draw_prior(proc, n, rng);
+        Box::new(HeunState {
+            proc,
+            grid: self.grid,
+            kt: model.kt_kind(),
+            k1: vec![0.0; n * du],
+            k2: vec![0.0; n * du],
+            mid: vec![0.0; n * du],
+            eps: vec![0.0; n * du],
+            u,
+            nfe: 0,
+        })
+    }
+}
+
+impl SamplerState for HeunState<'_> {
+    fn step(&mut self, i: usize, score: &mut ScoreFn<'_>, _rng: &mut Rng) {
+        let ts = &self.grid.ts;
+        let (s, t) = (ts[i], ts[i - 1]);
+        let dt = t - s;
+        drift_batch(self.proc, self.kt, score, s, &self.u, &mut self.k1, &mut self.eps);
+        self.nfe += 1;
+        if i == 1 {
+            // Final step: Euler (Karras convention).
+            for (uu, kk) in self.u.iter_mut().zip(&self.k1) {
+                *uu += dt * kk;
+            }
+            return;
+        }
+        for j in 0..self.u.len() {
+            self.mid[j] = self.u[j] + dt * self.k1[j];
+        }
+        drift_batch(self.proc, self.kt, score, t, &self.mid, &mut self.k2, &mut self.eps);
+        self.nfe += 1;
+        for j in 0..self.u.len() {
+            self.u[j] += 0.5 * dt * (self.k1[j] + self.k2[j]);
+        }
+    }
+
+    fn finish(self: Box<Self>) -> SampleOutput {
+        let xs = project_batch(self.proc, &self.u);
+        SampleOutput { xs, us: self.u, nfe: self.nfe, traj: None }
+    }
+}
+
+/// Run 2nd-order Heun — thin wrapper over [`Heun`]; prefer the
+/// [`Sampler`] trait for new code.
 pub fn sample_heun(
     proc: &dyn Process,
     model: &dyn ScoreModel,
@@ -49,39 +129,7 @@ pub fn sample_heun(
     n: usize,
     rng: &mut Rng,
 ) -> SampleOutput {
-    let du = proc.dim_u();
-    let ts = &grid.ts;
-    let n_steps = grid.n_steps();
-    let mut u = draw_prior(proc, n, rng);
-    let mut k1 = vec![0.0; n * du];
-    let mut k2 = vec![0.0; n * du];
-    let mut mid = vec![0.0; n * du];
-    let mut eps = vec![0.0; n * du];
-    let mut nfe = 0usize;
-
-    for i in (1..=n_steps).rev() {
-        let (s, t) = (ts[i], ts[i - 1]);
-        let dt = t - s;
-        drift_batch(proc, model, s, &u, &mut k1, &mut eps);
-        nfe += 1;
-        if i == 1 {
-            // Final step: Euler (Karras convention).
-            for (uu, kk) in u.iter_mut().zip(&k1) {
-                *uu += dt * kk;
-            }
-            break;
-        }
-        for j in 0..u.len() {
-            mid[j] = u[j] + dt * k1[j];
-        }
-        drift_batch(proc, model, t, &mid, &mut k2, &mut eps);
-        nfe += 1;
-        for j in 0..u.len() {
-            u[j] += 0.5 * dt * (k1[j] + k2[j]);
-        }
-    }
-    let xs = project_batch(proc, &u);
-    SampleOutput { xs, us: u, nfe, traj: None }
+    Heun { grid }.run(proc, model, n, rng, false)
 }
 
 #[cfg(test)]

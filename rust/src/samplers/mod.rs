@@ -1,20 +1,39 @@
 //! Stage II — the samplers (paper App. C.4 "Online execution of gDDIM")
-//! plus every baseline the paper's evaluation compares against:
+//! plus every baseline the paper's evaluation compares against, unified
+//! behind one step-level [`Sampler`] trait:
 //!
-//! | paper name                    | module       |
-//! |-------------------------------|--------------|
-//! | gDDIM (det., multistep P/PC)  | [`gddim`]    |
-//! | gDDIM (stochastic, Eq. 22)    | [`gddim`]    |
-//! | Euler–Maruyama on Eq. 6       | [`em`]       |
-//! | Ancestral sampling            | [`ancestral`]|
-//! | Prob.Flow RK45                | [`rk45`]     |
-//! | 2nd-order Heun (Karras-style) | [`heun`]     |
-//! | SSCS (Dockhorn et al., CLD)   | [`sscs`]     |
+//! | paper name                    | module       | impl            |
+//! |-------------------------------|--------------|-----------------|
+//! | gDDIM (det., multistep P/PC)  | [`gddim`]    | [`GddimDet`]    |
+//! | gDDIM (stochastic, Eq. 22)    | [`gddim`]    | [`GddimSde`]    |
+//! | Euler–Maruyama on Eq. 6       | [`em`]       | [`Em`]          |
+//! | Ancestral sampling            | [`ancestral`]| [`Ancestral`]   |
+//! | Prob.Flow RK45                | [`rk45`]     | [`Rk45`]        |
+//! | 2nd-order Heun (Karras-style) | [`heun`]     | [`Heun`]        |
+//! | SSCS (Dockhorn et al., CLD)   | [`sscs`]     | [`Sscs`]        |
+//!
+//! The paper's central claim (Sec. 4, App. C.4) is that all of these are
+//! the *same object*: a numerical scheme stepping the reverse SDE/ODE
+//! under a score approximation, differing only in coefficients. The trait
+//! encodes that: [`Sampler::init`] draws the prior and builds per-run
+//! state, [`SamplerState::step`] advances one grid interval, and every
+//! score-network evaluation crosses an explicit [`ScoreRequest`] → ε
+//! boundary ([`ScoreFn`]) instead of being buried in a per-sampler loop.
+//! That boundary is what lets the serving engine coalesce score calls
+//! across concurrent jobs that share `(process, dataset, t)`.
+//!
+//! Configuration lives in the owned, hashable [`SamplerSpec`] (module
+//! [`spec`]), which the server uses as the batchable part of a request
+//! key and which instantiates any of the seven impls uniformly.
 //!
 //! All samplers share the batched-state conventions of [`common`] and
-//! report NFE so the benches reproduce the paper's FID-vs-NFE axes.
+//! report NFE so the benches reproduce the paper's FID-vs-NFE axes. The
+//! historical free functions (`gddim::sample_deterministic`,
+//! `em::sample_em`, …) survive as thin wrappers over the trait; prefer
+//! the trait for new code.
 
 pub mod common;
+pub mod spec;
 pub mod gddim;
 pub mod em;
 pub mod ancestral;
@@ -22,4 +41,100 @@ pub mod rk45;
 pub mod heun;
 pub mod sscs;
 
+pub use ancestral::Ancestral;
 pub use common::{SampleOutput, Traj};
+pub use em::Em;
+pub use gddim::{GddimDet, GddimSde};
+pub use heun::Heun;
+pub use rk45::Rk45;
+pub use spec::{OrderedF64, SamplerSpec};
+pub use sscs::Sscs;
+
+use crate::diffusion::process::Process;
+use crate::math::rng::Rng;
+use crate::score::model::ScoreModel;
+
+/// One batched score evaluation crossing the sampler ↔ model boundary:
+/// "give me `ε_θ(u, t)` for these states". Samplers *request* scores
+/// through this type instead of holding a model, so a driver (engine,
+/// batcher) can route, coalesce, or instrument the calls.
+pub struct ScoreRequest<'a> {
+    /// Diffusion time of the evaluation (shared by the whole batch).
+    pub t: f64,
+    /// Batched states, row-major `n × dim_u`.
+    pub u: &'a [f64],
+}
+
+/// The score boundary a [`SamplerState`] pulls on: fill `eps` (same shape
+/// as `req.u`) with `ε_θ` for the request. [`model_score`] is the plain
+/// model-backed implementation; the serving layer can substitute a
+/// coalescing one.
+pub type ScoreFn<'s> = dyn for<'r> FnMut(ScoreRequest<'r>, &mut [f64]) + 's;
+
+/// The plain [`ScoreFn`] implementation: forward every request to
+/// `model.eps_batch` unchanged (what [`Sampler::run`] and the engine's
+/// shard driver use).
+pub fn model_score(
+    model: &dyn ScoreModel,
+) -> impl for<'r> FnMut(ScoreRequest<'r>, &mut [f64]) + '_ {
+    move |req, out| model.eps_batch(req.t, req.u, out)
+}
+
+/// A Stage-II sampling scheme: coefficients + step rule, independent of
+/// any particular run. Implementations are cheap handles (borrowing a
+/// [`crate::coeffs::SamplerPlan`] or a [`crate::diffusion::TimeGrid`]),
+/// so they can be built per batch on the stack or boxed from a
+/// [`SamplerSpec`].
+pub trait Sampler: Send + Sync {
+    /// Macro steps the default driver runs, `i = n_steps() … 1`, step `i`
+    /// advancing `t_i → t_{i−1}`. Adaptive samplers ([`Rk45`]) report 1
+    /// and do their own sub-stepping inside it.
+    fn n_steps(&self) -> usize;
+
+    /// Draw the prior `u(T) ~ p_T` and build the per-run state machine.
+    /// `model` is consulted only for its `K_t` parameterization (and
+    /// compatibility assertions) — score values flow exclusively through
+    /// the [`ScoreFn`] handed to [`SamplerState::step`].
+    fn init<'a>(
+        &'a self,
+        proc: &'a dyn Process,
+        model: &'a dyn ScoreModel,
+        n: usize,
+        rng: &mut Rng,
+        record_traj: bool,
+    ) -> Box<dyn SamplerState + 'a>;
+
+    /// Default whole-trajectory driver: `init`, then `step` from
+    /// `n_steps()` down to 1 with the plain model-backed score boundary,
+    /// then `finish`. Byte-identical to driving the state machine by
+    /// hand (which is exactly what the engine does per shard).
+    fn run(
+        &self,
+        proc: &dyn Process,
+        model: &dyn ScoreModel,
+        n: usize,
+        rng: &mut Rng,
+        record_traj: bool,
+    ) -> SampleOutput {
+        let mut state = self.init(proc, model, n, rng, record_traj);
+        let mut score = model_score(model);
+        for i in (1..=self.n_steps()).rev() {
+            state.step(i, &mut score, rng);
+        }
+        state.finish()
+    }
+}
+
+/// The per-run state machine produced by [`Sampler::init`]: the batched
+/// state plus whatever the scheme carries between steps (ε history for
+/// multistep gDDIM, posterior operators for ancestral, …).
+pub trait SamplerState: Send {
+    /// Advance one macro step `t_i → t_{i−1}` (`i` counts down from
+    /// [`Sampler::n_steps`] to 1). Every score evaluation the step needs
+    /// goes through `score`; injected noise draws from `rng` in a fixed
+    /// order, which is what keeps sharded runs bit-reproducible.
+    fn step(&mut self, i: usize, score: &mut ScoreFn<'_>, rng: &mut Rng);
+
+    /// Project the final state to data space and hand back the output.
+    fn finish(self: Box<Self>) -> SampleOutput;
+}

@@ -3,46 +3,75 @@
 //! tolerance as the NFE knob ("we tune its tolerance hyperparameters so
 //! that the real NFE is close but not equal to the given NFE").
 
-use crate::diffusion::process::Process;
+use crate::diffusion::process::{KtKind, Process};
 use crate::math::ode::rk45_integrate;
 use crate::math::rng::Rng;
 use crate::samplers::common::{draw_prior, project_batch, SampleOutput};
+use crate::samplers::{Sampler, SamplerState, ScoreFn, ScoreRequest};
 use crate::score::model::ScoreModel;
 
-pub fn sample_rk45(
-    proc: &dyn Process,
-    model: &dyn ScoreModel,
+/// Adaptive Dormand–Prince on the probability-flow ODE. The step-level
+/// decomposition is degenerate by design: the controller owns the time
+/// axis, so the whole integration is one macro step (`n_steps() == 1`)
+/// and NFE is whatever the tolerance demanded.
+pub struct Rk45 {
+    pub rtol: f64,
+}
+
+struct Rk45State<'a> {
+    proc: &'a dyn Process,
+    kt: KtKind,
     rtol: f64,
-    n: usize,
-    rng: &mut Rng,
-) -> SampleOutput {
-    let du = proc.dim_u();
-    let mut u = draw_prior(proc, n, rng);
-    let mut nfe = 0usize;
-    {
-        let mut eps = vec![0.0; n * du];
-        let mut score = vec![0.0; du];
+    u: Vec<f64>,
+    nfe: usize,
+}
+
+impl Sampler for Rk45 {
+    fn n_steps(&self) -> usize {
+        1
+    }
+
+    fn init<'a>(
+        &'a self,
+        proc: &'a dyn Process,
+        model: &'a dyn ScoreModel,
+        n: usize,
+        rng: &mut Rng,
+        _record_traj: bool,
+    ) -> Box<dyn SamplerState + 'a> {
+        let u = draw_prior(proc, n, rng);
+        Box::new(Rk45State { proc, kt: model.kt_kind(), rtol: self.rtol, u, nfe: 0 })
+    }
+}
+
+impl SamplerState for Rk45State<'_> {
+    fn step(&mut self, _i: usize, score: &mut ScoreFn<'_>, _rng: &mut Rng) {
+        let proc = self.proc;
+        let kt = self.kt;
+        let du = proc.dim_u();
+        let mut eps = vec![0.0; self.u.len()];
+        let mut s_buf = vec![0.0; du];
         let mut drift = vec![0.0; du];
         let mut gs = vec![0.0; du];
-        let nfe_ref = &mut nfe;
+        let nfe_ref = &mut self.nfe;
         rk45_integrate(
             &mut |t: f64, y: &[f64], dy: &mut [f64]| {
                 *nfe_ref += 1;
-                model.eps_batch(t, y, &mut eps);
+                score(ScoreRequest { t, u: y }, &mut eps);
                 let f = proc.f_op(t);
                 let ggt = proc.ggt_op(t);
-                let kinv_t = proc.kt(model.kt_kind(), t).inv().transpose();
+                let kinv_t = proc.kt(kt, t).inv().transpose();
                 for ((yrow, erow), drow) in y
                     .chunks_exact(du)
                     .zip(eps.chunks_exact(du))
                     .zip(dy.chunks_exact_mut(du))
                 {
-                    kinv_t.apply(erow, &mut score);
-                    for s in score.iter_mut() {
+                    kinv_t.apply(erow, &mut s_buf);
+                    for s in s_buf.iter_mut() {
                         *s = -*s;
                     }
                     f.apply(yrow, &mut drift);
-                    ggt.apply(&score, &mut gs);
+                    ggt.apply(&s_buf, &mut gs);
                     for j in 0..du {
                         drow[j] = drift[j] - 0.5 * gs[j];
                     }
@@ -50,13 +79,28 @@ pub fn sample_rk45(
             },
             proc.t_max(),
             proc.t_min(),
-            rtol,
-            rtol * 1e-2,
-            &mut u,
+            self.rtol,
+            self.rtol * 1e-2,
+            &mut self.u,
         );
     }
-    let xs = project_batch(proc, &u);
-    SampleOutput { xs, us: u, nfe, traj: None }
+
+    fn finish(self: Box<Self>) -> SampleOutput {
+        let xs = project_batch(self.proc, &self.u);
+        SampleOutput { xs, us: self.u, nfe: self.nfe, traj: None }
+    }
+}
+
+/// Run adaptive RK45 — thin wrapper over [`Rk45`]; prefer the
+/// [`Sampler`] trait for new code.
+pub fn sample_rk45(
+    proc: &dyn Process,
+    model: &dyn ScoreModel,
+    rtol: f64,
+    n: usize,
+    rng: &mut Rng,
+) -> SampleOutput {
+    Rk45 { rtol }.run(proc, model, n, rng, false)
 }
 
 /// Find an rtol whose actual NFE lands near `target_nfe` (the paper's

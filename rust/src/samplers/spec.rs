@@ -1,0 +1,460 @@
+//! The owned sampler specification: one hashable, serializable value
+//! describing *which* Stage-II scheme to run and its full configuration.
+//!
+//! [`SamplerSpec`] is the single source of truth the whole stack shares:
+//! the server's `PlanKey` embeds it (requests with equal specs are
+//! batchable), Stage-I plan construction derives its
+//! [`PlanConfig`] from it, and [`SamplerSpec::instantiate`] turns it
+//! into a runnable [`Sampler`] for the engine. The seven variants map
+//! 1:1 onto the impls in this crate's sampler modules.
+//!
+//! # Spec grammar
+//!
+//! Every spec round-trips through a compact text form (`Display` ⇄
+//! [`SamplerSpec::parse`]), used by the CLI (`--sampler`), the plan
+//! persistence format, and logs:
+//!
+//! ```text
+//! gddim[:q=Q,kt=R|L|sqrt[,corrector]]   deterministic gDDIM (defaults q=2, kt=R)
+//! gddim-sde[:lambda=λ]                  stochastic gDDIM, λ > 0 (default 1)
+//! em[:lambda=λ]                         Euler–Maruyama (default λ=0: prob-flow Euler)
+//! ancestral                             generalized DDPM ancestral sampling
+//! heun                                  2nd-order Heun on the prob-flow ODE
+//! rk45[:rtol=R]                         adaptive Dormand–Prince (default rtol=1e-4)
+//! sscs                                  symmetric splitting CLD sampler
+//! ```
+//!
+//! Floats print in Rust's shortest-roundtrip form, so λ and rtol survive
+//! the text form bit-exactly (no milli-unit truncation — λ=0.0001 is a
+//! distinct, hashable value).
+
+use crate::coeffs::plan::{PlanConfig, SamplerPlan};
+use crate::diffusion::process::KtKind;
+use crate::diffusion::schedule::TimeGrid;
+use crate::samplers::{Ancestral, Em, GddimDet, GddimSde, Heun, Rk45, Sampler, Sscs};
+use crate::Error;
+
+/// A finite `f64` with total equality and hashing (by bit pattern, with
+/// `-0.0` normalized to `0.0`), so float-configured sampler specs can be
+/// `HashMap` keys without precision-losing integerization.
+#[derive(Clone, Copy, Debug)]
+pub struct OrderedF64(f64);
+
+impl OrderedF64 {
+    /// Wrap a finite value. Panics on NaN/∞ — a non-finite λ or rtol is
+    /// a caller bug, not a request to be hashed.
+    pub fn new(x: f64) -> OrderedF64 {
+        assert!(x.is_finite(), "OrderedF64 requires a finite value, got {x}");
+        OrderedF64(if x == 0.0 { 0.0 } else { x })
+    }
+
+    pub fn get(self) -> f64 {
+        self.0
+    }
+}
+
+impl From<f64> for OrderedF64 {
+    fn from(x: f64) -> OrderedF64 {
+        OrderedF64::new(x)
+    }
+}
+
+impl PartialEq for OrderedF64 {
+    fn eq(&self, other: &OrderedF64) -> bool {
+        self.0.to_bits() == other.0.to_bits()
+    }
+}
+
+impl Eq for OrderedF64 {}
+
+impl std::hash::Hash for OrderedF64 {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.0.to_bits().hash(state);
+    }
+}
+
+impl std::fmt::Display for OrderedF64 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Which Stage-II sampler to run, with its full configuration. Owned,
+/// `Eq + Hash` (batchable / cacheable), and serializable via the spec
+/// grammar (see the module docs).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum SamplerSpec {
+    /// Deterministic gDDIM: exponential-integrator multistep predictor
+    /// of order `q`, score parameterized by `kt`, optional corrector
+    /// pass (paper Table 8's "PC").
+    GddimDet { q: usize, kt: KtKind, corrector: bool },
+    /// Stochastic gDDIM (Eq. 22) with λ > 0 (implies `K_t = R_t`, q=1).
+    GddimSde { lambda: OrderedF64 },
+    /// Euler–Maruyama on the marginal-equivalent SDE Eq. 6 (λ=0
+    /// degenerates to plain Euler on the probability-flow ODE).
+    Em { lambda: OrderedF64 },
+    /// Generalized DDPM/BDM ancestral sampling.
+    Ancestral,
+    /// 2nd-order Heun on the probability-flow ODE (NFE = 2N−1).
+    Heun,
+    /// Adaptive Dormand–Prince on the probability-flow ODE; `rtol` is
+    /// the NFE knob (the time grid is ignored).
+    Rk45 { rtol: OrderedF64 },
+    /// Symmetric splitting CLD sampler (Dockhorn et al.) — CLD only.
+    Sscs,
+}
+
+impl SamplerSpec {
+    /// Deterministic gDDIM with the crate-default configuration.
+    pub fn gddim(q: usize) -> SamplerSpec {
+        SamplerSpec::GddimDet { q, kt: KtKind::R, corrector: false }
+    }
+
+    /// The grammar head naming this variant.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerSpec::GddimDet { .. } => "gddim",
+            SamplerSpec::GddimSde { .. } => "gddim-sde",
+            SamplerSpec::Em { .. } => "em",
+            SamplerSpec::Ancestral => "ancestral",
+            SamplerSpec::Heun => "heun",
+            SamplerSpec::Rk45 { .. } => "rk45",
+            SamplerSpec::Sscs => "sscs",
+        }
+    }
+
+    /// The Stage-I plan this spec needs, if any (only the two gDDIM
+    /// variants precompute coefficients).
+    pub fn plan_config(&self) -> Option<PlanConfig> {
+        match self {
+            SamplerSpec::GddimDet { q, kt, corrector } => Some(PlanConfig {
+                q: *q,
+                kt: *kt,
+                with_corrector: *corrector,
+                ..PlanConfig::default()
+            }),
+            SamplerSpec::GddimSde { lambda } => Some(PlanConfig::stochastic(lambda.get())),
+            _ => None,
+        }
+    }
+
+    /// The `K_t` parameterization the score model must expose for this
+    /// spec (only deterministic gDDIM varies it; everything else uses
+    /// the paper's default `R_t`).
+    pub fn model_kt(&self) -> KtKind {
+        match self {
+            SamplerSpec::GddimDet { kt, .. } => *kt,
+            _ => KtKind::R,
+        }
+    }
+
+    /// Whether `plan` was built for exactly this spec (guards preloaded
+    /// / persisted plans against config drift). The *entire*
+    /// [`PlanConfig`] is compared — including the quadrature knobs
+    /// (`gl_points`, `gl_pieces`, `ode_steps`), so a plan persisted
+    /// under different numerics is rebuilt rather than silently adopted.
+    /// Specs without a Stage-I plan trivially match.
+    pub fn matches_plan(&self, plan: &SamplerPlan) -> bool {
+        match self.plan_config() {
+            Some(cfg) => cfg == plan.cfg,
+            None => true,
+        }
+    }
+
+    /// Validate the configuration against a process name. This is the
+    /// server's submit-time gate: it turns what used to be dispatcher
+    /// panics into clean per-request errors.
+    pub fn validate(&self, process: &str) -> crate::Result<()> {
+        match self {
+            SamplerSpec::GddimDet { q, .. } if *q == 0 => {
+                Err(Error::msg("gddim: multistep order q must be >= 1"))
+            }
+            SamplerSpec::GddimSde { lambda } if lambda.get() <= 0.0 => Err(Error::msg(
+                "gddim-sde: λ must be > 0 (use `gddim` for the deterministic λ=0 limit)",
+            )),
+            SamplerSpec::Em { lambda } if lambda.get() < 0.0 => {
+                Err(Error::msg("em: λ must be >= 0"))
+            }
+            SamplerSpec::Rk45 { rtol } if rtol.get() <= 0.0 => {
+                Err(Error::msg("rk45: rtol must be > 0"))
+            }
+            SamplerSpec::Sscs if process != "cld" => Err(Error::msg(format!(
+                "sscs is the CLD-specific splitting sampler and cannot run on `{process}` \
+                 (its analytic half-step reverses the CLD Ornstein–Uhlenbeck structure)"
+            ))),
+            _ => Ok(()),
+        }
+    }
+
+    /// Build the runnable [`Sampler`] for this spec. gDDIM variants need
+    /// the prebuilt Stage-I `plan` (and check it matches); grid samplers
+    /// borrow `grid`; RK45 ignores both inputs beyond the borrow.
+    pub fn instantiate<'a>(
+        &self,
+        plan: Option<&'a SamplerPlan>,
+        grid: &'a TimeGrid,
+    ) -> crate::Result<Box<dyn Sampler + 'a>> {
+        match self {
+            SamplerSpec::GddimDet { .. } | SamplerSpec::GddimSde { .. } => {
+                let plan = plan.ok_or_else(|| {
+                    Error::msg(format!("{self} needs a prebuilt Stage-I SamplerPlan"))
+                })?;
+                if !self.matches_plan(plan) {
+                    return Err(Error::msg(format!(
+                        "plan built for {:?} does not match spec {self}",
+                        plan.cfg
+                    )));
+                }
+                let built: Box<dyn Sampler + 'a> = match self {
+                    SamplerSpec::GddimDet { .. } => Box::new(GddimDet { plan }),
+                    _ => Box::new(GddimSde { plan }),
+                };
+                Ok(built)
+            }
+            SamplerSpec::Em { lambda } => Ok(Box::new(Em { grid, lambda: lambda.get() })),
+            SamplerSpec::Ancestral => Ok(Box::new(Ancestral { grid })),
+            SamplerSpec::Heun => Ok(Box::new(Heun { grid })),
+            SamplerSpec::Rk45 { rtol } => Ok(Box::new(Rk45 { rtol: rtol.get() })),
+            SamplerSpec::Sscs => Ok(Box::new(Sscs { grid })),
+        }
+    }
+
+    /// Parse the spec grammar (see the module docs). Inverse of
+    /// `Display`. Options that do not apply to the chosen sampler (e.g.
+    /// `gddim:lambda=…`) are an error, not silently dropped, and
+    /// non-finite floats are rejected here rather than panicking in
+    /// [`OrderedF64`].
+    pub fn parse(s: &str) -> crate::Result<SamplerSpec> {
+        let (head, tail) = match s.split_once(':') {
+            Some((h, t)) => (h.trim(), Some(t)),
+            None => (s.trim(), None),
+        };
+        let finite = |name: &str, v: &str| -> crate::Result<f64> {
+            let x: f64 =
+                v.parse().map_err(|_| Error::msg(format!("bad {name} `{v}` in `{s}`")))?;
+            if !x.is_finite() {
+                return Err(Error::msg(format!("{name} must be finite, got `{v}` in `{s}`")));
+            }
+            Ok(x)
+        };
+        let mut q = 2usize;
+        let mut kt = KtKind::R;
+        let mut corrector = false;
+        let mut lambda: Option<f64> = None;
+        let mut rtol = 1e-4f64;
+        let mut seen: Vec<&str> = Vec::new();
+        if let Some(tail) = tail {
+            for item in tail.split(',') {
+                let item = item.trim();
+                if item.is_empty() {
+                    continue;
+                }
+                match item.split_once('=') {
+                    Some(("q", v)) => {
+                        q = v.parse().map_err(|_| Error::msg(format!("bad q `{v}`")))?;
+                        seen.push("q");
+                    }
+                    Some(("kt", v)) => {
+                        kt = v.parse().map_err(Error::msg)?;
+                        seen.push("kt");
+                    }
+                    Some(("lambda", v)) => {
+                        lambda = Some(finite("lambda", v)?);
+                        seen.push("lambda");
+                    }
+                    Some(("rtol", v)) => {
+                        rtol = finite("rtol", v)?;
+                        seen.push("rtol");
+                    }
+                    None if item == "corrector" => {
+                        corrector = true;
+                        seen.push("corrector");
+                    }
+                    _ => {
+                        return Err(Error::msg(format!(
+                            "unknown sampler option `{item}` in `{s}`"
+                        )))
+                    }
+                }
+            }
+        }
+        let allowed: &[&str] = match head {
+            "gddim" => &["q", "kt", "corrector"],
+            "gddim-sde" | "em" => &["lambda"],
+            "rk45" => &["rtol"],
+            _ => &[],
+        };
+        if let Some(bad) = seen.iter().find(|o| !allowed.contains(o)) {
+            return Err(Error::msg(format!(
+                "option `{bad}` does not apply to sampler `{head}` in `{s}`"
+            )));
+        }
+        match head {
+            "gddim" => Ok(SamplerSpec::GddimDet { q, kt, corrector }),
+            "gddim-sde" => Ok(SamplerSpec::GddimSde {
+                lambda: OrderedF64::new(lambda.unwrap_or(1.0)),
+            }),
+            "em" => Ok(SamplerSpec::Em { lambda: OrderedF64::new(lambda.unwrap_or(0.0)) }),
+            "ancestral" => Ok(SamplerSpec::Ancestral),
+            "heun" => Ok(SamplerSpec::Heun),
+            "rk45" => Ok(SamplerSpec::Rk45 { rtol: OrderedF64::new(rtol) }),
+            "sscs" => Ok(SamplerSpec::Sscs),
+            other => Err(Error::msg(format!(
+                "unknown sampler `{other}` (expected gddim|gddim-sde|em|ancestral|heun|rk45|sscs)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for SamplerSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SamplerSpec::GddimDet { q, kt, corrector } => {
+                write!(f, "gddim:q={q},kt={}", kt.token())?;
+                if *corrector {
+                    write!(f, ",corrector")?;
+                }
+                Ok(())
+            }
+            SamplerSpec::GddimSde { lambda } => write!(f, "gddim-sde:lambda={lambda}"),
+            SamplerSpec::Em { lambda } => write!(f, "em:lambda={lambda}"),
+            SamplerSpec::Ancestral => write!(f, "ancestral"),
+            SamplerSpec::Heun => write!(f, "heun"),
+            SamplerSpec::Rk45 { rtol } => write!(f, "rk45:rtol={rtol}"),
+            SamplerSpec::Sscs => write!(f, "sscs"),
+        }
+    }
+}
+
+impl std::str::FromStr for SamplerSpec {
+    type Err = Error;
+
+    fn from_str(s: &str) -> crate::Result<SamplerSpec> {
+        SamplerSpec::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+
+    fn hash_of<T: Hash>(v: &T) -> u64 {
+        let mut h = DefaultHasher::new();
+        v.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn grammar_round_trips_every_variant() {
+        let specs = [
+            SamplerSpec::GddimDet { q: 3, kt: KtKind::L, corrector: true },
+            SamplerSpec::gddim(2),
+            SamplerSpec::GddimSde { lambda: OrderedF64::new(0.3) },
+            SamplerSpec::Em { lambda: OrderedF64::new(0.0) },
+            SamplerSpec::Em { lambda: OrderedF64::new(1e-4) },
+            SamplerSpec::Ancestral,
+            SamplerSpec::Heun,
+            SamplerSpec::Rk45 { rtol: OrderedF64::new(1e-6) },
+            SamplerSpec::Sscs,
+        ];
+        for spec in specs {
+            let text = spec.to_string();
+            let back = SamplerSpec::parse(&text).unwrap();
+            assert_eq!(back, spec, "grammar round trip failed for `{text}`");
+            assert_eq!(hash_of(&back), hash_of(&spec));
+        }
+    }
+
+    #[test]
+    fn parse_defaults_and_errors() {
+        assert_eq!(SamplerSpec::parse("gddim").unwrap(), SamplerSpec::gddim(2));
+        assert_eq!(
+            SamplerSpec::parse("gddim-sde").unwrap(),
+            SamplerSpec::GddimSde { lambda: OrderedF64::new(1.0) }
+        );
+        assert_eq!(
+            SamplerSpec::parse("em").unwrap(),
+            SamplerSpec::Em { lambda: OrderedF64::new(0.0) }
+        );
+        assert_eq!(
+            SamplerSpec::parse("rk45").unwrap(),
+            SamplerSpec::Rk45 { rtol: OrderedF64::new(1e-4) }
+        );
+        assert!(SamplerSpec::parse("dpm-solver").is_err());
+        assert!(SamplerSpec::parse("gddim:bogus=1").is_err());
+        assert!(SamplerSpec::parse("gddim:kt=Z").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_non_finite_floats_cleanly() {
+        // f64::from_str accepts "nan"/"inf"; the grammar must turn those
+        // into errors, not a panic inside OrderedF64.
+        for bad in ["em:lambda=nan", "em:lambda=inf", "gddim-sde:lambda=-inf", "rk45:rtol=NaN"] {
+            assert!(SamplerSpec::parse(bad).is_err(), "`{bad}` must be a clean error");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_options_foreign_to_the_sampler() {
+        // An option the grammar knows but the chosen head ignores would
+        // silently serve the wrong sampler — reject instead.
+        for bad in ["gddim:lambda=0.5", "em:q=5", "heun:rtol=1e-6", "rk45:lambda=1",
+                    "ancestral:q=2", "sscs:corrector"] {
+            assert!(SamplerSpec::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn matches_plan_compares_the_full_config() {
+        use crate::diffusion::{Process, TimeGrid, Vpsde};
+        let p = Vpsde::standard(1);
+        let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 4);
+        let spec = SamplerSpec::gddim(2);
+        let cfg = spec.plan_config().unwrap();
+        let plan = SamplerPlan::build(&p, &grid, &cfg);
+        assert!(spec.matches_plan(&plan));
+        // Same q/kt but different quadrature settings: numerically a
+        // different plan, so it must not be adopted.
+        let coarse = SamplerPlan::build(&p, &grid, &PlanConfig { gl_points: 8, ..cfg });
+        assert!(!spec.matches_plan(&coarse));
+    }
+
+    #[test]
+    fn tiny_lambda_is_not_truncated() {
+        // The old PlanKey stored λ×1000 as u32, so 0.0001 hashed equal
+        // to 0.0 and two distinct requests shared a batch. OrderedF64
+        // keeps the full bit pattern.
+        let a = SamplerSpec::Em { lambda: OrderedF64::new(0.0001) };
+        let b = SamplerSpec::Em { lambda: OrderedF64::new(0.0) };
+        assert_ne!(a, b);
+        assert_ne!(hash_of(&a), hash_of(&b));
+        let back = SamplerSpec::parse(&a.to_string()).unwrap();
+        match back {
+            SamplerSpec::Em { lambda } => {
+                assert_eq!(lambda.get().to_bits(), 0.0001f64.to_bits())
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn ordered_f64_normalizes_negative_zero() {
+        assert_eq!(OrderedF64::new(-0.0), OrderedF64::new(0.0));
+        assert_eq!(hash_of(&OrderedF64::new(-0.0)), hash_of(&OrderedF64::new(0.0)));
+    }
+
+    #[test]
+    fn validation_gates_sscs_and_bad_configs() {
+        assert!(SamplerSpec::Sscs.validate("cld").is_ok());
+        assert!(SamplerSpec::Sscs.validate("vpsde").is_err());
+        assert!(SamplerSpec::Sscs.validate("bdm").is_err());
+        assert!(SamplerSpec::GddimDet { q: 0, kt: KtKind::R, corrector: false }
+            .validate("cld")
+            .is_err());
+        assert!(SamplerSpec::GddimSde { lambda: OrderedF64::new(0.0) }.validate("vpsde").is_err());
+        assert!(SamplerSpec::Rk45 { rtol: OrderedF64::new(0.0) }.validate("vpsde").is_err());
+        assert!(SamplerSpec::Em { lambda: OrderedF64::new(0.0) }.validate("bdm").is_ok());
+    }
+}

@@ -20,11 +20,12 @@
 //! `A(h/2) ∘ B(h) ∘ A(h/2)`.
 
 use crate::coeffs::linop_integrate::solve_linop_ode;
-use crate::diffusion::process::Process;
+use crate::diffusion::process::{KtKind, Process};
 use crate::diffusion::schedule::TimeGrid;
 use crate::math::linop::LinOp;
 use crate::math::rng::Rng;
 use crate::samplers::common::{apply_rows, draw_prior, project_batch, SampleOutput};
+use crate::samplers::{Sampler, SamplerState, ScoreFn, ScoreRequest};
 use crate::score::model::ScoreModel;
 
 struct OuHalf {
@@ -57,6 +58,119 @@ fn ou_half(proc: &dyn Process, t_mid: f64, h: f64, sinf_inv: &LinOp) -> OuHalf {
     OuHalf { mean, noise: p.sqrt_spd() }
 }
 
+/// Symmetric splitting CLD sampler on a time grid.
+pub struct Sscs<'a> {
+    pub grid: &'a TimeGrid,
+}
+
+struct SscsState<'a> {
+    proc: &'a dyn Process,
+    grid: &'a TimeGrid,
+    kt: KtKind,
+    sinf_inv: LinOp,
+    du: usize,
+    u: Vec<f64>,
+    eps: Vec<f64>,
+    buf: Vec<f64>,
+    score_buf: Vec<f64>,
+    gs: Vec<f64>,
+    z: Vec<f64>,
+    sinf_u: Vec<f64>,
+    nfe: usize,
+}
+
+impl Sampler for Sscs<'_> {
+    fn n_steps(&self) -> usize {
+        self.grid.n_steps()
+    }
+
+    fn init<'a>(
+        &'a self,
+        proc: &'a dyn Process,
+        model: &'a dyn ScoreModel,
+        n: usize,
+        rng: &mut Rng,
+        _record_traj: bool,
+    ) -> Box<dyn SamplerState + 'a> {
+        let du = proc.dim_u();
+        let u = draw_prior(proc, n, rng);
+        // Σ∞⁻¹ from the prior factor (stationary covariance of the forward OU).
+        let pf = proc.prior_factor();
+        let sinf_inv = pf.matmul(&pf.transpose()).inv();
+        Box::new(SscsState {
+            proc,
+            grid: self.grid,
+            kt: model.kt_kind(),
+            sinf_inv,
+            du,
+            eps: vec![0.0; n * du],
+            buf: vec![0.0; n * du],
+            score_buf: vec![0.0; du],
+            gs: vec![0.0; du],
+            z: vec![0.0; du],
+            sinf_u: vec![0.0; du],
+            u,
+            nfe: 0,
+        })
+    }
+}
+
+impl SamplerState for SscsState<'_> {
+    fn step(&mut self, i: usize, score: &mut ScoreFn<'_>, rng: &mut Rng) {
+        let ts = &self.grid.ts;
+        let du = self.du;
+        let (s, t) = (ts[i], ts[i - 1]);
+        let h = s - t; // positive duration of the reverse step
+        let mid = 0.5 * (s + t);
+        let ou = ou_half(self.proc, mid, 0.5 * h, &self.sinf_inv);
+
+        // First half OU.
+        apply_rows(&ou.mean, &self.u, &mut self.buf, du);
+        for row in self.buf.chunks_exact_mut(du) {
+            ou.noise.sample_noise(rng, &mut self.z);
+            for j in 0..du {
+                row[j] += self.z[j];
+            }
+        }
+        std::mem::swap(&mut self.u, &mut self.buf);
+
+        // Residual score kick (full step): GGᵀ(s_θ + Σ∞⁻¹u)·h.
+        score(ScoreRequest { t: s, u: &self.u }, &mut self.eps);
+        self.nfe += 1;
+        let ggt = self.proc.ggt_op(mid);
+        let kinv_t = self.proc.kt(self.kt, s).inv().transpose();
+        for (row, erow) in self.u.chunks_exact_mut(du).zip(self.eps.chunks_exact(du)) {
+            kinv_t.apply(erow, &mut self.score_buf);
+            self.sinf_inv.apply(row, &mut self.sinf_u);
+            for (x, si) in self.score_buf.iter_mut().zip(&self.sinf_u) {
+                *x = -*x + si;
+            }
+            ggt.apply(&self.score_buf, &mut self.gs);
+            for j in 0..du {
+                row[j] += h * self.gs[j];
+            }
+        }
+
+        // Second half OU.
+        apply_rows(&ou.mean, &self.u, &mut self.buf, du);
+        for row in self.buf.chunks_exact_mut(du) {
+            ou.noise.sample_noise(rng, &mut self.z);
+            for j in 0..du {
+                row[j] += self.z[j];
+            }
+        }
+        std::mem::swap(&mut self.u, &mut self.buf);
+    }
+
+    fn finish(self: Box<Self>) -> SampleOutput {
+        let xs = project_batch(self.proc, &self.u);
+        SampleOutput { xs, us: self.u, nfe: self.nfe, traj: None }
+    }
+}
+
+/// Run SSCS — thin wrapper over [`Sscs`]; prefer the [`Sampler`] trait
+/// for new code. CLD only (the analytic half-step reverses the CLD OU
+/// structure); the owned `SamplerSpec` rejects other processes.
 pub fn sample_sscs(
     proc: &dyn Process,
     model: &dyn ScoreModel,
@@ -64,66 +178,7 @@ pub fn sample_sscs(
     n: usize,
     rng: &mut Rng,
 ) -> SampleOutput {
-    let du = proc.dim_u();
-    let ts = &grid.ts;
-    let n_steps = grid.n_steps();
-    let mut u = draw_prior(proc, n, rng);
-    let mut eps = vec![0.0; n * du];
-    let mut buf = vec![0.0; n * du];
-    let mut score = vec![0.0; du];
-    let mut gs = vec![0.0; du];
-    let mut z = vec![0.0; du];
-    let mut sinf_u = vec![0.0; du];
-    let mut nfe = 0usize;
-    // Σ∞⁻¹ from the prior factor (stationary covariance of the forward OU).
-    let pf = proc.prior_factor();
-    let sinf_inv = pf.matmul(&pf.transpose()).inv();
-
-    for i in (1..=n_steps).rev() {
-        let (s, t) = (ts[i], ts[i - 1]);
-        let h = s - t; // positive duration of the reverse step
-        let mid = 0.5 * (s + t);
-        let ou = ou_half(proc, mid, 0.5 * h, &sinf_inv);
-
-        // First half OU.
-        apply_rows(&ou.mean, &u, &mut buf, du);
-        for row in buf.chunks_exact_mut(du) {
-            ou.noise.sample_noise(rng, &mut z);
-            for j in 0..du {
-                row[j] += z[j];
-            }
-        }
-        std::mem::swap(&mut u, &mut buf);
-
-        // Residual score kick (full step): GGᵀ(s_θ + Σ∞⁻¹u)·h.
-        model.eps_batch(s, &u, &mut eps);
-        nfe += 1;
-        let ggt = proc.ggt_op(mid);
-        let kinv_t = proc.kt(model.kt_kind(), s).inv().transpose();
-        for (row, erow) in u.chunks_exact_mut(du).zip(eps.chunks_exact(du)) {
-            kinv_t.apply(erow, &mut score);
-            sinf_inv.apply(row, &mut sinf_u);
-            for (x, si) in score.iter_mut().zip(&sinf_u) {
-                *x = -*x + si;
-            }
-            ggt.apply(&score, &mut gs);
-            for j in 0..du {
-                row[j] += h * gs[j];
-            }
-        }
-
-        // Second half OU.
-        apply_rows(&ou.mean, &u, &mut buf, du);
-        for row in buf.chunks_exact_mut(du) {
-            ou.noise.sample_noise(rng, &mut z);
-            for j in 0..du {
-                row[j] += z[j];
-            }
-        }
-        std::mem::swap(&mut u, &mut buf);
-    }
-    let xs = project_batch(proc, &u);
-    SampleOutput { xs, us: u, nfe, traj: None }
+    Sscs { grid }.run(proc, model, n, rng, false)
 }
 
 #[cfg(test)]

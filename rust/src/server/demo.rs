@@ -6,10 +6,10 @@ use std::time::Duration;
 
 use crate::engine::Engine;
 use crate::server::batcher::BatcherConfig;
-use crate::server::request::{GenRequest, PlanKey};
+use crate::server::request::GenRequest;
 use crate::server::router::{oracle_factory, Router, RouterConfig};
 use crate::util::cli::Args;
-use crate::workload::{ClosedLoop, WorkloadSpec};
+use crate::workload::{cli_key_mix, ClosedLoop, WorkloadSpec};
 
 pub fn run(args: &Args) {
     let workers = args.get_usize("workers", 4);
@@ -19,11 +19,24 @@ pub fn run(args: &Args) {
     let nfe = args.get_usize("nfe", 20);
     let rate = args.get_f64("rate", 200.0);
     let max_wait_ms = args.get_u64("max-wait-ms", 5);
+    // `+`-separated sampler specs (the spec grammar uses commas); every
+    // (vpsde|cld) × spec combination that validates becomes a key — so
+    // e.g. `--samplers gddim:q=2+heun+sscs+rk45` serves heun and rk45 on
+    // both processes and sscs on CLD only.
+    let samplers = args.get_or("samplers", "gddim:q=2");
+    let keys = match cli_key_mix(&samplers, "gmm2d", nfe) {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
 
     let router = Router::with_options(
         RouterConfig {
             dispatchers,
             plan_cache_capacity: args.get_usize("plan-cache", 64),
+            plan_cache_dir: args.get("plan-cache-dir").map(std::path::PathBuf::from),
         },
         Engine::new(workers),
         BatcherConfig {
@@ -37,16 +50,13 @@ pub fn run(args: &Args) {
         n_requests,
         samples_per_request: samples,
         rate_per_sec: rate,
-        keys: vec![
-            PlanKey::gddim("vpsde", "gmm2d", nfe, 2),
-            PlanKey::gddim("cld", "gmm2d", nfe, 2),
-        ],
+        keys,
         seed: args.get_u64("seed", 0),
     };
     println!(
         "serving {} requests × {} samples (poisson {:.0} req/s, {} engine workers, \
-         {} dispatchers, NFE {})…",
-        n_requests, samples, rate, workers, dispatchers, nfe
+         {} dispatchers, NFE {}, samplers [{}])…",
+        n_requests, samples, rate, workers, dispatchers, nfe, samplers
     );
     let gen = ClosedLoop::new(spec);
     let responses = gen.drive(&router, |id, key, n, seed| GenRequest {
@@ -59,7 +69,7 @@ pub fn run(args: &Args) {
     // jobs/shards, peak queue depth, per-worker busy shares.
     println!("{}", router.report());
     println!("plan cache: {} key(s) resident", router.plan_cache_len());
-    let ok = responses.iter().filter(|r| !r.xs.is_empty()).count();
+    let ok = responses.iter().filter(|r| r.error.is_none() && !r.xs.is_empty()).count();
     println!("responses with data: {ok}/{n_requests}");
     router.shutdown();
 }

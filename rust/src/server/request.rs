@@ -2,7 +2,10 @@
 
 use std::sync::mpsc::Sender;
 
-use crate::diffusion::process::KtKind;
+use crate::data::presets;
+use crate::samplers::SamplerSpec;
+use crate::util::json::Json;
+use crate::Error;
 
 /// What a client asks for.
 #[derive(Clone, Debug)]
@@ -18,42 +21,88 @@ pub struct GenRequest {
 }
 
 /// The batchable part of a request: requests with identical keys run in
-/// one sampler invocation.
+/// one sampler invocation. The sampler and its full configuration live
+/// in the owned [`SamplerSpec`] — every float in it (λ, rtol) is kept
+/// bit-exact, so distinct configurations can never alias one key.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     pub process: String,
     pub dataset: String,
-    pub sampler: SamplerKind,
+    pub spec: SamplerSpec,
+    /// Time-grid steps for grid-driven samplers. RK45 ignores it for
+    /// stepping (its `rtol` is the NFE knob) but it stays part of the
+    /// key's identity.
     pub nfe: usize,
-    pub q: usize,
-    pub kt: KtKind,
-    /// λ × 1000 (integerized so the key is hashable).
-    pub lambda_milli: u32,
-}
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum SamplerKind {
-    GddimDet,
-    GddimSde,
-    Em,
-    Ancestral,
 }
 
 impl PlanKey {
-    pub fn gddim(process: &str, dataset: &str, nfe: usize, q: usize) -> PlanKey {
+    pub fn new(process: &str, dataset: &str, spec: SamplerSpec, nfe: usize) -> PlanKey {
         PlanKey {
             process: process.to_string(),
             dataset: dataset.to_string(),
-            sampler: SamplerKind::GddimDet,
+            spec,
             nfe,
-            q,
-            kt: KtKind::R,
-            lambda_milli: 0,
         }
     }
 
-    pub fn lambda(&self) -> f64 {
-        self.lambda_milli as f64 / 1000.0
+    /// Deterministic gDDIM with the crate defaults (the historical
+    /// constructor most call sites use).
+    pub fn gddim(process: &str, dataset: &str, nfe: usize, q: usize) -> PlanKey {
+        PlanKey::new(process, dataset, SamplerSpec::gddim(q), nfe)
+    }
+
+    /// Full validation against the built-in oracle catalogue: structural
+    /// sampler checks (SSCS off CLD, λ ≤ 0, …) plus known
+    /// process/dataset names. The oracle-backed CLIs use this to filter
+    /// key mixes up front; the router itself only enforces the
+    /// structural part at submit time and lets its `PreparedFactory`
+    /// judge process/dataset servability (custom factories may serve
+    /// names this catalogue does not know).
+    pub fn validate(&self) -> crate::Result<()> {
+        match self.process.as_str() {
+            "vpsde" | "cld" | "bdm" => {}
+            other => return Err(Error::msg(format!("unknown process `{other}`"))),
+        }
+        if presets::by_name(&self.dataset).is_none() {
+            return Err(Error::msg(format!("unknown dataset `{}`", self.dataset)));
+        }
+        if self.nfe == 0 {
+            return Err(Error::msg("nfe must be >= 1"));
+        }
+        self.spec.validate(&self.process)
+    }
+
+    /// JSON form used by the plan persistence files (the spec rides as
+    /// its grammar string, which round-trips floats bit-exactly).
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("process".to_string(), Json::Str(self.process.clone()));
+        obj.insert("dataset".to_string(), Json::Str(self.dataset.clone()));
+        obj.insert("spec".to_string(), Json::Str(self.spec.to_string()));
+        obj.insert("nfe".to_string(), Json::Num(self.nfe as f64));
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<PlanKey> {
+        let field = |k: &str| j.get(k).ok_or_else(|| Error::msg(format!("PlanKey: missing `{k}`")));
+        let process = field("process")?.as_str().ok_or("PlanKey: process not a string")?;
+        let dataset = field("dataset")?.as_str().ok_or("PlanKey: dataset not a string")?;
+        let spec = SamplerSpec::parse(field("spec")?.as_str().ok_or("PlanKey: spec not a string")?)?;
+        let nfe = field("nfe")?.as_usize().ok_or("PlanKey: nfe not a number")?;
+        Ok(PlanKey::new(process, dataset, spec, nfe))
+    }
+
+    /// Deterministic file name for this key in a plan-cache directory:
+    /// readable prefix + FNV-1a hash of the canonical JSON form (stable
+    /// across runs and platforms, unlike `DefaultHasher`).
+    pub fn cache_file_name(&self) -> String {
+        let canonical = self.to_json().to_string_pretty();
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in canonical.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        format!("{}-{}-{}-{h:016x}.json", self.process, self.dataset, self.spec.name())
     }
 }
 
@@ -61,7 +110,7 @@ impl PlanKey {
 #[derive(Clone, Debug)]
 pub struct GenResponse {
     pub id: u64,
-    /// Generated samples, row-major n × dim_x.
+    /// Generated samples, row-major n × dim_x (empty if `error` is set).
     pub xs: Vec<f64>,
     pub dim_x: usize,
     /// NFE consumed by the batch this request rode in.
@@ -76,6 +125,27 @@ pub struct GenResponse {
     pub service_latency: f64,
     /// How many requests shared the batch (observability).
     pub batch_size: usize,
+    /// Why the request was rejected, if it was (invalid key / sampler
+    /// config). A rejected request is answered immediately and never
+    /// reaches a dispatcher.
+    pub error: Option<String>,
+}
+
+impl GenResponse {
+    /// The immediate reply for a request that failed validation.
+    pub fn rejected(id: u64, error: String) -> GenResponse {
+        GenResponse {
+            id,
+            xs: Vec::new(),
+            dim_x: 0,
+            nfe: 0,
+            latency: 0.0,
+            queue_latency: 0.0,
+            service_latency: 0.0,
+            batch_size: 0,
+            error: Some(error),
+        }
+    }
 }
 
 /// Internal envelope: request + reply channel + enqueue timestamp.
@@ -83,4 +153,54 @@ pub struct Envelope {
     pub req: GenRequest,
     pub reply: Sender<GenResponse>,
     pub enqueued: std::time::Instant,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::samplers::OrderedF64;
+
+    #[test]
+    fn key_json_round_trips_bit_exactly() {
+        let keys = [
+            PlanKey::gddim("cld", "gmm2d", 20, 3),
+            PlanKey::new(
+                "vpsde",
+                "blobs8",
+                SamplerSpec::Em { lambda: OrderedF64::new(0.0001) },
+                50,
+            ),
+            PlanKey::new("cld", "hard2d", SamplerSpec::Sscs, 25),
+            PlanKey::new(
+                "bdm",
+                "blobs8",
+                SamplerSpec::Rk45 { rtol: OrderedF64::new(3.7e-5) },
+                1,
+            ),
+        ];
+        for key in keys {
+            let j = key.to_json();
+            let back = PlanKey::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+            assert_eq!(back, key);
+            assert_eq!(back.cache_file_name(), key.cache_file_name());
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_keys() {
+        assert!(PlanKey::gddim("cld", "gmm2d", 10, 2).validate().is_ok());
+        assert!(PlanKey::gddim("ddim", "gmm2d", 10, 2).validate().is_err());
+        assert!(PlanKey::gddim("cld", "no-such-set", 10, 2).validate().is_err());
+        assert!(PlanKey::gddim("cld", "gmm2d", 0, 2).validate().is_err());
+        assert!(PlanKey::new("vpsde", "gmm2d", SamplerSpec::Sscs, 10).validate().is_err());
+        assert!(PlanKey::new("cld", "gmm2d", SamplerSpec::Sscs, 10).validate().is_ok());
+    }
+
+    #[test]
+    fn cache_file_names_distinguish_close_lambdas() {
+        let a = PlanKey::new("cld", "gmm2d", SamplerSpec::Em { lambda: OrderedF64::new(0.0001) }, 10);
+        let b = PlanKey::new("cld", "gmm2d", SamplerSpec::Em { lambda: OrderedF64::new(0.0) }, 10);
+        assert_ne!(a.cache_file_name(), b.cache_file_name());
+        assert!(a.cache_file_name().ends_with(".json"));
+    }
 }

@@ -7,22 +7,25 @@
 //! plans and score models are built once per key and cached
 //! ([`Prepared`]), so steady-state request cost is pure Stage-II.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coeffs::plan::{PlanConfig, SamplerPlan};
+use crate::coeffs::plan::SamplerPlan;
 use crate::data::presets;
 use crate::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
-use crate::engine::{Engine, Job, SamplerSpec};
+use crate::engine::{Engine, Job};
+use crate::samplers::{Sampler, SamplerSpec};
 use crate::score::model::ScoreModel;
 use crate::score::oracle::GmmOracle;
 use crate::server::batcher::{BatcherConfig, KeyQueue};
 use crate::server::lru::LruCache;
 use crate::server::metrics::{MetricsReport, ServerMetrics};
-use crate::server::request::{Envelope, GenRequest, GenResponse, PlanKey, SamplerKind};
+use crate::server::request::{Envelope, GenRequest, GenResponse, PlanKey};
+use crate::util::json::Json;
 
 /// Everything needed to execute one key's batches.
 pub struct Prepared {
@@ -33,14 +36,33 @@ pub struct Prepared {
     pub dim_x: usize,
 }
 
-/// Builds [`Prepared`] state for a key. The default factory uses the
-/// exact-score oracle; the serving demo swaps in PJRT-backed nets.
-pub type PreparedFactory = dyn Fn(&PlanKey) -> Arc<Prepared> + Send + Sync;
+impl Prepared {
+    /// Instantiate the runnable Stage-II sampler for `spec` over this
+    /// key's prepared state — the single construction path every served
+    /// sampler goes through.
+    pub fn sampler<'a>(&'a self, spec: &SamplerSpec) -> crate::Result<Box<dyn Sampler + 'a>> {
+        spec.instantiate(self.plan.as_deref(), &self.grid)
+    }
+}
 
-/// Default factory: oracle scores on the named preset dataset.
+/// Builds [`Prepared`] state for a key, or rejects it — the factory is
+/// the authority on which processes/datasets it can serve, so custom
+/// factories (e.g. PJRT-backed nets over their own datasets) are not
+/// constrained by the oracle catalogue. The second argument is a plan
+/// preloaded from the persistence cache, if any — a factory should adopt
+/// it (after checking `spec.matches_plan`) instead of re-running Stage I.
+pub type PreparedFactory =
+    dyn Fn(&PlanKey, Option<Arc<SamplerPlan>>) -> crate::Result<Arc<Prepared>> + Send + Sync;
+
+/// Default factory: oracle scores on the named preset dataset. Handles
+/// every [`SamplerSpec`] variant — gDDIM variants get a Stage-I plan
+/// (preloaded or built), grid samplers just the grid. Unknown
+/// processes/datasets come back as errors (answered per request), not
+/// panics.
 pub fn oracle_factory() -> Box<PreparedFactory> {
-    Box::new(|key: &PlanKey| {
-        let spec = presets::by_name(&key.dataset).expect("unknown dataset");
+    Box::new(|key: &PlanKey, preloaded: Option<Arc<SamplerPlan>>| {
+        let spec = presets::by_name(&key.dataset)
+            .ok_or_else(|| crate::Error::msg(format!("unknown dataset `{}`", key.dataset)))?;
         let proc: Arc<dyn Process> = match key.process.as_str() {
             "vpsde" => Arc::new(Vpsde::standard(spec.d)),
             "cld" => Arc::new(Cld::standard(spec.d)),
@@ -48,25 +70,21 @@ pub fn oracle_factory() -> Box<PreparedFactory> {
                 let side = (spec.d as f64).sqrt() as usize;
                 Arc::new(Bdm::standard(side, side))
             }
-            other => panic!("unknown process {other}"),
+            other => {
+                return Err(crate::Error::msg(format!("unknown process `{other}`")))
+            }
         };
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), key.nfe);
         let model: Arc<dyn ScoreModel> =
-            Arc::new(GmmOracle::new(proc.clone(), spec.clone(), key.kt));
-        let plan = match key.sampler {
-            SamplerKind::GddimDet => Some(Arc::new(SamplerPlan::build(
-                proc.as_ref(),
-                &grid,
-                &PlanConfig { q: key.q, kt: key.kt, ..PlanConfig::default() },
-            ))),
-            SamplerKind::GddimSde => Some(Arc::new(SamplerPlan::build(
-                proc.as_ref(),
-                &grid,
-                &PlanConfig::stochastic(key.lambda().max(0.1)),
-            ))),
-            _ => None,
+            Arc::new(GmmOracle::new(proc.clone(), spec.clone(), key.spec.model_kt()));
+        let plan = match preloaded {
+            Some(p) if key.spec.matches_plan(&p) && p.n_steps() == key.nfe => Some(p),
+            _ => key
+                .spec
+                .plan_config()
+                .map(|cfg| Arc::new(SamplerPlan::build(proc.as_ref(), &grid, &cfg))),
         };
-        Arc::new(Prepared { dim_x: proc.dim_x(), proc, model, plan, grid })
+        Ok(Arc::new(Prepared { dim_x: proc.dim_x(), proc, model, plan, grid }))
     })
 }
 
@@ -80,11 +98,17 @@ pub struct RouterConfig {
     /// an evicted key just pays Stage-I again on its next request
     /// (App. C.3: milliseconds, not a correctness event).
     pub plan_cache_capacity: usize,
+    /// Directory for Stage-I plan persistence. When set, every plan the
+    /// router builds is written here as `{key, plan}` JSON, and on
+    /// startup all readable files warm the LRU — so plans survive
+    /// restarts (App. C.3 "calculated once and used everywhere", across
+    /// processes). Corrupt files are skipped, never fatal.
+    pub plan_cache_dir: Option<PathBuf>,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        RouterConfig { dispatchers: 2, plan_cache_capacity: 64 }
+        RouterConfig { dispatchers: 2, plan_cache_capacity: 64, plan_cache_dir: None }
     }
 }
 
@@ -95,6 +119,7 @@ struct Shared {
     prepared: Mutex<LruCache<PlanKey, Arc<Prepared>>>,
     factory: Box<PreparedFactory>,
     engine: Engine,
+    plan_cache_dir: Option<PathBuf>,
     pub metrics: ServerMetrics,
     batcher_max_batch: usize,
     batcher_max_wait: Duration,
@@ -142,10 +167,14 @@ impl Router {
             prepared: Mutex::new(LruCache::new(rcfg.plan_cache_capacity)),
             factory,
             engine,
+            plan_cache_dir: rcfg.plan_cache_dir.clone(),
             metrics: ServerMetrics::new(),
             batcher_max_batch: cfg.max_batch,
             batcher_max_wait: cfg.max_wait,
         });
+        if let Some(dir) = shared.plan_cache_dir.clone() {
+            warm_plan_cache(&shared, &dir);
+        }
         shared.metrics.start_clock();
         let workers = (0..rcfg.dispatchers.max(1))
             .map(|w| {
@@ -159,9 +188,23 @@ impl Router {
         Router { shared, workers }
     }
 
-    /// Enqueue a request; the receiver yields exactly one response.
+    /// Enqueue a request; the receiver yields exactly one response. A
+    /// structurally invalid key (bad sampler config — e.g. SSCS off
+    /// CLD, λ ≤ 0, nfe = 0) is answered immediately with
+    /// `GenResponse::error` set and never reaches a dispatcher; whether
+    /// a *well-formed* key's process/dataset is servable is the
+    /// factory's call, answered per request at preparation time.
     pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
         let (tx, rx) = channel();
+        let structural = if req.key.nfe == 0 {
+            Err(crate::Error::msg("nfe must be >= 1"))
+        } else {
+            req.key.spec.validate(&req.key.process)
+        };
+        if let Err(e) = structural {
+            let _ = tx.send(GenResponse::rejected(req.id, e.to_string()));
+            return rx;
+        }
         let env = Envelope { req, reply: tx, enqueued: Instant::now() };
         {
             let mut qs = self.shared.queues.lock().unwrap();
@@ -261,20 +304,92 @@ fn worker_loop(sh: Arc<Shared>) {
     }
 }
 
-fn prepared_for(sh: &Shared, key: &PlanKey) -> Arc<Prepared> {
+fn prepared_for(sh: &Shared, key: &PlanKey) -> crate::Result<Arc<Prepared>> {
     if let Some(p) = sh.prepared.lock().unwrap().get(key) {
-        return p;
+        return Ok(p);
     }
     // Build outside the lock (plan construction can take milliseconds).
-    let built = (sh.factory)(key);
+    // A factory rejection is answered per request by the caller, never
+    // cached: a transient failure must not poison the key.
+    let built = (sh.factory)(key, None)?;
+    if let Some(dir) = &sh.plan_cache_dir {
+        persist_plan(dir, key, built.plan.as_deref());
+    }
     let mut cache = sh.prepared.lock().unwrap();
     // Another dispatcher may have built the same key while we did; keep
     // the first build so every batch of a key sees one Prepared.
     if let Some(p) = cache.get(key) {
-        return p;
+        return Ok(p);
     }
     cache.insert(key.clone(), built.clone());
-    built
+    Ok(built)
+}
+
+/// Best-effort write of a freshly built Stage-I plan to the persistence
+/// directory (skipped if the key's file already exists). I/O failures
+/// are swallowed: persistence is an optimization, never a correctness
+/// event.
+fn persist_plan(dir: &Path, key: &PlanKey, plan: Option<&SamplerPlan>) {
+    let Some(plan) = plan else { return };
+    let path = dir.join(key.cache_file_name());
+    if path.exists() || std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let mut obj = BTreeMap::new();
+    obj.insert("key".to_string(), key.to_json());
+    obj.insert("plan".to_string(), plan.to_json());
+    // Write-then-rename so a reader never sees a torn file. The temp
+    // name carries pid + a process-wide counter: two dispatchers racing
+    // on the same key (prepared_for allows a double build) must not
+    // interleave writes into one temp path.
+    static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = dir.join(format!(
+        "{}.tmp{}-{seq}",
+        key.cache_file_name(),
+        std::process::id()
+    ));
+    if std::fs::write(&tmp, Json::Obj(obj).to_string_pretty()).is_ok() {
+        let _ = std::fs::rename(&tmp, &path);
+    }
+}
+
+/// Parse one persisted `{key, plan}` file (shared by the warm start and
+/// tests). Validates that the plan actually belongs to the key.
+pub fn parse_plan_file(text: &str) -> crate::Result<(PlanKey, SamplerPlan)> {
+    let j = Json::parse(text)?;
+    let key = PlanKey::from_json(j.get("key").ok_or("plan file: missing `key`")?)?;
+    let plan = SamplerPlan::from_json(j.get("plan").ok_or("plan file: missing `plan`")?)?;
+    if !key.spec.matches_plan(&plan) || plan.n_steps() != key.nfe {
+        return Err(crate::Error::msg("plan file: plan does not match its key"));
+    }
+    Ok((key, plan))
+}
+
+/// Warm the Stage-I LRU from a persistence directory: every readable
+/// `{key, plan}` file becomes a cached [`Prepared`] without re-running
+/// Stage I. Files are visited in sorted order (deterministic LRU state),
+/// and anything unreadable or inconsistent is skipped with a note.
+fn warm_plan_cache(sh: &Shared, dir: &Path) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|e| e == "json"))
+        .collect();
+    paths.sort();
+    for path in paths {
+        let Ok(text) = std::fs::read_to_string(&path) else { continue };
+        match parse_plan_file(&text).and_then(|(key, plan)| {
+            let prep = (sh.factory)(&key, Some(Arc::new(plan)))?;
+            Ok((key, prep))
+        }) {
+            Ok((key, prep)) => {
+                sh.prepared.lock().unwrap().insert(key, prep);
+            }
+            Err(e) => eprintln!("plan cache: skipping {}: {e}", path.display()),
+        }
+    }
 }
 
 fn execute_batch(sh: &Shared, batch: Vec<Envelope>) {
@@ -283,7 +398,19 @@ fn execute_batch(sh: &Shared, batch: Vec<Envelope>) {
     // after — plan lookup/build + engine run — is service.
     let t_exec = Instant::now();
     let key = batch[0].req.key.clone();
-    let prep = prepared_for(sh, &key);
+    // A factory rejection (unknown process/dataset for *this* factory,
+    // failed model load, …) is answered per request — the dispatcher
+    // survives and unrelated keys are unaffected.
+    let prep = match prepared_for(sh, &key) {
+        Ok(p) => p,
+        Err(e) => {
+            let msg = e.to_string();
+            for env in batch {
+                let _ = env.reply.send(GenResponse::rejected(env.req.id, msg.clone()));
+            }
+            return;
+        }
+    };
     let total_n: usize = batch.iter().map(|e| e.req.n).sum();
     // Batch seed: a deterministic fold of the member requests' seeds, so
     // identical traffic replays identically; the engine derives per-shard
@@ -292,16 +419,24 @@ fn execute_batch(sh: &Shared, batch: Vec<Envelope>) {
         acc.wrapping_mul(0x100000001B3).wrapping_add(e.req.seed)
     });
 
-    let sampler = match key.sampler {
-        SamplerKind::GddimDet => SamplerSpec::GddimDet(prep.plan.as_deref().unwrap()),
-        SamplerKind::GddimSde => SamplerSpec::GddimSde(prep.plan.as_deref().unwrap()),
-        SamplerKind::Em => SamplerSpec::Em { grid: &prep.grid, lambda: key.lambda() },
-        SamplerKind::Ancestral => SamplerSpec::Ancestral { grid: &prep.grid },
+    // Uniform construction path: any SamplerSpec variant becomes a trait
+    // object the engine drives. Submit-time validation makes a failure
+    // here a defensive branch (e.g. a custom factory dropping the plan),
+    // answered per-request instead of panicking the dispatcher.
+    let sampler = match prep.sampler(&key.spec) {
+        Ok(s) => s,
+        Err(e) => {
+            let msg = e.to_string();
+            for env in batch {
+                let _ = env.reply.send(GenResponse::rejected(env.req.id, msg.clone()));
+            }
+            return;
+        }
     };
     let out = sh.engine.run(&Job {
         proc: prep.proc.as_ref(),
         model: prep.model.as_ref(),
-        sampler,
+        sampler: sampler.as_ref(),
         n: total_n,
         seed,
     });
@@ -334,6 +469,7 @@ fn execute_batch(sh: &Shared, batch: Vec<Envelope>) {
             queue_latency,
             service_latency: service,
             batch_size: n_requests,
+            error: None,
         });
     }
 }
@@ -415,7 +551,7 @@ mod tests {
     #[test]
     fn plan_cache_evicts_least_recently_used_key() {
         let router = Router::with_options(
-            RouterConfig { dispatchers: 1, plan_cache_capacity: 2 },
+            RouterConfig { dispatchers: 1, plan_cache_capacity: 2, ..RouterConfig::default() },
             Engine::new(1),
             BatcherConfig::default(),
             oracle_factory(),
@@ -473,6 +609,94 @@ mod tests {
         assert_eq!(e.shards_executed, 4, "100 samples / shard_size 32 = 4 shards");
         assert!(report.to_string().contains("engine: workers=2"));
         router.shutdown();
+    }
+
+    #[test]
+    fn invalid_keys_are_rejected_cleanly_not_panicked() {
+        use crate::samplers::SamplerSpec;
+        let router = Router::new(1, BatcherConfig::default(), oracle_factory());
+        // SSCS off CLD, unknown process, unknown dataset: each must come
+        // back as an error response (the old router panicked a
+        // dispatcher on the unknown-process path).
+        let bad = [
+            PlanKey::new("vpsde", "gmm2d", SamplerSpec::Sscs, 10),
+            PlanKey::new("ddpmpp", "gmm2d", SamplerSpec::gddim(2), 10),
+            PlanKey::new("cld", "imagenet", SamplerSpec::gddim(2), 10),
+        ];
+        for (id, key) in bad.into_iter().enumerate() {
+            let rx = router.submit(GenRequest { id: id as u64, n: 8, key, seed: 0 });
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.id, id as u64);
+            assert!(resp.error.is_some(), "key {id} should be rejected");
+            assert!(resp.xs.is_empty());
+        }
+        // The router is still healthy: a valid request round-trips.
+        let rx = router.submit(GenRequest { id: 9, n: 8, key: key(), seed: 1 });
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(resp.error.is_none());
+        assert_eq!(resp.xs.len(), 8 * 2);
+        router.shutdown();
+    }
+
+    #[test]
+    fn plan_cache_persists_to_disk_and_warms_next_router() {
+        let dir = std::env::temp_dir().join(format!(
+            "gddim-plan-cache-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let rcfg = || RouterConfig {
+            dispatchers: 1,
+            plan_cache_dir: Some(dir.clone()),
+            ..RouterConfig::default()
+        };
+        let key = PlanKey::gddim("cld", "gmm2d", 8, 2);
+        let first = Router::with_options(
+            rcfg(),
+            Engine::new(1),
+            BatcherConfig::default(),
+            oracle_factory(),
+        );
+        let rx = first.submit(GenRequest { id: 1, n: 16, key: key.clone(), seed: 3 });
+        let a = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        first.shutdown();
+
+        // The plan landed on disk and parses back against its key.
+        let file = dir.join(key.cache_file_name());
+        assert!(file.exists(), "plan file must be persisted at {}", file.display());
+        let (pk, plan) = parse_plan_file(&std::fs::read_to_string(&file).unwrap()).unwrap();
+        assert_eq!(pk, key);
+        assert_eq!(plan.n_steps(), 8);
+
+        // A fresh router warms its LRU from the directory before serving
+        // anything — and the served bytes match the first router's.
+        let second = Router::with_options(
+            rcfg(),
+            Engine::new(1),
+            BatcherConfig::default(),
+            oracle_factory(),
+        );
+        assert!(
+            second.plan_cache_contains(&key),
+            "warm start must preload the persisted plan"
+        );
+        let rx = second.submit(GenRequest { id: 1, n: 16, key: key.clone(), seed: 3 });
+        let b = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(a.xs, b.xs, "a loaded plan must reproduce the built plan's bytes");
+        second.shutdown();
+
+        // Corrupt files are skipped, not fatal.
+        std::fs::write(dir.join("garbage.json"), "{not json").unwrap();
+        let third = Router::with_options(
+            rcfg(),
+            Engine::new(1),
+            BatcherConfig::default(),
+            oracle_factory(),
+        );
+        assert!(third.plan_cache_contains(&key));
+        third.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -86,7 +86,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                // Integral values print as integers — except -0.0, whose
+                // sign bit `as i64` would drop (the plan persistence
+                // format relies on bit-exact float round trips; Display
+                // prints "-0", which parses back to -0.0).
+                if x.fract() == 0.0 && x.abs() < 1e15 && !(*x == 0.0 && x.is_sign_negative()) {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -361,6 +365,18 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign_bit() {
+        let text = Json::Num(-0.0).to_string_pretty();
+        assert_eq!(text, "-0");
+        match Json::parse(&text).unwrap() {
+            Json::Num(x) => assert_eq!(x.to_bits(), (-0.0f64).to_bits()),
+            other => panic!("{other:?}"),
+        }
+        // Plain zero still prints as an integer.
+        assert_eq!(Json::Num(0.0).to_string_pretty(), "0");
     }
 
     #[test]

@@ -370,6 +370,41 @@ pub fn engine_throughput(engine: &Engine, job: &Job<'_>, repeats: usize) -> f64 
     (timed * job.n) as f64 / t0.elapsed().as_secs_f64().max(1e-12)
 }
 
+/// Build the key mix for the serving CLIs: one key per (process ×
+/// sampler spec) on `dataset`, with specs parsed from a `+`-separated
+/// `--samplers` list (`+` because the spec grammar itself uses commas).
+/// Keys a spec cannot serve (e.g. SSCS off CLD) are filtered by
+/// validation rather than erroring the whole mix; an *empty* result
+/// (every token invalid) is an error the CLI reports cleanly.
+pub fn cli_key_mix(samplers: &str, dataset: &str, nfe: usize) -> crate::Result<Vec<PlanKey>> {
+    let mut keys = Vec::new();
+    for token in samplers.split('+') {
+        let token = token.trim();
+        if token.is_empty() {
+            continue;
+        }
+        let spec = match crate::samplers::SamplerSpec::parse(token) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("skipping sampler `{token}`: {e}");
+                continue;
+            }
+        };
+        for process in ["vpsde", "cld"] {
+            let key = PlanKey::new(process, dataset, spec.clone(), nfe);
+            if key.validate().is_ok() {
+                keys.push(key);
+            }
+        }
+    }
+    if keys.is_empty() {
+        return Err(crate::Error::msg(format!(
+            "no valid (process, sampler) combinations in `{samplers}`"
+        )));
+    }
+    Ok(keys)
+}
+
 /// `gddim workload` — open-loop SLO characterization from the CLI: sweep
 /// injection rates against a fresh router each, print per-rate latency
 /// percentiles and the max rate meeting the SLO.
@@ -382,6 +417,7 @@ pub fn run_cli(args: &crate::util::cli::Args) {
     let slo_ms = args.get_f64("slo-ms", 50.0);
     let seed = args.get_u64("seed", 0);
     let poisson = args.has("poisson");
+    let samplers = args.get_or("samplers", "gddim:q=2");
     let rates: Vec<f64> = match args.get("rates") {
         Some(list) => list
             .split(',')
@@ -395,24 +431,29 @@ pub fn run_cli(args: &crate::util::cli::Args) {
 
     println!(
         "open-loop workload: {} requests × {} samples, NFE {}, {} workers, {} dispatchers, \
-         SLO p99 ≤ {:.0}ms, arrivals {}",
+         samplers [{}], SLO p99 ≤ {:.0}ms, arrivals {}",
         n_requests,
         samples,
         nfe,
         workers,
         dispatchers,
+        samplers,
         slo_ms,
         if poisson { "poisson" } else { "uniform" },
     );
-    let keys = vec![
-        PlanKey::gddim("vpsde", "gmm2d", nfe, 2),
-        PlanKey::gddim("cld", "gmm2d", nfe, 2),
-    ];
+    let keys = match cli_key_mix(&samplers, "gmm2d", nfe) {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
     let sweep = max_rate_under_slo(&rates, slo_ms / 1e3, |rate| {
         let (report, metrics) = open_loop_probe(
             RouterConfig {
                 dispatchers,
                 plan_cache_capacity: args.get_usize("plan-cache", 64),
+                plan_cache_dir: args.get("plan-cache-dir").map(std::path::PathBuf::from),
             },
             workers,
             BatcherConfig {
@@ -471,7 +512,7 @@ mod tests {
         use crate::data::presets;
         use crate::diffusion::process::KtKind;
         use crate::diffusion::{Cld, Process, TimeGrid};
-        use crate::engine::SamplerSpec;
+        use crate::samplers::GddimDet;
         use crate::score::oracle::GmmOracle;
         use std::sync::Arc;
         let spec = presets::gmm2d();
@@ -481,10 +522,11 @@ mod tests {
         let plan =
             SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
         let engine = Engine::new(2);
+        let sampler = GddimDet { plan: &plan };
         let job = Job {
             proc: proc.as_ref(),
             model: &oracle,
-            sampler: SamplerSpec::GddimDet(&plan),
+            sampler: &sampler,
             n: 128,
             seed: 1,
         };
@@ -532,15 +574,16 @@ mod tests {
     #[test]
     fn engine_throughput_runs_exactly_repeats_jobs() {
         use crate::diffusion::{Process, TimeGrid, Vpsde};
-        use crate::engine::SamplerSpec;
+        use crate::samplers::Ancestral;
         let proc = Vpsde::standard(2);
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 4);
         let model = CountingModel::new(2, Duration::ZERO);
         let engine = Engine::new(1);
+        let sampler = Ancestral { grid: &grid };
         let job = Job {
             proc: &proc,
             model: &model,
-            sampler: SamplerSpec::Ancestral { grid: &grid },
+            sampler: &sampler,
             n: 16,
             seed: 2,
         };
@@ -599,21 +642,18 @@ mod tests {
         const NFE: usize = 4;
         const PAUSE: Duration = Duration::from_millis(2);
         let factory: Box<crate::server::router::PreparedFactory> =
-            Box::new(move |key: &PlanKey| {
+            Box::new(move |key: &PlanKey, _preloaded| {
                 let proc = Arc::new(Vpsde::standard(2));
                 let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), key.nfe);
-                let plan = SamplerPlan::build(
-                    proc.as_ref(),
-                    &grid,
-                    &PlanConfig::deterministic(key.q, KtKind::R),
-                );
-                Arc::new(Prepared {
+                let cfg = key.spec.plan_config().expect("gddim key carries a plan config");
+                let plan = SamplerPlan::build(proc.as_ref(), &grid, &cfg);
+                Ok(Arc::new(Prepared {
                     dim_x: proc.dim_x(),
                     model: Arc::new(CountingModel::new(proc.dim_u(), PAUSE)),
                     plan: Some(Arc::new(plan)),
                     grid,
                     proc,
-                })
+                }))
             });
         let router = Router::new(
             1,

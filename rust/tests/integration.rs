@@ -10,7 +10,8 @@ use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
 use gddim::data::presets;
 use gddim::diffusion::process::KtKind;
 use gddim::diffusion::{Cld, Process, TimeGrid, Vpsde};
-use gddim::engine::{Engine, EngineConfig, Job, SamplerSpec};
+use gddim::engine::{Engine, EngineConfig, Job};
+use gddim::samplers::{Ancestral, GddimDet};
 use gddim::math::rng::Rng;
 use gddim::metrics::coverage::coverage;
 use gddim::metrics::frechet::frechet_to_spec;
@@ -120,11 +121,12 @@ fn engine_is_worker_count_invariant() {
     let oracle = GmmOracle::new(p.clone(), spec, KtKind::R);
     let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 12);
     let plan = SamplerPlan::build(p.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+    let sampler = GddimDet { plan: &plan };
     let run = |workers: usize| {
         Engine::with_config(EngineConfig { workers, shard_size: 128 }).run(&Job {
             proc: p.as_ref(),
             model: &oracle,
-            sampler: SamplerSpec::GddimDet(&plan),
+            sampler: &sampler,
             n: 1000,
             seed: 7,
         })
@@ -150,11 +152,12 @@ fn persistent_pool_is_stateless_across_jobs() {
     let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 8);
     let plan = SamplerPlan::build(p.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
     let pooled = Engine::with_config(EngineConfig { workers: test_workers(), shard_size: 64 });
+    let sampler = GddimDet { plan: &plan };
     for seed in 0..12u64 {
         let make = || Job {
             proc: p.as_ref(),
             model: &oracle,
-            sampler: SamplerSpec::GddimDet(&plan),
+            sampler: &sampler,
             n: 200,
             seed,
         };
@@ -190,7 +193,7 @@ fn gddim_and_ancestral_agree_on_the_mean() {
         let out_gddim = engine.run(&Job {
             proc: p.as_ref(),
             model: &oracle,
-            sampler: SamplerSpec::GddimDet(&plan),
+            sampler: &GddimDet { plan: &plan },
             n,
             seed: 0xA11CE,
         });
@@ -198,7 +201,7 @@ fn gddim_and_ancestral_agree_on_the_mean() {
         let out_ancestral = engine.run(&Job {
             proc: p.as_ref(),
             model: &oracle,
-            sampler: SamplerSpec::Ancestral { grid: &grid_a },
+            sampler: &Ancestral { grid: &grid_a },
             n,
             seed: 0xB0B,
         });

@@ -1,0 +1,324 @@
+//! Parity suite for the step-level `Sampler` trait redesign
+//! (`cargo test --test sampler_parity`; CI also runs it under
+//! `GDDIM_TEST_WORKERS=4`).
+//!
+//! Locks three equivalences for every one of the seven samplers:
+//!
+//! 1. the historical free functions and `Sampler::run` produce identical
+//!    bytes (the wrappers delegate — this pins that they keep doing so);
+//! 2. driving the state machine by hand through the `ScoreRequest`
+//!    boundary — the engine's per-shard loop — matches `Sampler::run`;
+//! 3. the engine's merged output is worker-count invariant for every
+//!    sampler (the old suite only covered gDDIM + ancestral).
+//!
+//! Plus: the trait objects are Send/Sync (they cross pool threads), the
+//! router serves every `SamplerSpec` variant end-to-end on vpsde/blobs8
+//! (SSCS cleanly rejected off CLD), and λ survives a key round trip
+//! without the old milli-unit truncation.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
+use gddim::data::presets;
+use gddim::diffusion::process::KtKind;
+use gddim::diffusion::{Cld, Process, TimeGrid};
+use gddim::engine::{Engine, EngineConfig, Job};
+use gddim::math::rng::Rng;
+use gddim::samplers::{
+    self, model_score, Ancestral, Em, GddimDet, GddimSde, Heun, OrderedF64, Rk45, Sampler,
+    SampleOutput, SamplerSpec, Sscs,
+};
+use gddim::score::oracle::GmmOracle;
+use gddim::server::batcher::BatcherConfig;
+use gddim::server::request::{GenRequest, PlanKey};
+use gddim::server::router::{oracle_factory, Router};
+
+const SEED: u64 = 0x5EED;
+const N: usize = 48;
+
+struct Fixture {
+    proc: Arc<Cld>,
+    oracle: GmmOracle,
+    grid: TimeGrid,
+    det_plan: SamplerPlan,
+    pc_plan: SamplerPlan,
+    sde_plan: SamplerPlan,
+}
+
+fn fixture() -> Fixture {
+    let spec = presets::gmm2d();
+    let proc = Arc::new(Cld::standard(spec.d));
+    let oracle = GmmOracle::new(proc.clone(), spec, KtKind::R);
+    let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 8);
+    let det_plan =
+        SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+    let pc_plan = SamplerPlan::build(
+        proc.as_ref(),
+        &grid,
+        &PlanConfig { q: 2, with_corrector: true, ..PlanConfig::default() },
+    );
+    let sde_plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::stochastic(0.5));
+    Fixture { proc, oracle, grid, det_plan, pc_plan, sde_plan }
+}
+
+fn assert_bytes_equal(a: &SampleOutput, b: &SampleOutput, what: &str) {
+    assert_eq!(a.xs, b.xs, "{what}: xs diverged");
+    assert_eq!(a.us, b.us, "{what}: us diverged");
+    assert_eq!(a.nfe, b.nfe, "{what}: NFE diverged");
+}
+
+/// Drive the state machine by hand — the exact loop the engine runs per
+/// shard — and check it matches the default `run` driver bit for bit.
+fn step_drive(
+    sampler: &dyn Sampler,
+    proc: &dyn Process,
+    oracle: &GmmOracle,
+    seed: u64,
+) -> SampleOutput {
+    let mut rng = Rng::seed_from(seed);
+    let mut state = sampler.init(proc, oracle, N, &mut rng, false);
+    let mut score = model_score(oracle);
+    for i in (1..=sampler.n_steps()).rev() {
+        state.step(i, &mut score, &mut rng);
+    }
+    state.finish()
+}
+
+fn parity_case(sampler: &dyn Sampler, free: SampleOutput, proc: &dyn Process, oracle: &GmmOracle, what: &str) {
+    let via_run = sampler.run(proc, oracle, N, &mut Rng::seed_from(SEED), false);
+    assert_bytes_equal(&free, &via_run, &format!("{what}: free fn vs Sampler::run"));
+    let via_steps = step_drive(sampler, proc, oracle, SEED);
+    assert_bytes_equal(&free, &via_steps, &format!("{what}: free fn vs step driver"));
+}
+
+#[test]
+fn parity_gddim_deterministic_and_pc() {
+    let f = fixture();
+    for (what, plan) in [("gddim q=2", &f.det_plan), ("gddim q=2 PC", &f.pc_plan)] {
+        let free = samplers::gddim::sample_deterministic(
+            f.proc.as_ref(),
+            plan,
+            &f.oracle,
+            N,
+            &mut Rng::seed_from(SEED),
+            false,
+        );
+        parity_case(&GddimDet { plan }, free, f.proc.as_ref(), &f.oracle, what);
+    }
+}
+
+#[test]
+fn parity_gddim_stochastic() {
+    let f = fixture();
+    let free = samplers::gddim::sample_stochastic(
+        f.proc.as_ref(),
+        &f.sde_plan,
+        &f.oracle,
+        N,
+        &mut Rng::seed_from(SEED),
+        false,
+    );
+    parity_case(&GddimSde { plan: &f.sde_plan }, free, f.proc.as_ref(), &f.oracle, "gddim-sde");
+}
+
+#[test]
+fn parity_em() {
+    let f = fixture();
+    for lambda in [0.0, 1.0] {
+        let free = samplers::em::sample_em(
+            f.proc.as_ref(),
+            &f.oracle,
+            &f.grid,
+            lambda,
+            N,
+            &mut Rng::seed_from(SEED),
+            false,
+        );
+        let what = format!("em λ={lambda}");
+        parity_case(&Em { grid: &f.grid, lambda }, free, f.proc.as_ref(), &f.oracle, &what);
+    }
+}
+
+#[test]
+fn parity_ancestral() {
+    let f = fixture();
+    let free = samplers::ancestral::sample_ancestral(
+        f.proc.as_ref(),
+        &f.oracle,
+        &f.grid,
+        N,
+        &mut Rng::seed_from(SEED),
+    );
+    parity_case(&Ancestral { grid: &f.grid }, free, f.proc.as_ref(), &f.oracle, "ancestral");
+}
+
+#[test]
+fn parity_heun() {
+    let f = fixture();
+    let free = samplers::heun::sample_heun(
+        f.proc.as_ref(),
+        &f.oracle,
+        &f.grid,
+        N,
+        &mut Rng::seed_from(SEED),
+    );
+    parity_case(&Heun { grid: &f.grid }, free, f.proc.as_ref(), &f.oracle, "heun");
+}
+
+#[test]
+fn parity_rk45() {
+    let f = fixture();
+    let free = samplers::rk45::sample_rk45(
+        f.proc.as_ref(),
+        &f.oracle,
+        1e-3,
+        N,
+        &mut Rng::seed_from(SEED),
+    );
+    assert!(free.nfe > 0);
+    parity_case(&Rk45 { rtol: 1e-3 }, free, f.proc.as_ref(), &f.oracle, "rk45");
+}
+
+#[test]
+fn parity_sscs() {
+    let f = fixture();
+    let free = samplers::sscs::sample_sscs(
+        f.proc.as_ref(),
+        &f.oracle,
+        &f.grid,
+        N,
+        &mut Rng::seed_from(SEED),
+    );
+    parity_case(&Sscs { grid: &f.grid }, free, f.proc.as_ref(), &f.oracle, "sscs");
+}
+
+/// The acceptance contract of the redesign: every sampler, served through
+/// the engine, is bit-identical for any worker count (the old suite only
+/// locked gDDIM and ancestral).
+#[test]
+fn engine_is_worker_count_invariant_for_all_seven_samplers() {
+    let f = fixture();
+    let cases: Vec<(&str, Box<dyn Sampler + '_>)> = vec![
+        ("gddim", Box::new(GddimDet { plan: &f.det_plan })),
+        ("gddim-pc", Box::new(GddimDet { plan: &f.pc_plan })),
+        ("gddim-sde", Box::new(GddimSde { plan: &f.sde_plan })),
+        ("em", Box::new(Em { grid: &f.grid, lambda: 1.0 })),
+        ("ancestral", Box::new(Ancestral { grid: &f.grid })),
+        ("heun", Box::new(Heun { grid: &f.grid })),
+        ("rk45", Box::new(Rk45 { rtol: 1e-3 })),
+        ("sscs", Box::new(Sscs { grid: &f.grid })),
+    ];
+    for (what, sampler) in &cases {
+        let run = |workers: usize| {
+            Engine::with_config(EngineConfig { workers, shard_size: 16 }).run(&Job {
+                proc: f.proc.as_ref(),
+                model: &f.oracle,
+                sampler: sampler.as_ref(),
+                n: N, // 3 shards of 16
+                seed: SEED,
+            })
+        };
+        let one = run(1);
+        assert!(one.xs.iter().all(|x| x.is_finite()), "{what}: non-finite output");
+        for workers in [2usize, 4] {
+            let multi = run(workers);
+            assert_bytes_equal(&one, &multi, &format!("{what} @ {workers} workers"));
+        }
+    }
+}
+
+/// Trait-object audit: samplers and their states cross engine pool
+/// threads by reference, so the bounds are load-bearing, not stylistic.
+#[test]
+fn sampler_trait_objects_are_send_sync() {
+    fn assert_send_sync<T: ?Sized + Send + Sync>() {}
+    fn assert_send<T: ?Sized + Send>() {}
+    assert_send_sync::<dyn Sampler>();
+    assert_send::<dyn samplers::SamplerState>();
+    assert_send_sync::<SamplerSpec>();
+    assert_send_sync::<PlanKey>();
+    assert_send_sync::<GddimDet<'_>>();
+    assert_send_sync::<GddimSde<'_>>();
+    assert_send_sync::<Em<'_>>();
+    assert_send_sync::<Ancestral<'_>>();
+    assert_send_sync::<Heun<'_>>();
+    assert_send_sync::<Rk45>();
+    assert_send_sync::<Sscs<'_>>();
+    assert_send_sync::<Box<dyn Sampler>>();
+}
+
+/// Every `SamplerSpec` variant is servable through `Router::submit` —
+/// including the three the old `SamplerKind` could not express (heun,
+/// rk45, sscs) — on the 64-dim vpsde/blobs8 image path, with SSCS
+/// rejected cleanly off CLD and served on CLD.
+#[test]
+fn router_serves_every_spec_variant_on_vpsde_blobs8() {
+    let router = Router::new(2, BatcherConfig::default(), oracle_factory());
+    let servable = [
+        SamplerSpec::GddimDet { q: 2, kt: KtKind::R, corrector: false },
+        SamplerSpec::GddimSde { lambda: OrderedF64::new(0.5) },
+        SamplerSpec::Em { lambda: OrderedF64::new(1.0) },
+        SamplerSpec::Ancestral,
+        SamplerSpec::Heun,
+        SamplerSpec::Rk45 { rtol: OrderedF64::new(1e-2) },
+    ];
+    for (id, spec) in servable.into_iter().enumerate() {
+        let key = PlanKey::new("vpsde", "blobs8", spec.clone(), 6);
+        let rx = router.submit(GenRequest { id: id as u64, n: 4, key, seed: id as u64 });
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.error.is_none(), "{spec} rejected: {:?}", resp.error);
+        assert_eq!(resp.xs.len(), 4 * 64, "{spec}: wrong sample shape");
+        assert!(resp.xs.iter().all(|x| x.is_finite()), "{spec}: non-finite samples");
+        assert!(resp.nfe > 0, "{spec}: NFE not reported");
+    }
+    // SSCS: clean rejection off CLD, service on CLD.
+    let rx = router.submit(GenRequest {
+        id: 100,
+        n: 4,
+        key: PlanKey::new("vpsde", "blobs8", SamplerSpec::Sscs, 6),
+        seed: 1,
+    });
+    let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert!(resp.error.is_some(), "sscs off CLD must be rejected");
+    let rx = router.submit(GenRequest {
+        id: 101,
+        n: 8,
+        key: PlanKey::new("cld", "gmm2d", SamplerSpec::Sscs, 6),
+        seed: 1,
+    });
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    assert!(resp.error.is_none(), "sscs on CLD rejected: {:?}", resp.error);
+    assert!(resp.xs.iter().all(|x| x.is_finite()));
+    router.shutdown();
+}
+
+/// λ regression: the old key stored λ×1000 in a u32, so λ=0.0001 aliased
+/// λ=0 and the two configurations shared one batch (and one plan). The
+/// owned spec must keep them distinct end to end.
+#[test]
+fn lambda_precision_survives_the_key_end_to_end() {
+    let tiny = PlanKey::new(
+        "vpsde",
+        "gmm2d",
+        SamplerSpec::Em { lambda: OrderedF64::new(0.0001) },
+        6,
+    );
+    let zero =
+        PlanKey::new("vpsde", "gmm2d", SamplerSpec::Em { lambda: OrderedF64::new(0.0) }, 6);
+    assert_ne!(tiny, zero, "λ=0.0001 must not alias λ=0");
+    match &tiny.spec {
+        SamplerSpec::Em { lambda } => assert_eq!(lambda.get().to_bits(), 0.0001f64.to_bits()),
+        _ => unreachable!(),
+    }
+    // Both keys are served as distinct batches.
+    let router = Router::new(2, BatcherConfig::default(), oracle_factory());
+    let ra = router.submit(GenRequest { id: 0, n: 8, key: tiny, seed: 3 });
+    let rb = router.submit(GenRequest { id: 1, n: 8, key: zero, seed: 3 });
+    let a = ra.recv_timeout(Duration::from_secs(60)).unwrap();
+    let b = rb.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert!(a.error.is_none() && b.error.is_none());
+    assert_eq!(a.batch_size, 1);
+    assert_eq!(b.batch_size, 1);
+    router.shutdown();
+}
