@@ -84,7 +84,14 @@ fn main() {
                 &PlanConfig::deterministic(2, entry.kt),
             );
             let mut rng = Rng::seed_from(5);
-            let out_net = sample_deterministic(proc.as_ref(), &plan, net as &dyn ScoreModel, n, &mut rng, false);
+            let out_net = sample_deterministic(
+                proc.as_ref(),
+                &plan,
+                net as &dyn ScoreModel,
+                n,
+                &mut rng,
+                false,
+            );
             let mut rng = Rng::seed_from(5);
             let out_oracle =
                 sample_deterministic(proc.as_ref(), &plan, &oracle, n, &mut rng, false);

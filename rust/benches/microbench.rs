@@ -28,7 +28,8 @@ fn main() {
     ] {
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 50);
         let s = time_until(0.5, 50, || {
-            let _ = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(3, KtKind::R));
+            let _ =
+                SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(3, KtKind::R));
         });
         t.row(vec![name.into(), fmt(s.mean), fmt(s.p50), fmt(s.p99)]);
     }

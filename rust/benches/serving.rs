@@ -10,7 +10,7 @@ use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
 use gddim::data::presets;
 use gddim::diffusion::process::KtKind;
 use gddim::diffusion::{Cld, Process, TimeGrid};
-use gddim::engine::{Engine, Job};
+use gddim::engine::{Engine, EngineConfig, Job};
 use gddim::samplers::GddimDet;
 use gddim::score::oracle::GmmOracle;
 use gddim::server::batcher::BatcherConfig;
@@ -22,7 +22,12 @@ use gddim::workload::{
     engine_throughput, max_rate_under_slo, open_loop_probe, ClosedLoop, WorkloadSpec,
 };
 
-fn run_once(rate: f64, max_wait_ms: u64, n_requests: usize, samples: usize) -> (f64, f64, f64, f64) {
+fn run_once(
+    rate: f64,
+    max_wait_ms: u64,
+    n_requests: usize,
+    samples: usize,
+) -> (f64, f64, f64, f64) {
     let router = Router::new(
         4,
         BatcherConfig { max_batch: 4096, max_wait: Duration::from_millis(max_wait_ms) },
@@ -73,6 +78,67 @@ fn main() {
 
     engine_scaling(&args);
     open_loop_slo(&args);
+    score_batching(&args);
+}
+
+/// Cross-key score batching on a heterogeneous key mix: four sampler
+/// configurations (gDDIM orders 1–3 + Euler) share one `(process,
+/// dataset, K_t)` oracle, so with the scheduler on their same-`t` score
+/// requests pool into shared `eps_batch` calls. The table compares the
+/// scheduler off/on on the same open-loop workload and reports the
+/// realized batch fill (`rows/call`) and cross-key coalescing counters
+/// straight from the engine stats.
+fn score_batching(args: &Args) {
+    let n_requests = args.get_usize("open-requests", 40);
+    let samples = args.get_usize("hetero-samples", 16);
+    let rate = args.get_f64("hetero-rate", 400.0);
+    let keys = vec![
+        PlanKey::gddim("cld", "gmm2d", 20, 1),
+        PlanKey::gddim("cld", "gmm2d", 20, 2),
+        PlanKey::gddim("cld", "gmm2d", 20, 3),
+        PlanKey::new(
+            "cld",
+            "gmm2d",
+            gddim::samplers::SamplerSpec::Em { lambda: gddim::samplers::OrderedF64::new(0.0) },
+            20,
+        ),
+    ];
+    let mut t = Table::new(
+        "Cross-key score batching: heterogeneous 4-key mix (CLD NFE=20), scheduler off vs on",
+        &["score-batch", "done", "p50(s)", "p99(s)", "score calls", "rows/call", "cross-job"],
+    );
+    for score_batch in [0usize, 4096] {
+        let (report, metrics) = open_loop_probe(
+            RouterConfig { dispatchers: 4, ..RouterConfig::default() },
+            EngineConfig {
+                workers: 4,
+                score_batch,
+                score_wait: std::time::Duration::from_micros(200),
+                ..EngineConfig::default()
+            },
+            BatcherConfig { max_batch: 4096, max_wait: Duration::from_millis(2) },
+            WorkloadSpec {
+                n_requests,
+                samples_per_request: samples,
+                rate_per_sec: rate,
+                keys: keys.clone(),
+                seed: 17,
+            },
+            true,
+        );
+        let engine = metrics.engine.expect("router report carries engine stats");
+        let cell = |v: Option<f64>| v.map_or_else(|| "-".into(), |x| format!("{x:.4}"));
+        t.row(vec![
+            if score_batch == 0 { "off".into() } else { score_batch.to_string() },
+            format!("{}/{}", report.completed, report.issued),
+            cell(report.total.as_ref().map(|s| s.p50)),
+            cell(report.total.as_ref().map(|s| s.p99)),
+            if score_batch == 0 { "-".into() } else { engine.score_calls.to_string() },
+            if score_batch == 0 { "-".into() } else { format!("{:.1}", engine.rows_per_call()) },
+            if score_batch == 0 { "-".into() } else { engine.coalesced_keys.to_string() },
+        ]);
+    }
+    t.emit("serving_score_batching");
 }
 
 /// Open-loop SLO bench: inject at fixed rates regardless of completion
@@ -97,7 +163,7 @@ fn open_loop_slo(args: &Args) {
     let sweep = max_rate_under_slo(&rates, slo_ms / 1e3, |rate| {
         let (report, _metrics) = open_loop_probe(
             RouterConfig { dispatchers: 4, ..RouterConfig::default() },
-            1,
+            EngineConfig { workers: 1, ..EngineConfig::default() },
             BatcherConfig { max_batch: 4096, max_wait: Duration::from_millis(2) },
             WorkloadSpec {
                 n_requests,

@@ -488,10 +488,8 @@ mod tests {
         };
         for plan in grids_and_plans {
             let text = plan.to_json().to_string_pretty();
-            let back = SamplerPlan::from_json(
-                &crate::util::json::Json::parse(&text).unwrap(),
-            )
-            .unwrap();
+            let back =
+                SamplerPlan::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
             assert_eq!(back.cfg.q, plan.cfg.q);
             assert_eq!(back.cfg.kt, plan.cfg.kt);
             assert_eq!(back.cfg.lambda.to_bits(), plan.cfg.lambda.to_bits());

@@ -23,13 +23,7 @@ impl GmmSpec {
         assert!(m > 0);
         let d = means[0].len();
         assert!(means.iter().all(|mu| mu.len() == d));
-        GmmSpec {
-            name: name.to_string(),
-            d,
-            weights: vec![1.0 / m as f64; m],
-            means,
-            var,
-        }
+        GmmSpec { name: name.to_string(), d, weights: vec![1.0 / m as f64; m], means, var }
     }
 
     pub fn n_modes(&self) -> usize {

@@ -16,14 +16,25 @@
 //!    job's [`Sampler`] state machine on each shard — step by step, with
 //!    every score evaluation crossing the explicit
 //!    [`ScoreRequest`](crate::samplers::ScoreRequest) boundary (see
-//!    [`run_shard`]'s source), which is the hook for coalescing score
-//!    calls across jobs that share `(process, dataset, t)`. Whichever
-//!    worker is free pulls the next shard — work stealing by
-//!    construction, so a slow shard never blocks the others — and signals
-//!    a per-job condvar when its slot is filled.
+//!    [`run_shard`]'s source). Whichever worker is free pulls the next
+//!    shard — work stealing by construction, so a slow shard never blocks
+//!    the others — and signals a per-job condvar when its slot is filled.
 //! 4. **Merge**: shard outputs are concatenated in shard order. NFE is
 //!    reported per shard (max across shards), matching the paper's
 //!    convention that a batched score call counts once.
+//!
+//! When [`EngineConfig::score_batch`] is non-zero, the score boundary is
+//! the cross-key [`ScoreScheduler`] instead of a direct model call: each
+//! shard *parks* its `ScoreRequest` in a per-`(model, t)` pool and a
+//! drain answers whole pools with single `eps_batch` calls — so shards
+//! of different jobs (heterogeneous `PlanKey`s included, as long as they
+//! share a score model) fill the model's batch dimension together. The
+//! execution model becomes "many parked state machines share a pooled
+//! model frontier", but the output stays **bit-identical** to the
+//! unscheduled path for every worker count — see the determinism
+//! contract in [`scheduler`]. [`Engine::run_group`] admits several jobs
+//! in one submission so the scheduler sees the whole group as
+//! coalescable from the first evaluation.
 //!
 //! The pool is long-lived: at high request rates (the serving router
 //! shares one engine across all dispatcher threads) a per-job
@@ -38,6 +49,8 @@
 //! ever spawned and shards run on the caller thread, byte-for-byte
 //! equivalent to the pooled execution.
 
+pub mod scheduler;
+
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -49,8 +62,10 @@ use crate::diffusion::process::Process;
 use crate::diffusion::schedule::TimeGrid;
 use crate::math::rng::Rng;
 use crate::samplers::common::SampleOutput;
-use crate::samplers::{model_score, Sampler, SamplerSpec};
+use crate::samplers::{model_score, Sampler, SamplerSpec, ScoreRequest};
 use crate::score::model::ScoreModel;
+
+pub use scheduler::{SchedulerConfig, ScoreScheduler, ScoreStats};
 
 /// Engine tuning knobs.
 #[derive(Clone, Debug)]
@@ -63,11 +78,28 @@ pub struct EngineConfig {
     /// for every pool size. Smaller shards = better load balance, more
     /// per-shard fixed cost (score-call batching shrinks with the shard).
     pub shard_size: usize,
+    /// Maximum pooled rows per coalesced score call. `0` disables the
+    /// [`ScoreScheduler`] entirely (the historical direct-call path);
+    /// non-zero routes every shard's score evaluations through the
+    /// cross-key pooling boundary. Values at or below `shard_size`
+    /// degenerate to per-shard calls — the point of the scheduler is a
+    /// cut well above the typical shard. Output is bit-identical either
+    /// way (see [`scheduler`]).
+    pub score_batch: usize,
+    /// Longest a parked score request waits before draining its own pool
+    /// (the scheduler's liveness backstop; the stall cut usually answers
+    /// much sooner). Ignored when `score_batch == 0`.
+    pub score_wait: Duration,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { workers: 1, shard_size: 256 }
+        EngineConfig {
+            workers: 1,
+            shard_size: 256,
+            score_batch: 0,
+            score_wait: Duration::from_micros(200),
+        }
     }
 }
 
@@ -130,14 +162,37 @@ struct JobPtr(*const Job<'static>);
 // `Send + Sync` (see `send_sync_audit`).
 unsafe impl Send for JobPtr {}
 
-/// One unit of pool work: run shard `idx` (`n` rows, its own RNG stream)
-/// of the job behind `job`, then fill `batch.slots[idx]` and signal.
+/// One unit of pool work: run a shard (`n` rows, its own RNG stream) of
+/// the job behind `job`, then fill `batch.slots[idx]` and signal.
 struct ShardTask {
     job: JobPtr,
+    /// Flat result-slot index within the submission (group-wide).
     idx: usize,
+    /// Job sequence number (score-scheduler drain ordering).
+    seq: u64,
+    /// Shard index within its own job.
+    shard: usize,
     n: usize,
     rng: Rng,
     batch: Arc<Batch>,
+}
+
+/// Pairs the scheduler's `task_started` with a guaranteed
+/// `task_finished` (drop runs on panic unwinds too, so a dead shard can
+/// never leave the stall detector counting a ghost).
+struct StartGuard<'a>(&'a ScoreScheduler);
+
+impl<'a> StartGuard<'a> {
+    fn new(sched: &'a ScoreScheduler) -> StartGuard<'a> {
+        sched.task_started();
+        StartGuard(sched)
+    }
+}
+
+impl Drop for StartGuard<'_> {
+    fn drop(&mut self) {
+        self.0.task_finished();
+    }
 }
 
 /// The long-lived worker pool: an injector queue plus the worker handles.
@@ -203,6 +258,21 @@ pub struct EngineStats {
     pub worker_busy_secs: Vec<f64>,
     /// Seconds since the engine (and its pool) was constructed.
     pub uptime_secs: f64,
+    /// Configured [`EngineConfig::score_batch`] (`0` = scheduler off; the
+    /// score counters below then stay zero).
+    pub score_batch: usize,
+    /// `eps_batch` invocations issued by the score scheduler.
+    pub score_calls: u64,
+    /// Total rows across those invocations (`rows_per_call()` = fill).
+    pub score_rows: u64,
+    /// Scheduler calls that pooled more than one parked request.
+    pub coalesced_calls: u64,
+    /// Scheduler calls that pooled requests from more than one *job*
+    /// (engine submission). Distinct jobs usually mean distinct cut
+    /// batches — heterogeneous `PlanKey`s under grouped admission, or
+    /// separate same-key cuts — either way, fill the per-key server
+    /// batcher could not reach on its own.
+    pub coalesced_keys: u64,
 }
 
 impl EngineStats {
@@ -210,6 +280,16 @@ impl EngineStats {
     pub fn busy_shares(&self) -> Vec<f64> {
         let up = self.uptime_secs.max(1e-12);
         self.worker_busy_secs.iter().map(|b| (b / up).clamp(0.0, 1.0)).collect()
+    }
+
+    /// Mean rows per scheduler-issued `eps_batch` call — the batch-fill
+    /// ratio the cross-key scheduler exists to raise (0 when idle/off).
+    pub fn rows_per_call(&self) -> f64 {
+        if self.score_calls == 0 {
+            0.0
+        } else {
+            self.score_rows as f64 / self.score_calls as f64
+        }
     }
 }
 
@@ -226,7 +306,18 @@ impl std::fmt::Display for EngineStats {
             }
             write!(f, "{s:.2}")?;
         }
-        write!(f, "] uptime={:.2}s", self.uptime_secs)
+        write!(f, "] uptime={:.2}s", self.uptime_secs)?;
+        if self.score_batch > 0 {
+            write!(
+                f,
+                " score: calls={} rows/call={:.1} coalesced={} cross-job={}",
+                self.score_calls,
+                self.rows_per_call(),
+                self.coalesced_calls,
+                self.coalesced_keys
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -236,6 +327,10 @@ impl std::fmt::Display for EngineStats {
 pub struct Engine {
     pub cfg: EngineConfig,
     pool: Option<Pool>,
+    /// Cross-key score scheduler; present iff `cfg.score_batch > 0`.
+    sched: Option<Arc<ScoreScheduler>>,
+    /// Monotonic job sequence numbers (scheduler drain ordering).
+    seq: AtomicU64,
     metrics: Arc<EngineMetrics>,
 }
 
@@ -249,6 +344,13 @@ impl Engine {
     /// once, up front — `run` never spawns.
     pub fn with_config(cfg: EngineConfig) -> Engine {
         let metrics = Arc::new(EngineMetrics::new(cfg.workers.max(1)));
+        let sched = (cfg.score_batch > 0).then(|| {
+            Arc::new(ScoreScheduler::new(SchedulerConfig {
+                max_batch: cfg.score_batch,
+                max_wait: cfg.score_wait,
+                workers: cfg.workers.max(1),
+            }))
+        });
         let pool = (cfg.workers >= 2).then(|| {
             let (tx, rx) = channel::<ShardTask>();
             let rx = Arc::new(Mutex::new(rx));
@@ -256,19 +358,27 @@ impl Engine {
                 .map(|w| {
                     let rx = Arc::clone(&rx);
                     let m = Arc::clone(&metrics);
+                    let s = sched.clone();
                     std::thread::Builder::new()
                         .name(format!("gddim-engine-{w}"))
-                        .spawn(move || pool_worker(&rx, &m, w))
+                        .spawn(move || pool_worker(&rx, &m, s.as_deref(), w))
                         .expect("engine: failed to spawn pool worker")
                 })
                 .collect();
             Pool { tx: Mutex::new(tx), handles }
         });
-        Engine { cfg, pool, metrics }
+        Engine { cfg, pool, sched, seq: AtomicU64::new(0), metrics }
+    }
+
+    /// Whether the cross-key score scheduler is active (serving layers
+    /// use this to decide on grouped admission).
+    pub fn score_batching(&self) -> bool {
+        self.sched.is_some()
     }
 
     /// Snapshot the engine counters.
     pub fn stats(&self) -> EngineStats {
+        let score = self.sched.as_ref().map(|s| s.stats()).unwrap_or_default();
         EngineStats {
             workers: self.cfg.workers,
             jobs_run: self.metrics.jobs.load(Ordering::Relaxed),
@@ -281,6 +391,11 @@ impl Engine {
                 .map(|ns| ns.load(Ordering::Relaxed) as f64 * 1e-9)
                 .collect(),
             uptime_secs: self.metrics.started.elapsed().as_secs_f64(),
+            score_batch: self.cfg.score_batch,
+            score_calls: score.calls,
+            score_rows: score.rows,
+            coalesced_calls: score.coalesced_calls,
+            coalesced_keys: score.coalesced_keys,
         }
     }
 
@@ -295,87 +410,151 @@ impl Engine {
     /// shard order. Blocks until every shard has completed; panics (after
     /// the job has fully drained) if any shard panicked.
     pub fn run(&self, job: &Job<'_>) -> SampleOutput {
-        if job.n == 0 {
-            // An empty request is a valid (if silly) thing for a client to
-            // send; panicking here would take a dispatcher thread with it.
-            self.metrics.jobs.fetch_add(1, Ordering::Relaxed);
-            return SampleOutput { xs: Vec::new(), us: Vec::new(), nfe: 0, traj: None };
-        }
-        self.metrics.jobs.fetch_add(1, Ordering::Relaxed);
-        let shard_size = self.cfg.shard_size.max(1);
-        let n_shards = job.n.div_ceil(shard_size);
-        let rngs = Engine::shard_rngs(job.seed, n_shards);
-        let shard_n =
-            |i: usize| -> usize { shard_size.min(job.n - i * shard_size) };
+        self.run_group(std::slice::from_ref(job))
+            .pop()
+            .expect("run_group returns one output per job")
+    }
 
-        let mut slots: Vec<Option<ShardResult>> = match &self.pool {
-            None => {
-                // Inline fast path: same shard walk, caller thread, no
-                // queue. Bit-identical to pooled execution by the shard /
-                // seed / merge construction.
-                rngs.into_iter()
-                    .enumerate()
-                    .map(|(i, rng)| {
-                        let t0 = Instant::now();
-                        let out = run_shard(job, shard_n(i), rng);
-                        self.metrics.busy_add(0, t0.elapsed());
-                        self.metrics.shards.fetch_add(1, Ordering::Relaxed);
-                        Some(Ok(out))
-                    })
-                    .collect()
+    /// Run several jobs as **one submission**, returning outputs in job
+    /// order. Every shard of every job is registered and enqueued before
+    /// the first one executes, so the score scheduler (when enabled)
+    /// sees the whole heterogeneous group as coalescable from its first
+    /// evaluation — this is how the serving router hands a multi-key
+    /// admission to the engine. With the scheduler off, a group is
+    /// byte-equivalent to running the jobs one by one (same shard
+    /// layout, same per-job RNG streams). Blocks until every shard of
+    /// every job has completed; panics (after the whole group has
+    /// drained) if any shard panicked.
+    pub fn run_group(&self, jobs: &[Job<'_>]) -> Vec<SampleOutput> {
+        self.metrics.jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        let shard_size = self.cfg.shard_size.max(1);
+        let seq0 = self.seq.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+
+        // Flatten the group into a job-major shard plan. An empty job
+        // (n == 0) is a valid (if silly) thing for a client to send —
+        // it contributes no shards and merges to an empty output.
+        struct ShardPlan {
+            job_idx: usize,
+            seq: u64,
+            shard: usize,
+            n: usize,
+            rng: Rng,
+        }
+        let mut plans: Vec<ShardPlan> = Vec::new();
+        let mut job_shards: Vec<usize> = Vec::with_capacity(jobs.len());
+        for (j, job) in jobs.iter().enumerate() {
+            let n_shards = job.n.div_ceil(shard_size);
+            job_shards.push(n_shards);
+            let rngs = Engine::shard_rngs(job.seed, n_shards);
+            for (i, rng) in rngs.into_iter().enumerate() {
+                let n = shard_size.min(job.n - i * shard_size);
+                plans.push(ShardPlan { job_idx: j, seq: seq0 + j as u64, shard: i, n, rng });
             }
-            Some(pool) => {
-                let batch = Arc::new(Batch::new(n_shards));
-                // SAFETY: we erase the job's lifetime to hand it to the
-                // long-lived pool threads. This is sound because this very
-                // function waits (below) until `done == n_shards` before
-                // returning, and every worker bumps `done` only after its
-                // last use of the pointer — so the borrow can never be
-                // outlived. See `JobPtr`.
-                let job_ptr =
-                    JobPtr(job as *const Job<'_> as *const Job<'static>);
-                {
-                    // One lock for the whole job keeps its shards
-                    // contiguous in the queue even with several
-                    // dispatchers submitting concurrently.
-                    let tx = pool.tx.lock().unwrap();
-                    for (i, rng) in rngs.into_iter().enumerate() {
-                        self.metrics.queue_push();
-                        tx.send(ShardTask {
-                            job: job_ptr,
-                            idx: i,
-                            n: shard_n(i),
-                            rng,
-                            batch: Arc::clone(&batch),
-                        })
-                        .expect("engine: pool queue closed while engine alive");
+        }
+        let total_shards = plans.len();
+
+        let mut slots: Vec<Option<ShardResult>> = if total_shards == 0 {
+            Vec::new()
+        } else {
+            match &self.pool {
+                None => {
+                    // Inline fast path: same shard walk, caller thread, no
+                    // queue. Bit-identical to pooled execution by the
+                    // shard / seed / merge construction.
+                    if let Some(s) = &self.sched {
+                        s.task_enqueued(total_shards);
                     }
+                    plans
+                        .into_iter()
+                        .map(|p| {
+                            let _running = self.sched.as_deref().map(StartGuard::new);
+                            let t0 = Instant::now();
+                            let out = run_shard(
+                                &jobs[p.job_idx],
+                                p.n,
+                                p.rng,
+                                self.sched.as_deref(),
+                                p.seq,
+                                p.shard,
+                            );
+                            self.metrics.busy_add(0, t0.elapsed());
+                            self.metrics.shards.fetch_add(1, Ordering::Relaxed);
+                            Some(Ok(out))
+                        })
+                        .collect()
                 }
-                let mut g = batch.inner.lock().unwrap();
-                while g.done < n_shards {
-                    g = batch.cv.wait(g).unwrap();
+                Some(pool) => {
+                    let batch = Arc::new(Batch::new(total_shards));
+                    // SAFETY: we erase each job's lifetime to hand it to
+                    // the long-lived pool threads. This is sound because
+                    // this very function waits (below) until
+                    // `done == total_shards` before returning, and every
+                    // worker bumps `done` only after its last use of the
+                    // pointer — so the borrows can never be outlived. See
+                    // `JobPtr`.
+                    let job_ptrs: Vec<JobPtr> = jobs
+                        .iter()
+                        .map(|j| JobPtr(j as *const Job<'_> as *const Job<'static>))
+                        .collect();
+                    // Register the whole group before any shard becomes
+                    // visible, so the scheduler's stall detector can
+                    // never mistake half-admitted work for an idle queue.
+                    if let Some(s) = &self.sched {
+                        s.task_enqueued(total_shards);
+                    }
+                    {
+                        // One lock for the whole group keeps its shards
+                        // contiguous in the queue even with several
+                        // dispatchers submitting concurrently.
+                        let tx = pool.tx.lock().unwrap();
+                        for (slot_idx, p) in plans.into_iter().enumerate() {
+                            self.metrics.queue_push();
+                            tx.send(ShardTask {
+                                job: job_ptrs[p.job_idx],
+                                idx: slot_idx,
+                                seq: p.seq,
+                                shard: p.shard,
+                                n: p.n,
+                                rng: p.rng,
+                                batch: Arc::clone(&batch),
+                            })
+                            .expect("engine: pool queue closed while engine alive");
+                        }
+                    }
+                    let mut g = batch.inner.lock().unwrap();
+                    while g.done < total_shards {
+                        g = batch.cv.wait(g).unwrap();
+                    }
+                    std::mem::take(&mut g.slots)
                 }
-                std::mem::take(&mut g.slots)
             }
         };
 
-        // Merge in shard order — deterministic regardless of which worker
-        // finished first. A panicked shard is re-raised here, strictly
-        // after the wait above: by then no worker holds the job pointer.
-        let mut xs = Vec::with_capacity(job.n * job.proc.dim_x());
-        let mut us = Vec::with_capacity(job.n * job.proc.dim_u());
-        let mut nfe = 0usize;
-        for cell in slots.iter_mut() {
-            match cell.take().expect("engine: shard never executed") {
-                Ok(out) => {
-                    xs.extend_from_slice(&out.xs);
-                    us.extend_from_slice(&out.us);
-                    nfe = nfe.max(out.nfe);
+        // Merge per job, in job-major shard order — deterministic
+        // regardless of which worker finished first. A panicked shard is
+        // re-raised here, strictly after the wait above: by then no
+        // worker holds any job pointer of the group.
+        let mut outs = Vec::with_capacity(jobs.len());
+        let mut cursor = 0usize;
+        for (j, job) in jobs.iter().enumerate() {
+            let k = job_shards[j];
+            let mut xs = Vec::with_capacity(job.n * job.proc.dim_x());
+            let mut us = Vec::with_capacity(job.n * job.proc.dim_u());
+            let mut nfe = 0usize;
+            for cell in slots[cursor..cursor + k].iter_mut() {
+                match cell.take().expect("engine: shard never executed") {
+                    Ok(out) => {
+                        xs.extend_from_slice(&out.xs);
+                        us.extend_from_slice(&out.us);
+                        nfe = nfe.max(out.nfe);
+                    }
+                    Err(msg) => panic!("engine: shard panicked: {msg}"),
                 }
-                Err(msg) => panic!("engine: shard panicked: {msg}"),
             }
+            cursor += k;
+            outs.push(SampleOutput { xs, us, nfe, traj: None });
         }
-        SampleOutput { xs, us, nfe, traj: None }
+        outs
     }
 }
 
@@ -395,7 +574,12 @@ impl Drop for Engine {
 /// Pool worker loop: pull shard tasks until the queue closes. Panics in
 /// sampler code are caught and parked in the result slot — a worker never
 /// dies mid-pool, and the panic resurfaces on the job's caller thread.
-fn pool_worker(rx: &Mutex<Receiver<ShardTask>>, metrics: &EngineMetrics, widx: usize) {
+fn pool_worker(
+    rx: &Mutex<Receiver<ShardTask>>,
+    metrics: &EngineMetrics,
+    sched: Option<&ScoreScheduler>,
+    widx: usize,
+) {
     loop {
         // Holding the lock across recv() is the single-consumer handoff:
         // exactly one idle worker waits on the channel, the rest queue on
@@ -405,13 +589,17 @@ fn pool_worker(rx: &Mutex<Receiver<ShardTask>>, metrics: &EngineMetrics, widx: u
             Err(_) => return,
         };
         metrics.queue_pop();
-        let ShardTask { job, idx, n, rng, batch } = task;
+        let ShardTask { job, idx, seq, shard, n, rng, batch } = task;
         let t0 = Instant::now();
+        // The guard's drop (normal or unwinding) is the scheduler's
+        // `task_finished` — and may itself drain pools whose shards were
+        // only waiting on this one to get out of the way.
+        let running = sched.map(StartGuard::new);
         let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
-            // SAFETY: `Engine::run` keeps the job alive until this shard
-            // (and all its siblings) are marked done below.
+            // SAFETY: `Engine::run_group` keeps the job alive until this
+            // shard (and all its group siblings) are marked done below.
             let job: &Job<'_> = unsafe { &*job.0 };
-            run_shard(job, n, rng)
+            run_shard(job, n, rng, sched, seq, shard)
         }))
         .map_err(|e| {
             e.downcast_ref::<&str>()
@@ -419,6 +607,7 @@ fn pool_worker(rx: &Mutex<Receiver<ShardTask>>, metrics: &EngineMetrics, widx: u
                 .or_else(|| e.downcast_ref::<String>().cloned())
                 .unwrap_or_else(|| "non-string panic payload".to_string())
         });
+        drop(running);
         metrics.busy_add(widx, t0.elapsed());
         metrics.shards.fetch_add(1, Ordering::Relaxed);
         {
@@ -434,16 +623,38 @@ fn pool_worker(rx: &Mutex<Receiver<ShardTask>>, metrics: &EngineMetrics, widx: u
 /// [`Sampler`] state machine step by step.
 ///
 /// The engine owns this loop (rather than calling [`Sampler::run`]) on
-/// purpose: every score evaluation of every sampler funnels through the
-/// `score` closure below, so a future scheduler can swap in a boundary
-/// that coalesces same-`t` requests across concurrent jobs without
-/// touching any sampler. With the plain [`model_score`] boundary the
-/// loop is byte-identical to `Sampler::run`.
-fn run_shard(job: &Job<'_>, n: usize, mut rng: Rng) -> SampleOutput {
+/// purpose: every score evaluation of every sampler funnels through one
+/// `score` closure, so the boundary can be swapped without touching any
+/// sampler. With `sched` absent that boundary is the plain
+/// [`model_score`] call and the loop is byte-identical to
+/// [`Sampler::run`]; with the cross-key [`ScoreScheduler`] present the
+/// shard *parks* each request in the `(model, t)` pool and receives
+/// exactly its slice of the pooled result — same bytes, fuller model
+/// batches.
+fn run_shard(
+    job: &Job<'_>,
+    n: usize,
+    mut rng: Rng,
+    sched: Option<&ScoreScheduler>,
+    seq: u64,
+    shard: usize,
+) -> SampleOutput {
     let mut state = job.sampler.init(job.proc, job.model, n, &mut rng, false);
-    let mut score = model_score(job.model);
-    for i in (1..=job.sampler.n_steps()).rev() {
-        state.step(i, &mut score, &mut rng);
+    match sched {
+        None => {
+            let mut score = model_score(job.model);
+            for i in (1..=job.sampler.n_steps()).rev() {
+                state.step(i, &mut score, &mut rng);
+            }
+        }
+        Some(sched) => {
+            let mut score = |req: ScoreRequest<'_>, out: &mut [f64]| {
+                sched.eval(seq, shard, job.model, req.t, req.u, out);
+            };
+            for i in (1..=job.sampler.n_steps()).rev() {
+                state.step(i, &mut score, &mut rng);
+            }
+        }
     }
     state.finish()
 }
@@ -465,6 +676,7 @@ fn send_sync_audit() {
     assert_send_sync::<SampleOutput>();
     assert_send_sync::<Engine>();
     assert_send_sync::<Job<'_>>();
+    assert_send_sync::<ScoreScheduler>();
     assert_send::<ShardTask>();
     assert_send::<dyn crate::samplers::SamplerState>();
 }
@@ -503,9 +715,14 @@ mod tests {
         // same bytes for the same seed.
         let (proc, _spec, oracle) = cld_setup();
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 15);
-        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
         let run = |workers: usize| {
-            let engine = Engine::with_config(EngineConfig { workers, shard_size: 128 });
+            let engine = Engine::with_config(EngineConfig {
+                workers,
+                shard_size: 128,
+                ..EngineConfig::default()
+            });
             engine.run(&Job {
                 proc: proc.as_ref(),
                 model: &oracle,
@@ -529,7 +746,11 @@ mod tests {
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 10);
         let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::stochastic(0.5));
         let run = |workers: usize| {
-            let engine = Engine::with_config(EngineConfig { workers, shard_size: 64 });
+            let engine = Engine::with_config(EngineConfig {
+                workers,
+                shard_size: 64,
+                ..EngineConfig::default()
+            });
             engine.run(&Job {
                 proc: proc.as_ref(),
                 model: &oracle,
@@ -547,8 +768,13 @@ mod tests {
         // distribution: FD must stay in the same band as a direct run.
         let (proc, spec, oracle) = cld_setup();
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 25);
-        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
-        let engine = Engine::with_config(EngineConfig { workers: 4, shard_size: 256 });
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+        let engine = Engine::with_config(EngineConfig {
+            workers: 4,
+            shard_size: 256,
+            ..EngineConfig::default()
+        });
         let out = engine.run(&Job {
             proc: proc.as_ref(),
             model: &oracle,
@@ -567,8 +793,13 @@ mod tests {
         // Two shards of the same job must not be copies of each other.
         let (proc, spec, oracle) = cld_setup();
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 8);
-        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
-        let engine = Engine::with_config(EngineConfig { workers: 2, shard_size: 32 });
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let engine = Engine::with_config(EngineConfig {
+            workers: 2,
+            shard_size: 32,
+            ..EngineConfig::default()
+        });
         let out = engine.run(&Job {
             proc: proc.as_ref(),
             model: &oracle,
@@ -585,7 +816,11 @@ mod tests {
     fn every_baseline_runs_through_the_engine() {
         let (proc, spec, oracle) = cld_setup();
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 12);
-        let engine = Engine::with_config(EngineConfig { workers: 2, shard_size: 16 });
+        let engine = Engine::with_config(EngineConfig {
+            workers: 2,
+            shard_size: 16,
+            ..EngineConfig::default()
+        });
         let samplers: Vec<Box<dyn Sampler + '_>> = vec![
             Box::new(Em { grid: &grid, lambda: 1.0 }),
             Box::new(Ancestral { grid: &grid }),
@@ -614,8 +849,13 @@ mod tests {
         let proc = Arc::new(Vpsde::standard(spec.d));
         let oracle = GmmOracle::new(proc.clone(), spec.clone(), KtKind::R);
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 5);
-        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
-        let engine = Engine::with_config(EngineConfig { workers: 16, shard_size: 512 });
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let engine = Engine::with_config(EngineConfig {
+            workers: 16,
+            shard_size: 512,
+            ..EngineConfig::default()
+        });
         let out = engine.run(&Job {
             proc: proc.as_ref(),
             model: &oracle,
@@ -631,7 +871,11 @@ mod tests {
         let (proc, _spec, oracle) = cld_setup();
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 5);
         for workers in [0usize, 1, 4] {
-            let engine = Engine::with_config(EngineConfig { workers, shard_size: 64 });
+            let engine = Engine::with_config(EngineConfig {
+                workers,
+                shard_size: 64,
+                ..EngineConfig::default()
+            });
             let out = engine.run(&Job {
                 proc: proc.as_ref(),
                 model: &oracle,
@@ -650,7 +894,11 @@ mod tests {
         let (proc, _spec, oracle) = cld_setup();
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 8);
         let run = |workers: usize| {
-            let engine = Engine::with_config(EngineConfig { workers, shard_size: 32 });
+            let engine = Engine::with_config(EngineConfig {
+                workers,
+                shard_size: 32,
+                ..EngineConfig::default()
+            });
             engine.run(&Job {
                 proc: proc.as_ref(),
                 model: &oracle,
@@ -669,13 +917,21 @@ mod tests {
         // Never-used pool: construct and drop. A shutdown bug (worker not
         // observing the closed queue) hangs this test rather than failing
         // an assert — that's the point.
-        let engine = Engine::with_config(EngineConfig { workers: 4, shard_size: 64 });
+        let engine = Engine::with_config(EngineConfig {
+            workers: 4,
+            shard_size: 64,
+            ..EngineConfig::default()
+        });
         drop(engine);
 
         // Used-then-idle pool: run a job, let the pool go idle, drop.
         let (proc, _spec, oracle) = cld_setup();
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 6);
-        let engine = Engine::with_config(EngineConfig { workers: 4, shard_size: 16 });
+        let engine = Engine::with_config(EngineConfig {
+            workers: 4,
+            shard_size: 16,
+            ..EngineConfig::default()
+        });
         let _ = engine.run(&Job {
             proc: proc.as_ref(),
             model: &oracle,
@@ -695,7 +951,8 @@ mod tests {
         // shard is lost, duplicated, or cross-wired between jobs.
         let (proc, _spec, oracle) = cld_setup();
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 6);
-        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
         let sampler = GddimDet { plan: &plan };
         let make_job = |seed: u64| Job {
             proc: proc.as_ref(),
@@ -704,12 +961,19 @@ mod tests {
             n: 40, // 5 shards of 8
             seed,
         };
-        let reference = Engine::with_config(EngineConfig { workers: 1, shard_size: 8 });
+        let reference = Engine::with_config(EngineConfig {
+            workers: 1,
+            shard_size: 8,
+            ..EngineConfig::default()
+        });
         let expected: Vec<Vec<f64>> =
             (0..100u64).map(|seed| reference.run(&make_job(seed)).xs).collect();
 
-        let shared =
-            Engine::with_config(EngineConfig { workers: test_workers(), shard_size: 8 });
+        let shared = Engine::with_config(EngineConfig {
+            workers: test_workers(),
+            shard_size: 8,
+            ..EngineConfig::default()
+        });
         std::thread::scope(|scope| {
             for caller in 0..4u64 {
                 let shared = &shared;
@@ -736,7 +1000,11 @@ mod tests {
     fn counters_track_jobs_shards_and_busy_time() {
         let (proc, _spec, oracle) = cld_setup();
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 8);
-        let engine = Engine::with_config(EngineConfig { workers: 2, shard_size: 16 });
+        let engine = Engine::with_config(EngineConfig {
+            workers: 2,
+            shard_size: 16,
+            ..EngineConfig::default()
+        });
         for seed in 0..3u64 {
             let _ = engine.run(&Job {
                 proc: proc.as_ref(),
@@ -755,5 +1023,215 @@ mod tests {
         assert!(s.busy_shares().iter().all(|b| (0.0..=1.0).contains(b)));
         let line = s.to_string();
         assert!(line.contains("jobs=3") && line.contains("shards=9"), "{line}");
+        assert!(!line.contains("score:"), "scheduler-off stats must not print score counters");
+    }
+
+    #[test]
+    fn run_group_matches_individual_runs_and_serves_empty_jobs() {
+        // Group plumbing alone (scheduler off): a group submission must
+        // produce exactly the bytes of one-by-one runs, empty members
+        // included, for inline and pooled engines alike.
+        let (proc, spec, oracle) = cld_setup();
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 8);
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+        let det = GddimDet { plan: &plan };
+        let anc = Ancestral { grid: &grid };
+        let jobs = [
+            Job { proc: proc.as_ref(), model: &oracle, sampler: &det, n: 70, seed: 1 },
+            Job { proc: proc.as_ref(), model: &oracle, sampler: &anc, n: 0, seed: 2 },
+            Job { proc: proc.as_ref(), model: &oracle, sampler: &anc, n: 33, seed: 3 },
+        ];
+        for workers in [1usize, 4] {
+            let engine = Engine::with_config(EngineConfig {
+                workers,
+                shard_size: 32,
+                ..EngineConfig::default()
+            });
+            let grouped = engine.run_group(&jobs);
+            assert_eq!(grouped.len(), 3);
+            assert!(grouped[1].xs.is_empty() && grouped[1].nfe == 0);
+            for (job, out) in jobs.iter().zip(&grouped) {
+                let solo = engine.run(job);
+                assert_eq!(out.xs, solo.xs, "grouped vs solo xs @ {workers} workers");
+                assert_eq!(out.us, solo.us, "grouped vs solo us @ {workers} workers");
+                assert_eq!(out.nfe, solo.nfe);
+                assert_eq!(out.xs.len(), job.n * spec.d);
+            }
+        }
+    }
+
+    #[test]
+    fn scheduler_on_is_bit_identical_for_single_jobs() {
+        // The core determinism contract at engine level: pooled score
+        // execution changes which rows share an eps_batch call, never
+        // any row's bytes — for every worker count.
+        let (proc, _spec, oracle) = cld_setup();
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 12);
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+        let run = |workers: usize, score_batch: usize| {
+            let engine = Engine::with_config(EngineConfig {
+                workers,
+                shard_size: 64,
+                score_batch,
+                score_wait: Duration::from_millis(100),
+            });
+            engine.run(&Job {
+                proc: proc.as_ref(),
+                model: &oracle,
+                sampler: &GddimDet { plan: &plan },
+                n: 300, // 5 shards, last one ragged
+                seed: 0xFEED,
+            })
+        };
+        let reference = run(1, 0);
+        for workers in [1usize, 2, 4] {
+            let pooled = run(workers, 4096);
+            assert_eq!(reference.xs, pooled.xs, "scheduler-on xs diverged @ {workers} workers");
+            assert_eq!(reference.us, pooled.us, "scheduler-on us diverged @ {workers} workers");
+            assert_eq!(reference.nfe, pooled.nfe);
+        }
+    }
+
+    #[test]
+    fn scheduler_coalesces_heterogeneous_jobs_and_preserves_bytes() {
+        // The cross-key acceptance test, built to be timing-independent:
+        // four jobs with *distinct* sampler configs (gDDIM orders 1–4)
+        // share one score model and one grid, so their evaluation-time
+        // sequences are identical. Submitted as one group to a 4-worker
+        // engine, the stall cut fires only when all four shards are
+        // parked at the same t — every drain pools all four jobs, and
+        // the model sees strictly fewer (and fuller) calls than the
+        // scheduler-off runs, at bit-identical outputs.
+        use crate::score::Counting;
+        let spec = presets::gmm2d();
+        let proc = Arc::new(Cld::standard(spec.d));
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 8);
+        let plans: Vec<SamplerPlan> = (1..=4)
+            .map(|q| {
+                SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(q, KtKind::R))
+            })
+            .collect();
+        let samplers: Vec<GddimDet<'_>> = plans.iter().map(|plan| GddimDet { plan }).collect();
+        fn jobs_for<'a>(
+            proc: &'a dyn Process,
+            model: &'a dyn ScoreModel,
+            samplers: &'a [GddimDet<'a>],
+        ) -> Vec<Job<'a>> {
+            samplers
+                .iter()
+                .enumerate()
+                .map(|(j, sampler)| Job {
+                    proc,
+                    model,
+                    sampler,
+                    n: 32, // one shard per job
+                    seed: 100 + j as u64,
+                })
+                .collect()
+        }
+
+        // Reference: scheduler off, jobs run one by one.
+        let off_model = Counting::new(GmmOracle::new(proc.clone(), spec.clone(), KtKind::R));
+        let off_engine = Engine::with_config(EngineConfig {
+            workers: 4,
+            shard_size: 32,
+            ..EngineConfig::default()
+        });
+        let off_jobs = jobs_for(proc.as_ref(), &off_model, &samplers);
+        let off_outs: Vec<SampleOutput> = off_jobs.iter().map(|j| off_engine.run(j)).collect();
+        let off_calls = off_model.calls();
+        assert_eq!(off_calls, 4 * 8, "4 jobs × (warm-up + 7 steps) unpooled calls");
+
+        // Scheduler on, same jobs as one group.
+        let on_model = Counting::new(GmmOracle::new(proc.clone(), spec.clone(), KtKind::R));
+        let on_engine = Engine::with_config(EngineConfig {
+            workers: 4,
+            shard_size: 32,
+            score_batch: 4096,
+            score_wait: Duration::from_secs(2),
+        });
+        let on_jobs = jobs_for(proc.as_ref(), &on_model, &samplers);
+        let on_outs = on_engine.run_group(&on_jobs);
+        let on_calls = on_model.calls();
+
+        for (j, (off, on)) in off_outs.iter().zip(&on_outs).enumerate() {
+            assert_eq!(off.xs, on.xs, "job {j}: pooled xs diverged");
+            assert_eq!(off.us, on.us, "job {j}: pooled us diverged");
+            assert_eq!(off.nfe, on.nfe, "job {j}: NFE must be unchanged by pooling");
+        }
+        assert!(
+            on_calls < off_calls,
+            "heterogeneous 4-key group must issue strictly fewer eps_batch calls \
+             with the scheduler on ({on_calls} vs {off_calls})"
+        );
+        assert!(on_calls >= 8, "pooling cannot drop below one call per shared t");
+        assert_eq!(on_model.rows(), off_model.rows(), "pooling must not change total rows");
+
+        let s = on_engine.stats();
+        assert_eq!(s.score_calls, on_calls, "engine stats must count the scheduler's calls");
+        assert!(s.coalesced_calls >= 1 && s.coalesced_keys >= 1, "{s:?}");
+        assert!(s.rows_per_call() > 32.0, "pooled fill must beat the 32-row shard");
+        let line = s.to_string();
+        assert!(line.contains("score: calls="), "{line}");
+    }
+
+    #[test]
+    fn scheduler_stress_many_jobs_bit_identical() {
+        // Router-style usage with the scheduler on: several caller
+        // threads hammer one engine with small same-key jobs, so drains
+        // constantly mix rows from different jobs. Every output must
+        // still be byte-equal to the single-threaded scheduler-off
+        // reference — which is only possible if pooled slices are routed
+        // back exactly and no request is lost, duplicated, or answered
+        // with a neighbour's rows.
+        let (proc, _spec, oracle) = cld_setup();
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 6);
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let sampler = GddimDet { plan: &plan };
+        let make_job = |seed: u64| Job {
+            proc: proc.as_ref(),
+            model: &oracle,
+            sampler: &sampler,
+            n: 40, // 5 shards of 8
+            seed,
+        };
+        let reference = Engine::with_config(EngineConfig {
+            workers: 1,
+            shard_size: 8,
+            ..EngineConfig::default()
+        });
+        let expected: Vec<Vec<f64>> =
+            (0..100u64).map(|seed| reference.run(&make_job(seed)).xs).collect();
+
+        let shared = Engine::with_config(EngineConfig {
+            workers: test_workers(),
+            shard_size: 8,
+            score_batch: 4096,
+            score_wait: Duration::from_micros(500),
+        });
+        std::thread::scope(|scope| {
+            for caller in 0..4u64 {
+                let shared = &shared;
+                let expected = &expected;
+                let make_job = &make_job;
+                scope.spawn(move || {
+                    for k in 0..25u64 {
+                        let seed = caller * 25 + k;
+                        let out = shared.run(&make_job(seed));
+                        assert_eq!(
+                            out.xs, expected[seed as usize],
+                            "job seed {seed} diverged under the pooled score boundary"
+                        );
+                    }
+                });
+            }
+        });
+        let stats = shared.stats();
+        assert_eq!(stats.jobs_run, 100);
+        assert_eq!(stats.shards_executed, 500, "every shard exactly once");
+        assert!(stats.score_calls > 0, "all score traffic must flow through the scheduler");
     }
 }

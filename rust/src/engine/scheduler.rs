@@ -1,0 +1,660 @@
+//! Cross-key score-batching scheduler.
+//!
+//! NFE — score-network evaluations — is *the* cost metric of gDDIM's
+//! accelerated samplers (as in DDIM before it), so serving throughput is
+//! decided by how full each [`ScoreModel::eps_batch`] call runs. The
+//! per-key batcher in `server::batcher` only coalesces requests whose
+//! `PlanKey`s are identical; heterogeneous small-request traffic
+//! therefore issues near-empty model calls. This module closes that gap
+//! at the layer below: shards of *different* jobs that evaluate the same
+//! model at the same diffusion time `t` pool their
+//! [`ScoreRequest`](crate::samplers::ScoreRequest)s into one
+//! `eps_batch` invocation.
+//!
+//! # How a request flows
+//!
+//! A shard driven by [`run_shard`](crate::engine) hands every score
+//! evaluation to [`ScoreScheduler::eval`], which **parks** the shard:
+//! the request joins the pool keyed by `(model identity, t bits)` and
+//! the worker thread blocks until some leader drains that pool. A pool
+//! is drained — all its requests concatenated into a single `eps_batch`
+//! call, the result sliced back to each parked shard — when one of
+//! three cuts fires, mirroring the `server::batcher` semantics:
+//!
+//! 1. **size**: the pool's accumulated rows reach `max_batch` (drained
+//!    by the request that crossed the threshold);
+//! 2. **stall**: every shard currently executing is parked and no idle
+//!    worker can start more (all pools drain — nothing new can arrive
+//!    until the parked shards are answered, so waiting longer is pure
+//!    latency). This is the common cut, and it is what makes the
+//!    coalescing *deterministic* for a fixed job group: shards advance
+//!    in lockstep, each drain pooling every in-flight same-`t` request;
+//! 3. **wait**: `max_wait` elapsed since the shard parked (it drains
+//!    its own pool). A pure liveness backstop — progress never depends
+//!    on another thread scheduling a drain.
+//!
+//! Stall detection needs the engine's admission picture, so the engine
+//! registers every shard: [`task_enqueued`](ScoreScheduler::task_enqueued)
+//! when a job (group) is submitted, [`task_started`](ScoreScheduler::task_started)
+//! when a worker picks the shard up, [`task_finished`](ScoreScheduler::task_finished)
+//! when it completes. All counts move under one lock, so the cut
+//! decision never races admission.
+//!
+//! # Determinism contract
+//!
+//! Pooled execution is **bit-identical** to unbatched execution:
+//!
+//! * entries drain in a deterministic order — a stable sort by
+//!   `(job sequence number, shard index)`, rows within a shard keeping
+//!   their submission order — and each entry receives exactly the slice
+//!   of the result that corresponds to its rows;
+//! * the contract requires [`ScoreModel::eps_batch`] to compute each row
+//!   independently of its batch-mates (true of the closed-form oracle
+//!   and of any pointwise network model), so *which* rows share a call
+//!   cannot change any row's bytes;
+//! * the scheduler draws no randomness and never reorders a shard's own
+//!   rows, so RNG streams are untouched.
+//!
+//! `rust/tests/sampler_parity.rs` locks this for every sampler spec and
+//! worker count.
+//!
+//! # Safety model
+//!
+//! Parked requests hold raw pointers to the caller's `u`/`out` buffers
+//! (and a lifetime-erased model reference). This is sound for the same
+//! reason as the engine's `JobPtr`: the parking thread blocks inside
+//! [`ScoreScheduler::eval`] until its `done` flag flips, and a leader
+//! stops touching an entry's buffers — and, for the model, every
+//! entry's job — strictly before flipping that entry's flag.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::score::model::ScoreModel;
+
+/// Scheduler tuning knobs (built by the engine from its
+/// [`EngineConfig`](crate::engine::EngineConfig)).
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Size cut: a pool whose accumulated rows reach this drains
+    /// immediately.
+    pub max_batch: usize,
+    /// Wait cut: the longest a parked shard waits before draining its
+    /// own pool (liveness backstop; the stall cut usually fires first).
+    pub max_wait: Duration,
+    /// Engine worker count, for stall detection (`>= 1`).
+    pub workers: usize,
+}
+
+/// Counter snapshot (see [`ScoreScheduler::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScoreStats {
+    /// `eps_batch` invocations issued by the scheduler.
+    pub calls: u64,
+    /// Total rows across those invocations (`rows / calls` = batch fill).
+    pub rows: u64,
+    /// Invocations that pooled more than one parked request.
+    pub coalesced_calls: u64,
+    /// Invocations that pooled requests from more than one job (engine
+    /// submission) — fill the per-key batcher could not see, whether
+    /// the jobs carried different `PlanKey`s or separate same-key cuts.
+    pub coalesced_keys: u64,
+}
+
+/// Per-request completion state the parked thread blocks on. `failure`
+/// carries the panic message of a drain whose `eps_batch` panicked:
+/// every affected owner re-raises on its own thread (each shard parks
+/// its own panic, exactly like a panic in its own sampler code) instead
+/// of hanging forever waiting for a result the dead call can no longer
+/// deliver. Routing the failure exclusively through the slots — never
+/// by unwinding out of the drain — is what keeps a drain executed from
+/// [`ScoreScheduler::task_finished`] (a worker's completion hook, which
+/// may run inside a `Drop` during unwinding) from killing the worker or
+/// aborting the process.
+#[derive(Default)]
+struct SlotState {
+    done: bool,
+    failure: Option<String>,
+}
+
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot { state: Mutex::new(SlotState::default()), cv: Condvar::new() }
+    }
+
+    /// Panic (joining the engine's shard-panic protocol) if the drain
+    /// that answered this slot died inside the model.
+    fn check(&self) {
+        let g = self.state.lock().unwrap();
+        debug_assert!(g.done, "slot checked before completion");
+        if let Some(msg) = &g.failure {
+            panic!("score scheduler: pooled eps_batch call panicked: {msg}");
+        }
+    }
+}
+
+/// One parked score request.
+///
+/// SAFETY contract (upheld by [`ScoreScheduler::eval`]): the pointers
+/// reference buffers owned by the parked thread's stack frame, which
+/// cannot unwind or return until the slot's `done` flag is set — and a
+/// leader sets it strictly after its last use of the pointers.
+struct Entry {
+    /// Engine-assigned job sequence number (primary drain-order key).
+    seq: u64,
+    /// Shard index within the job (secondary drain-order key).
+    shard: usize,
+    u: *const f64,
+    out: *mut f64,
+    len: usize,
+    slot: Arc<Slot>,
+}
+
+// SAFETY: the pointees are only dereferenced while the parked owner
+// blocks in `eval` (see `Entry`); the `Arc<Slot>` is Send on its own.
+unsafe impl Send for Entry {}
+
+/// All requests parked at one `(model, t)`, awaiting a drain.
+struct Pool {
+    /// Lifetime-erased model reference; valid while any entry is parked
+    /// (every entry's job borrows the same model object).
+    model: &'static dyn ScoreModel,
+    t: f64,
+    /// Accumulated rows (size-cut accounting + fill metrics).
+    rows: usize,
+    entries: Vec<Entry>,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// Shards admitted to the engine but not yet picked up by a worker.
+    queued: usize,
+    /// Shards currently held by a worker (running or parked).
+    running: usize,
+    /// Running shards blocked in a pool.
+    parked: usize,
+    /// Key: (thin model address, `t.to_bits()`).
+    pools: HashMap<(usize, u64), Pool>,
+}
+
+impl Inner {
+    /// No running shard can make progress without a drain, and no idle
+    /// worker can start one: every held shard is parked, and either
+    /// nothing is queued or every worker is occupied.
+    fn stalled(&self, workers: usize) -> bool {
+        self.parked > 0
+            && self.parked == self.running
+            && (self.queued == 0 || self.running >= workers)
+    }
+
+    fn detach_all(&mut self) -> Vec<Pool> {
+        let pools: Vec<Pool> = self.pools.drain().map(|(_, p)| p).collect();
+        for p in &pools {
+            self.parked -= p.entries.len();
+        }
+        pools
+    }
+}
+
+/// The cross-key score-batching scheduler. One per [`Engine`]; shared by
+/// every worker (and inline caller) of that engine.
+///
+/// [`Engine`]: crate::engine::Engine
+pub struct ScoreScheduler {
+    cfg: SchedulerConfig,
+    inner: Mutex<Inner>,
+    calls: AtomicU64,
+    rows: AtomicU64,
+    coalesced_calls: AtomicU64,
+    coalesced_keys: AtomicU64,
+}
+
+impl ScoreScheduler {
+    pub fn new(cfg: SchedulerConfig) -> ScoreScheduler {
+        ScoreScheduler {
+            cfg: SchedulerConfig {
+                workers: cfg.workers.max(1),
+                max_batch: cfg.max_batch.max(1),
+                ..cfg
+            },
+            inner: Mutex::new(Inner::default()),
+            calls: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            coalesced_calls: AtomicU64::new(0),
+            coalesced_keys: AtomicU64::new(0),
+        }
+    }
+
+    /// Snapshot the coalescing counters.
+    pub fn stats(&self) -> ScoreStats {
+        ScoreStats {
+            calls: self.calls.load(Ordering::Relaxed),
+            rows: self.rows.load(Ordering::Relaxed),
+            coalesced_calls: self.coalesced_calls.load(Ordering::Relaxed),
+            coalesced_keys: self.coalesced_keys.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Register `n` shards admitted to the engine (called *before* the
+    /// shards become visible to workers, so a stall can never be
+    /// declared while admitted work is invisible).
+    pub fn task_enqueued(&self, n: usize) {
+        self.inner.lock().unwrap().queued += n;
+    }
+
+    /// A worker picked a shard up.
+    pub fn task_started(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.queued -= 1;
+        g.running += 1;
+    }
+
+    /// A shard completed (normally or by panic). May fire the stall cut:
+    /// with this shard gone, the remaining running shards may all be
+    /// parked — they are drained here, on the finishing thread, rather
+    /// than waiting out `max_wait`.
+    pub fn task_finished(&self) {
+        let drains = {
+            let mut g = self.inner.lock().unwrap();
+            g.running -= 1;
+            if g.stalled(self.cfg.workers) { g.detach_all() } else { Vec::new() }
+        };
+        if !drains.is_empty() {
+            self.execute(drains);
+        }
+    }
+
+    /// Evaluate `ε_θ(u, t)` through the pooling boundary: park the
+    /// request in the `(model, t)` pool and block until a drain answers
+    /// it. `seq`/`shard` order the request inside a pooled call.
+    pub fn eval(
+        &self,
+        seq: u64,
+        shard: usize,
+        model: &dyn ScoreModel,
+        t: f64,
+        u: &[f64],
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(u.len(), out.len(), "score request and output must have equal shapes");
+        let rows = u.len() / model.dim_u().max(1);
+        let key = ((model as *const dyn ScoreModel).cast::<()>() as usize, t.to_bits());
+        // SAFETY: lifetime erasure only — the reference is used solely
+        // inside a drain, before any of the pool's entries (whose jobs
+        // all borrow this model) are marked done. See the module docs.
+        let model_static: &'static dyn ScoreModel =
+            unsafe { std::mem::transmute::<&dyn ScoreModel, &'static dyn ScoreModel>(model) };
+        let slot = Arc::new(Slot::new());
+        let drains = {
+            let mut g = self.inner.lock().unwrap();
+            g.parked += 1;
+            let pool = g.pools.entry(key).or_insert_with(|| Pool {
+                model: model_static,
+                t,
+                rows: 0,
+                entries: Vec::new(),
+            });
+            pool.rows += rows;
+            pool.entries.push(Entry {
+                seq,
+                shard,
+                u: u.as_ptr(),
+                out: out.as_mut_ptr(),
+                len: u.len(),
+                slot: Arc::clone(&slot),
+            });
+            if pool.rows >= self.cfg.max_batch {
+                let p = g.pools.remove(&key).expect("pool touched above");
+                g.parked -= p.entries.len();
+                vec![p]
+            } else if g.stalled(self.cfg.workers) {
+                g.detach_all()
+            } else {
+                Vec::new()
+            }
+        };
+        if !drains.is_empty() {
+            // We are the leader, and our own request is in the drained
+            // set (size cut = our pool, stall cut = every pool).
+            self.execute(drains);
+            slot.check();
+            return;
+        }
+        self.park(key, &slot);
+        slot.check();
+    }
+
+    /// Block until `slot` is answered; after `max_wait` without an
+    /// answer, self-drain our pool (liveness backstop). The caller
+    /// checks the slot's failure flag after this returns.
+    fn park(&self, key: (usize, u64), slot: &Arc<Slot>) {
+        let mut deadline = Instant::now() + self.cfg.max_wait;
+        loop {
+            {
+                let mut state = slot.state.lock().unwrap();
+                loop {
+                    if state.done {
+                        return;
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (g, _timeout) = slot.cv.wait_timeout(state, deadline - now).unwrap();
+                    state = g;
+                }
+            }
+            // Timed out. Self-drain our pool if we are still in it; if
+            // the pool is gone (or replaced by a newer generation), a
+            // leader holds our entry detached and the answer is
+            // imminent — re-arm and wait again.
+            let pool = {
+                let mut g = self.inner.lock().unwrap();
+                let ours = g
+                    .pools
+                    .get(&key)
+                    .is_some_and(|p| p.entries.iter().any(|e| Arc::ptr_eq(&e.slot, slot)));
+                if ours {
+                    let p = g.pools.remove(&key).expect("checked above");
+                    g.parked -= p.entries.len();
+                    Some(p)
+                } else {
+                    None
+                }
+            };
+            match pool {
+                Some(p) => {
+                    self.execute(vec![p]);
+                    return;
+                }
+                None => deadline = Instant::now() + self.cfg.max_wait,
+            }
+        }
+    }
+
+    /// Drain detached pools in deterministic order: entries by
+    /// `(seq, shard)` within each pool, pools by their lead entry.
+    ///
+    /// Never panics: a pool whose model call dies marks its own entries
+    /// failed (see [`SlotState`]) and the remaining pools still drain —
+    /// otherwise a stall drain dying on pool 1 would orphan pools 2…n
+    /// (gone from the map, never woken).
+    fn execute(&self, mut pools: Vec<Pool>) {
+        pools.retain(|p| !p.entries.is_empty());
+        for p in pools.iter_mut() {
+            p.entries.sort_by_key(|e| (e.seq, e.shard));
+        }
+        pools.sort_by_key(|p| (p.entries[0].seq, p.entries[0].shard, p.t.to_bits()));
+        for pool in pools {
+            self.execute_pool(pool);
+        }
+    }
+
+    /// One pooled `eps_batch` call: gather inputs (in drain order), call
+    /// the model once, scatter the result, then wake every parked owner.
+    ///
+    /// A panic inside the model must not orphan the detached entries —
+    /// their owners would wait forever on a drain nobody can deliver.
+    /// The call runs under `catch_unwind`; every entry is woken either
+    /// way, a failure carrying the panic message so each affected owner
+    /// re-raises on its own thread (the engine's shard-panic protocol).
+    /// The panic is **not** re-thrown here: a drain may run on a thread
+    /// with no request of its own (`task_finished`, possibly inside a
+    /// `Drop` during unwinding), where an escaping panic would kill a
+    /// pool worker or abort the process.
+    fn execute_pool(&self, pool: Pool) {
+        let Pool { model, t, rows, entries } = pool;
+        if entries.is_empty() {
+            return;
+        }
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if entries.len() == 1 {
+                // Solo drain: evaluate straight into the caller's
+                // buffers, exactly like the unscheduled path (no
+                // gather/scatter).
+                let e = &entries[0];
+                // SAFETY: the parked owner blocks until `done`; see
+                // `Entry`.
+                let (u, out) = unsafe {
+                    (
+                        std::slice::from_raw_parts(e.u, e.len),
+                        std::slice::from_raw_parts_mut(e.out, e.len),
+                    )
+                };
+                model.eps_batch(t, u, out);
+            } else {
+                self.coalesced_calls.fetch_add(1, Ordering::Relaxed);
+                if entries.windows(2).any(|w| w[0].seq != w[1].seq) {
+                    self.coalesced_keys.fetch_add(1, Ordering::Relaxed);
+                }
+                let total: usize = entries.iter().map(|e| e.len).sum();
+                let mut us = Vec::with_capacity(total);
+                for e in &entries {
+                    // SAFETY: owner parked until `done` (see `Entry`).
+                    us.extend_from_slice(unsafe { std::slice::from_raw_parts(e.u, e.len) });
+                }
+                let mut eps = vec![0.0; total];
+                model.eps_batch(t, &us, &mut eps);
+                let mut off = 0usize;
+                for e in &entries {
+                    // SAFETY: owner parked until `done` (see `Entry`).
+                    let dst = unsafe { std::slice::from_raw_parts_mut(e.out, e.len) };
+                    dst.copy_from_slice(&eps[off..off + e.len]);
+                    off += e.len;
+                }
+            }
+        }));
+        let failure = outcome.err().map(|e| {
+            e.downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| e.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string())
+        });
+        // Wake strictly last: once an entry's flag flips, its buffers —
+        // and with them the job's model borrow — may die with the owner.
+        for e in &entries {
+            let mut g = e.slot.state.lock().unwrap();
+            g.done = true;
+            g.failure.clone_from(&failure);
+            drop(g);
+            e.slot.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diffusion::process::KtKind;
+
+    /// Records every `eps_batch` input and answers `out = 2·u`, so tests
+    /// can check both drain order and slice routing.
+    struct Recorder {
+        d: usize,
+        seen: Mutex<Vec<(f64, Vec<f64>)>>,
+    }
+
+    impl Recorder {
+        fn new(d: usize) -> Recorder {
+            Recorder { d, seen: Mutex::new(Vec::new()) }
+        }
+    }
+
+    impl ScoreModel for Recorder {
+        fn dim_u(&self) -> usize {
+            self.d
+        }
+
+        fn kt_kind(&self) -> KtKind {
+            KtKind::R
+        }
+
+        fn eps_batch(&self, t: f64, us: &[f64], out: &mut [f64]) {
+            self.seen.lock().unwrap().push((t, us.to_vec()));
+            for (o, u) in out.iter_mut().zip(us) {
+                *o = 2.0 * u;
+            }
+        }
+    }
+
+    fn worker_eval(
+        sched: &ScoreScheduler,
+        model: &dyn ScoreModel,
+        seq: u64,
+        t: f64,
+        u: Vec<f64>,
+    ) -> Vec<f64> {
+        // Emulate the engine's registration protocol around one eval.
+        sched.task_started();
+        let mut out = vec![0.0; u.len()];
+        sched.eval(seq, 0, model, t, &u, &mut out);
+        sched.task_finished();
+        out
+    }
+
+    #[test]
+    fn same_t_requests_coalesce_into_one_call_in_seq_order() {
+        let sched = ScoreScheduler::new(SchedulerConfig {
+            max_batch: 1024,
+            max_wait: Duration::from_secs(5),
+            workers: 2,
+        });
+        let model = Recorder::new(1);
+        sched.task_enqueued(2);
+        let (a, b) = std::thread::scope(|s| {
+            // Higher seq submitted first: drain order must still be 3, 7.
+            let ha = s.spawn(|| worker_eval(&sched, &model, 7, 0.5, vec![70.0, 71.0]));
+            let hb = s.spawn(|| worker_eval(&sched, &model, 3, 0.5, vec![30.0]));
+            (ha.join().unwrap(), hb.join().unwrap())
+        });
+        assert_eq!(a, vec![140.0, 142.0], "seq 7 rows answered in place");
+        assert_eq!(b, vec![60.0], "seq 3 rows answered in place");
+        let seen = model.seen.lock().unwrap();
+        assert_eq!(seen.len(), 1, "two same-t requests must share one eps_batch call");
+        assert_eq!(seen[0].1, vec![30.0, 70.0, 71.0], "gather order is (seq, shard)");
+        let s = sched.stats();
+        assert_eq!((s.calls, s.coalesced_calls, s.coalesced_keys), (1, 1, 1));
+        assert_eq!(s.rows, 3);
+    }
+
+    #[test]
+    fn lone_parked_request_self_drains_after_max_wait() {
+        // One shard parks while a second runs (never parking): no stall,
+        // so the wait cut must answer the parked one by itself.
+        let sched = ScoreScheduler::new(SchedulerConfig {
+            max_batch: 1024,
+            max_wait: Duration::from_millis(10),
+            workers: 4,
+        });
+        let model = Recorder::new(1);
+        sched.task_enqueued(2);
+        let out = std::thread::scope(|s| {
+            let slow = s.spawn(|| {
+                // A running-but-never-parking sibling.
+                sched.task_started();
+                std::thread::sleep(Duration::from_millis(200));
+                sched.task_finished();
+            });
+            let parked = s.spawn(|| worker_eval(&sched, &model, 1, 0.25, vec![5.0]));
+            let out = parked.join().unwrap();
+            slow.join().unwrap();
+            out
+        });
+        assert_eq!(out, vec![10.0]);
+        let s = sched.stats();
+        assert_eq!(s.calls, 1);
+        assert_eq!(s.coalesced_calls, 0, "a self-drain is a solo call");
+    }
+
+    #[test]
+    fn size_cut_fires_without_waiting() {
+        // max_batch = 2 rows: the second same-t request triggers an
+        // immediate drain even though a third shard keeps running.
+        let sched = ScoreScheduler::new(SchedulerConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(5),
+            workers: 4,
+        });
+        let model = Recorder::new(1);
+        sched.task_enqueued(3);
+        std::thread::scope(|s| {
+            let busy = s.spawn(|| {
+                sched.task_started();
+                std::thread::sleep(Duration::from_millis(100));
+                sched.task_finished();
+            });
+            let ha = s.spawn(|| worker_eval(&sched, &model, 1, 0.5, vec![1.0]));
+            let hb = s.spawn(|| worker_eval(&sched, &model, 2, 0.5, vec![2.0]));
+            assert_eq!(ha.join().unwrap(), vec![2.0]);
+            assert_eq!(hb.join().unwrap(), vec![4.0]);
+            busy.join().unwrap();
+        });
+        assert_eq!(sched.stats().calls, 1, "size cut must not wait for the busy shard");
+    }
+
+    #[test]
+    fn model_panic_wakes_every_parked_shard_with_a_panic() {
+        // A drain leader dying inside eps_batch must not orphan the
+        // other parked shards: everyone is woken with a failure set and
+        // re-raises on its own thread (the engine's shard-panic
+        // protocol), instead of hanging forever.
+        struct Exploder;
+
+        impl ScoreModel for Exploder {
+            fn dim_u(&self) -> usize {
+                1
+            }
+
+            fn kt_kind(&self) -> KtKind {
+                KtKind::R
+            }
+
+            fn eps_batch(&self, _t: f64, _us: &[f64], _out: &mut [f64]) {
+                panic!("synthetic model failure");
+            }
+        }
+
+        let sched = ScoreScheduler::new(SchedulerConfig {
+            max_batch: 1024,
+            max_wait: Duration::from_secs(5),
+            workers: 2,
+        });
+        let model = Exploder;
+        sched.task_enqueued(2);
+        std::thread::scope(|s| {
+            let ha = s.spawn(|| worker_eval(&sched, &model, 1, 0.5, vec![1.0]));
+            let hb = s.spawn(|| worker_eval(&sched, &model, 2, 0.5, vec![2.0]));
+            assert!(ha.join().is_err(), "leader must re-raise the model panic");
+            assert!(hb.join().is_err(), "parked follower must re-raise, not hang");
+        });
+    }
+
+    #[test]
+    fn distinct_t_requests_stay_in_distinct_calls() {
+        let sched = ScoreScheduler::new(SchedulerConfig {
+            max_batch: 1024,
+            max_wait: Duration::from_secs(5),
+            workers: 2,
+        });
+        let model = Recorder::new(1);
+        sched.task_enqueued(2);
+        std::thread::scope(|s| {
+            let ha = s.spawn(|| worker_eval(&sched, &model, 1, 0.25, vec![1.0]));
+            let hb = s.spawn(|| worker_eval(&sched, &model, 2, 0.75, vec![2.0]));
+            assert_eq!(ha.join().unwrap(), vec![2.0]);
+            assert_eq!(hb.join().unwrap(), vec![4.0]);
+        });
+        let s = sched.stats();
+        assert_eq!(s.calls, 2, "different t must never share an eps_batch call");
+        assert_eq!(s.coalesced_calls, 0);
+    }
+}

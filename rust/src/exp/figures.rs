@@ -108,10 +108,7 @@ pub fn fig4(args: &Args) {
     // trait objects must not default to 'static.
     type Runner<'a> = Box<dyn Fn(usize) -> crate::samplers::common::SampleOutput + 'a>;
     let rows: Vec<(String, Runner<'_>)> = vec![
-        (
-            "Euler (prob-flow)".into(),
-            Box::new(|nfe| run_em(&s, 0.0, nfe, n, 81)),
-        ),
+        ("Euler (prob-flow)".into(), Box::new(|nfe| run_em(&s, 0.0, nfe, n, 81))),
         ("EI, K=L".into(), Box::new(|nfe| run_gddim(&s, KtKind::L, 1, nfe, false, n, 81))),
         ("EI, K=R (gDDIM)".into(), Box::new(|nfe| run_gddim(&s, KtKind::R, 1, nfe, false, n, 81))),
     ];

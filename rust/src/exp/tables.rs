@@ -77,8 +77,12 @@ pub fn table3(args: &Args) {
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new("Table 3: FD under different NFE", &header_refs);
 
-    let cases: [(&str, &str, usize); 3] =
-        [("vpsde", dataset_2d.as_str(), n2), ("bdm", img.as_str(), nimg), ("cld", dataset_2d.as_str(), n2)];
+    let cases: [(&str, &str, usize); 3] = [
+        ("vpsde", dataset_2d.as_str(), n2),
+        ("bdm", img.as_str(), nimg),
+        ("cld", dataset_2d.as_str(), n2),
+    ];
+
     for (proc, dataset, n) in cases {
         let s = setup(proc, dataset);
         let dm = match proc {
@@ -225,5 +229,11 @@ pub fn nll(args: &Args) {
 /// Coverage diagnostic used by fig4 and the quickstart.
 pub fn coverage_line(xs: &[f64], spec: &crate::data::gmm::GmmSpec) -> String {
     let c = coverage(xs, spec);
-    format!("missing {}/{} modes, chi2 {:.1}, outliers {:.3}", c.missing, spec.n_modes(), c.chi2, c.outliers)
+    format!(
+        "missing {}/{} modes, chi2 {:.1}, outliers {:.3}",
+        c.missing,
+        spec.n_modes(),
+        c.chi2,
+        c.outliers
+    )
 }

@@ -15,7 +15,7 @@ use gddim::data::presets;
 use gddim::diffusion::process::KtKind;
 use gddim::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
 use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
-use gddim::engine::{Engine, Job};
+use gddim::engine::{Engine, EngineConfig, Job};
 use gddim::metrics::coverage::coverage;
 use gddim::metrics::frechet::frechet_to_spec;
 use gddim::samplers::{OrderedF64, SamplerSpec};
@@ -42,11 +42,14 @@ fn main() {
                  \u{20}                        (or full spec grammar, e.g. \"em:lambda=0.5\")\n\
                  \u{20}              --nfe N --q Q --kt R|L --lambda L --rtol R --n N --seed S --corrector\n\
                  \u{20}              --workers W   (persistent engine pool size)\n\
+                 \u{20}              --score-batch N --score-wait MICROS   (cross-key score pooling)\n\
                  serve flags:  --workers W --dispatchers D --requests R --samples S --rate RPS\n\
                  \u{20}              --samplers SPEC+SPEC+.. --plan-cache-dir DIR\n\
+                 \u{20}              --score-batch N (0 = off) --score-wait MICROS\n\
                  workload flags: --rates R1,R2,.. (or --rate R) --slo-ms M --poisson\n\
                  \u{20}                --requests R --samples S --nfe N --workers W --dispatchers D\n\
-                 \u{20}                --samplers SPEC+SPEC+.. --plan-cache-dir DIR"
+                 \u{20}                --samplers SPEC+SPEC+.. --plan-cache-dir DIR\n\
+                 \u{20}                --score-batch N (0 = off) --score-wait MICROS"
             );
         }
     }
@@ -156,6 +159,12 @@ fn sample(args: &Args) {
     let n = args.get_usize("n", 2000);
     let seed = args.get_u64("seed", 0);
     let workers = args.get_usize("workers", 1);
+    // Cross-key score batching: off by default for the one-shot CLI.
+    // Pooling needs concurrent shards, i.e. `--workers >= 2` — on the
+    // inline engine the scheduler only adds per-eval overhead. Output
+    // is bit-identical either way.
+    let score_batch = args.get_usize("score-batch", 0);
+    let score_wait = std::time::Duration::from_micros(args.get_u64("score-wait", 200));
 
     // One owned spec drives everything: validation, Stage-I plan
     // construction, oracle parameterization, and the engine job. All
@@ -172,7 +181,12 @@ fn sample(args: &Args) {
     };
     let oracle = GmmOracle::new(proc.clone(), spec.clone(), sampler_spec.model_kt());
     let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), nfe);
-    let engine = Engine::new(workers);
+    let engine = Engine::with_config(EngineConfig {
+        workers,
+        score_batch,
+        score_wait,
+        ..EngineConfig::default()
+    });
 
     let t0 = std::time::Instant::now();
     let plan = sampler_spec

@@ -20,7 +20,13 @@ pub struct UniformTable {
 
 impl UniformTable {
     /// Tabulate `f` at `n+1` uniformly spaced points on [t0, t1].
-    pub fn build<F: FnMut(f64, &mut [f64])>(t0: f64, t1: f64, n: usize, k: usize, mut f: F) -> Self {
+    pub fn build<F: FnMut(f64, &mut [f64])>(
+        t0: f64,
+        t1: f64,
+        n: usize,
+        k: usize,
+        mut f: F,
+    ) -> Self {
         assert!(n >= 1 && t1 > t0);
         let dt = (t1 - t0) / n as f64;
         let mut values = Vec::with_capacity(n + 1);

@@ -96,7 +96,10 @@ impl Mat2 {
     /// Principal square root of a symmetric positive-(semi)definite matrix:
     /// `sqrt(M) = (M + √det · I) / √(tr + 2√det)`.
     pub fn sqrtm_spd(&self) -> Mat2 {
-        debug_assert!((self.b - self.c).abs() <= 1e-9 * (1.0 + self.max_abs()), "sqrtm_spd: not symmetric: {self:?}");
+        debug_assert!(
+            (self.b - self.c).abs() <= 1e-9 * (1.0 + self.max_abs()),
+            "sqrtm_spd: not symmetric: {self:?}"
+        );
         let tau = self.det().max(0.0).sqrt();
         let denom = (self.trace() + 2.0 * tau).max(0.0).sqrt();
         if denom < 1e-300 {

@@ -200,7 +200,8 @@ mod tests {
     #[test]
     fn rk4_exponential_decay() {
         let mut y = vec![1.0];
-        rk4_integrate(&mut |_t: f64, y: &[f64], dy: &mut [f64]| dy[0] = -y[0], 0.0, 1.0, 100, &mut y);
+        let mut f = |_t: f64, y: &[f64], dy: &mut [f64]| dy[0] = -y[0];
+        rk4_integrate(&mut f, 0.0, 1.0, 100, &mut y);
         assert!(close(y[0], (-1.0f64).exp(), 1e-9, 0.0), "{}", y[0]);
     }
 

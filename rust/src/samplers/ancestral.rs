@@ -52,12 +52,7 @@ fn build_steps(proc: &dyn Process, grid: &TimeGrid, kt: crate::diffusion::KtKind
             let cov = sig_t.sub(&gain.matmul(&a).matmul(&sig_t));
             // Defensive symmetrization before factoring.
             let cov = cov.add(&cov.transpose()).scale(0.5);
-            StepOps {
-                mean_z,
-                gain,
-                kt: proc.kt(kt, s),
-                noise: cov.sqrt_spd(),
-            }
+            StepOps { mean_z, gain, kt: proc.kt(kt, s), noise: cov.sqrt_spd() }
         })
         .collect()
 }

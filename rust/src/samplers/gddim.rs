@@ -279,7 +279,8 @@ mod tests {
         };
         let oracle = GmmOracle::new(proc.clone(), spec, KtKind::R);
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 1);
-        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
         let mut rng = Rng::seed_from(100);
         let out = sample_deterministic(proc.as_ref(), &plan, &oracle, 64, &mut rng, false);
         assert_eq!(out.nfe, 1);
@@ -305,7 +306,8 @@ mod tests {
         };
         let oracle = GmmOracle::new(proc.clone(), spec, KtKind::R);
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 2);
-        let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
         let mut rng = Rng::seed_from(101);
         let out = sample_deterministic(proc.as_ref(), &plan, &oracle, 64, &mut rng, false);
         for row in out.xs.chunks_exact(1) {
@@ -348,7 +350,8 @@ mod tests {
         let proc = Arc::new(Vpsde::standard(2));
         let oracle = GmmOracle::new(proc.clone(), presets::gmm2d(), KtKind::R);
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 10);
-        let det = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
+        let det =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
         let sto = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::stochastic(1e-6));
         let mut rng_a = Rng::seed_from(9);
         let a = sample_deterministic(proc.as_ref(), &det, &oracle, 8, &mut rng_a, false);

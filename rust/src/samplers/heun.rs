@@ -161,8 +161,16 @@ mod tests {
         let mut r1 = Rng::seed_from(52);
         let heun = sample_heun(proc.as_ref(), &oracle, &grid, 1_500, &mut r1);
         let mut r2 = Rng::seed_from(52);
-        let euler =
-            crate::samplers::em::sample_em(proc.as_ref(), &oracle, &grid, 0.0, 1_500, &mut r2, false);
+        let euler = crate::samplers::em::sample_em(
+            proc.as_ref(),
+            &oracle,
+            &grid,
+            0.0,
+            1_500,
+            &mut r2,
+            false,
+        );
+
         let fh = frechet_to_spec(&heun.xs, &spec);
         let fe = frechet_to_spec(&euler.xs, &spec);
         assert!(fh < fe, "Heun {fh} should beat Euler {fe} on the same grid");

@@ -271,9 +271,7 @@ impl SamplerSpec {
                         seen.push("corrector");
                     }
                     _ => {
-                        return Err(Error::msg(format!(
-                            "unknown sampler option `{item}` in `{s}`"
-                        )))
+                        return Err(Error::msg(format!("unknown sampler option `{item}` in `{s}`")))
                     }
                 }
             }

@@ -1,0 +1,107 @@
+//! Call-counting [`ScoreModel`] wrapper.
+//!
+//! NFE is the paper's cost metric, and the serving stack's whole point
+//! is issuing *fewer, fuller* `eps_batch` calls — so tests and benches
+//! need a way to observe exactly how many model invocations a
+//! configuration produced, independent of which model backs it.
+//! [`Counting`] wraps any [`ScoreModel`] and counts invocations and
+//! rows; `rows / calls` is the realized batch fill. It is the
+//! instrument behind the scheduler's coalescing-efficiency tests (a
+//! heterogeneous key mix must issue strictly fewer calls with the
+//! cross-key scheduler on than off, at bit-identical outputs).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::diffusion::process::KtKind;
+use crate::score::model::ScoreModel;
+
+/// A transparent [`ScoreModel`] wrapper counting `eps_batch` calls and
+/// rows. The counters are atomic: the wrapper is freely shared across
+/// engine workers.
+pub struct Counting<M> {
+    inner: M,
+    calls: AtomicU64,
+    rows: AtomicU64,
+}
+
+impl<M: ScoreModel> Counting<M> {
+    pub fn new(inner: M) -> Counting<M> {
+        Counting { inner, calls: AtomicU64::new(0), rows: AtomicU64::new(0) }
+    }
+
+    /// `eps_batch` invocations observed so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::SeqCst)
+    }
+
+    /// Rows evaluated across all invocations.
+    pub fn rows(&self) -> u64 {
+        self.rows.load(Ordering::SeqCst)
+    }
+
+    /// Mean rows per invocation — the realized batch fill (0 when idle).
+    pub fn rows_per_call(&self) -> f64 {
+        let calls = self.calls();
+        if calls == 0 { 0.0 } else { self.rows() as f64 / calls as f64 }
+    }
+
+    pub fn reset(&self) {
+        self.calls.store(0, Ordering::SeqCst);
+        self.rows.store(0, Ordering::SeqCst);
+    }
+
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+}
+
+impl<M: ScoreModel> ScoreModel for Counting<M> {
+    fn dim_u(&self) -> usize {
+        self.inner.dim_u()
+    }
+
+    fn kt_kind(&self) -> KtKind {
+        self.inner.kt_kind()
+    }
+
+    fn eps_batch(&self, t: f64, us: &[f64], out: &mut [f64]) {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.rows.fetch_add((us.len() / self.inner.dim_u().max(1)) as u64, Ordering::SeqCst);
+        self.inner.eps_batch(t, us, out);
+    }
+
+    fn describe(&self) -> String {
+        format!("counting({})", self.inner.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::presets;
+    use crate::diffusion::{Cld, Process};
+    use crate::score::oracle::GmmOracle;
+    use std::sync::Arc;
+
+    #[test]
+    fn counts_calls_and_rows_transparently() {
+        let proc = Arc::new(Cld::standard(2));
+        let oracle = GmmOracle::new(proc.clone(), presets::gmm2d(), KtKind::R);
+        let counted = Counting::new(GmmOracle::new(proc.clone(), presets::gmm2d(), KtKind::R));
+        let us: Vec<f64> = (0..12).map(|i| 0.1 * i as f64).collect(); // 3 rows of dim 4
+        let mut a = vec![0.0; 12];
+        let mut b = vec![0.0; 12];
+        oracle.eps_batch(0.4, &us, &mut a);
+        counted.eps_batch(0.4, &us, &mut b);
+        assert_eq!(a, b, "the wrapper must be numerically transparent");
+        assert_eq!(counted.calls(), 1);
+        assert_eq!(counted.rows(), 3);
+        let mut c = vec![0.0; 4];
+        counted.eps_batch(0.4, &us[..4], &mut c);
+        assert_eq!((counted.calls(), counted.rows()), (2, 4));
+        assert!((counted.rows_per_call() - 2.0).abs() < 1e-12);
+        assert!(counted.describe().starts_with("counting("));
+        counted.reset();
+        assert_eq!((counted.calls(), counted.rows()), (0, 0));
+    }
+}

@@ -10,8 +10,10 @@
 //! * `runtime::net::NetScore` (behind the `pjrt` cargo feature) — a
 //!   JAX/Pallas-trained network AOT-compiled to HLO, executed via PJRT.
 
+pub mod counting;
 pub mod oracle;
 pub mod model;
 
+pub use counting::Counting;
 pub use model::ScoreModel;
 pub use oracle::GmmOracle;

@@ -16,6 +16,13 @@ pub trait ScoreModel: Send + Sync {
     fn kt_kind(&self) -> KtKind;
 
     /// Evaluate ε for a batch of states at one shared time `t`.
+    ///
+    /// Contract: each row of `out` must depend only on the matching row
+    /// of `us` (and `t`), never on its batch-mates. The cross-key score
+    /// scheduler ([`crate::engine::scheduler`]) relies on this to
+    /// concatenate rows from several shards into one call and slice the
+    /// result back bit-identically; it holds for the closed-form oracle
+    /// and for any pointwise network model.
     fn eps_batch(&self, t: f64, us: &[f64], out: &mut [f64]);
 
     /// Convenience single-state evaluation.

@@ -23,9 +23,12 @@ use crate::score::model::ScoreModel;
 
 /// Cached per-`t` quantities (the oracle is called many times at the same
 /// grid times; recomputing the 2×2/diag algebra is cheap but the lifted
-/// means are O(M·D)).
+/// means are O(M·D)). Keyed by `t` bits in a read-mostly map: one oracle
+/// is now shared across every `PlanKey` that agrees on
+/// `(process, dataset, K_t)` — including keys with different grids — so
+/// a single-slot cache would thrash between interleaved grids, and a
+/// plain mutex would serialize all keys' evaluations.
 struct TimeCache {
-    t: f64,
     /// L_C⁻¹ with C = L_C L_Cᵀ.
     l_inv: LinOp,
     /// C⁻¹ = L_C⁻ᵀ L_C⁻¹.
@@ -41,9 +44,13 @@ pub struct GmmOracle {
     pub proc: Arc<dyn Process>,
     pub spec: GmmSpec,
     pub kt: KtKind,
-    cache: std::sync::Mutex<Option<Arc<TimeCache>>>,
+    cache: std::sync::RwLock<std::collections::HashMap<u64, Arc<TimeCache>>>,
     /// Number of ε evaluations served (batch counts once per row).
     pub calls: std::sync::atomic::AtomicU64,
+    /// Number of `eps_batch` invocations (a batch counts once).
+    /// `calls / batch_calls` is the realized batch fill — the quantity
+    /// the cross-key score scheduler exists to raise.
+    pub batch_calls: std::sync::atomic::AtomicU64,
 }
 
 impl GmmOracle {
@@ -53,18 +60,17 @@ impl GmmOracle {
             proc,
             spec,
             kt,
-            cache: std::sync::Mutex::new(None),
+            cache: std::sync::RwLock::new(std::collections::HashMap::new()),
             calls: std::sync::atomic::AtomicU64::new(0),
+            batch_calls: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
     fn cache_for(&self, t: f64) -> Arc<TimeCache> {
         {
-            let g = self.cache.lock().unwrap();
-            if let Some(c) = g.as_ref() {
-                if c.t == t {
-                    return c.clone();
-                }
+            let g = self.cache.read().unwrap();
+            if let Some(c) = g.get(&t.to_bits()) {
+                return c.clone();
             }
         }
         let du = self.proc.dim_u();
@@ -85,9 +91,16 @@ impl GmmOracle {
             psi0.apply(&lifted, &mut tmp);
             mus.extend_from_slice(&tmp);
         }
-        let cache = Arc::new(TimeCache { t, l_inv, c_inv, neg_kt_t, mus });
-        *self.cache.lock().unwrap() = Some(cache.clone());
-        cache
+        let cache = Arc::new(TimeCache { l_inv, c_inv, neg_kt_t, mus });
+        let mut g = self.cache.write().unwrap();
+        // Bound the map: grid samplers touch a few dozen t's, but RK45's
+        // adaptive stepping can mint unboundedly many distinct times
+        // over a long-lived shared oracle. A rare wholesale clear is
+        // cheaper than an eviction policy here.
+        if g.len() >= 1024 {
+            g.clear();
+        }
+        g.entry(t.to_bits()).or_insert(cache).clone()
     }
 
     /// Exact score `∇log p_t(u)` for a single state.
@@ -214,6 +227,7 @@ impl ScoreModel for GmmOracle {
         assert_eq!(us.len() % du, 0);
         let n = us.len() / du;
         self.calls.fetch_add(n as u64, std::sync::atomic::Ordering::Relaxed);
+        self.batch_calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let cache = self.cache_for(t);
         let mut score = vec![0.0; du];
         for (row_in, row_out) in us.chunks_exact(du).zip(out.chunks_exact_mut(du)) {
@@ -347,5 +361,10 @@ mod tests {
             let single = o.eps(0.3, &us[i * 4..(i + 1) * 4]);
             crate::math::assert_allclose(&out[i * 4..(i + 1) * 4], &single, 1e-13, 1e-13, "batch");
         }
+        use std::sync::atomic::Ordering;
+        // Counter semantics: `calls` is rows, `batch_calls` invocations
+        // (1 batched call + 3 singles above = 4 invocations, 6 rows).
+        assert_eq!(o.calls.load(Ordering::Relaxed), 6);
+        assert_eq!(o.batch_calls.load(Ordering::Relaxed), 4);
     }
 }

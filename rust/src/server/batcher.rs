@@ -160,7 +160,8 @@ mod tests {
     fn size_cut_counts_samples_not_requests() {
         // Coalescing is by accumulated *samples*: 3 requests of 4 cross a
         // max_batch of 10 (the threshold request is included in the cut).
-        let mut q = KeyQueue::new(BatcherConfig { max_batch: 10, max_wait: Duration::from_secs(9) });
+        let mut q =
+            KeyQueue::new(BatcherConfig { max_batch: 10, max_wait: Duration::from_secs(9) });
         q.push(env(0, 4));
         q.push(env(1, 4));
         assert!(!q.ready(Instant::now()), "8 < 10: not ready");
@@ -175,7 +176,8 @@ mod tests {
     fn partial_cuts_keep_sample_accounting_consistent() {
         // After a partial cut the remaining queue must still fire a size
         // cut at the same threshold — i.e. queued_samples tracks pops.
-        let mut q = KeyQueue::new(BatcherConfig { max_batch: 80, max_wait: Duration::from_secs(9) });
+        let mut q =
+            KeyQueue::new(BatcherConfig { max_batch: 80, max_wait: Duration::from_secs(9) });
         for i in 0..6 {
             q.push(env(i, 40)); // 240 samples queued
         }

@@ -4,7 +4,7 @@
 
 use std::time::Duration;
 
-use crate::engine::Engine;
+use crate::engine::{Engine, EngineConfig};
 use crate::server::batcher::BatcherConfig;
 use crate::server::request::GenRequest;
 use crate::server::router::{oracle_factory, Router, RouterConfig};
@@ -32,13 +32,25 @@ pub fn run(args: &Args) {
         }
     };
 
+    // Cross-key score batching: on by default for the serving demo
+    // (`--score-batch 0` restores the direct-call engine). With it on,
+    // dispatchers admit all ready keys as one engine group and same-`t`
+    // score requests pool across keys — the stats line below shows the
+    // realized fill (`rows/call`) and cross-key coalescing counters.
+    let score_batch = args.get_usize("score-batch", 4096);
+    let score_wait = Duration::from_micros(args.get_u64("score-wait", 200));
     let router = Router::with_options(
         RouterConfig {
             dispatchers,
             plan_cache_capacity: args.get_usize("plan-cache", 64),
             plan_cache_dir: args.get("plan-cache-dir").map(std::path::PathBuf::from),
         },
-        Engine::new(workers),
+        Engine::with_config(EngineConfig {
+            workers,
+            score_batch,
+            score_wait,
+            ..EngineConfig::default()
+        }),
         BatcherConfig {
             max_batch: args.get_usize("max-batch", 4096),
             max_wait: Duration::from_millis(max_wait_ms),

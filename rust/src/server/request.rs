@@ -37,12 +37,7 @@ pub struct PlanKey {
 
 impl PlanKey {
     pub fn new(process: &str, dataset: &str, spec: SamplerSpec, nfe: usize) -> PlanKey {
-        PlanKey {
-            process: process.to_string(),
-            dataset: dataset.to_string(),
-            spec,
-            nfe,
-        }
+        PlanKey { process: process.to_string(), dataset: dataset.to_string(), spec, nfe }
     }
 
     /// Deterministic gDDIM with the crate defaults (the historical
@@ -87,7 +82,8 @@ impl PlanKey {
         let field = |k: &str| j.get(k).ok_or_else(|| Error::msg(format!("PlanKey: missing `{k}`")));
         let process = field("process")?.as_str().ok_or("PlanKey: process not a string")?;
         let dataset = field("dataset")?.as_str().ok_or("PlanKey: dataset not a string")?;
-        let spec = SamplerSpec::parse(field("spec")?.as_str().ok_or("PlanKey: spec not a string")?)?;
+        let spec =
+            SamplerSpec::parse(field("spec")?.as_str().ok_or("PlanKey: spec not a string")?)?;
         let nfe = field("nfe")?.as_usize().ok_or("PlanKey: nfe not a number")?;
         Ok(PlanKey::new(process, dataset, spec, nfe))
     }
@@ -171,12 +167,7 @@ mod tests {
                 50,
             ),
             PlanKey::new("cld", "hard2d", SamplerSpec::Sscs, 25),
-            PlanKey::new(
-                "bdm",
-                "blobs8",
-                SamplerSpec::Rk45 { rtol: OrderedF64::new(3.7e-5) },
-                1,
-            ),
+            PlanKey::new("bdm", "blobs8", SamplerSpec::Rk45 { rtol: OrderedF64::new(3.7e-5) }, 1),
         ];
         for key in keys {
             let j = key.to_json();
@@ -198,7 +189,8 @@ mod tests {
 
     #[test]
     fn cache_file_names_distinguish_close_lambdas() {
-        let a = PlanKey::new("cld", "gmm2d", SamplerSpec::Em { lambda: OrderedF64::new(0.0001) }, 10);
+        let a =
+            PlanKey::new("cld", "gmm2d", SamplerSpec::Em { lambda: OrderedF64::new(0.0001) }, 10);
         let b = PlanKey::new("cld", "gmm2d", SamplerSpec::Em { lambda: OrderedF64::new(0.0) }, 10);
         assert_ne!(a.cache_file_name(), b.cache_file_name());
         assert!(a.cache_file_name().ends_with(".json"));

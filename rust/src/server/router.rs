@@ -1,11 +1,19 @@
 //! Request router + dispatch pool + sharded execution engine.
 //!
 //! `submit()` enqueues into the per-key [`KeyQueue`]; dispatcher threads
-//! scan for ready queues (size or deadline cut), hand each cut batch to
-//! the shared [`Engine`] — which shards it across its own worker pool —
+//! scan for ready queues (size or deadline cut), hand the cut batches to
+//! the shared [`Engine`] — which shards them across its own worker pool —
 //! and fan results back out to the per-request reply channels. Stage-I
 //! plans and score models are built once per key and cached
 //! ([`Prepared`]), so steady-state request cost is pure Stage-II.
+//!
+//! When the engine's cross-key score scheduler is enabled
+//! ([`EngineConfig::score_batch`](crate::engine::EngineConfig)), a
+//! dispatcher cuts *every* ready key in one scan and admits the batches
+//! as one [`Engine::run_group`] submission: heterogeneous `PlanKey`s
+//! execute together and their same-`t` score requests pool into shared
+//! `eps_batch` calls (see [`crate::engine::scheduler`]). With the
+//! scheduler off, dispatch is the historical one-key-per-scan loop.
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
@@ -16,9 +24,10 @@ use std::time::{Duration, Instant};
 
 use crate::coeffs::plan::SamplerPlan;
 use crate::data::presets;
+use crate::diffusion::process::KtKind;
 use crate::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
 use crate::engine::{Engine, Job};
-use crate::samplers::{Sampler, SamplerSpec};
+use crate::samplers::{SampleOutput, Sampler, SamplerSpec};
 use crate::score::model::ScoreModel;
 use crate::score::oracle::GmmOracle;
 use crate::server::batcher::{BatcherConfig, KeyQueue};
@@ -59,8 +68,18 @@ pub type PreparedFactory =
 /// (preloaded or built), grid samplers just the grid. Unknown
 /// processes/datasets come back as errors (answered per request), not
 /// panics.
+///
+/// Keys that agree on `(process, dataset, K_t)` share **one**
+/// [`GmmOracle`] instance (the factory memoizes them): the engine's
+/// cross-key score scheduler pools requests by model identity, so
+/// heterogeneous sampler specs over the same marginals can only fill one
+/// another's `eps_batch` calls if they hold the same model object. The
+/// memo is bounded by the preset catalogue (a few dozen combinations at
+/// most), so it needs no eviction.
 pub fn oracle_factory() -> Box<PreparedFactory> {
-    Box::new(|key: &PlanKey, preloaded: Option<Arc<SamplerPlan>>| {
+    let models: Mutex<HashMap<(String, String, KtKind), Arc<dyn ScoreModel>>> =
+        Mutex::new(HashMap::new());
+    Box::new(move |key: &PlanKey, preloaded: Option<Arc<SamplerPlan>>| {
         let spec = presets::by_name(&key.dataset)
             .ok_or_else(|| crate::Error::msg(format!("unknown dataset `{}`", key.dataset)))?;
         let proc: Arc<dyn Process> = match key.process.as_str() {
@@ -75,8 +94,18 @@ pub fn oracle_factory() -> Box<PreparedFactory> {
             }
         };
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), key.nfe);
-        let model: Arc<dyn ScoreModel> =
-            Arc::new(GmmOracle::new(proc.clone(), spec.clone(), key.spec.model_kt()));
+        let kt = key.spec.model_kt();
+        let model: Arc<dyn ScoreModel> = {
+            let mut cache = models.lock().unwrap();
+            cache
+                .entry((key.process.clone(), key.dataset.clone(), kt))
+                .or_insert_with(|| {
+                    let built: Arc<dyn ScoreModel> =
+                        Arc::new(GmmOracle::new(proc.clone(), spec.clone(), kt));
+                    built
+                })
+                .clone()
+        };
         let plan = match preloaded {
             Some(p) if key.spec.matches_plan(&p) && p.n_steps() == key.nfe => Some(p),
             _ => key
@@ -274,22 +303,36 @@ impl Drop for Router {
 }
 
 fn worker_loop(sh: Arc<Shared>) {
+    // With the engine's cross-key score scheduler on, a dispatcher cuts
+    // *every* ready key in one scan and submits the cuts as one engine
+    // group — heterogeneous `PlanKey`s in one `run_group` admission, so
+    // their same-`t` score calls can pool from the first evaluation.
+    // With the scheduler off, the historical one-key-per-scan dispatch
+    // (and its latency profile) is preserved exactly.
+    let group_admission = sh.engine.score_batching();
     loop {
-        // Find (or wait for) a ready queue.
-        let batch = {
+        // Find (or wait for) ready queues.
+        let batches: Vec<Vec<Envelope>> = {
             let mut qs = sh.queues.lock().unwrap();
             loop {
                 if sh.stop.load(Ordering::SeqCst) {
                     return;
                 }
                 let now = Instant::now();
-                let ready_key = qs
-                    .iter()
-                    .filter(|(_, q)| q.ready(now))
-                    .map(|(k, _)| k.clone())
-                    .next();
-                if let Some(key) = ready_key {
-                    break qs.get_mut(&key).unwrap().cut();
+                let ready: Vec<PlanKey> = if group_admission {
+                    qs.iter().filter(|(_, q)| q.ready(now)).map(|(k, _)| k.clone()).collect()
+                } else {
+                    // One key per scan, found without cloning the rest —
+                    // the historical hot path, allocation profile intact.
+                    let first = qs.iter().find(|(_, q)| q.ready(now)).map(|(k, _)| k.clone());
+                    first.into_iter().collect()
+                };
+                if !ready.is_empty() {
+                    break ready
+                        .into_iter()
+                        .map(|key| qs.get_mut(&key).unwrap().cut())
+                        .filter(|b| !b.is_empty())
+                        .collect();
                 }
                 // Sleep briefly (deadline granularity) or until notified.
                 let (guard, _timeout) =
@@ -297,10 +340,10 @@ fn worker_loop(sh: Arc<Shared>) {
                 qs = guard;
             }
         };
-        if batch.is_empty() {
+        if batches.is_empty() {
             continue;
         }
-        execute_batch(&sh, batch);
+        execute_group(&sh, batches);
     }
 }
 
@@ -392,85 +435,129 @@ fn warm_plan_cache(sh: &Shared, dir: &Path) {
     }
 }
 
-fn execute_batch(sh: &Shared, batch: Vec<Envelope>) {
-    // The queueing/service split is measured here: everything before
-    // `t_exec` is queueing (batcher wait + dispatcher pickup), everything
-    // after — plan lookup/build + engine run — is service.
+/// Execute one admission group: one cut batch per key, run as a single
+/// engine [`Engine::run_group`] submission (the scheduler-on path hands
+/// heterogeneous keys to the engine together; the scheduler-off path
+/// always has exactly one batch here, preserving the historical
+/// behavior byte for byte).
+///
+/// The queueing/service split is measured here: everything before
+/// `t_exec` is queueing (batcher wait + dispatcher pickup), everything
+/// after — plan lookup/build + engine run — is service. Grouped batches
+/// share one service window (their shards share the engine), so a
+/// request's reported service latency includes its group siblings'
+/// execution — and, on a cold cache, their Stage-I builds. In steady
+/// state plans are cache hits (the workload probes warm every key up
+/// front), so this mainly matters for cold-start measurements.
+fn execute_group(sh: &Shared, batches: Vec<Vec<Envelope>>) {
     let t_exec = Instant::now();
-    let key = batch[0].req.key.clone();
-    // A factory rejection (unknown process/dataset for *this* factory,
-    // failed model load, …) is answered per request — the dispatcher
-    // survives and unrelated keys are unaffected.
-    let prep = match prepared_for(sh, &key) {
-        Ok(p) => p,
-        Err(e) => {
-            let msg = e.to_string();
-            for env in batch {
-                let _ = env.reply.send(GenResponse::rejected(env.req.id, msg.clone()));
-            }
-            return;
+    let reject = |batch: Vec<Envelope>, msg: &str| {
+        for env in batch {
+            let _ = env.reply.send(GenResponse::rejected(env.req.id, msg.to_string()));
         }
     };
-    let total_n: usize = batch.iter().map(|e| e.req.n).sum();
-    // Batch seed: a deterministic fold of the member requests' seeds, so
-    // identical traffic replays identically; the engine derives per-shard
-    // streams from it.
-    let seed = batch.iter().fold(0xBA7C4 ^ total_n as u64, |acc, e| {
-        acc.wrapping_mul(0x100000001B3).wrapping_add(e.req.seed)
-    });
+
+    // Admission: resolve each batch's Prepared state. A factory
+    // rejection (unknown process/dataset for *this* factory, failed
+    // model load, …) is answered per request — the dispatcher survives
+    // and sibling batches are unaffected.
+    struct Admitted {
+        batch: Vec<Envelope>,
+        prep: Arc<Prepared>,
+        total_n: usize,
+        seed: u64,
+    }
+    let mut admitted: Vec<Admitted> = Vec::with_capacity(batches.len());
+    for batch in batches {
+        let key = batch[0].req.key.clone();
+        let prep = match prepared_for(sh, &key) {
+            Ok(p) => p,
+            Err(e) => {
+                reject(batch, &e.to_string());
+                continue;
+            }
+        };
+        let total_n: usize = batch.iter().map(|e| e.req.n).sum();
+        // Batch seed: a deterministic fold of the member requests' seeds,
+        // so identical traffic replays identically; the engine derives
+        // per-shard streams from it.
+        let seed = batch.iter().fold(0xBA7C4 ^ total_n as u64, |acc, e| {
+            acc.wrapping_mul(0x100000001B3).wrapping_add(e.req.seed)
+        });
+        admitted.push(Admitted { batch, prep, total_n, seed });
+    }
 
     // Uniform construction path: any SamplerSpec variant becomes a trait
     // object the engine drives. Submit-time validation makes a failure
     // here a defensive branch (e.g. a custom factory dropping the plan),
-    // answered per-request instead of panicking the dispatcher.
-    let sampler = match prep.sampler(&key.spec) {
-        Ok(s) => s,
-        Err(e) => {
-            let msg = e.to_string();
-            for env in batch {
-                let _ = env.reply.send(GenResponse::rejected(env.req.id, msg.clone()));
-            }
-            return;
+    // answered per-request instead of panicking the dispatcher. The
+    // boxes borrow `admitted`'s Prepared Arcs, so errors are extracted
+    // first and the failed indices answered after the group runs.
+    let samplers: Vec<crate::Result<Box<dyn Sampler + '_>>> =
+        admitted.iter().map(|a| a.prep.sampler(&a.batch[0].req.key.spec)).collect();
+    let errs: Vec<Option<String>> =
+        samplers.iter().map(|r| r.as_ref().err().map(|e| e.to_string())).collect();
+    let mut jobs: Vec<Job<'_>> = Vec::with_capacity(admitted.len());
+    let mut job_of: Vec<Option<usize>> = vec![None; admitted.len()];
+    for (i, built) in samplers.iter().enumerate() {
+        if let Ok(sampler) = built {
+            job_of[i] = Some(jobs.len());
+            let a = &admitted[i];
+            jobs.push(Job {
+                proc: a.prep.proc.as_ref(),
+                model: a.prep.model.as_ref(),
+                sampler: sampler.as_ref(),
+                n: a.total_n,
+                seed: a.seed,
+            });
         }
+    }
+    let mut outs: Vec<Option<SampleOutput>> = if jobs.is_empty() {
+        Vec::new()
+    } else {
+        sh.engine.run_group(&jobs).into_iter().map(Some).collect()
     };
-    let out = sh.engine.run(&Job {
-        proc: prep.proc.as_ref(),
-        model: prep.model.as_ref(),
-        sampler: sampler.as_ref(),
-        n: total_n,
-        seed,
-    });
+    drop(jobs);
+    drop(samplers);
 
     // Record metrics *before* fanning out responses: a client that has
     // received its response must observe it in the counters.
     let now = Instant::now();
     let service = now.duration_since(t_exec).as_secs_f64();
-    let n_requests = batch.len();
-    let queue_lats: Vec<f64> = batch
-        .iter()
-        .map(|env| t_exec.duration_since(env.enqueued).as_secs_f64())
-        .collect();
-    let latencies: Vec<f64> = queue_lats.iter().map(|q| q + service).collect();
-    sh.metrics.record_batch(n_requests, total_n, out.nfe, &latencies);
+    for (i, a) in admitted.into_iter().enumerate() {
+        let Admitted { batch, prep, total_n, .. } = a;
+        let Some(j) = job_of[i] else {
+            reject(batch, errs[i].as_deref().unwrap_or("sampler construction failed"));
+            continue;
+        };
+        let out = outs[j].take().expect("one engine output per admitted job");
+        let n_requests = batch.len();
+        let queue_lats: Vec<f64> = batch
+            .iter()
+            .map(|env| t_exec.duration_since(env.enqueued).as_secs_f64())
+            .collect();
+        let latencies: Vec<f64> = queue_lats.iter().map(|q| q + service).collect();
+        sh.metrics.record_batch(n_requests, total_n, out.nfe, &latencies);
 
-    // Fan out per-request slices.
-    let dim_x = prep.dim_x;
-    let mut offset = 0usize;
-    for (env, queue_latency) in batch.into_iter().zip(queue_lats) {
-        let n = env.req.n;
-        let xs = out.xs[offset * dim_x..(offset + n) * dim_x].to_vec();
-        offset += n;
-        let _ = env.reply.send(GenResponse {
-            id: env.req.id,
-            xs,
-            dim_x,
-            nfe: out.nfe,
-            latency: queue_latency + service,
-            queue_latency,
-            service_latency: service,
-            batch_size: n_requests,
-            error: None,
-        });
+        // Fan out per-request slices.
+        let dim_x = prep.dim_x;
+        let mut offset = 0usize;
+        for (env, queue_latency) in batch.into_iter().zip(queue_lats) {
+            let n = env.req.n;
+            let xs = out.xs[offset * dim_x..(offset + n) * dim_x].to_vec();
+            offset += n;
+            let _ = env.reply.send(GenResponse {
+                id: env.req.id,
+                xs,
+                dim_x,
+                nfe: out.nfe,
+                latency: queue_latency + service,
+                queue_latency,
+                service_latency: service,
+                batch_size: n_requests,
+                error: None,
+            });
+        }
     }
 }
 
@@ -537,7 +624,7 @@ mod tests {
         use crate::engine::EngineConfig;
         let router = Router::with_engine(
             1,
-            Engine::with_config(EngineConfig { workers: 4, shard_size: 64 }),
+            Engine::with_config(EngineConfig { workers: 4, shard_size: 64, ..Default::default() }),
             BatcherConfig::default(),
             oracle_factory(),
         );
@@ -596,7 +683,7 @@ mod tests {
         use crate::engine::EngineConfig;
         let router = Router::with_engine(
             1,
-            Engine::with_config(EngineConfig { workers: 2, shard_size: 32 }),
+            Engine::with_config(EngineConfig { workers: 2, shard_size: 32, ..Default::default() }),
             BatcherConfig::default(),
             oracle_factory(),
         );
@@ -697,6 +784,63 @@ mod tests {
         assert!(third.plan_cache_contains(&key));
         third.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn heterogeneous_keys_are_bit_identical_with_scheduler_on_and_off() {
+        use crate::engine::EngineConfig;
+        use crate::samplers::{OrderedF64, SamplerSpec};
+        // One request per key: each batch holds exactly that request, so
+        // the batch seed — and therefore the engine output — is
+        // deterministic and comparable across router configurations.
+        let keys: Vec<PlanKey> = vec![
+            PlanKey::gddim("cld", "gmm2d", 6, 1),
+            PlanKey::gddim("cld", "gmm2d", 6, 2),
+            PlanKey::gddim("cld", "gmm2d", 6, 3),
+            PlanKey::new("cld", "gmm2d", SamplerSpec::Em { lambda: OrderedF64::new(0.0) }, 6),
+        ];
+        let run = |score_batch: usize| -> Vec<Vec<f64>> {
+            let router = Router::with_engine(
+                2,
+                Engine::with_config(EngineConfig {
+                    workers: 4,
+                    shard_size: 64,
+                    score_batch,
+                    score_wait: Duration::from_millis(20),
+                }),
+                BatcherConfig { max_batch: 4096, max_wait: Duration::from_millis(10) },
+                oracle_factory(),
+            );
+            let rxs: Vec<_> = keys
+                .iter()
+                .enumerate()
+                .map(|(id, key)| {
+                    router.submit(GenRequest {
+                        id: id as u64,
+                        n: 24,
+                        key: key.clone(),
+                        seed: 7 + id as u64,
+                    })
+                })
+                .collect();
+            let outs: Vec<Vec<f64>> = rxs
+                .into_iter()
+                .map(|rx| {
+                    let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+                    assert!(resp.error.is_none(), "{:?}", resp.error);
+                    assert_eq!(resp.xs.len(), 24 * 2);
+                    resp.xs
+                })
+                .collect();
+            if score_batch > 0 {
+                let e = router.report().engine.expect("engine stats ride the report");
+                assert!(e.score_calls > 0, "scheduler-on traffic must flow through the pool");
+                assert!(e.score_rows >= e.score_calls);
+            }
+            router.shutdown();
+            outs
+        };
+        assert_eq!(run(0), run(4096), "grouped + pooled admission must not change any byte");
     }
 
     #[test]

@@ -298,17 +298,20 @@ pub struct SloSweep {
 /// land on the first arrivals — App. C.3), drive the run, tear the
 /// router down. The per-rate harness shared by `gddim workload` and
 /// `cargo bench --bench serving`; returns the open-loop report plus the
-/// router's combined server+engine metrics.
+/// router's combined server+engine metrics. `ecfg` carries the full
+/// engine configuration — in particular `score_batch`/`score_wait`,
+/// which turn on the cross-key score scheduler (and with it grouped
+/// multi-key admission in the router).
 pub fn open_loop_probe(
     rcfg: crate::server::router::RouterConfig,
-    engine_workers: usize,
+    ecfg: crate::engine::EngineConfig,
     bcfg: crate::server::batcher::BatcherConfig,
     spec: WorkloadSpec,
     poisson: bool,
 ) -> (OpenLoopReport, crate::server::metrics::MetricsReport) {
     let router = Router::with_options(
         rcfg,
-        Engine::new(engine_workers),
+        Engine::with_config(ecfg),
         bcfg,
         crate::server::router::oracle_factory(),
     );
@@ -418,6 +421,10 @@ pub fn run_cli(args: &crate::util::cli::Args) {
     let seed = args.get_u64("seed", 0);
     let poisson = args.has("poisson");
     let samplers = args.get_or("samplers", "gddim:q=2");
+    // Cross-key score batching (the engine's scheduler): on by default
+    // for the serving CLIs — `--score-batch 0` turns it off.
+    let score_batch = args.get_usize("score-batch", 4096);
+    let score_wait = Duration::from_micros(args.get_u64("score-wait", 200));
     let rates: Vec<f64> = match args.get("rates") {
         Some(list) => list
             .split(',')
@@ -426,12 +433,13 @@ pub fn run_cli(args: &crate::util::cli::Args) {
         None => vec![args.get_f64("rate", 200.0)],
     };
 
+    use crate::engine::EngineConfig;
     use crate::server::batcher::BatcherConfig;
     use crate::server::router::RouterConfig;
 
     println!(
         "open-loop workload: {} requests × {} samples, NFE {}, {} workers, {} dispatchers, \
-         samplers [{}], SLO p99 ≤ {:.0}ms, arrivals {}",
+         samplers [{}], SLO p99 ≤ {:.0}ms, arrivals {}, score-batch {}",
         n_requests,
         samples,
         nfe,
@@ -440,6 +448,7 @@ pub fn run_cli(args: &crate::util::cli::Args) {
         samplers,
         slo_ms,
         if poisson { "poisson" } else { "uniform" },
+        if score_batch > 0 { score_batch.to_string() } else { "off".to_string() },
     );
     let keys = match cli_key_mix(&samplers, "gmm2d", nfe) {
         Ok(k) => k,
@@ -455,7 +464,7 @@ pub fn run_cli(args: &crate::util::cli::Args) {
                 plan_cache_capacity: args.get_usize("plan-cache", 64),
                 plan_cache_dir: args.get("plan-cache-dir").map(std::path::PathBuf::from),
             },
-            workers,
+            EngineConfig { workers, score_batch, score_wait, ..EngineConfig::default() },
             BatcherConfig {
                 max_batch: args.get_usize("max-batch", 4096),
                 max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 5)),

@@ -54,8 +54,15 @@ fn sampling_is_reproducible() {
     let plan = SamplerPlan::build(p.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
     let run = || {
         let mut rng = Rng::seed_from(42);
-        gddim::samplers::gddim::sample_deterministic(p.as_ref(), &plan, &oracle, 64, &mut rng, false)
-            .xs
+        gddim::samplers::gddim::sample_deterministic(
+            p.as_ref(),
+            &plan,
+            &oracle,
+            64,
+            &mut rng,
+            false,
+        )
+        .xs
     };
     assert_eq!(run(), run());
 }
@@ -123,7 +130,8 @@ fn engine_is_worker_count_invariant() {
     let plan = SamplerPlan::build(p.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
     let sampler = GddimDet { plan: &plan };
     let run = |workers: usize| {
-        Engine::with_config(EngineConfig { workers, shard_size: 128 }).run(&Job {
+        let cfg = EngineConfig { workers, shard_size: 128, ..EngineConfig::default() };
+        Engine::with_config(cfg).run(&Job {
             proc: p.as_ref(),
             model: &oracle,
             sampler: &sampler,
@@ -151,7 +159,11 @@ fn persistent_pool_is_stateless_across_jobs() {
     let oracle = GmmOracle::new(p.clone(), spec, KtKind::R);
     let grid = TimeGrid::uniform(p.t_min(), p.t_max(), 8);
     let plan = SamplerPlan::build(p.as_ref(), &grid, &PlanConfig::deterministic(1, KtKind::R));
-    let pooled = Engine::with_config(EngineConfig { workers: test_workers(), shard_size: 64 });
+    let pooled = Engine::with_config(EngineConfig {
+        workers: test_workers(),
+        shard_size: 64,
+        ..EngineConfig::default()
+    });
     let sampler = GddimDet { plan: &plan };
     for seed in 0..12u64 {
         let make = || Job {
@@ -161,7 +173,8 @@ fn persistent_pool_is_stateless_across_jobs() {
             n: 200,
             seed,
         };
-        let fresh = Engine::with_config(EngineConfig { workers: 1, shard_size: 64 });
+        let fresh =
+            Engine::with_config(EngineConfig { workers: 1, shard_size: 64, ..Default::default() });
         assert_eq!(
             pooled.run(&make()).xs,
             fresh.run(&make()).xs,
@@ -187,9 +200,14 @@ fn gddim_and_ancestral_agree_on_the_mean() {
             _ => Arc::new(Cld::standard(spec.d)),
         };
         let oracle = GmmOracle::new(p.clone(), spec.clone(), KtKind::R);
-        let engine = Engine::with_config(EngineConfig { workers: 2, shard_size: 1024 });
+        let engine = Engine::with_config(EngineConfig {
+            workers: 2,
+            shard_size: 1024,
+            ..EngineConfig::default()
+        });
         let grid_g = TimeGrid::uniform(p.t_min(), p.t_max(), 30);
-        let plan = SamplerPlan::build(p.as_ref(), &grid_g, &PlanConfig::deterministic(2, KtKind::R));
+        let plan =
+            SamplerPlan::build(p.as_ref(), &grid_g, &PlanConfig::deterministic(2, KtKind::R));
         let out_gddim = engine.run(&Job {
             proc: p.as_ref(),
             model: &oracle,

@@ -9,7 +9,10 @@
 //! 2. driving the state machine by hand through the `ScoreRequest`
 //!    boundary — the engine's per-shard loop — matches `Sampler::run`;
 //! 3. the engine's merged output is worker-count invariant for every
-//!    sampler (the old suite only covered gDDIM + ancestral).
+//!    sampler (the old suite only covered gDDIM + ancestral);
+//! 4. the cross-key score scheduler (`score_batch > 0`) is bit-identical
+//!    to the direct-call path for every sampler and worker count — the
+//!    pooled `eps_batch` frontier may regroup rows, never change them.
 //!
 //! Plus: the trait objects are Send/Sync (they cross pool threads), the
 //! router serves every `SamplerSpec` variant end-to-end on vpsde/blobs8
@@ -85,7 +88,13 @@ fn step_drive(
     state.finish()
 }
 
-fn parity_case(sampler: &dyn Sampler, free: SampleOutput, proc: &dyn Process, oracle: &GmmOracle, what: &str) {
+fn parity_case(
+    sampler: &dyn Sampler,
+    free: SampleOutput,
+    proc: &dyn Process,
+    oracle: &GmmOracle,
+    what: &str,
+) {
     let via_run = sampler.run(proc, oracle, N, &mut Rng::seed_from(SEED), false);
     assert_bytes_equal(&free, &via_run, &format!("{what}: free fn vs Sampler::run"));
     let via_steps = step_drive(sampler, proc, oracle, SEED);
@@ -211,7 +220,8 @@ fn engine_is_worker_count_invariant_for_all_seven_samplers() {
     ];
     for (what, sampler) in &cases {
         let run = |workers: usize| {
-            Engine::with_config(EngineConfig { workers, shard_size: 16 }).run(&Job {
+            let cfg = EngineConfig { workers, shard_size: 16, ..EngineConfig::default() };
+            Engine::with_config(cfg).run(&Job {
                 proc: f.proc.as_ref(),
                 model: &f.oracle,
                 sampler: sampler.as_ref(),
@@ -224,6 +234,58 @@ fn engine_is_worker_count_invariant_for_all_seven_samplers() {
         for workers in [2usize, 4] {
             let multi = run(workers);
             assert_bytes_equal(&one, &multi, &format!("{what} @ {workers} workers"));
+        }
+    }
+}
+
+/// The cross-key scheduler's acceptance contract: for **every** sampler
+/// spec in the suite and every worker count, pooled score execution
+/// (`score_batch > 0`) is bit-identical to the direct-call path. The
+/// scheduler may change which rows share an `eps_batch` call — never
+/// any row's bytes, any RNG stream, or any NFE count.
+#[test]
+fn score_scheduler_is_bit_identical_for_every_sampler_and_worker_count() {
+    let f = fixture();
+    let cases: Vec<(&str, Box<dyn Sampler + '_>)> = vec![
+        ("gddim", Box::new(GddimDet { plan: &f.det_plan })),
+        ("gddim-pc", Box::new(GddimDet { plan: &f.pc_plan })),
+        ("gddim-sde", Box::new(GddimSde { plan: &f.sde_plan })),
+        ("em", Box::new(Em { grid: &f.grid, lambda: 1.0 })),
+        ("ancestral", Box::new(Ancestral { grid: &f.grid })),
+        ("heun", Box::new(Heun { grid: &f.grid })),
+        ("rk45", Box::new(Rk45 { rtol: 1e-3 })),
+        ("sscs", Box::new(Sscs { grid: &f.grid })),
+    ];
+    for (what, sampler) in &cases {
+        let run = |workers: usize, score_batch: usize| {
+            let engine = Engine::with_config(EngineConfig {
+                workers,
+                shard_size: 16,
+                score_batch,
+                score_wait: Duration::from_millis(50),
+            });
+            let out = engine.run(&Job {
+                proc: f.proc.as_ref(),
+                model: &f.oracle,
+                sampler: sampler.as_ref(),
+                n: N, // 3 shards of 16
+                seed: SEED,
+            });
+            if score_batch > 0 {
+                let stats = engine.stats();
+                assert!(stats.score_calls > 0, "{what}: scheduler must carry all score calls");
+                assert!(stats.score_rows > 0, "{what}: pooled rows must be counted");
+            }
+            out
+        };
+        let reference = run(1, 0);
+        for workers in [1usize, 2, 4] {
+            let pooled = run(workers, 4096);
+            assert_bytes_equal(
+                &reference,
+                &pooled,
+                &format!("{what} scheduler-on @ {workers} workers"),
+            );
         }
     }
 }
