@@ -12,12 +12,10 @@
 //! make artifacts && cargo run --release --example e2e_blobs
 //! ```
 
-use std::sync::Arc;
-
 use gddim::coeffs::plan::{PlanConfig, SamplerPlan};
 use gddim::data::presets;
 use gddim::diffusion::process::KtKind;
-use gddim::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
+use gddim::diffusion::{Process, TimeGrid};
 use gddim::math::rng::Rng;
 use gddim::metrics::frechet::frechet_to_spec;
 use gddim::runtime::{Manifest, NetScore};
@@ -65,16 +63,9 @@ fn main() {
     );
     for net in &nets {
         let entry = &net.entry;
-        let spec = presets::by_name(&entry.dataset).unwrap();
-        let proc: Arc<dyn Process> = match entry.process.as_str() {
-            "vpsde" => Arc::new(Vpsde::standard(spec.d)),
-            "cld" => Arc::new(Cld::standard(spec.d)),
-            "bdm" => {
-                let side = (spec.d as f64).sqrt() as usize;
-                Arc::new(Bdm::standard(side, side))
-            }
-            other => panic!("{other}"),
-        };
+        let info = presets::info(&entry.dataset).unwrap();
+        let spec = info.build();
+        let proc = gddim::diffusion::process_for(&entry.process, info).unwrap();
         let oracle = GmmOracle::new(proc.clone(), spec.clone(), entry.kt);
         for nfe in [20usize, 50] {
             let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), nfe);

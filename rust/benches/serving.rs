@@ -77,8 +77,49 @@ fn main() {
     t.emit("serving");
 
     engine_scaling(&args);
+    dimension_scaling(&args);
     open_loop_slo(&args);
     score_batching(&args);
+}
+
+/// Dimension scale sweep (the perf trajectory's resolution axis): one
+/// fixed gDDIM job per image preset (8/16/32) on both BDM and VPSDE,
+/// sharded under the engine's default byte budget. Reports the derived
+/// rows/shard next to samples/s so shard-memory policy and throughput
+/// move together in the record.
+fn dimension_scaling(args: &Args) {
+    let n = args.get_usize("scale-batch", 512);
+    let nfe = args.get_usize("scale-nfe", 10);
+    let workers = args.get_usize("scale-workers", 4);
+    let mut t = Table::new(
+        "Dimension scaling: gDDIM q=2 batch throughput by image resolution (default shard budget)",
+        &["dataset", "d", "process", "rows/shard", "samples/s"],
+    );
+    for name in ["blobs8", "blobs16", "blobs32"] {
+        let info = presets::info(name).expect("image preset in registry");
+        let spec = info.build();
+        for proc_name in ["bdm", "vpsde"] {
+            let proc = gddim::diffusion::process_for(proc_name, info).unwrap();
+            let oracle = GmmOracle::new(proc.clone(), spec.clone(), KtKind::R);
+            let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), nfe);
+            let plan =
+                SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+            let cfg = EngineConfig { workers, ..EngineConfig::default() };
+            let rows = cfg.rows_per_shard(proc.dim_u());
+            let engine = Engine::with_config(cfg);
+            let sampler = GddimDet { plan: &plan };
+            let job = Job { proc: proc.as_ref(), model: &oracle, sampler: &sampler, n, seed: 23 };
+            let tput = engine_throughput(&engine, &job, 3);
+            t.row(vec![
+                name.to_string(),
+                info.d.to_string(),
+                proc_name.to_string(),
+                rows.to_string(),
+                format!("{tput:.0}"),
+            ]);
+        }
+    }
+    t.emit("serving_scale");
 }
 
 /// Cross-key score batching on a heterogeneous key mix: four sampler

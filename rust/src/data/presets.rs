@@ -2,10 +2,141 @@
 //! DESIGN.md §3). All procedurally generated from fixed seeds so the
 //! rust side and the exported `configs/datasets.json` (python training)
 //! agree exactly.
+//!
+//! The catalogue is **registry-driven**: [`REGISTRY`] is the single
+//! source of truth for every preset's `(name, h, w, d)` metadata, so the
+//! CLI usage string, server-side validation ([`crate::server::request`]),
+//! process construction ([`crate::diffusion::process_for`]), the table
+//! defaults, and the JSON export all follow one list — adding a dataset
+//! is one entry here, not a five-file hunt. The image generators are
+//! parameterized by `(h, w, n_prototypes, seed)` with geometry scaled
+//! against the 8×8 baseline, and the historical 8×8 presets regenerate
+//! **bit-identically** from them (locked by the golden test below).
 
 use crate::data::gmm::GmmSpec;
 use crate::math::rng::Rng;
 use crate::util::json::Json;
+
+const BLOBS8_SEED: u64 = 0xB10B5;
+const FACES8_SEED: u64 = 0xFACE5;
+const BLOBS16_SEED: u64 = 0xB10B16;
+const FACES16_SEED: u64 = 0xFACE16;
+const BLOBS32_SEED: u64 = 0xB10B32;
+
+/// One canonical dataset: identifying metadata plus its generator.
+pub struct Preset {
+    pub name: &'static str,
+    /// Image height (0 for the analytic 2-D sets).
+    pub h: usize,
+    /// Image width (0 for the analytic 2-D sets).
+    pub w: usize,
+    /// Data dimension (`h · w` for image presets).
+    pub d: usize,
+    /// Mixture prototypes (modes).
+    pub n_prototypes: usize,
+    /// Procedural-generation seed (0 for the analytic sets).
+    pub seed: u64,
+    builder: fn() -> GmmSpec,
+}
+
+impl Preset {
+    /// Build the dataset (procedural generation from the fixed seed).
+    pub fn build(&self) -> GmmSpec {
+        (self.builder)()
+    }
+
+    /// `(h, w)` for image presets, `None` for vector data.
+    pub fn image_dims(&self) -> Option<(usize, usize)> {
+        (self.h > 0 && self.w > 0).then_some((self.h, self.w))
+    }
+
+    /// `(h, w)` or the canonical image-process mismatch error — the one
+    /// message shared by submit-time validation
+    /// (`PlanKey::validate_dims`) and process construction
+    /// (`diffusion::process_for`), so the two rejection paths can never
+    /// drift apart.
+    pub fn require_image_dims(&self) -> crate::Result<(usize, usize)> {
+        self.image_dims().ok_or_else(|| {
+            crate::Error::msg(format!(
+                "process `bdm` needs h×w image data; dataset `{}` is {}-dim vector data",
+                self.name, self.d
+            ))
+        })
+    }
+}
+
+/// The dataset catalogue, in canonical order.
+pub static REGISTRY: &[Preset] = &[
+    Preset { name: "gmm2d", h: 0, w: 0, d: 2, n_prototypes: 8, seed: 0, builder: gmm2d },
+    Preset { name: "hard2d", h: 0, w: 0, d: 2, n_prototypes: 25, seed: 0, builder: hard2d },
+    Preset { name: "spiral2d", h: 0, w: 0, d: 2, n_prototypes: 24, seed: 0, builder: spiral2d },
+    Preset {
+        name: "blobs8",
+        h: 8,
+        w: 8,
+        d: 64,
+        n_prototypes: 48,
+        seed: BLOBS8_SEED,
+        builder: blobs8,
+    },
+    Preset {
+        name: "faces8",
+        h: 8,
+        w: 8,
+        d: 64,
+        n_prototypes: 16,
+        seed: FACES8_SEED,
+        builder: faces8,
+    },
+    Preset {
+        name: "blobs16",
+        h: 16,
+        w: 16,
+        d: 256,
+        n_prototypes: 48,
+        seed: BLOBS16_SEED,
+        builder: blobs16,
+    },
+    Preset {
+        name: "faces16",
+        h: 16,
+        w: 16,
+        d: 256,
+        n_prototypes: 16,
+        seed: FACES16_SEED,
+        builder: faces16,
+    },
+    Preset {
+        name: "blobs32",
+        h: 32,
+        w: 32,
+        d: 1024,
+        n_prototypes: 48,
+        seed: BLOBS32_SEED,
+        builder: blobs32,
+    },
+];
+
+/// Default image dataset for CLIs and table harnesses (the CIFAR analog).
+pub const DEFAULT_IMAGE: &str = "blobs8";
+
+/// Default faces dataset (the CELEBA analog, Table 6).
+pub const DEFAULT_FACES: &str = "faces8";
+
+/// Registry entry by name.
+pub fn info(name: &str) -> Option<&'static Preset> {
+    REGISTRY.iter().find(|p| p.name == name)
+}
+
+/// Build a canonical dataset by name.
+pub fn by_name(name: &str) -> Option<GmmSpec> {
+    info(name).map(Preset::build)
+}
+
+/// All canonical dataset names, in registry order.
+pub fn names() -> impl Iterator<Item = &'static str> {
+    REGISTRY.iter().map(|p| p.name)
+}
 
 /// 8 well-separated modes on a circle of radius 4 (the classic 2-D toy;
 /// paper Fig. 2's "mixture of well-separated" modes).
@@ -50,22 +181,39 @@ pub fn spiral2d() -> GmmSpec {
     GmmSpec::new("spiral2d", means, 0.01)
 }
 
-/// 8×8 grayscale "two blobs" images: 48 prototype images (random blob
-/// centers/intensities from a fixed seed) + small pixel jitter. 64-dim
-/// data exercising the image-scale path and the DCT/BDM machinery —
-/// the repo's CIFAR10 stand-in.
-pub fn blobs8() -> GmmSpec {
-    let h = 8;
-    let w = 8;
-    let mut rng = Rng::seed_from(0xB10B5);
-    let mut means = Vec::with_capacity(48);
-    for _ in 0..48 {
+/// Center to roughly zero mean, scale to [-1, 1]-ish like image DMs.
+fn center_and_scale(img: &mut [f64]) {
+    let mean = img.iter().sum::<f64>() / img.len() as f64;
+    for p in img.iter_mut() {
+        *p = (*p - mean) * 2.0;
+    }
+}
+
+/// Shared blob-image generator: `n_prototypes` grayscale `h×w` prototype
+/// images of `n_blobs` Gaussian bumps each (random centers, intensities
+/// and widths from the fixed `seed`). Blob geometry scales with the 8×8
+/// baseline (`h/8`, `w/8`), so at `h = w = 8` every bound degenerates to
+/// the historical constants and the RNG draw sequence is unchanged —
+/// which is what makes [`blobs8`] regenerate its pre-refactor means
+/// bit for bit.
+pub fn blob_images(
+    name: &str,
+    h: usize,
+    w: usize,
+    n_prototypes: usize,
+    n_blobs: usize,
+    seed: u64,
+) -> GmmSpec {
+    let (sh, sw) = (h as f64 / 8.0, w as f64 / 8.0);
+    let mut rng = Rng::seed_from(seed);
+    let mut means = Vec::with_capacity(n_prototypes);
+    for _ in 0..n_prototypes {
         let mut img = vec![0.0f64; h * w];
-        for _blob in 0..2 {
-            let cx = rng.uniform_in(1.5, (w - 2) as f64);
-            let cy = rng.uniform_in(1.5, (h - 2) as f64);
+        for _blob in 0..n_blobs {
+            let cx = rng.uniform_in(1.5 * sw, w as f64 - 2.0 * sw);
+            let cy = rng.uniform_in(1.5 * sh, h as f64 - 2.0 * sh);
             let amp = rng.uniform_in(0.6, 1.0);
-            let s2 = rng.uniform_in(0.6, 2.0);
+            let s2 = rng.uniform_in(0.6, 2.0) * (sw * sh);
             for y in 0..h {
                 for x in 0..w {
                     let d2 = (x as f64 - cx).powi(2) + (y as f64 - cy).powi(2);
@@ -73,30 +221,27 @@ pub fn blobs8() -> GmmSpec {
                 }
             }
         }
-        // Center to roughly zero mean, scale to [-1, 1]-ish like image DMs.
-        let mean = img.iter().sum::<f64>() / img.len() as f64;
-        for p in img.iter_mut() {
-            *p = (*p - mean) * 2.0;
-        }
+        center_and_scale(&mut img);
         means.push(img);
     }
-    GmmSpec::new("blobs8", means, 0.005)
+    GmmSpec::new(name, means, 0.005)
 }
 
-/// A 16-prototype variant on 8×8 used as the "CELEBA" analog (fewer,
-/// more distinct modes).
-pub fn faces8() -> GmmSpec {
-    let h = 8;
-    let w = 8;
-    let mut rng = Rng::seed_from(0xFACE5);
-    let mut means = Vec::with_capacity(16);
-    for _ in 0..16 {
+/// Shared face-image generator: an oval + two "eyes" per prototype —
+/// crude but consistently structured images. Same 8×8-baseline scaling
+/// contract as [`blob_images`], so [`faces8`] is bit-stable under the
+/// parameterization.
+pub fn face_images(name: &str, h: usize, w: usize, n_prototypes: usize, seed: u64) -> GmmSpec {
+    let (sh, sw) = (h as f64 / 8.0, w as f64 / 8.0);
+    let (half_h, half_w) = (0.5 * h as f64, 0.5 * w as f64);
+    let mut rng = Rng::seed_from(seed);
+    let mut means = Vec::with_capacity(n_prototypes);
+    for _ in 0..n_prototypes {
         let mut img = vec![0.0f64; h * w];
-        // an oval + two "eyes": crude but consistently structured images
-        let cx = rng.uniform_in(3.0, 4.0);
-        let cy = rng.uniform_in(3.0, 4.0);
-        let rx = rng.uniform_in(2.0, 3.0);
-        let ry = rng.uniform_in(2.4, 3.4);
+        let cx = rng.uniform_in(half_w - sw, half_w);
+        let cy = rng.uniform_in(half_h - sh, half_h);
+        let rx = rng.uniform_in(2.0 * sw, 3.0 * sw);
+        let ry = rng.uniform_in(2.4 * sh, 3.4 * sh);
         for y in 0..h {
             for x in 0..w {
                 let e = ((x as f64 - cx) / rx).powi(2) + ((y as f64 - cy) / ry).powi(2);
@@ -104,43 +249,58 @@ pub fn faces8() -> GmmSpec {
             }
         }
         for eye in 0..2 {
-            let ex = cx + if eye == 0 { -1.0 } else { 1.0 } * rng.uniform_in(0.8, 1.2);
-            let ey = cy - rng.uniform_in(0.5, 1.0);
+            let side = if eye == 0 { -1.0 } else { 1.0 };
+            let ex = cx + side * rng.uniform_in(0.8 * sw, 1.2 * sw);
+            let ey = cy - rng.uniform_in(0.5 * sh, 1.0 * sh);
+            let eye_s2 = 0.5 * (sw * sh);
             for y in 0..h {
                 for x in 0..w {
                     let d2 = (x as f64 - ex).powi(2) + (y as f64 - ey).powi(2);
-                    img[y * w + x] -= 0.5 * (-d2 / 0.5).exp();
+                    img[y * w + x] -= 0.5 * (-d2 / eye_s2).exp();
                 }
             }
         }
-        let mean = img.iter().sum::<f64>() / img.len() as f64;
-        for p in img.iter_mut() {
-            *p = (*p - mean) * 2.0;
-        }
+        center_and_scale(&mut img);
         means.push(img);
     }
-    GmmSpec::new("faces8", means, 0.005)
+    GmmSpec::new(name, means, 0.005)
 }
 
-/// All canonical datasets by name.
-pub fn by_name(name: &str) -> Option<GmmSpec> {
-    match name {
-        "gmm2d" => Some(gmm2d()),
-        "hard2d" => Some(hard2d()),
-        "spiral2d" => Some(spiral2d()),
-        "blobs8" => Some(blobs8()),
-        "faces8" => Some(faces8()),
-        _ => None,
-    }
+/// 8×8 grayscale "two blobs" images: 48 prototype images + small pixel
+/// jitter. 64-dim data exercising the image-scale path and the DCT/BDM
+/// machinery — the repo's CIFAR10 stand-in.
+pub fn blobs8() -> GmmSpec {
+    blob_images("blobs8", 8, 8, 48, 2, BLOBS8_SEED)
 }
 
-pub const ALL: [&str; 5] = ["gmm2d", "hard2d", "spiral2d", "blobs8", "faces8"];
+/// A 16-prototype variant on 8×8 used as the "CELEBA" analog (fewer,
+/// more distinct modes).
+pub fn faces8() -> GmmSpec {
+    face_images("faces8", 8, 8, 16, FACES8_SEED)
+}
+
+/// 16×16 two-blob images (256-dim): the first realistic-resolution rung
+/// of the BDM/DCT scaling ladder.
+pub fn blobs16() -> GmmSpec {
+    blob_images("blobs16", 16, 16, 48, 2, BLOBS16_SEED)
+}
+
+/// 16×16 faces (256-dim), the CELEBA analog at the 16×16 rung.
+pub fn faces16() -> GmmSpec {
+    face_images("faces16", 16, 16, 16, FACES16_SEED)
+}
+
+/// 32×32 three-blob images (1024-dim): the full CIFAR-resolution stress
+/// case for the DCT path and the engine's shard byte budget.
+pub fn blobs32() -> GmmSpec {
+    blob_images("blobs32", 32, 32, 48, 3, BLOBS32_SEED)
+}
 
 /// Serialize every preset into the shared `configs/datasets.json`.
 pub fn export_json() -> Json {
     let mut o = std::collections::BTreeMap::new();
-    for name in ALL {
-        o.insert(name.to_string(), by_name(name).unwrap().to_json());
+    for p in REGISTRY {
+        o.insert(p.name.to_string(), p.build().to_json());
     }
     Json::Obj(o)
 }
@@ -151,34 +311,118 @@ mod tests {
 
     #[test]
     fn presets_are_deterministic() {
-        let a = blobs8();
-        let b = blobs8();
-        assert_eq!(a.means, b.means, "procedural generation must be seed-stable");
-        assert_eq!(faces8().means, faces8().means);
-    }
-
-    #[test]
-    fn all_presets_resolve() {
-        for name in ALL {
-            let g = by_name(name).unwrap();
-            assert_eq!(g.name, name);
-            assert!(g.n_modes() >= 2);
-            assert!((g.weights.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        for p in REGISTRY {
+            assert_eq!(p.build().means, p.build().means, "{}: must be seed-stable", p.name);
         }
     }
 
     #[test]
-    fn image_presets_are_64_dim() {
+    fn all_presets_resolve_and_match_registry_metadata() {
+        for p in REGISTRY {
+            let g = by_name(p.name).unwrap();
+            assert_eq!(g.name, p.name);
+            assert_eq!(g.d, p.d, "{}: registry d out of sync", p.name);
+            assert_eq!(g.n_modes(), p.n_prototypes, "{}: registry prototype count", p.name);
+            if let Some((h, w)) = p.image_dims() {
+                assert_eq!(h * w, p.d, "{}: image dims must factor d", p.name);
+            }
+            assert!(g.n_modes() >= 2);
+            assert!((g.weights.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        }
+        assert!(info("no-such-set").is_none());
+        assert!(info(DEFAULT_IMAGE).unwrap().image_dims().is_some());
+        assert!(info(DEFAULT_FACES).unwrap().image_dims().is_some());
+    }
+
+    #[test]
+    fn image_presets_have_registry_dims() {
         assert_eq!(blobs8().d, 64);
         assert_eq!(faces8().d, 64);
+        assert_eq!(blobs16().d, 256);
+        assert_eq!(faces16().d, 256);
+        assert_eq!(blobs32().d, 1024);
+    }
+
+    /// Verbatim copy of the pre-refactor hard-coded `blobs8` generator:
+    /// the golden reference the parameterized [`blob_images`] must
+    /// reproduce bit for bit (same RNG draw order, same arithmetic).
+    fn legacy_blobs8_means() -> Vec<Vec<f64>> {
+        let h = 8;
+        let w = 8;
+        let mut rng = Rng::seed_from(0xB10B5);
+        let mut means = Vec::with_capacity(48);
+        for _ in 0..48 {
+            let mut img = vec![0.0f64; h * w];
+            for _blob in 0..2 {
+                let cx = rng.uniform_in(1.5, (w - 2) as f64);
+                let cy = rng.uniform_in(1.5, (h - 2) as f64);
+                let amp = rng.uniform_in(0.6, 1.0);
+                let s2 = rng.uniform_in(0.6, 2.0);
+                for y in 0..h {
+                    for x in 0..w {
+                        let d2 = (x as f64 - cx).powi(2) + (y as f64 - cy).powi(2);
+                        img[y * w + x] += amp * (-d2 / (2.0 * s2)).exp();
+                    }
+                }
+            }
+            let mean = img.iter().sum::<f64>() / img.len() as f64;
+            for p in img.iter_mut() {
+                *p = (*p - mean) * 2.0;
+            }
+            means.push(img);
+        }
+        means
+    }
+
+    /// Verbatim copy of the pre-refactor hard-coded `faces8` generator.
+    fn legacy_faces8_means() -> Vec<Vec<f64>> {
+        let h = 8;
+        let w = 8;
+        let mut rng = Rng::seed_from(0xFACE5);
+        let mut means = Vec::with_capacity(16);
+        for _ in 0..16 {
+            let mut img = vec![0.0f64; h * w];
+            let cx = rng.uniform_in(3.0, 4.0);
+            let cy = rng.uniform_in(3.0, 4.0);
+            let rx = rng.uniform_in(2.0, 3.0);
+            let ry = rng.uniform_in(2.4, 3.4);
+            for y in 0..h {
+                for x in 0..w {
+                    let e = ((x as f64 - cx) / rx).powi(2) + ((y as f64 - cy) / ry).powi(2);
+                    img[y * w + x] = if e < 1.0 { 0.8 * (1.0 - e) } else { 0.0 };
+                }
+            }
+            for eye in 0..2 {
+                let ex = cx + if eye == 0 { -1.0 } else { 1.0 } * rng.uniform_in(0.8, 1.2);
+                let ey = cy - rng.uniform_in(0.5, 1.0);
+                for y in 0..h {
+                    for x in 0..w {
+                        let d2 = (x as f64 - ex).powi(2) + (y as f64 - ey).powi(2);
+                        img[y * w + x] -= 0.5 * (-d2 / 0.5).exp();
+                    }
+                }
+            }
+            let mean = img.iter().sum::<f64>() / img.len() as f64;
+            for p in img.iter_mut() {
+                *p = (*p - mean) * 2.0;
+            }
+            means.push(img);
+        }
+        means
+    }
+
+    #[test]
+    fn parameterized_generators_reproduce_the_8x8_presets_bit_identically() {
+        assert_eq!(blobs8().means, legacy_blobs8_means(), "blobs8 drifted under refactor");
+        assert_eq!(faces8().means, legacy_faces8_means(), "faces8 drifted under refactor");
     }
 
     #[test]
     fn modes_are_well_separated_relative_to_var() {
         // The manifold-hypothesis regime the paper argues from: distances
         // between modes >> component std.
-        for name in ALL {
-            let g = by_name(name).unwrap();
+        for p in REGISTRY {
+            let g = by_name(p.name).unwrap();
             let sd = g.var.sqrt();
             let mut min_dist = f64::INFINITY;
             for i in 0..g.n_modes() {
@@ -191,6 +435,7 @@ mod tests {
                     min_dist = min_dist.min(d2.sqrt());
                 }
             }
+            let name = p.name;
             assert!(min_dist > 3.0 * sd, "{name}: min mode distance {min_dist} vs sd {sd}");
         }
     }
@@ -198,7 +443,7 @@ mod tests {
     #[test]
     fn export_contains_all() {
         let j = export_json();
-        for name in ALL {
+        for name in names() {
             assert!(j.get(name).is_some());
         }
     }

@@ -288,6 +288,25 @@ mod tests {
     }
 
     #[test]
+    fn blur_eigenvalues_monotone_at_16x16() {
+        // The dimension-generic contract of the dissipation spectrum:
+        // λ grows along rows and columns at 16×16 exactly as at 8×8,
+        // and higher-λ coefficients keep strictly less signal.
+        let p = Bdm::standard(16, 16);
+        let lam = p.dct().blur_eigenvalues();
+        assert_eq!(lam[0], 0.0, "DC mode never dissipates");
+        for i in 1..16 {
+            assert!(lam[i] > lam[i - 1], "row-wise λ must increase at index {i}");
+            assert!(lam[i * 16] > lam[(i - 1) * 16], "column-wise λ must increase at row {i}");
+        }
+        let a = p.alpha_vec(0.5);
+        for i in 1..16 {
+            assert!(a[i] < a[i - 1], "higher frequency must keep less signal (index {i})");
+        }
+        assert!(a[0] > a[255], "DC must outlive the highest frequency");
+    }
+
+    #[test]
     fn lift_proj_roundtrip() {
         let p = Bdm::standard(8, 8);
         let mut rng = crate::math::rng::Rng::seed_from(5);

@@ -18,3 +18,26 @@ pub use vpsde::Vpsde;
 pub use cld::Cld;
 pub use bdm::Bdm;
 pub use schedule::TimeGrid;
+
+use crate::data::presets::Preset;
+use std::sync::Arc;
+
+/// Build the named forward process sized for a catalogue dataset — the
+/// one construction path shared by the CLI, the experiment harnesses,
+/// and the server's oracle factory (each used to hard-code its own
+/// `sqrt(d)` guess for BDM's image side). VPSDE/CLD work at any `d`;
+/// BDM is an image-space process and takes its `(h, w)` from the
+/// preset's registry metadata, so a vector dataset is a clean error
+/// here instead of a dimension-mismatch panic deep in model
+/// construction.
+pub fn process_for(process: &str, info: &Preset) -> crate::Result<Arc<dyn Process>> {
+    match process {
+        "vpsde" => Ok(Arc::new(Vpsde::standard(info.d))),
+        "cld" => Ok(Arc::new(Cld::standard(info.d))),
+        "bdm" => {
+            let (h, w) = info.require_image_dims()?;
+            Ok(Arc::new(Bdm::standard(h, w)))
+        }
+        other => Err(crate::Error::msg(format!("unknown process `{other}`"))),
+    }
+}

@@ -4,9 +4,13 @@
 //! throughput — not the score model — becomes the serving bottleneck.
 //! This module turns one batched sampling job into data-parallel work:
 //!
-//! 1. **Shard**: the batch of `n` samples is split into *fixed-size*
-//!    shards. The shard layout depends only on `(n, shard_size)` — never
-//!    on the worker count — so the output is stable under any pool size.
+//! 1. **Shard**: the batch of `n` samples is split into fixed-row shards
+//!    sized by [`EngineConfig::rows_per_shard`] — either an explicit row
+//!    count or a dimension-aware byte budget
+//!    ([`EngineConfig::shard_bytes`]), so a 1024-dim blobs32 shard holds
+//!    the same state footprint as a 64-dim blobs8 one. The layout
+//!    depends only on `(n, rows_per_shard(dim_u))` — never on the worker
+//!    count — so the output is stable under any pool size.
 //! 2. **Seed**: every shard gets its own [`Rng`] stream, derived from the
 //!    job seed by index. Stream derivation is a pure function of
 //!    `(seed, shard_index)`, which makes the merged output bit-identical
@@ -73,18 +77,36 @@ pub struct EngineConfig {
     /// Worker threads kept alive by the pool (0 or 1 = run inline on the
     /// caller thread, no threads spawned).
     pub workers: usize,
-    /// Rows per shard. Fixed (not derived from the worker count) so that
-    /// the shard layout — and therefore the merged output — is identical
-    /// for every pool size. Smaller shards = better load balance, more
+    /// Explicit rows per shard; `0` (the default) derives the row count
+    /// from [`EngineConfig::shard_bytes`] and the job's state dimension
+    /// instead. Either way the layout is fixed per job (never derived
+    /// from the worker count), so the merged output is identical for
+    /// every pool size. Smaller shards = better load balance, more
     /// per-shard fixed cost (score-call batching shrinks with the shard).
+    /// NB: the serving CLIs' `--shard-size` flag sets the **byte
+    /// budget** ([`EngineConfig::shard_bytes`]), not this row count —
+    /// an explicit row override is an API-level knob only.
     pub shard_size: usize,
+    /// Per-shard state budget in **bytes** (`rows × dim_u × 8`), used
+    /// when `shard_size == 0`. A flat row count sizes shards by request,
+    /// not by memory: a 256-row shard of 1024-dim blobs32 state is 16×
+    /// the footprint of the same shard on blobs8. The budget keeps shard
+    /// memory roughly constant across dataset dimensions — rows are
+    /// clamped to `[MIN_SHARD_ROWS, MAX_SHARD_ROWS]` so tiny dimensions
+    /// still shard for load balance and huge ones never degenerate to
+    /// single-row calls. Exposed as `--shard-size` on the serving CLIs.
+    pub shard_bytes: usize,
     /// Maximum pooled rows per coalesced score call. `0` disables the
     /// [`ScoreScheduler`] entirely (the historical direct-call path);
     /// non-zero routes every shard's score evaluations through the
-    /// cross-key pooling boundary. Values at or below `shard_size`
-    /// degenerate to per-shard calls — the point of the scheduler is a
-    /// cut well above the typical shard. Output is bit-identical either
-    /// way (see [`scheduler`]).
+    /// cross-key pooling boundary. Values at or below the shard row
+    /// count degenerate to per-shard calls — the point of the scheduler
+    /// is a cut well above the typical shard. Output is bit-identical
+    /// either way (see [`scheduler`]). Note this cut is still a flat
+    /// row count, not a byte budget like [`EngineConfig::shard_bytes`]:
+    /// at d=1024 a 4096-row pool stages ~32 MiB per coalesced call, so
+    /// size it down (or make it dimension-aware, a future knob) when
+    /// serving the high-resolution presets under memory pressure.
     pub score_batch: usize,
     /// Longest a parked score request waits before draining its own pool
     /// (the scheduler's liveness backstop; the stall cut usually answers
@@ -96,9 +118,38 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             workers: 1,
-            shard_size: 256,
+            shard_size: 0,
+            // 128 KiB of f64 state per shard: the historical 256 rows at
+            // dim_u = 64 (vpsde/blobs8) and for every smaller dimension
+            // (clamped), 16 rows at bdm/blobs32's dim_u = 1024.
+            shard_bytes: 128 * 1024,
             score_batch: 0,
             score_wait: Duration::from_micros(200),
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Floor on derived shard rows: below this the per-shard fixed cost
+    /// (task dispatch, RNG stream setup) dominates real work.
+    pub const MIN_SHARD_ROWS: usize = 8;
+    /// Ceiling on derived shard rows: above this load balance suffers
+    /// and the per-key batcher's cuts stop sharding at all. Matches the
+    /// historical flat default.
+    pub const MAX_SHARD_ROWS: usize = 256;
+
+    /// Rows per shard for a job with state dimension `dim_u`: the
+    /// explicit `shard_size` when set, otherwise the `shard_bytes`
+    /// budget divided by the row footprint (8 bytes per f64 lane),
+    /// clamped to `[MIN_SHARD_ROWS, MAX_SHARD_ROWS]`. Pure function of
+    /// the config and the dimension — the shard-layout half of the
+    /// engine's determinism contract.
+    pub fn rows_per_shard(&self, dim_u: usize) -> usize {
+        if self.shard_size > 0 {
+            self.shard_size
+        } else {
+            (self.shard_bytes / (8 * dim_u.max(1)))
+                .clamp(Self::MIN_SHARD_ROWS, Self::MAX_SHARD_ROWS)
         }
     }
 }
@@ -427,7 +478,6 @@ impl Engine {
     /// drained) if any shard panicked.
     pub fn run_group(&self, jobs: &[Job<'_>]) -> Vec<SampleOutput> {
         self.metrics.jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed);
-        let shard_size = self.cfg.shard_size.max(1);
         let seq0 = self.seq.fetch_add(jobs.len() as u64, Ordering::Relaxed);
 
         // Flatten the group into a job-major shard plan. An empty job
@@ -443,11 +493,16 @@ impl Engine {
         let mut plans: Vec<ShardPlan> = Vec::new();
         let mut job_shards: Vec<usize> = Vec::with_capacity(jobs.len());
         for (j, job) in jobs.iter().enumerate() {
-            let n_shards = job.n.div_ceil(shard_size);
+            // Shard rows are derived per job: with the byte budget in
+            // play two jobs of one group may shard at different row
+            // counts (e.g. a blobs32 job next to a gmm2d one), each
+            // deterministic in its own (n, dim_u).
+            let rows = self.cfg.rows_per_shard(job.proc.dim_u());
+            let n_shards = job.n.div_ceil(rows);
             job_shards.push(n_shards);
             let rngs = Engine::shard_rngs(job.seed, n_shards);
             for (i, rng) in rngs.into_iter().enumerate() {
-                let n = shard_size.min(job.n - i * shard_size);
+                let n = rows.min(job.n - i * rows);
                 plans.push(ShardPlan { job_idx: j, seq: seq0 + j as u64, shard: i, n, rng });
             }
         }
@@ -707,6 +762,60 @@ mod tests {
             .ok()
             .and_then(|s| s.parse().ok())
             .unwrap_or(2)
+    }
+
+    #[test]
+    fn shard_rows_follow_the_byte_budget() {
+        let auto = EngineConfig::default();
+        // Historical parity: every dimension up to 64 keeps 256 rows.
+        assert_eq!(auto.rows_per_shard(2), 256, "gmm2d/vpsde stays at the flat historical rows");
+        assert_eq!(auto.rows_per_shard(4), 256, "gmm2d/cld likewise");
+        assert_eq!(auto.rows_per_shard(64), 256, "blobs8/vpsde: 128 KiB / 512 B = 256 rows");
+        // The budget actually bites at image scale.
+        assert_eq!(auto.rows_per_shard(128), 128, "blobs8/cld halves");
+        assert_eq!(auto.rows_per_shard(256), 64, "blobs16");
+        assert_eq!(auto.rows_per_shard(1024), 16, "blobs32/bdm");
+        assert_eq!(auto.rows_per_shard(2048), 8, "blobs32/cld hits MIN_SHARD_ROWS");
+        assert_eq!(auto.rows_per_shard(1 << 30), EngineConfig::MIN_SHARD_ROWS);
+        // An explicit shard_size always wins; dim 0 never divides by 0.
+        let explicit = EngineConfig { shard_size: 40, ..EngineConfig::default() };
+        assert_eq!(explicit.rows_per_shard(1024), 40);
+        assert_eq!(auto.rows_per_shard(0), 256);
+        // A degenerate zero budget still yields a positive row count.
+        let zero = EngineConfig { shard_bytes: 0, ..EngineConfig::default() };
+        assert_eq!(zero.rows_per_shard(64), EngineConfig::MIN_SHARD_ROWS);
+    }
+
+    #[test]
+    fn byte_budget_sharding_is_worker_count_invariant() {
+        // The auto-derived layout (shard_size == 0) must uphold the same
+        // bit-identity contract as explicit rows: blobs16 on BDM shards
+        // at 64 rows from the default budget.
+        let spec = presets::blobs16();
+        let proc = Arc::new(crate::diffusion::Bdm::standard(16, 16));
+        let oracle = GmmOracle::new(proc.clone(), spec.clone(), KtKind::R);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 6);
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+        let run = |workers: usize| {
+            let engine = Engine::with_config(EngineConfig { workers, ..EngineConfig::default() });
+            let out = engine.run(&Job {
+                proc: proc.as_ref(),
+                model: &oracle,
+                sampler: &GddimDet { plan: &plan },
+                n: 150, // 3 shards of 64/64/22 under the default budget
+                seed: 0xD1517,
+            });
+            assert_eq!(engine.stats().shards_executed, 3, "budget must derive 64-row shards");
+            out
+        };
+        let a = run(1);
+        for workers in [2usize, 4] {
+            let b = run(workers);
+            assert_eq!(a.xs, b.xs, "budget-sharded xs diverged at {workers} workers");
+            assert_eq!(a.us, b.us, "budget-sharded us diverged at {workers} workers");
+        }
+        assert_eq!(a.xs.len(), 150 * 256);
     }
 
     #[test]
@@ -1076,6 +1185,7 @@ mod tests {
                 shard_size: 64,
                 score_batch,
                 score_wait: Duration::from_millis(100),
+                ..EngineConfig::default()
             });
             engine.run(&Job {
                 proc: proc.as_ref(),
@@ -1151,6 +1261,7 @@ mod tests {
             shard_size: 32,
             score_batch: 4096,
             score_wait: Duration::from_secs(2),
+            ..EngineConfig::default()
         });
         let on_jobs = jobs_for(proc.as_ref(), &on_model, &samplers);
         let on_outs = on_engine.run_group(&on_jobs);
@@ -1211,6 +1322,7 @@ mod tests {
             shard_size: 8,
             score_batch: 4096,
             score_wait: Duration::from_micros(500),
+            ..EngineConfig::default()
         });
         std::thread::scope(|scope| {
             for caller in 0..4u64 {

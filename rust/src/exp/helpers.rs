@@ -6,7 +6,7 @@ use crate::coeffs::plan::{PlanConfig, SamplerPlan};
 use crate::data::gmm::GmmSpec;
 use crate::data::presets;
 use crate::diffusion::process::KtKind;
-use crate::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
+use crate::diffusion::{Process, TimeGrid};
 use crate::math::rng::Rng;
 use crate::metrics::frechet::frechet_to_spec;
 use crate::samplers::common::SampleOutput;
@@ -20,17 +20,9 @@ pub struct Setup {
 }
 
 pub fn setup(process: &str, dataset: &str) -> Setup {
-    let spec = presets::by_name(dataset).expect("unknown dataset");
-    let proc: Arc<dyn Process> = match process {
-        "vpsde" => Arc::new(Vpsde::standard(spec.d)),
-        "cld" => Arc::new(Cld::standard(spec.d)),
-        "bdm" => {
-            let side = (spec.d as f64).sqrt() as usize;
-            Arc::new(Bdm::standard(side, side))
-        }
-        other => panic!("unknown process {other}"),
-    };
-    Setup { proc, spec }
+    let info = presets::info(dataset).expect("unknown dataset");
+    let proc = crate::diffusion::process_for(process, info).unwrap_or_else(|e| panic!("{e}"));
+    Setup { proc, spec: info.build() }
 }
 
 pub fn oracle(s: &Setup, kt: KtKind) -> GmmOracle {

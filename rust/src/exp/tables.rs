@@ -67,7 +67,7 @@ pub fn table2(args: &Args) {
 /// Table 3 — acceleration across DMs (DDPM/BDM/CLD × sampler × NFE).
 pub fn table3(args: &Args) {
     let dataset_2d = args.get_or("dataset", "gmm2d");
-    let img = args.get_or("image-dataset", "blobs8");
+    let img = args.get_or("image-dataset", crate::data::presets::DEFAULT_IMAGE);
     let n2 = n_samples(args, 4000);
     let nimg = n_samples(args, 2000);
     let nfes: Vec<usize> =
@@ -153,11 +153,11 @@ fn table_q_kt(name: &str, dataset: &str, args: &Args) {
 }
 
 pub fn table5(args: &Args) {
-    table_q_kt("table5", &args.get_or("dataset", "blobs8"), args);
+    table_q_kt("table5", &args.get_or("dataset", crate::data::presets::DEFAULT_IMAGE), args);
 }
 
 pub fn table6(args: &Args) {
-    table_q_kt("table6", &args.get_or("dataset", "faces8"), args);
+    table_q_kt("table6", &args.get_or("dataset", crate::data::presets::DEFAULT_FACES), args);
 }
 
 /// Table 7 — cross-method comparison on CLD (FD + NFE).

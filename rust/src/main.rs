@@ -35,21 +35,25 @@ fn main() {
         "serve" => serve(&args),
         "workload" => workload(&args),
         _ => {
+            // The dataset list comes from the preset registry, so a new
+            // preset shows up here without touching the usage string.
+            let datasets = presets::names().collect::<Vec<_>>().join("|");
             eprintln!(
                 "usage: gddim <gen-configs|selfcheck|sample|coeffs|exp|serve|workload> [--flags]\n\
-                 sample flags: --process vpsde|cld|bdm --dataset gmm2d|hard2d|spiral2d|blobs8|faces8\n\
+                 sample flags: --process vpsde|cld|bdm --dataset {datasets}\n\
                  \u{20}              --sampler gddim|gddim-sde|em|ancestral|rk45|heun|sscs\n\
                  \u{20}                        (or full spec grammar, e.g. \"em:lambda=0.5\")\n\
                  \u{20}              --nfe N --q Q --kt R|L --lambda L --rtol R --n N --seed S --corrector\n\
                  \u{20}              --workers W   (persistent engine pool size)\n\
+                 \u{20}              --shard-size BYTES   (per-shard engine state budget)\n\
                  \u{20}              --score-batch N --score-wait MICROS   (cross-key score pooling)\n\
                  serve flags:  --workers W --dispatchers D --requests R --samples S --rate RPS\n\
-                 \u{20}              --samplers SPEC+SPEC+.. --plan-cache-dir DIR\n\
-                 \u{20}              --score-batch N (0 = off) --score-wait MICROS\n\
+                 \u{20}              --dataset NAME --samplers SPEC+SPEC+.. --plan-cache-dir DIR\n\
+                 \u{20}              --shard-size BYTES --score-batch N (0 = off) --score-wait MICROS\n\
                  workload flags: --rates R1,R2,.. (or --rate R) --slo-ms M --poisson\n\
                  \u{20}                --requests R --samples S --nfe N --workers W --dispatchers D\n\
-                 \u{20}                --samplers SPEC+SPEC+.. --plan-cache-dir DIR\n\
-                 \u{20}                --score-batch N (0 = off) --score-wait MICROS"
+                 \u{20}                --dataset NAME --samplers SPEC+SPEC+.. --plan-cache-dir DIR\n\
+                 \u{20}                --shard-size BYTES --score-batch N (0 = off) --score-wait MICROS"
             );
         }
     }
@@ -92,6 +96,10 @@ fn gen_configs() {
     println!("wrote configs/cld_tables.json");
 }
 
+/// Explicit-dimension process construction for the diagnostic
+/// subcommands (`selfcheck`, `coeffs`) that sweep dimensions without a
+/// dataset. Dataset-driven paths (`sample`, the server) size processes
+/// from the preset registry via `gddim::diffusion::process_for`.
 fn build_process(name: &str, d: usize) -> Arc<dyn Process> {
     match name {
         "vpsde" => Arc::new(Vpsde::standard(d)),
@@ -152,13 +160,27 @@ fn spec_from_args(args: &Args) -> Result<SamplerSpec, gddim::Error> {
 
 fn sample(args: &Args) {
     let dataset = args.get_or("dataset", "gmm2d");
-    let spec = presets::by_name(&dataset).expect("unknown dataset");
+    let Some(info) = presets::info(&dataset) else {
+        let known = presets::names().collect::<Vec<_>>().join(", ");
+        eprintln!("error: unknown dataset `{dataset}` (known: {known})");
+        std::process::exit(2);
+    };
+    let spec = info.build();
     let proc_name = args.get_or("process", "cld");
-    let proc = build_process(&proc_name, spec.d);
+    // Registry-sized process: BDM takes the preset's (h, w); vector data
+    // on BDM is a clean CLI error instead of a dimension assert.
+    let proc = match gddim::diffusion::process_for(&proc_name, info) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
     let nfe = args.get_usize("nfe", 50);
     let n = args.get_usize("n", 2000);
     let seed = args.get_u64("seed", 0);
     let workers = args.get_usize("workers", 1);
+    let shard_bytes = args.get_usize("shard-size", EngineConfig::default().shard_bytes);
     // Cross-key score batching: off by default for the one-shot CLI.
     // Pooling needs concurrent shards, i.e. `--workers >= 2` — on the
     // inline engine the scheduler only adds per-eval overhead. Output
@@ -183,6 +205,7 @@ fn sample(args: &Args) {
     let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), nfe);
     let engine = Engine::with_config(EngineConfig {
         workers,
+        shard_bytes,
         score_batch,
         score_wait,
         ..EngineConfig::default()
@@ -217,10 +240,11 @@ fn sample(args: &Args) {
 
 fn coeffs(args: &Args) {
     // App. C.3: "The calculation of all these coefficients can be done
-    // within 1 min." Report our Stage-I timings.
+    // within 1 min." Report our Stage-I timings — BDM is swept across the
+    // image-resolution ladder (8/16/32), since its plan cost scales with
+    // the per-frequency diagonal dimension.
     let nfe = args.get_usize("nfe", 50);
-    for name in ["vpsde", "cld", "bdm"] {
-        let d = if name == "bdm" { 64 } else { 2 };
+    for (name, d) in [("vpsde", 2usize), ("cld", 2), ("bdm", 64), ("bdm", 256), ("bdm", 1024)] {
         let p = build_process(name, d);
         let grid = TimeGrid::uniform(p.t_min(), p.t_max(), nfe);
         for (label, cfg) in [
@@ -232,7 +256,7 @@ fn coeffs(args: &Args) {
             ("stochastic λ=1", PlanConfig::stochastic(1.0)),
         ] {
             let plan = SamplerPlan::build(p.as_ref(), &grid, &cfg);
-            println!("{name:6} {label:22} N={nfe}: {:.3}s", plan.build_seconds);
+            println!("{name:6} d={d:<5} {label:22} N={nfe}: {:.3}s", plan.build_seconds);
         }
     }
 }

@@ -6,8 +6,19 @@
 //! 1-D DCT-II matrix and its separable 2-D application; image sizes here
 //! are small (≤ 32) so the dense O(n²) matrix apply is the right tool
 //! (and is exactly invertible by the transpose, which the tests verify).
+//!
+//! The 2-D apply is the per-row hot path of BDM serving (`lift_data` /
+//! `proj_data` run once per sample and once per oracle mode), so it
+//! works out of a reusable per-thread scratch buffer: after the first
+//! call on a thread, [`Dct2::forward_into`] / [`Dct2::inverse_into`] do
+//! **zero heap allocation** — at 32×32 (1024-dim rows) the old
+//! fresh-`Vec`-per-pass scheme was the dominant per-call cost. The
+//! allocating [`Dct2::forward`] / [`Dct2::inverse`] wrappers remain for
+//! the `Process` trait surface (which returns `Vec`s); their only
+//! allocation is that output vector.
 
 use crate::math::linalg::MatD;
+use std::cell::RefCell;
 
 /// Orthonormal DCT-II matrix `C` with `y = C x`:
 /// `C[k][n] = s_k * cos(π (n + ½) k / N)`, `s_0 = √(1/N)`, `s_k = √(2/N)`.
@@ -29,6 +40,15 @@ pub fn frequencies_squared(n: usize) -> Vec<f64> {
     (0..n).map(|k| (std::f64::consts::PI * k as f64 / n as f64).powi(2)).collect()
 }
 
+thread_local! {
+    /// Per-thread intermediate for the separable 2-D apply. Keyed by
+    /// thread rather than by `Dct2` instance so one shared transform
+    /// (`Bdm` crosses engine worker threads by reference) never needs a
+    /// lock, and so the buffer amortizes across every transform size a
+    /// thread touches (grown, never shrunk).
+    static DCT_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
 /// Separable 2-D DCT over a row-major `h×w` image: `Y = C_h X C_wᵀ`.
 pub struct Dct2 {
     pub h: usize,
@@ -42,27 +62,74 @@ impl Dct2 {
         Dct2 { h, w, ch: dct_matrix(h), cw: dct_matrix(w) }
     }
 
-    /// Forward DCT (pixel -> frequency), out-of-place.
+    /// Forward DCT (pixel -> frequency), allocating the output.
     pub fn forward(&self, img: &[f64]) -> Vec<f64> {
-        self.apply(img, false)
+        let mut out = vec![0.0; self.h * self.w];
+        self.forward_into(img, &mut out);
+        out
     }
 
-    /// Inverse DCT (frequency -> pixel).
+    /// Inverse DCT (frequency -> pixel), allocating the output.
     pub fn inverse(&self, freq: &[f64]) -> Vec<f64> {
-        self.apply(freq, true)
+        let mut out = vec![0.0; self.h * self.w];
+        self.inverse_into(freq, &mut out);
+        out
     }
 
-    fn apply(&self, x: &[f64], inverse: bool) -> Vec<f64> {
-        assert_eq!(x.len(), self.h * self.w);
-        let xm = MatD { n: self.h, m: self.w, data: x.to_vec() };
-        let out = if inverse {
-            // X = C_hᵀ Y C_w
-            self.ch.transpose().matmul(&xm).matmul(&self.cw)
-        } else {
-            // Y = C_h X C_wᵀ
-            self.ch.matmul(&xm).matmul(&self.cw.transpose())
-        };
-        out.data
+    /// Forward DCT into a caller-provided buffer (allocation-free after
+    /// the per-thread scratch warms up).
+    pub fn forward_into(&self, img: &[f64], out: &mut [f64]) {
+        self.apply(img, out, false);
+    }
+
+    /// Inverse DCT into a caller-provided buffer.
+    pub fn inverse_into(&self, freq: &[f64], out: &mut [f64]) {
+        self.apply(freq, out, true);
+    }
+
+    /// Both passes of the separable transform — `Y = C_h X C_wᵀ`
+    /// forward, `X = C_hᵀ Y C_w` inverse — through one `h×w` per-thread
+    /// scratch row block. No per-call `Vec`s, no transposed matrix
+    /// materialization: the transpose is an index swap on the read.
+    fn apply(&self, x: &[f64], out: &mut [f64], inverse: bool) {
+        let (h, w) = (self.h, self.w);
+        assert_eq!(x.len(), h * w);
+        assert_eq!(out.len(), h * w);
+        DCT_SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            if scratch.len() < h * w {
+                scratch.resize(h * w, 0.0);
+            }
+            let tmp = &mut scratch[..h * w];
+            // Rows pass: tmp = M₁ X with M₁ = C_h (forward) or C_hᵀ.
+            for i in 0..h {
+                let trow = &mut tmp[i * w..(i + 1) * w];
+                trow.fill(0.0);
+                for k in 0..h {
+                    let a = if inverse { self.ch[(k, i)] } else { self.ch[(i, k)] };
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let xrow = &x[k * w..(k + 1) * w];
+                    for (t, &xv) in trow.iter_mut().zip(xrow) {
+                        *t += a * xv;
+                    }
+                }
+            }
+            // Columns pass: out = tmp M₂ with M₂ = C_wᵀ (forward) or C_w.
+            for i in 0..h {
+                let trow = &tmp[i * w..(i + 1) * w];
+                let orow = &mut out[i * w..(i + 1) * w];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let mut acc = 0.0;
+                    for (k, &tv) in trow.iter().enumerate() {
+                        let b = if inverse { self.cw[(k, j)] } else { self.cw[(j, k)] };
+                        acc += tv * b;
+                    }
+                    *o = acc;
+                }
+            }
+        });
     }
 
     /// Per-coefficient eigenvalues of the 2-D Laplacian blur:
@@ -87,7 +154,7 @@ mod tests {
 
     #[test]
     fn dct_matrix_is_orthonormal() {
-        for n in [1usize, 2, 4, 8, 16] {
+        for n in [1usize, 2, 4, 8, 16, 32] {
             let c = dct_matrix(n);
             let ctc = c.transpose().matmul(&c);
             assert!(
@@ -99,12 +166,23 @@ mod tests {
     }
 
     #[test]
-    fn dct2_roundtrip() {
+    fn dct2_roundtrip_at_every_supported_side() {
         let mut rng = Rng::seed_from(31);
-        let d = Dct2::new(8, 8);
-        let img: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        for side in [8usize, 16, 32] {
+            let d = Dct2::new(side, side);
+            let img: Vec<f64> = (0..side * side).map(|_| rng.normal()).collect();
+            let back = d.inverse(&d.forward(&img));
+            assert_allclose(&back, &img, 1e-12, 1e-12, &format!("dct2 roundtrip {side}"));
+        }
+    }
+
+    #[test]
+    fn dct2_roundtrip_non_square() {
+        let mut rng = Rng::seed_from(33);
+        let d = Dct2::new(8, 16);
+        let img: Vec<f64> = (0..128).map(|_| rng.normal()).collect();
         let back = d.inverse(&d.forward(&img));
-        assert_allclose(&back, &img, 1e-12, 1e-12, "dct2 roundtrip");
+        assert_allclose(&back, &img, 1e-12, 1e-12, "dct2 roundtrip 8x16");
     }
 
     #[test]
@@ -119,14 +197,36 @@ mod tests {
     }
 
     #[test]
-    fn dct_preserves_l2_norm() {
+    fn dct_preserves_l2_norm_at_every_supported_side() {
         let mut rng = Rng::seed_from(37);
-        let d = Dct2::new(8, 8);
-        let img: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
-        let f = d.forward(&img);
-        let n1: f64 = img.iter().map(|x| x * x).sum();
-        let n2: f64 = f.iter().map(|x| x * x).sum();
-        assert!((n1 - n2).abs() < 1e-10 * n1, "Parseval");
+        for side in [8usize, 16, 32] {
+            let d = Dct2::new(side, side);
+            let img: Vec<f64> = (0..side * side).map(|_| rng.normal()).collect();
+            let f = d.forward(&img);
+            let n1: f64 = img.iter().map(|x| x * x).sum();
+            let n2: f64 = f.iter().map(|x| x * x).sum();
+            assert!((n1 - n2).abs() < 1e-10 * n1, "Parseval at {side}");
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ones_bit_for_bit() {
+        // The scratch-buffer path is the same arithmetic as the
+        // allocating wrappers (they delegate), and interleaving sizes on
+        // one thread must not cross-contaminate the shared scratch.
+        let mut rng = Rng::seed_from(41);
+        let small = Dct2::new(8, 8);
+        let big = Dct2::new(32, 32);
+        let a: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..1024).map(|_| rng.normal()).collect();
+        let mut out_a = vec![0.0; 64];
+        let mut out_b = vec![0.0; 1024];
+        big.forward_into(&b, &mut out_b);
+        small.forward_into(&a, &mut out_a);
+        assert_eq!(out_a, small.forward(&a), "8x8 forward diverged after 32x32 warm-up");
+        assert_eq!(out_b, big.forward(&b), "32x32 forward_into vs forward");
+        small.inverse_into(&a, &mut out_a);
+        assert_eq!(out_a, small.inverse(&a), "inverse_into vs inverse");
     }
 
     #[test]

@@ -20,11 +20,13 @@ pub fn run(args: &Args) {
     let rate = args.get_f64("rate", 200.0);
     let max_wait_ms = args.get_u64("max-wait-ms", 5);
     // `+`-separated sampler specs (the spec grammar uses commas); every
-    // (vpsde|cld) × spec combination that validates becomes a key — so
-    // e.g. `--samplers gddim:q=2+heun+sscs+rk45` serves heun and rk45 on
-    // both processes and sscs on CLD only.
+    // (vpsde|cld|bdm) × spec combination that validates becomes a key —
+    // so e.g. `--samplers gddim:q=2+heun+sscs+rk45` serves heun and rk45
+    // on both vector processes, sscs on CLD only, and (for an image
+    // `--dataset` like blobs16) everything BDM-compatible on BDM too.
     let samplers = args.get_or("samplers", "gddim:q=2");
-    let keys = match cli_key_mix(&samplers, "gmm2d", nfe) {
+    let dataset = args.get_or("dataset", "gmm2d");
+    let keys = match cli_key_mix(&samplers, &dataset, nfe) {
         Ok(k) => k,
         Err(e) => {
             eprintln!("error: {e}");
@@ -47,6 +49,7 @@ pub fn run(args: &Args) {
         },
         Engine::with_config(EngineConfig {
             workers,
+            shard_bytes: args.get_usize("shard-size", EngineConfig::default().shard_bytes),
             score_batch,
             score_wait,
             ..EngineConfig::default()
@@ -66,9 +69,9 @@ pub fn run(args: &Args) {
         seed: args.get_u64("seed", 0),
     };
     println!(
-        "serving {} requests × {} samples (poisson {:.0} req/s, {} engine workers, \
+        "serving {} requests × {} samples on {} (poisson {:.0} req/s, {} engine workers, \
          {} dispatchers, NFE {}, samplers [{}])…",
-        n_requests, samples, rate, workers, dispatchers, nfe, samplers
+        n_requests, samples, dataset, rate, workers, dispatchers, nfe, samplers
     );
     let gen = ClosedLoop::new(spec);
     let responses = gen.drive(&router, |id, key, n, seed| GenRequest {

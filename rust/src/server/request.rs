@@ -58,13 +58,31 @@ impl PlanKey {
             "vpsde" | "cld" | "bdm" => {}
             other => return Err(Error::msg(format!("unknown process `{other}`"))),
         }
-        if presets::by_name(&self.dataset).is_none() {
+        if presets::info(&self.dataset).is_none() {
             return Err(Error::msg(format!("unknown dataset `{}`", self.dataset)));
         }
+        self.validate_dims()?;
         if self.nfe == 0 {
             return Err(Error::msg("nfe must be >= 1"));
         }
         self.spec.validate(&self.process)
+    }
+
+    /// Dimension compatibility of `(process, dataset)` for datasets the
+    /// built-in catalogue knows. BDM is an image-space process whose
+    /// `(h, w)` comes from the dataset's registry metadata, so a vector
+    /// dataset (or any preset without image dims) on BDM is rejected
+    /// here — at submit time — instead of panicking a dispatcher deep in
+    /// oracle construction. Dataset names the catalogue does *not* know
+    /// pass: a custom `PreparedFactory` may serve them and remains the
+    /// authority on its own dimensioning.
+    pub fn validate_dims(&self) -> crate::Result<()> {
+        if self.process == "bdm" {
+            if let Some(info) = presets::info(&self.dataset) {
+                info.require_image_dims()?;
+            }
+        }
+        Ok(())
     }
 
     /// JSON form used by the plan persistence files (the spec rides as
@@ -185,6 +203,27 @@ mod tests {
         assert!(PlanKey::gddim("cld", "gmm2d", 0, 2).validate().is_err());
         assert!(PlanKey::new("vpsde", "gmm2d", SamplerSpec::Sscs, 10).validate().is_err());
         assert!(PlanKey::new("cld", "gmm2d", SamplerSpec::Sscs, 10).validate().is_ok());
+    }
+
+    #[test]
+    fn validation_checks_bdm_image_dims_at_submit_time() {
+        // BDM on vector data is a structural mismatch, caught before any
+        // dispatcher touches the key (the old path panicked inside the
+        // oracle factory's dimension assert).
+        for dataset in ["gmm2d", "hard2d", "spiral2d"] {
+            let key = PlanKey::gddim("bdm", dataset, 10, 2);
+            assert!(key.validate().is_err(), "{dataset} on bdm must be rejected");
+            assert!(key.validate_dims().is_err(), "{dataset} dims check must fail");
+        }
+        // Every image preset serves on BDM at its registry dims.
+        for dataset in ["blobs8", "faces8", "blobs16", "faces16", "blobs32"] {
+            assert!(PlanKey::gddim("bdm", dataset, 10, 2).validate().is_ok(), "{dataset}");
+        }
+        // Unknown names pass the dims check (custom-factory freedom) but
+        // still fail full catalogue validation.
+        let custom = PlanKey::gddim("bdm", "my-own-images", 10, 2);
+        assert!(custom.validate_dims().is_ok());
+        assert!(custom.validate().is_err());
     }
 
     #[test]

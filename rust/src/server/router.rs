@@ -25,7 +25,7 @@ use std::time::{Duration, Instant};
 use crate::coeffs::plan::SamplerPlan;
 use crate::data::presets;
 use crate::diffusion::process::KtKind;
-use crate::diffusion::{Bdm, Cld, Process, TimeGrid, Vpsde};
+use crate::diffusion::{Process, TimeGrid};
 use crate::engine::{Engine, Job};
 use crate::samplers::{SampleOutput, Sampler, SamplerSpec};
 use crate::score::model::ScoreModel;
@@ -80,19 +80,13 @@ pub fn oracle_factory() -> Box<PreparedFactory> {
     let models: Mutex<HashMap<(String, String, KtKind), Arc<dyn ScoreModel>>> =
         Mutex::new(HashMap::new());
     Box::new(move |key: &PlanKey, preloaded: Option<Arc<SamplerPlan>>| {
-        let spec = presets::by_name(&key.dataset)
+        let info = presets::info(&key.dataset)
             .ok_or_else(|| crate::Error::msg(format!("unknown dataset `{}`", key.dataset)))?;
-        let proc: Arc<dyn Process> = match key.process.as_str() {
-            "vpsde" => Arc::new(Vpsde::standard(spec.d)),
-            "cld" => Arc::new(Cld::standard(spec.d)),
-            "bdm" => {
-                let side = (spec.d as f64).sqrt() as usize;
-                Arc::new(Bdm::standard(side, side))
-            }
-            other => {
-                return Err(crate::Error::msg(format!("unknown process `{other}`")))
-            }
-        };
+        let spec = info.build();
+        // Registry-sized construction: BDM gets the preset's real (h, w)
+        // instead of a sqrt(d) guess, and a vector dataset on BDM is a
+        // clean rejection rather than a dimension-assert panic.
+        let proc = crate::diffusion::process_for(&key.process, info)?;
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), key.nfe);
         let kt = key.spec.model_kt();
         let model: Arc<dyn ScoreModel> = {
@@ -219,16 +213,19 @@ impl Router {
 
     /// Enqueue a request; the receiver yields exactly one response. A
     /// structurally invalid key (bad sampler config — e.g. SSCS off
-    /// CLD, λ ≤ 0, nfe = 0) is answered immediately with
-    /// `GenResponse::error` set and never reaches a dispatcher; whether
-    /// a *well-formed* key's process/dataset is servable is the
-    /// factory's call, answered per request at preparation time.
+    /// CLD, λ ≤ 0, nfe = 0 — or a catalogue dataset whose dimensions
+    /// cannot fit the process, e.g. 2-D vector data on the image-space
+    /// BDM) is answered immediately with `GenResponse::error` set and
+    /// never reaches a dispatcher; whether a *well-formed* key's
+    /// process/dataset is servable is the factory's call, answered per
+    /// request at preparation time (datasets the catalogue does not
+    /// know pass the dims check untouched).
     pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
         let (tx, rx) = channel();
         let structural = if req.key.nfe == 0 {
             Err(crate::Error::msg("nfe must be >= 1"))
         } else {
-            req.key.spec.validate(&req.key.process)
+            req.key.validate_dims().and_then(|()| req.key.spec.validate(&req.key.process))
         };
         if let Err(e) = structural {
             let _ = tx.send(GenResponse::rejected(req.id, e.to_string()));
@@ -709,6 +706,10 @@ mod tests {
             PlanKey::new("vpsde", "gmm2d", SamplerSpec::Sscs, 10),
             PlanKey::new("ddpmpp", "gmm2d", SamplerSpec::gddim(2), 10),
             PlanKey::new("cld", "imagenet", SamplerSpec::gddim(2), 10),
+            // 2-D vector data on the image-space BDM: rejected at submit
+            // time (the old path panicked inside the oracle's dimension
+            // assert once the batch reached a dispatcher).
+            PlanKey::new("bdm", "gmm2d", SamplerSpec::gddim(2), 10),
         ];
         for (id, key) in bad.into_iter().enumerate() {
             let rx = router.submit(GenRequest { id: id as u64, n: 8, key, seed: 0 });
@@ -807,6 +808,7 @@ mod tests {
                     shard_size: 64,
                     score_batch,
                     score_wait: Duration::from_millis(20),
+                    ..EngineConfig::default()
                 }),
                 BatcherConfig { max_batch: 4096, max_wait: Duration::from_millis(10) },
                 oracle_factory(),

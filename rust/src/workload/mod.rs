@@ -376,9 +376,12 @@ pub fn engine_throughput(engine: &Engine, job: &Job<'_>, repeats: usize) -> f64 
 /// Build the key mix for the serving CLIs: one key per (process ×
 /// sampler spec) on `dataset`, with specs parsed from a `+`-separated
 /// `--samplers` list (`+` because the spec grammar itself uses commas).
-/// Keys a spec cannot serve (e.g. SSCS off CLD) are filtered by
-/// validation rather than erroring the whole mix; an *empty* result
-/// (every token invalid) is an error the CLI reports cleanly.
+/// Every known process is probed and keys a spec or dataset cannot
+/// serve (SSCS off CLD, BDM on vector data) are filtered by validation
+/// rather than hard-coded pairs — so an image dataset like `blobs16`
+/// automatically serves on BDM while `gmm2d` stays vpsde/cld. An
+/// *empty* result (every combination invalid) is an error the CLI
+/// reports cleanly.
 pub fn cli_key_mix(samplers: &str, dataset: &str, nfe: usize) -> crate::Result<Vec<PlanKey>> {
     let mut keys = Vec::new();
     for token in samplers.split('+') {
@@ -393,7 +396,7 @@ pub fn cli_key_mix(samplers: &str, dataset: &str, nfe: usize) -> crate::Result<V
                 continue;
             }
         };
-        for process in ["vpsde", "cld"] {
+        for process in ["vpsde", "cld", "bdm"] {
             let key = PlanKey::new(process, dataset, spec.clone(), nfe);
             if key.validate().is_ok() {
                 keys.push(key);
@@ -421,6 +424,8 @@ pub fn run_cli(args: &crate::util::cli::Args) {
     let seed = args.get_u64("seed", 0);
     let poisson = args.has("poisson");
     let samplers = args.get_or("samplers", "gddim:q=2");
+    let dataset = args.get_or("dataset", "gmm2d");
+    let shard_bytes = args.get_usize("shard-size", EngineConfig::default().shard_bytes);
     // Cross-key score batching (the engine's scheduler): on by default
     // for the serving CLIs — `--score-batch 0` turns it off.
     let score_batch = args.get_usize("score-batch", 4096);
@@ -438,10 +443,11 @@ pub fn run_cli(args: &crate::util::cli::Args) {
     use crate::server::router::RouterConfig;
 
     println!(
-        "open-loop workload: {} requests × {} samples, NFE {}, {} workers, {} dispatchers, \
-         samplers [{}], SLO p99 ≤ {:.0}ms, arrivals {}, score-batch {}",
+        "open-loop workload: {} requests × {} samples on {}, NFE {}, {} workers, \
+         {} dispatchers, samplers [{}], SLO p99 ≤ {:.0}ms, arrivals {}, score-batch {}",
         n_requests,
         samples,
+        dataset,
         nfe,
         workers,
         dispatchers,
@@ -450,7 +456,7 @@ pub fn run_cli(args: &crate::util::cli::Args) {
         if poisson { "poisson" } else { "uniform" },
         if score_batch > 0 { score_batch.to_string() } else { "off".to_string() },
     );
-    let keys = match cli_key_mix(&samplers, "gmm2d", nfe) {
+    let keys = match cli_key_mix(&samplers, &dataset, nfe) {
         Ok(k) => k,
         Err(e) => {
             eprintln!("error: {e}");
@@ -464,7 +470,13 @@ pub fn run_cli(args: &crate::util::cli::Args) {
                 plan_cache_capacity: args.get_usize("plan-cache", 64),
                 plan_cache_dir: args.get("plan-cache-dir").map(std::path::PathBuf::from),
             },
-            EngineConfig { workers, score_batch, score_wait, ..EngineConfig::default() },
+            EngineConfig {
+                workers,
+                shard_bytes,
+                score_batch,
+                score_wait,
+                ..EngineConfig::default()
+            },
             BatcherConfig {
                 max_batch: args.get_usize("max-batch", 4096),
                 max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 5)),
@@ -513,6 +525,21 @@ mod tests {
         assert_eq!(out.len(), 10);
         assert!(out.iter().all(|r| r.xs.len() == 8 * 2));
         router.shutdown();
+    }
+
+    #[test]
+    fn cli_key_mix_adds_bdm_for_image_datasets_only() {
+        // Validation, not a hard-coded process list, decides the mix: 2-D
+        // vector data never lands on the image-space BDM, image presets do.
+        let vec_mix = cli_key_mix("gddim:q=2", "gmm2d", 10).unwrap();
+        assert_eq!(vec_mix.len(), 2, "gmm2d serves on vpsde + cld only");
+        assert!(vec_mix.iter().all(|k| k.process != "bdm"));
+        let img_mix = cli_key_mix("gddim:q=2+ancestral", "blobs16", 10).unwrap();
+        assert_eq!(img_mix.len(), 6, "blobs16 serves 2 specs on all 3 processes");
+        assert!(img_mix.iter().any(|k| k.process == "bdm"));
+        for k in &img_mix {
+            assert!(k.validate().is_ok(), "{:?}", k);
+        }
     }
 
     #[test]

@@ -16,8 +16,11 @@
 //!
 //! Plus: the trait objects are Send/Sync (they cross pool threads), the
 //! router serves every `SamplerSpec` variant end-to-end on vpsde/blobs8
-//! (SSCS cleanly rejected off CLD), and λ survives a key round trip
-//! without the old milli-unit truncation.
+//! (SSCS cleanly rejected off CLD), blobs16 serves on the registry-sized
+//! BDM (vector data on BDM is a submit-time rejection), the d=1024
+//! blobs32 preset is worker-count bit-identical under the default shard
+//! byte budget on BDM and VPSDE, and λ survives a key round trip without
+//! the old milli-unit truncation.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -238,6 +241,51 @@ fn engine_is_worker_count_invariant_for_all_seven_samplers() {
     }
 }
 
+/// Dimension-scale bit-identity: the blobs32 preset (d = 1024, the
+/// largest state the catalogue serves) on both the image-space BDM and
+/// VPSDE must merge to identical bytes for 1/2/4 workers under the
+/// engine's *default* dimension-aware shard budget (16 rows/shard at
+/// dim_u = 1024). This is the worker-count contract of the 8×8 suite,
+/// re-proved where the byte budget actually changes the layout.
+#[test]
+fn engine_bit_identity_at_d1024_blobs32() {
+    let spec = presets::blobs32();
+    assert_eq!(spec.d, 1024);
+    let procs: Vec<Arc<dyn Process>> = vec![
+        Arc::new(gddim::diffusion::Bdm::standard(32, 32)),
+        Arc::new(gddim::diffusion::Vpsde::standard(1024)),
+    ];
+    for proc in procs {
+        let oracle = GmmOracle::new(proc.clone(), spec.clone(), KtKind::R);
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 6);
+        let plan =
+            SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+        let sampler = GddimDet { plan: &plan };
+        let run = |workers: usize| {
+            let cfg = EngineConfig { workers, ..EngineConfig::default() };
+            assert_eq!(cfg.rows_per_shard(proc.dim_u()), 16, "{}: budget rows", proc.name());
+            Engine::with_config(cfg).run(&Job {
+                proc: proc.as_ref(),
+                model: &oracle,
+                sampler: &sampler,
+                n: 40, // 3 shards of 16/16/8 under the default byte budget
+                seed: SEED,
+            })
+        };
+        let one = run(1);
+        assert_eq!(one.xs.len(), 40 * 1024, "{}: output shape", proc.name());
+        assert!(one.xs.iter().all(|x| x.is_finite()), "{}: non-finite output", proc.name());
+        for workers in [2usize, 4] {
+            let multi = run(workers);
+            assert_bytes_equal(
+                &one,
+                &multi,
+                &format!("blobs32 on {} @ {workers} workers", proc.name()),
+            );
+        }
+    }
+}
+
 /// The cross-key scheduler's acceptance contract: for **every** sampler
 /// spec in the suite and every worker count, pooled score execution
 /// (`score_batch > 0`) is bit-identical to the direct-call path. The
@@ -263,6 +311,7 @@ fn score_scheduler_is_bit_identical_for_every_sampler_and_worker_count() {
                 shard_size: 16,
                 score_batch,
                 score_wait: Duration::from_millis(50),
+                ..EngineConfig::default()
             });
             let out = engine.run(&Job {
                 proc: f.proc.as_ref(),
@@ -352,6 +401,35 @@ fn router_serves_every_spec_variant_on_vpsde_blobs8() {
     let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
     assert!(resp.error.is_none(), "sscs on CLD rejected: {:?}", resp.error);
     assert!(resp.xs.iter().all(|x| x.is_finite()));
+    router.shutdown();
+}
+
+/// The wider-data-scale service contract: a 16×16 preset round-trips
+/// through the router on the image-space BDM (the factory sizes BDM
+/// from the registry's `(h, w)`, not a `sqrt(d)` guess), while vector
+/// data on BDM is rejected at submit time instead of panicking a
+/// dispatcher inside the oracle's dimension assert.
+#[test]
+fn router_serves_blobs16_on_bdm_and_rejects_bdm_on_vector_data() {
+    let router = Router::new(2, BatcherConfig::default(), oracle_factory());
+    for (id, dataset, d) in [(0u64, "blobs16", 256usize), (1, "blobs8", 64)] {
+        let key = PlanKey::gddim("bdm", dataset, 6, 2);
+        let rx = router.submit(GenRequest { id, n: 4, key, seed: id });
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.error.is_none(), "{dataset} on bdm rejected: {:?}", resp.error);
+        assert_eq!(resp.xs.len(), 4 * d, "{dataset}: wrong sample shape");
+        assert_eq!(resp.dim_x, d);
+        assert!(resp.xs.iter().all(|x| x.is_finite()), "{dataset}: non-finite samples");
+    }
+    let rx = router.submit(GenRequest {
+        id: 9,
+        n: 4,
+        key: PlanKey::gddim("bdm", "gmm2d", 6, 2),
+        seed: 0,
+    });
+    let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert!(resp.error.is_some(), "2-D vector data on bdm must be a clean rejection");
+    assert!(resp.xs.is_empty());
     router.shutdown();
 }
 
