@@ -18,9 +18,17 @@ use gddim::server::request::{GenRequest, PlanKey};
 use gddim::server::router::{oracle_factory, Router, RouterConfig};
 use gddim::util::bench::Table;
 use gddim::util::cli::Args;
+use gddim::workload::bench_report::{BenchReport, BenchScenario};
 use gddim::workload::{
     engine_throughput, max_rate_under_slo, open_loop_probe, ClosedLoop, WorkloadSpec,
 };
+
+/// `GDDIM_BENCH_QUICK=1` shrinks every sweep to CI-probe size (same
+/// scenario set, smaller request counts) — the mode the `perf-probe` CI
+/// job runs on every PR. Any nonempty value other than "0" counts.
+fn quick_mode() -> bool {
+    std::env::var("GDDIM_BENCH_QUICK").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
 
 fn run_once(
     rate: f64,
@@ -55,8 +63,9 @@ fn run_once(
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
-    let n_requests = args.get_usize("requests", 48);
-    let samples = args.get_usize("samples", 64);
+    let quick = quick_mode();
+    let n_requests = args.get_usize("requests", if quick { 12 } else { 48 });
+    let samples = args.get_usize("samples", if quick { 16 } else { 64 });
     let mut t = Table::new(
         "Serving: Poisson workload on the batched sampler (gDDIM CLD NFE=20)",
         &["rate(req/s)", "batching", "samples/s", "p50(s)", "p99(s)", "mean batch"],
@@ -76,10 +85,21 @@ fn main() {
     }
     t.emit("serving");
 
-    engine_scaling(&args);
-    dimension_scaling(&args);
-    open_loop_slo(&args);
-    score_batching(&args);
+    engine_scaling(&args, quick);
+    let mut scenarios = dimension_scaling(&args, quick);
+    open_loop_slo(&args, quick);
+    scenarios.extend(score_batching(&args, quick));
+
+    // --json PATH: persist the scenario set as a schema-versioned
+    // snapshot (the perf trajectory; see workload::bench_report).
+    if let Some(path) = args.get("json") {
+        let source = std::env::var("GDDIM_BENCH_SOURCE").unwrap_or_else(|_| "local".to_string());
+        let mut report = BenchReport::new(quick, &source);
+        report.scenarios = scenarios;
+        report.validate().expect("bench report must pass its own schema check");
+        report.write(path).expect("bench report write");
+        println!("wrote {path} ({} scenarios, quick={quick})", report.scenarios.len());
+    }
 }
 
 /// Dimension scale sweep (the perf trajectory's resolution axis): one
@@ -87,14 +107,15 @@ fn main() {
 /// sharded under the engine's default byte budget. Reports the derived
 /// rows/shard next to samples/s so shard-memory policy and throughput
 /// move together in the record.
-fn dimension_scaling(args: &Args) {
-    let n = args.get_usize("scale-batch", 512);
+fn dimension_scaling(args: &Args, quick: bool) -> Vec<BenchScenario> {
+    let n = args.get_usize("scale-batch", if quick { 128 } else { 512 });
     let nfe = args.get_usize("scale-nfe", 10);
     let workers = args.get_usize("scale-workers", 4);
     let mut t = Table::new(
         "Dimension scaling: gDDIM q=2 batch throughput by image resolution (default shard budget)",
         &["dataset", "d", "process", "rows/shard", "samples/s"],
     );
+    let mut scenarios = Vec::new();
     for name in ["blobs8", "blobs16", "blobs32"] {
         let info = presets::info(name).expect("image preset in registry");
         let spec = info.build();
@@ -117,9 +138,17 @@ fn dimension_scaling(args: &Args) {
                 rows.to_string(),
                 format!("{tput:.0}"),
             ]);
+            // Closed batch throughput scenario: issued = completed = the
+            // batch size; no latency split (no queueing in this driver).
+            let mut s = BenchScenario::named(&format!("dim_{name}_{proc_name}"));
+            s.issued = n as u64;
+            s.completed = n as u64;
+            s.samples_per_sec = Some(tput);
+            scenarios.push(s);
         }
     }
     t.emit("serving_scale");
+    scenarios
 }
 
 /// Cross-key score batching on a heterogeneous key mix: four sampler
@@ -129,9 +158,9 @@ fn dimension_scaling(args: &Args) {
 /// scheduler off/on on the same open-loop workload and reports the
 /// realized batch fill (`rows/call`) and cross-key coalescing counters
 /// straight from the engine stats.
-fn score_batching(args: &Args) {
-    let n_requests = args.get_usize("open-requests", 40);
-    let samples = args.get_usize("hetero-samples", 16);
+fn score_batching(args: &Args, quick: bool) -> Vec<BenchScenario> {
+    let n_requests = args.get_usize("open-requests", if quick { 12 } else { 40 });
+    let samples = args.get_usize("hetero-samples", if quick { 8 } else { 16 });
     let rate = args.get_f64("hetero-rate", 400.0);
     let keys = vec![
         PlanKey::gddim("cld", "gmm2d", 20, 1),
@@ -148,6 +177,7 @@ fn score_batching(args: &Args) {
         "Cross-key score batching: heterogeneous 4-key mix (CLD NFE=20), scheduler off vs on",
         &["score-batch", "done", "p50(s)", "p99(s)", "score calls", "rows/call", "cross-job"],
     );
+    let mut scenarios = Vec::new();
     for score_batch in [0usize, 4096] {
         let (report, metrics) = open_loop_probe(
             RouterConfig { dispatchers: 4, ..RouterConfig::default() },
@@ -178,8 +208,11 @@ fn score_batching(args: &Args) {
             if score_batch == 0 { "-".into() } else { format!("{:.1}", engine.rows_per_call()) },
             if score_batch == 0 { "-".into() } else { engine.coalesced_keys.to_string() },
         ]);
+        let name = if score_batch == 0 { "hetero4_sched_off" } else { "hetero4_sched_on" };
+        scenarios.push(BenchScenario::from_probe(name, &report, samples, Some(&engine)));
     }
     t.emit("serving_score_batching");
+    scenarios
 }
 
 /// Open-loop SLO bench: inject at fixed rates regardless of completion
@@ -189,12 +222,13 @@ fn score_batching(args: &Args) {
 /// point runs `workload::open_loop_probe` — the same harness as the
 /// `gddim workload` subcommand — against a 4-dispatcher, 1-worker-engine
 /// router (the closed-loop bench's thread budget).
-fn open_loop_slo(args: &Args) {
-    let n_requests = args.get_usize("open-requests", 40);
-    let samples = args.get_usize("samples", 64);
+fn open_loop_slo(args: &Args, quick: bool) {
+    let n_requests = args.get_usize("open-requests", if quick { 12 } else { 40 });
+    let samples = args.get_usize("samples", if quick { 16 } else { 64 });
     let slo_ms = args.get_f64("slo-ms", 100.0);
     let rates: Vec<f64> = match args.get("rates") {
         Some(list) => list.split(',').map(|s| s.trim().parse().expect("bad --rates")).collect(),
+        None if quick => vec![200.0],
         None => vec![50.0, 200.0, 800.0],
     };
     let mut t = Table::new(
@@ -241,8 +275,8 @@ fn open_loop_slo(args: &Args) {
 /// Engine worker-scaling sweep: one fixed batched job, increasing pool
 /// sizes. The headline number for the sharded engine — samples/s must
 /// grow from 1 worker to 4 on any multicore box.
-fn engine_scaling(args: &Args) {
-    let n = args.get_usize("engine-batch", 8192);
+fn engine_scaling(args: &Args, quick: bool) {
+    let n = args.get_usize("engine-batch", if quick { 1024 } else { 8192 });
     let nfe = args.get_usize("nfe", 20);
     let spec = presets::gmm2d();
     let proc = Arc::new(Cld::standard(spec.d));

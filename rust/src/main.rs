@@ -8,6 +8,7 @@
 //!   coeffs                 time Stage-I plan construction (App. C.3 "within 1 min")
 //!   serve                  run the batched sampling service demo
 //!   workload               open-loop SLO workload: rate sweep + latency percentiles
+//!   benchdiff              compare two BENCH_serving.json snapshots (perf gate)
 
 use std::sync::Arc;
 
@@ -34,12 +35,14 @@ fn main() {
         "exp" => exp(&args),
         "serve" => serve(&args),
         "workload" => workload(&args),
+        "benchdiff" => benchdiff(&args),
         _ => {
             // The dataset list comes from the preset registry, so a new
             // preset shows up here without touching the usage string.
             let datasets = presets::names().collect::<Vec<_>>().join("|");
             eprintln!(
-                "usage: gddim <gen-configs|selfcheck|sample|coeffs|exp|serve|workload> [--flags]\n\
+                "usage: gddim <gen-configs|selfcheck|sample|coeffs|exp|serve|workload|benchdiff> \
+                 [--flags]\n\
                  sample flags: --process vpsde|cld|bdm --dataset {datasets}\n\
                  \u{20}              --sampler gddim|gddim-sde|em|ancestral|rk45|heun|sscs\n\
                  \u{20}                        (or full spec grammar, e.g. \"em:lambda=0.5\")\n\
@@ -53,7 +56,9 @@ fn main() {
                  workload flags: --rates R1,R2,.. (or --rate R) --slo-ms M --poisson\n\
                  \u{20}                --requests R --samples S --nfe N --workers W --dispatchers D\n\
                  \u{20}                --dataset NAME --samplers SPEC+SPEC+.. --plan-cache-dir DIR\n\
-                 \u{20}                --shard-size BYTES --score-batch N (0 = off) --score-wait MICROS"
+                 \u{20}                --shard-size BYTES --score-batch N (0 = off) --score-wait MICROS\n\
+                 benchdiff:    gddim benchdiff OLD.json NEW.json [--tol FRAC]   (exit 1 on regression)\n\
+                 \u{20}              gddim benchdiff --validate FILE.json       (schema check only)"
             );
         }
     }
@@ -272,4 +277,56 @@ fn serve(args: &Args) {
 
 fn workload(args: &Args) {
     gddim::workload::run_cli(args);
+}
+
+/// `gddim benchdiff OLD.json NEW.json [--tol FRAC]` — the perf-trajectory
+/// gate. Exit codes: 0 within tolerance, 1 regression (throughput drop or
+/// p99 inflation beyond `--tol`, default 10%, or a vanished scenario),
+/// 2 unreadable/invalid input or bad usage. `--validate FILE` checks one
+/// snapshot against the schema without comparing (CI's hard gate on the
+/// emitted artifact; the cross-machine diff stays advisory).
+fn benchdiff(args: &Args) {
+    use gddim::workload::bench_report::{diff, BenchReport, DEFAULT_TOL};
+    fn fail(msg: &str) -> ! {
+        eprintln!("benchdiff: {msg}");
+        std::process::exit(2);
+    }
+    if let Some(path) = args.get("validate") {
+        match BenchReport::read(path) {
+            Ok(r) => {
+                println!(
+                    "{path}: schema v{} ok — {} scenarios (quick={}, source={})",
+                    r.schema_version,
+                    r.scenarios.len(),
+                    r.quick,
+                    r.source
+                );
+            }
+            Err(e) => fail(&e),
+        }
+        return;
+    }
+    let (Some(old_path), Some(new_path)) = (args.positional.get(1), args.positional.get(2)) else {
+        fail("usage: gddim benchdiff OLD.json NEW.json [--tol FRAC] | --validate FILE.json");
+    };
+    let tol = args.get_f64("tol", DEFAULT_TOL);
+    if !(tol.is_finite() && tol >= 0.0) {
+        fail("--tol must be a finite non-negative fraction");
+    }
+    let old = BenchReport::read(old_path).unwrap_or_else(|e| fail(&e));
+    let new = BenchReport::read(new_path).unwrap_or_else(|e| fail(&e));
+    let d = diff(&old, &new, tol);
+    println!("{d}");
+    if d.passed() {
+        println!("benchdiff: ok ({} scenarios within {:.0}% tol)", d.scenarios.len(), tol * 100.0);
+    } else {
+        let failing: Vec<&str> = d
+            .scenarios
+            .iter()
+            .filter(|s| !s.failures.is_empty())
+            .map(|s| s.name.as_str())
+            .collect();
+        eprintln!("benchdiff: REGRESSION in {}", failing.join(", "));
+        std::process::exit(1);
+    }
 }

@@ -50,16 +50,30 @@ thread_local! {
 }
 
 /// Separable 2-D DCT over a row-major `h×w` image: `Y = C_h X C_wᵀ`.
+///
+/// Both transform matrices are stored together with their transposes so
+/// each pass of [`Dct2::apply`] streams **rows** (contiguous memory) no
+/// matter the direction — the index-swapped strided reads of the old
+/// column pass are gone, and the inner loops are flat fixed-stride
+/// accumulations the compiler vectorizes (via [`crate::math::simd`]).
 pub struct Dct2 {
     pub h: usize,
     pub w: usize,
     ch: MatD,
     cw: MatD,
+    /// `C_hᵀ` — the rows pass of the inverse transform reads its rows.
+    cht: MatD,
+    /// `C_wᵀ` — the columns pass of the forward transform reads its rows.
+    cwt: MatD,
 }
 
 impl Dct2 {
     pub fn new(h: usize, w: usize) -> Self {
-        Dct2 { h, w, ch: dct_matrix(h), cw: dct_matrix(w) }
+        let ch = dct_matrix(h);
+        let cw = dct_matrix(w);
+        let cht = ch.transpose();
+        let cwt = cw.transpose();
+        Dct2 { h, w, ch, cw, cht, cwt }
     }
 
     /// Forward DCT (pixel -> frequency), allocating the output.
@@ -89,44 +103,48 @@ impl Dct2 {
 
     /// Both passes of the separable transform — `Y = C_h X C_wᵀ`
     /// forward, `X = C_hᵀ Y C_w` inverse — through one `h×w` per-thread
-    /// scratch row block. No per-call `Vec`s, no transposed matrix
-    /// materialization: the transpose is an index swap on the read.
+    /// scratch row block. No per-call `Vec`s, and both passes run
+    /// k-outer / element-inner over *contiguous* matrix rows: each output
+    /// element still accumulates its terms in k-ascending order (so the
+    /// result is bit-identical to the classic scalar dot-product pass —
+    /// golden-locked below), but the inner loop is a flat `axpy` over the
+    /// row the compiler turns into SIMD lanes instead of a strided
+    /// serial reduction.
     fn apply(&self, x: &[f64], out: &mut [f64], inverse: bool) {
         let (h, w) = (self.h, self.w);
         assert_eq!(x.len(), h * w);
         assert_eq!(out.len(), h * w);
+        // M₁ = C_h (forward) or C_hᵀ (inverse), read as `m1[(i, k)]`;
+        // M₂ = C_wᵀ (forward) or C_w (inverse), read as rows `m2.row(k)`.
+        let m1 = if inverse { &self.cht } else { &self.ch };
+        let m2 = if inverse { &self.cw } else { &self.cwt };
         DCT_SCRATCH.with(|cell| {
             let mut scratch = cell.borrow_mut();
             if scratch.len() < h * w {
                 scratch.resize(h * w, 0.0);
             }
             let tmp = &mut scratch[..h * w];
-            // Rows pass: tmp = M₁ X with M₁ = C_h (forward) or C_hᵀ.
+            // Rows pass: tmp = M₁ X, accumulated one input row at a time.
             for i in 0..h {
                 let trow = &mut tmp[i * w..(i + 1) * w];
                 trow.fill(0.0);
                 for k in 0..h {
-                    let a = if inverse { self.ch[(k, i)] } else { self.ch[(i, k)] };
+                    let a = m1[(i, k)];
                     if a == 0.0 {
                         continue;
                     }
-                    let xrow = &x[k * w..(k + 1) * w];
-                    for (t, &xv) in trow.iter_mut().zip(xrow) {
-                        *t += a * xv;
-                    }
+                    crate::math::simd::axpy(a, &x[k * w..(k + 1) * w], trow);
                 }
             }
-            // Columns pass: out = tmp M₂ with M₂ = C_wᵀ (forward) or C_w.
+            // Columns pass: out = tmp M₂ᵀ-shaped product, i.e.
+            // out[i][j] = Σ_k tmp[i][k] · m2[k][j], accumulated k-outer
+            // so `m2.row(k)` streams contiguously.
             for i in 0..h {
                 let trow = &tmp[i * w..(i + 1) * w];
                 let orow = &mut out[i * w..(i + 1) * w];
-                for (j, o) in orow.iter_mut().enumerate() {
-                    let mut acc = 0.0;
-                    for (k, &tv) in trow.iter().enumerate() {
-                        let b = if inverse { self.cw[(k, j)] } else { self.cw[(j, k)] };
-                        acc += tv * b;
-                    }
-                    *o = acc;
+                orow.fill(0.0);
+                for (k, &tv) in trow.iter().enumerate() {
+                    crate::math::simd::axpy(tv, m2.row(k), orow);
                 }
             }
         });
@@ -227,6 +245,68 @@ mod tests {
         assert_eq!(out_b, big.forward(&b), "32x32 forward_into vs forward");
         small.inverse_into(&a, &mut out_a);
         assert_eq!(out_a, small.inverse(&a), "inverse_into vs inverse");
+    }
+
+    /// Verbatim pre-vectorization separable apply (PR 6): index-swapped
+    /// reads, j-outer serial dot products in the columns pass. The
+    /// golden reference the blocked passes must match bit-for-bit.
+    fn reference_apply(d: &Dct2, x: &[f64], out: &mut [f64], inverse: bool) {
+        let (h, w) = (d.h, d.w);
+        let mut tmp = vec![0.0; h * w];
+        for i in 0..h {
+            let trow = &mut tmp[i * w..(i + 1) * w];
+            trow.fill(0.0);
+            for k in 0..h {
+                let a = if inverse { d.ch[(k, i)] } else { d.ch[(i, k)] };
+                if a == 0.0 {
+                    continue;
+                }
+                let xrow = &x[k * w..(k + 1) * w];
+                for (t, &xv) in trow.iter_mut().zip(xrow) {
+                    *t += a * xv;
+                }
+            }
+        }
+        for i in 0..h {
+            let trow = &tmp[i * w..(i + 1) * w];
+            let orow = &mut out[i * w..(i + 1) * w];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                for (k, &tv) in trow.iter().enumerate() {
+                    let b = if inverse { d.cw[(k, j)] } else { d.cw[(j, k)] };
+                    acc += tv * b;
+                }
+                *o = acc;
+            }
+        }
+    }
+
+    #[test]
+    fn dct_blocked_passes_match_goldens_at_8_16_32() {
+        // The k-outer blocked passes keep every output element's
+        // accumulation in k-ascending order, so they must reproduce the
+        // pre-change scalar passes exactly — BDM's lifted prototype
+        // means, sampler goldens, and persisted plans all depend on
+        // these bits. Swept across the supported resolution ladder plus
+        // a non-square shape, forward and inverse.
+        let mut rng = Rng::seed_from(53);
+        let bits = |x: &[f64]| x.iter().map(|v| v.to_bits()).collect::<Vec<u64>>();
+        for (h, w) in [(8usize, 8usize), (16, 16), (32, 32), (8, 16)] {
+            let d = Dct2::new(h, w);
+            let img: Vec<f64> = (0..h * w).map(|_| rng.normal()).collect();
+            for inverse in [false, true] {
+                let mut got = vec![0.0; h * w];
+                let mut want = vec![0.0; h * w];
+                d.apply(&img, &mut got, inverse);
+                reference_apply(&d, &img, &mut want, inverse);
+                assert_eq!(
+                    bits(&got),
+                    bits(&want),
+                    "{h}x{w} {} pass diverged from the scalar golden",
+                    if inverse { "inverse" } else { "forward" }
+                );
+            }
+        }
     }
 
     #[test]

@@ -47,6 +47,11 @@ impl MatD {
         a
     }
 
+    /// Row `i` as a contiguous slice (row-major storage).
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.m..(i + 1) * self.m]
+    }
+
     pub fn transpose(&self) -> MatD {
         let mut t = MatD::zeros(self.m, self.n);
         for i in 0..self.n {

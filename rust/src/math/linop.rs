@@ -42,55 +42,42 @@ impl LinOp {
 
     /// Apply to a state vector: `out = A u`. For `Block2` the state is
     /// `[x; v]` with `d = u.len()/2`.
+    ///
+    /// The three structure cases dispatch once per call into the chunked
+    /// wide-lane kernels in [`crate::math::simd`]; every per-element
+    /// operation is the same f64 expression as the historical scalar
+    /// loops, so outputs are bit-identical (locked by a test below) while
+    /// the inner loops vectorize. This is the per-row apply the sampler
+    /// steps and the score oracle drive, so it is on the serving hot path.
     pub fn apply(&self, u: &[f64], out: &mut [f64]) {
         assert_eq!(u.len(), out.len());
         match self {
-            LinOp::Scalar(s) => {
-                for (o, &x) in out.iter_mut().zip(u) {
-                    *o = s * x;
-                }
-            }
+            LinOp::Scalar(s) => crate::math::simd::scale(*s, u, out),
             LinOp::Diag(d) => {
                 assert_eq!(d.len(), u.len(), "Diag dim mismatch");
-                for i in 0..u.len() {
-                    out[i] = d[i] * u[i];
-                }
+                crate::math::simd::mul(d, u, out);
             }
             LinOp::Block2(m) => {
                 let d = u.len() / 2;
                 assert_eq!(u.len(), 2 * d);
                 let (x, v) = u.split_at(d);
                 let (ox, ov) = out.split_at_mut(d);
-                for i in 0..d {
-                    ox[i] = m.a * x[i] + m.b * v[i];
-                    ov[i] = m.c * x[i] + m.d * v[i];
-                }
+                crate::math::simd::block2(m.a, m.b, m.c, m.d, x, v, ox, ov);
             }
         }
     }
 
     /// `out += A u` (fused multiply-accumulate form used in the sampler
-    /// hot loop to avoid temporaries).
+    /// hot loop to avoid temporaries). Chunked like [`LinOp::apply`].
     pub fn apply_add(&self, u: &[f64], out: &mut [f64]) {
         match self {
-            LinOp::Scalar(s) => {
-                for (o, &x) in out.iter_mut().zip(u) {
-                    *o += s * x;
-                }
-            }
-            LinOp::Diag(d) => {
-                for i in 0..u.len() {
-                    out[i] += d[i] * u[i];
-                }
-            }
+            LinOp::Scalar(s) => crate::math::simd::axpy(*s, u, out),
+            LinOp::Diag(d) => crate::math::simd::mul_add(d, u, out),
             LinOp::Block2(m) => {
                 let d = u.len() / 2;
                 let (x, v) = u.split_at(d);
                 let (ox, ov) = out.split_at_mut(d);
-                for i in 0..d {
-                    ox[i] += m.a * x[i] + m.b * v[i];
-                    ov[i] += m.c * x[i] + m.d * v[i];
-                }
+                crate::math::simd::block2_add(m.a, m.b, m.c, m.d, x, v, ox, ov);
             }
         }
     }
@@ -407,5 +394,87 @@ mod tests {
         let mut out = vec![10.0, 20.0];
         op.apply_add(&u, &mut out);
         assert_eq!(out, vec![13.0, 23.0]);
+    }
+
+    /// Verbatim pre-vectorization apply/apply_add loops (PR 6): the
+    /// scalar reference the chunked kernels must match bit-for-bit.
+    fn reference_apply(op: &LinOp, u: &[f64], out: &mut [f64]) {
+        match op {
+            LinOp::Scalar(s) => {
+                for (o, &x) in out.iter_mut().zip(u) {
+                    *o = s * x;
+                }
+            }
+            LinOp::Diag(d) => {
+                for i in 0..u.len() {
+                    out[i] = d[i] * u[i];
+                }
+            }
+            LinOp::Block2(m) => {
+                let d = u.len() / 2;
+                let (x, v) = u.split_at(d);
+                let (ox, ov) = out.split_at_mut(d);
+                for i in 0..d {
+                    ox[i] = m.a * x[i] + m.b * v[i];
+                    ov[i] = m.c * x[i] + m.d * v[i];
+                }
+            }
+        }
+    }
+
+    fn reference_apply_add(op: &LinOp, u: &[f64], out: &mut [f64]) {
+        match op {
+            LinOp::Scalar(s) => {
+                for (o, &x) in out.iter_mut().zip(u) {
+                    *o += s * x;
+                }
+            }
+            LinOp::Diag(d) => {
+                for i in 0..u.len() {
+                    out[i] += d[i] * u[i];
+                }
+            }
+            LinOp::Block2(m) => {
+                let d = u.len() / 2;
+                let (x, v) = u.split_at(d);
+                let (ox, ov) = out.split_at_mut(d);
+                for i in 0..d {
+                    ox[i] += m.a * x[i] + m.b * v[i];
+                    ov[i] += m.c * x[i] + m.d * v[i];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_apply_matches_scalar_reference_bitwise() {
+        // Lengths off the 4-lane grid (6, 10, 1026) and on it (8, 64):
+        // the chunked kernels must reproduce the historical scalar loops
+        // exactly — this is what keeps every sampler plan, golden sample,
+        // and persisted Stage-I table stable across the vectorization.
+        let mut rng = Rng::seed_from(47);
+        for n in [2usize, 6, 8, 10, 64, 1026] {
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let ops = [
+                LinOp::Scalar(0.37),
+                LinOp::diag((0..n).map(|_| rng.normal()).collect()),
+                LinOp::Block2(Mat2::new(1.1, -0.2, 0.45, 0.9)),
+            ];
+            for op in &ops {
+                let mut got = vec![0.0; n];
+                let mut want = vec![0.0; n];
+                op.apply(&u, &mut got);
+                reference_apply(op, &u, &mut want);
+                let bits = |x: &[f64]| x.iter().map(|v| v.to_bits()).collect::<Vec<u64>>();
+                assert_eq!(bits(&got), bits(&want), "apply {op:?} at n={n}");
+
+                let seed: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                let mut got_acc = seed.clone();
+                let mut want_acc = seed;
+                op.apply_add(&u, &mut got_acc);
+                reference_apply_add(op, &u, &mut want_acc);
+                assert_eq!(bits(&got_acc), bits(&want_acc), "apply_add {op:?} at n={n}");
+            }
+        }
     }
 }

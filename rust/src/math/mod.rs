@@ -12,6 +12,7 @@ pub mod rng;
 pub mod stats;
 pub mod dct;
 pub mod prop;
+pub mod simd;
 
 pub use mat2::Mat2;
 pub use linalg::MatD;

@@ -1,0 +1,357 @@
+//! Chunked wide-lane f64 kernels for the serving hot loops.
+//!
+//! The inner loops of [`crate::score::oracle::GmmOracle::eps_batch`], the
+//! [`crate::math::dct::Dct2`] separable passes, and the
+//! [`crate::math::linop::LinOp`] applies are all flat fixed-stride f64
+//! loops. The compiler autovectorizes most of them, but not reliably:
+//! iterator adaptors with bounds checks, or loops whose trip count the
+//! optimizer cannot see, fall back to scalar code. The kernels here make
+//! the wide-lane shape explicit — `chunks_exact(LANES)` bodies with four
+//! independent element operations per iteration (an `f64x4` in spirit,
+//! spelled in scalar Rust so the offline build needs no new deps) plus a
+//! scalar remainder loop — so every call site gets SIMD lanes whether or
+//! not the autovectorizer would have found them.
+//!
+//! ## Bit-identity policy
+//!
+//! Elementwise kernels (`sub`, `mul`, `scale`, `axpy`, `block2*`) perform
+//! exactly the same f64 operation per element as the scalar loops they
+//! replace, in any chunking — results are bit-identical by construction,
+//! and the sampler parity suite enforces it.
+//!
+//! Reductions are different: a 4-accumulator sum reassociates f64
+//! addition and changes bits. The default f64 sampler path is pinned to
+//! bit-identity (every golden and parity test in the repo), so [`sum_sq`]
+//! keeps strict left-to-right order. The reassociating variant is
+//! available as [`sum_sq_blocked`] for tolerance-checked consumers; using
+//! it anywhere on the default sampler path requires explicitly re-locking
+//! the goldens, never silently absorbing the change.
+
+/// Lane width the chunked kernels unroll to. Four f64s = one AVX2
+/// register; on narrower ISAs the compiler splits the chunk body.
+pub const LANES: usize = 4;
+
+/// `out[i] = a[i] - b[i]`.
+#[inline]
+pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len());
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    let mut oc = out.chunks_exact_mut(LANES);
+    for ((x, y), o) in (&mut ac).zip(&mut bc).zip(&mut oc) {
+        o[0] = x[0] - y[0];
+        o[1] = x[1] - y[1];
+        o[2] = x[2] - y[2];
+        o[3] = x[3] - y[3];
+    }
+    for ((x, y), o) in ac.remainder().iter().zip(bc.remainder()).zip(oc.into_remainder()) {
+        *o = x - y;
+    }
+}
+
+/// `out[i] = a[i] * b[i]`.
+#[inline]
+pub fn mul(a: &[f64], b: &[f64], out: &mut [f64]) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len());
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    let mut oc = out.chunks_exact_mut(LANES);
+    for ((x, y), o) in (&mut ac).zip(&mut bc).zip(&mut oc) {
+        o[0] = x[0] * y[0];
+        o[1] = x[1] * y[1];
+        o[2] = x[2] * y[2];
+        o[3] = x[3] * y[3];
+    }
+    for ((x, y), o) in ac.remainder().iter().zip(bc.remainder()).zip(oc.into_remainder()) {
+        *o = x * y;
+    }
+}
+
+/// `out[i] += a[i] * b[i]` (elementwise multiply-accumulate).
+#[inline]
+pub fn mul_add(a: &[f64], b: &[f64], out: &mut [f64]) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len());
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    let mut oc = out.chunks_exact_mut(LANES);
+    for ((x, y), o) in (&mut ac).zip(&mut bc).zip(&mut oc) {
+        o[0] += x[0] * y[0];
+        o[1] += x[1] * y[1];
+        o[2] += x[2] * y[2];
+        o[3] += x[3] * y[3];
+    }
+    for ((x, y), o) in ac.remainder().iter().zip(bc.remainder()).zip(oc.into_remainder()) {
+        *o += x * y;
+    }
+}
+
+/// `out[i] = s * x[i]`.
+#[inline]
+pub fn scale(s: f64, x: &[f64], out: &mut [f64]) {
+    assert_eq!(x.len(), out.len());
+    let mut xc = x.chunks_exact(LANES);
+    let mut oc = out.chunks_exact_mut(LANES);
+    for (v, o) in (&mut xc).zip(&mut oc) {
+        o[0] = s * v[0];
+        o[1] = s * v[1];
+        o[2] = s * v[2];
+        o[3] = s * v[3];
+    }
+    for (v, o) in xc.remainder().iter().zip(oc.into_remainder()) {
+        *o = s * v;
+    }
+}
+
+/// `y[i] += s * x[i]` — the accumulation kernel of both DCT passes and
+/// the oracle's posterior-mean update. Adds occur per element in slice
+/// order, so a k-outer caller keeps each output's accumulation sequence
+/// identical to the classic scalar j-inner loop.
+#[inline]
+pub fn axpy(s: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact_mut(LANES);
+    for (v, o) in (&mut xc).zip(&mut yc) {
+        o[0] += s * v[0];
+        o[1] += s * v[1];
+        o[2] += s * v[2];
+        o[3] += s * v[3];
+    }
+    for (v, o) in xc.remainder().iter().zip(yc.into_remainder()) {
+        *o += s * v;
+    }
+}
+
+/// `(ox, ov)[i] = M (x, v)[i]` for a 2×2 `M = [[a, b], [c, d]]` applied
+/// per index pair — the [`crate::math::linop::LinOp::Block2`] (CLD
+/// `M ⊗ I_d`) apply, split into its two output halves.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn block2(
+    a: f64,
+    b: f64,
+    c: f64,
+    d: f64,
+    x: &[f64],
+    v: &[f64],
+    ox: &mut [f64],
+    ov: &mut [f64],
+) {
+    assert_eq!(x.len(), v.len());
+    assert_eq!(x.len(), ox.len());
+    assert_eq!(x.len(), ov.len());
+    let mut xc = x.chunks_exact(LANES);
+    let mut vc = v.chunks_exact(LANES);
+    let mut oxc = ox.chunks_exact_mut(LANES);
+    let mut ovc = ov.chunks_exact_mut(LANES);
+    for (((xs, vs), oxs), ovs) in (&mut xc).zip(&mut vc).zip(&mut oxc).zip(&mut ovc) {
+        oxs[0] = a * xs[0] + b * vs[0];
+        oxs[1] = a * xs[1] + b * vs[1];
+        oxs[2] = a * xs[2] + b * vs[2];
+        oxs[3] = a * xs[3] + b * vs[3];
+        ovs[0] = c * xs[0] + d * vs[0];
+        ovs[1] = c * xs[1] + d * vs[1];
+        ovs[2] = c * xs[2] + d * vs[2];
+        ovs[3] = c * xs[3] + d * vs[3];
+    }
+    let (xr, vr) = (xc.remainder(), vc.remainder());
+    let (oxr, ovr) = (oxc.into_remainder(), ovc.into_remainder());
+    for i in 0..xr.len() {
+        oxr[i] = a * xr[i] + b * vr[i];
+        ovr[i] = c * xr[i] + d * vr[i];
+    }
+}
+
+/// `(ox, ov)[i] += M (x, v)[i]` — accumulating [`block2`].
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn block2_add(
+    a: f64,
+    b: f64,
+    c: f64,
+    d: f64,
+    x: &[f64],
+    v: &[f64],
+    ox: &mut [f64],
+    ov: &mut [f64],
+) {
+    assert_eq!(x.len(), v.len());
+    assert_eq!(x.len(), ox.len());
+    assert_eq!(x.len(), ov.len());
+    let mut xc = x.chunks_exact(LANES);
+    let mut vc = v.chunks_exact(LANES);
+    let mut oxc = ox.chunks_exact_mut(LANES);
+    let mut ovc = ov.chunks_exact_mut(LANES);
+    for (((xs, vs), oxs), ovs) in (&mut xc).zip(&mut vc).zip(&mut oxc).zip(&mut ovc) {
+        oxs[0] += a * xs[0] + b * vs[0];
+        oxs[1] += a * xs[1] + b * vs[1];
+        oxs[2] += a * xs[2] + b * vs[2];
+        oxs[3] += a * xs[3] + b * vs[3];
+        ovs[0] += c * xs[0] + d * vs[0];
+        ovs[1] += c * xs[1] + d * vs[1];
+        ovs[2] += c * xs[2] + d * vs[2];
+        ovs[3] += c * xs[3] + d * vs[3];
+    }
+    let (xr, vr) = (xc.remainder(), vc.remainder());
+    let (oxr, ovr) = (oxc.into_remainder(), ovc.into_remainder());
+    for i in 0..xr.len() {
+        oxr[i] += a * xr[i] + b * vr[i];
+        ovr[i] += c * xr[i] + d * vr[i];
+    }
+}
+
+/// `Σ x[i]²` in strict left-to-right order — bit-identical to the scalar
+/// `iter().map(|x| x * x).sum()` it replaces. The squares are independent
+/// (vector lanes); only the adds are serialized, which is what the
+/// default-path bit-identity contract requires (see module docs).
+#[inline]
+pub fn sum_sq(x: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for &v in x {
+        acc += v * v;
+    }
+    acc
+}
+
+/// `Σ x[i]²` with four independent accumulators (the true wide-lane
+/// reduction). **Reassociates f64 addition** — not bit-identical to
+/// [`sum_sq`] — so it must never feed the default f64 sampler path
+/// without an explicit golden re-lock. Intended for tolerance-checked
+/// consumers (metrics, diagnostics) where the ~4× reduction speedup is
+/// free.
+#[inline]
+pub fn sum_sq_blocked(x: &[f64]) -> f64 {
+    let mut c = x.chunks_exact(LANES);
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for v in &mut c {
+        a0 += v[0] * v[0];
+        a1 += v[1] * v[1];
+        a2 += v[2] * v[2];
+        a3 += v[3] * v[3];
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for &v in c.remainder() {
+        acc += v * v;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Rng;
+
+    fn vec_of(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed_from(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn bits(x: &[f64]) -> Vec<u64> {
+        x.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn elementwise_kernels_match_scalar_loops_bitwise() {
+        // Lengths straddling the lane width: empty, sub-lane, exact
+        // multiples, and off-by-one/three remainders.
+        for n in [0usize, 1, 3, 4, 5, 8, 13, 64, 257] {
+            let a = vec_of(n, 1);
+            let b = vec_of(n, 2);
+            let s = 0.7361;
+            let mut got = vec![0.0; n];
+            let mut want = vec![0.0; n];
+
+            sub(&a, &b, &mut got);
+            for i in 0..n {
+                want[i] = a[i] - b[i];
+            }
+            assert_eq!(bits(&got), bits(&want), "sub at n={n}");
+
+            mul(&a, &b, &mut got);
+            for i in 0..n {
+                want[i] = a[i] * b[i];
+            }
+            assert_eq!(bits(&got), bits(&want), "mul at n={n}");
+
+            scale(s, &a, &mut got);
+            for i in 0..n {
+                want[i] = s * a[i];
+            }
+            assert_eq!(bits(&got), bits(&want), "scale at n={n}");
+
+            let mut got_acc = b.clone();
+            let mut want_acc = b.clone();
+            axpy(s, &a, &mut got_acc);
+            for i in 0..n {
+                want_acc[i] += s * a[i];
+            }
+            assert_eq!(bits(&got_acc), bits(&want_acc), "axpy at n={n}");
+
+            let mut got_ma = b.clone();
+            let mut want_ma = b.clone();
+            mul_add(&a, &b, &mut got_ma);
+            for i in 0..n {
+                want_ma[i] += a[i] * b[i];
+            }
+            assert_eq!(bits(&got_ma), bits(&want_ma), "mul_add at n={n}");
+        }
+    }
+
+    #[test]
+    fn block2_kernels_match_scalar_loops_bitwise() {
+        let (a, b, c, d) = (1.25, -0.3, 0.7, 2.0);
+        for n in [0usize, 1, 3, 4, 7, 16, 33] {
+            let x = vec_of(n, 3);
+            let v = vec_of(n, 4);
+            let mut ox = vec![0.0; n];
+            let mut ov = vec![0.0; n];
+            block2(a, b, c, d, &x, &v, &mut ox, &mut ov);
+            let mut wx = vec![0.0; n];
+            let mut wv = vec![0.0; n];
+            for i in 0..n {
+                wx[i] = a * x[i] + b * v[i];
+                wv[i] = c * x[i] + d * v[i];
+            }
+            assert_eq!(bits(&ox), bits(&wx), "block2 x at n={n}");
+            assert_eq!(bits(&ov), bits(&wv), "block2 v at n={n}");
+
+            let mut ax = vec_of(n, 5);
+            let mut av = vec_of(n, 6);
+            let (mut wax, mut wav) = (ax.clone(), av.clone());
+            block2_add(a, b, c, d, &x, &v, &mut ax, &mut av);
+            for i in 0..n {
+                wax[i] += a * x[i] + b * v[i];
+                wav[i] += c * x[i] + d * v[i];
+            }
+            assert_eq!(bits(&ax), bits(&wax), "block2_add x at n={n}");
+            assert_eq!(bits(&av), bits(&wav), "block2_add v at n={n}");
+        }
+    }
+
+    #[test]
+    fn sum_sq_is_bit_identical_to_sequential_sum() {
+        for n in [0usize, 1, 5, 64, 1023] {
+            let x = vec_of(n, 7);
+            let want: f64 = x.iter().map(|v| v * v).sum();
+            assert_eq!(sum_sq(&x).to_bits(), want.to_bits(), "sum_sq at n={n}");
+        }
+    }
+
+    #[test]
+    fn sum_sq_blocked_agrees_within_tolerance_only() {
+        // The blocked reduction is numerically equivalent but not
+        // bit-pinned — exactly why it stays off the default sampler path.
+        for n in [4usize, 63, 1024] {
+            let x = vec_of(n, 8);
+            let strict = sum_sq(&x);
+            let blocked = sum_sq_blocked(&x);
+            assert!(
+                (strict - blocked).abs() <= 1e-12 * strict.abs().max(1.0),
+                "n={n}: {strict} vs {blocked}"
+            );
+        }
+    }
+}

@@ -19,7 +19,14 @@ use std::sync::Arc;
 use crate::data::gmm::GmmSpec;
 use crate::diffusion::process::{KtKind, Process};
 use crate::math::linop::LinOp;
+use crate::math::simd;
 use crate::score::model::ScoreModel;
+
+/// Rows per block of the batched score kernel: large enough that the
+/// mode-outer responsibility pass streams each `μ_m` across many states
+/// per read, small enough that a block's log-weights stay cache-resident
+/// at every supported mixture size.
+const ROW_BLOCK: usize = 32;
 
 /// Cached per-`t` quantities (the oracle is called many times at the same
 /// grid times; recomputing the 2×2/diag algebra is cheap but the lifted
@@ -182,6 +189,22 @@ impl GmmOracle {
         acc
     }
 
+    /// Verbatim pre-vectorization batch loop (PR 6) minus the counter
+    /// bumps: per-row `score_into` with its per-row cache lookup and
+    /// fresh allocations. The golden reference the blocked kernel must
+    /// match bit-for-bit.
+    #[cfg(test)]
+    fn eps_batch_scalar_reference(&self, t: f64, us: &[f64], out: &mut [f64]) {
+        let du = self.proc.dim_u();
+        assert_eq!(us.len() % du, 0);
+        let cache = self.cache_for(t);
+        let mut score = vec![0.0; du];
+        for (row_in, row_out) in us.chunks_exact(du).zip(out.chunks_exact_mut(du)) {
+            self.score_into(t, row_in, &mut score, None);
+            cache.neg_kt_t.apply(&score, row_out);
+        }
+    }
+
     /// Exact log-density of the diffused mixture at time t (NLL tests).
     pub fn logp(&self, t: f64, u: &[f64]) -> f64 {
         let cache = self.cache_for(t);
@@ -222,17 +245,80 @@ impl ScoreModel for GmmOracle {
         self.kt
     }
 
+    /// Blocked, vectorized ε evaluation (the serving hot loop).
+    ///
+    /// Works [`ROW_BLOCK`] rows at a time over flat fixed-stride slices:
+    /// the responsibility pass runs mode-outer so each lifted mean
+    /// streams once per block (not once per row), and all inner loops are
+    /// [`crate::math::simd`] kernels. Per (row, mode) every f64 op runs
+    /// in the same order as the scalar [`GmmOracle::score_into`] path, so
+    /// the output is bit-identical to it — the parity test below sweeps
+    /// dimensions and odd row counts to enforce that. Rows stay
+    /// independent (the [`ScoreModel`] contract the cross-key scheduler
+    /// relies on): block boundaries never change any row's result.
     fn eps_batch(&self, t: f64, us: &[f64], out: &mut [f64]) {
         let du = self.proc.dim_u();
         assert_eq!(us.len() % du, 0);
+        assert_eq!(out.len(), us.len());
         let n = us.len() / du;
+        // One counter bump per batch — `calls / batch_calls` is the
+        // realized fill ratio and must not see internal row blocks.
         self.calls.fetch_add(n as u64, std::sync::atomic::Ordering::Relaxed);
         self.batch_calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if n == 0 {
+            return;
+        }
+        // One cache lookup per batch. The old path re-acquired the
+        // `RwLock` read guard (plus a `HashMap` probe and an `Arc`
+        // clone) once per *row* through `score_into`, which serialized
+        // large pooled batches on lock traffic.
         let cache = self.cache_for(t);
+        let m_count = self.spec.n_modes();
+        let logw0: Vec<f64> = self.spec.weights.iter().map(|w| w.max(1e-300).ln()).collect();
+        let mut logw = vec![0.0; ROW_BLOCK * m_count];
+        let mut diff = vec![0.0; du];
+        let mut white = vec![0.0; du];
+        let mut mean = vec![0.0; du];
         let mut score = vec![0.0; du];
-        for (row_in, row_out) in us.chunks_exact(du).zip(out.chunks_exact_mut(du)) {
-            self.score_into(t, row_in, &mut score, None);
-            cache.neg_kt_t.apply(&score, row_out);
+        for (ub, ob) in us.chunks(ROW_BLOCK * du).zip(out.chunks_mut(ROW_BLOCK * du)) {
+            let rows = ub.len() / du;
+            // Pass 1 (mode-outer): log w̃ for every (row, mode) of the
+            // block. Same j-ascending subtract / whiten / strict
+            // left-to-right ‖·‖² sequence as the scalar path.
+            for m in 0..m_count {
+                let mu = &cache.mus[m * du..(m + 1) * du];
+                for r in 0..rows {
+                    simd::sub(&ub[r * du..(r + 1) * du], mu, &mut diff);
+                    cache.l_inv.apply(&diff, &mut white);
+                    let d2 = simd::sum_sq(&white);
+                    logw[r * m_count + m] = logw0[m] - 0.5 * d2;
+                }
+            }
+            // Pass 2 (row-wise): softmax over modes, posterior mean,
+            // score, ε conversion — accumulation orders verbatim from
+            // `score_into`.
+            for r in 0..rows {
+                let lw = &mut logw[r * m_count..(r + 1) * m_count];
+                let mut best = f64::NEG_INFINITY;
+                for &l in lw.iter() {
+                    best = best.max(l);
+                }
+                let mut total = 0.0;
+                for l in lw.iter_mut() {
+                    *l = (*l - best).exp();
+                    total += *l;
+                }
+                mean.fill(0.0);
+                for m in 0..m_count {
+                    simd::axpy(lw[m] / total, &cache.mus[m * du..(m + 1) * du], &mut mean);
+                }
+                simd::sub(&ub[r * du..(r + 1) * du], &mean, &mut diff);
+                cache.c_inv.apply(&diff, &mut score);
+                for s in score.iter_mut() {
+                    *s = -*s;
+                }
+                cache.neg_kt_t.apply(&score, &mut ob[r * du..(r + 1) * du]);
+            }
         }
     }
 
@@ -347,6 +433,62 @@ mod tests {
             let expect = -(u - alpha.sqrt() * 1.5) / (1.0 - alpha);
             assert!((s - expect).abs() < 1e-10, "{s} vs {expect}");
         }
+    }
+
+    #[test]
+    fn vectorized_eps_batch_is_bit_identical_to_scalar_reference() {
+        use crate::diffusion::Bdm;
+
+        fn synth_spec(d: usize, modes: usize, seed: u64) -> GmmSpec {
+            let mut rng = Rng::seed_from(seed);
+            let means: Vec<Vec<f64>> =
+                (0..modes).map(|_| (0..d).map(|_| 2.0 * rng.normal()).collect()).collect();
+            GmmSpec::new(&format!("synth{d}"), means, 0.25)
+        }
+
+        // One oracle per structured-operator family (Block2 / Scalar /
+        // Diag), state dims 4 / 64 / 256 / 1024.
+        let oracles = vec![
+            GmmOracle::new(Arc::new(Cld::standard(2)), presets::gmm2d(), KtKind::R),
+            GmmOracle::new(Arc::new(Vpsde::standard(64)), synth_spec(64, 3, 21), KtKind::L),
+            GmmOracle::new(Arc::new(Bdm::standard(16, 16)), synth_spec(256, 3, 22), KtKind::R),
+            GmmOracle::new(Arc::new(Vpsde::standard(1024)), synth_spec(1024, 2, 23), KtKind::R),
+        ];
+        let mut rng = Rng::seed_from(29);
+        for o in &oracles {
+            let du = o.dim_u();
+            // Row counts off every lane/block multiple: single row,
+            // sub-lane, just past a lane, and one past the 32-row block.
+            for n in [1usize, 3, 5, 33] {
+                let us: Vec<f64> = (0..n * du).map(|_| 1.5 * rng.normal()).collect();
+                let mut got = vec![0.0; n * du];
+                let mut want = vec![0.0; n * du];
+                o.eps_batch(0.35, &us, &mut got);
+                o.eps_batch_scalar_reference(0.35, &us, &mut want);
+                let gb: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+                let wb: Vec<u64> = want.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "{} at n={n}", o.describe());
+            }
+        }
+    }
+
+    #[test]
+    fn fill_counters_bump_once_per_batch_across_row_blocks() {
+        // 33 rows crosses the internal row-block boundary; the counters
+        // must still record exactly one invocation and 33 rows — the
+        // scheduler's fill-ratio metric counts batches, never kernel
+        // blocks.
+        let o = GmmOracle::new(Arc::new(Vpsde::standard(2)), presets::gmm2d(), KtKind::R);
+        let mut rng = Rng::seed_from(31);
+        let us: Vec<f64> = (0..33 * 2).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0; 33 * 2];
+        o.eps_batch(0.5, &us, &mut out);
+        use std::sync::atomic::Ordering;
+        assert_eq!(o.calls.load(Ordering::Relaxed), 33);
+        assert_eq!(o.batch_calls.load(Ordering::Relaxed), 1);
+        o.eps_batch(0.5, &us[..2], &mut out[..2]);
+        assert_eq!(o.calls.load(Ordering::Relaxed), 34);
+        assert_eq!(o.batch_calls.load(Ordering::Relaxed), 2);
     }
 
     #[test]

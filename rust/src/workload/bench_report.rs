@@ -1,0 +1,543 @@
+//! Committed, diffable serving-bench results — the perf trajectory.
+//!
+//! `cargo bench --bench serving -- --json PATH` serializes its scenario
+//! tables through [`BenchReport`] into a schema-versioned JSON file
+//! (`BENCH_serving.json` at the repo root), committed once per PR so the
+//! throughput/latency history lives in git next to the code that moved
+//! it. `gddim benchdiff old.json new.json` re-reads two snapshots and
+//! fails (exit 1) on a >10% throughput drop or >10% p99 inflation in any
+//! scenario — CI runs it against the committed baseline on every PR.
+//!
+//! The schema is deliberately flat (one object per scenario, scalar
+//! fields only) so any plotting script can consume it without knowing
+//! the repo's internals; [`SCHEMA_VERSION`] gates readers against silent
+//! drift.
+
+use crate::engine::EngineStats;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::workload::OpenLoopReport;
+
+/// Version of the on-disk layout. Bump on any field rename/removal;
+/// additive optional fields do not require a bump.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Default regression tolerance for [`diff`]: 10% throughput drop or
+/// 10% p99 inflation fails.
+pub const DEFAULT_TOL: f64 = 0.10;
+
+/// One bench scenario's results. Latencies are seconds; throughput is
+/// samples per second. `None` serializes as JSON `null` (closed-loop
+/// scenarios have no queueing split; scheduler-off runs have no
+/// coalescing counters).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchScenario {
+    pub name: String,
+    pub samples_per_sec: Option<f64>,
+    pub issued: u64,
+    pub completed: u64,
+    pub queue_p50: Option<f64>,
+    pub queue_p95: Option<f64>,
+    pub queue_p99: Option<f64>,
+    pub service_p50: Option<f64>,
+    pub service_p95: Option<f64>,
+    pub service_p99: Option<f64>,
+    pub total_p50: Option<f64>,
+    pub total_p95: Option<f64>,
+    pub total_p99: Option<f64>,
+    /// Realized score-batch fill (`score_rows / score_calls`).
+    pub fill_rows_per_call: Option<f64>,
+    pub coalesced_keys: Option<u64>,
+    pub score_calls: Option<u64>,
+}
+
+impl BenchScenario {
+    /// Empty scenario shell (every optional field `None`).
+    pub fn named(name: &str) -> BenchScenario {
+        BenchScenario {
+            name: name.to_string(),
+            samples_per_sec: None,
+            issued: 0,
+            completed: 0,
+            queue_p50: None,
+            queue_p95: None,
+            queue_p99: None,
+            service_p50: None,
+            service_p95: None,
+            service_p99: None,
+            total_p50: None,
+            total_p95: None,
+            total_p99: None,
+            fill_rows_per_call: None,
+            coalesced_keys: None,
+            score_calls: None,
+        }
+    }
+
+    /// Condense an open-loop probe (+ optional engine counters) into a
+    /// scenario row. Throughput is completed requests × samples each
+    /// over the run's wall clock.
+    pub fn from_probe(
+        name: &str,
+        report: &OpenLoopReport,
+        samples_per_request: usize,
+        engine: Option<&EngineStats>,
+    ) -> BenchScenario {
+        let mut s = BenchScenario::named(name);
+        s.issued = report.issued as u64;
+        s.completed = report.completed as u64;
+        if report.elapsed > 0.0 {
+            s.samples_per_sec =
+                Some(report.completed as f64 * samples_per_request as f64 / report.elapsed);
+        }
+        if let Some(q) = &report.queueing {
+            s.queue_p50 = Some(q.p50);
+            s.queue_p95 = Some(q.p95);
+            s.queue_p99 = Some(q.p99);
+        }
+        if let Some(sv) = &report.service {
+            s.service_p50 = Some(sv.p50);
+            s.service_p95 = Some(sv.p95);
+            s.service_p99 = Some(sv.p99);
+        }
+        if let Some(t) = &report.total {
+            s.total_p50 = Some(t.p50);
+            s.total_p95 = Some(t.p95);
+            s.total_p99 = Some(t.p99);
+        }
+        if let Some(e) = engine {
+            if e.score_calls > 0 {
+                s.fill_rows_per_call = Some(e.score_rows as f64 / e.score_calls as f64);
+            }
+            s.score_calls = Some(e.score_calls);
+            s.coalesced_keys = Some(e.coalesced_keys);
+        }
+        s
+    }
+
+    fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        let optu = |v: Option<u64>| v.map(|x| Json::Num(x as f64)).unwrap_or(Json::Null);
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("name".into(), Json::Str(self.name.clone()));
+        o.insert("samples_per_sec".into(), opt(self.samples_per_sec));
+        o.insert("issued".into(), Json::Num(self.issued as f64));
+        o.insert("completed".into(), Json::Num(self.completed as f64));
+        o.insert("queue_p50".into(), opt(self.queue_p50));
+        o.insert("queue_p95".into(), opt(self.queue_p95));
+        o.insert("queue_p99".into(), opt(self.queue_p99));
+        o.insert("service_p50".into(), opt(self.service_p50));
+        o.insert("service_p95".into(), opt(self.service_p95));
+        o.insert("service_p99".into(), opt(self.service_p99));
+        o.insert("total_p50".into(), opt(self.total_p50));
+        o.insert("total_p95".into(), opt(self.total_p95));
+        o.insert("total_p99".into(), opt(self.total_p99));
+        o.insert("fill_rows_per_call".into(), opt(self.fill_rows_per_call));
+        o.insert("coalesced_keys".into(), optu(self.coalesced_keys));
+        o.insert("score_calls".into(), optu(self.score_calls));
+        Json::Obj(o)
+    }
+
+    fn from_json(j: &Json) -> Result<BenchScenario, String> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or("scenario missing string field 'name'")?;
+        let opt = |key: &str| -> Result<Option<f64>, String> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(Json::Num(x)) => Ok(Some(*x)),
+                Some(other) => Err(format!("scenario '{name}': field '{key}' is {other:?}")),
+            }
+        };
+        let req = |key: &str| -> Result<u64, String> {
+            j.get(key)
+                .and_then(|v| v.as_f64())
+                .map(|x| x as u64)
+                .ok_or_else(|| format!("scenario '{name}': missing numeric field '{key}'"))
+        };
+        let mut s = BenchScenario::named(name);
+        s.issued = req("issued")?;
+        s.completed = req("completed")?;
+        s.samples_per_sec = opt("samples_per_sec")?;
+        s.queue_p50 = opt("queue_p50")?;
+        s.queue_p95 = opt("queue_p95")?;
+        s.queue_p99 = opt("queue_p99")?;
+        s.service_p50 = opt("service_p50")?;
+        s.service_p95 = opt("service_p95")?;
+        s.service_p99 = opt("service_p99")?;
+        s.total_p50 = opt("total_p50")?;
+        s.total_p95 = opt("total_p95")?;
+        s.total_p99 = opt("total_p99")?;
+        s.fill_rows_per_call = opt("fill_rows_per_call")?;
+        s.coalesced_keys = opt("coalesced_keys")?.map(|x| x as u64);
+        s.score_calls = opt("score_calls")?.map(|x| x as u64);
+        Ok(s)
+    }
+}
+
+/// A full serving-bench snapshot: what gets committed as
+/// `BENCH_serving.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    pub schema_version: u64,
+    /// Bench binary that produced this ("serving").
+    pub bench: String,
+    /// True when produced under `GDDIM_BENCH_QUICK=1` (CI's perf-probe
+    /// mode — smaller request counts, same scenario set).
+    pub quick: bool,
+    /// Where the numbers came from: "ci", "local", or "bootstrap" (a
+    /// hand-seeded baseline predating the first CI emission).
+    pub source: String,
+    pub scenarios: Vec<BenchScenario>,
+}
+
+impl BenchReport {
+    pub fn new(quick: bool, source: &str) -> BenchReport {
+        BenchReport {
+            schema_version: SCHEMA_VERSION,
+            bench: "serving".to_string(),
+            quick,
+            source: source.to_string(),
+            scenarios: Vec::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("schema_version".into(), Json::Num(self.schema_version as f64));
+        o.insert("bench".into(), Json::Str(self.bench.clone()));
+        o.insert("quick".into(), Json::Bool(self.quick));
+        o.insert("source".into(), Json::Str(self.source.clone()));
+        o.insert(
+            "scenarios".into(),
+            Json::Arr(self.scenarios.iter().map(BenchScenario::to_json).collect()),
+        );
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<BenchReport, String> {
+        let version = j
+            .get("schema_version")
+            .and_then(|v| v.as_f64())
+            .ok_or("missing numeric field 'schema_version'")? as u64;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "schema_version {version} != supported {SCHEMA_VERSION} \
+                 (regenerate with this binary or pin the matching one)"
+            ));
+        }
+        let bench =
+            j.get("bench").and_then(|v| v.as_str()).ok_or("missing string field 'bench'")?;
+        let quick = match j.get("quick") {
+            Some(Json::Bool(b)) => *b,
+            _ => return Err("missing bool field 'quick'".into()),
+        };
+        let source =
+            j.get("source").and_then(|v| v.as_str()).ok_or("missing string field 'source'")?;
+        let scenarios = j
+            .get("scenarios")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing array field 'scenarios'")?
+            .iter()
+            .map(BenchScenario::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let report = BenchReport {
+            schema_version: version,
+            bench: bench.to_string(),
+            quick,
+            source: source.to_string(),
+            scenarios,
+        };
+        report.validate()?;
+        Ok(report)
+    }
+
+    /// Structural checks beyond parse-ability: scenario names unique and
+    /// nonempty, counts consistent, every number finite.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.scenarios.is_empty() {
+            return Err("report has no scenarios".into());
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &self.scenarios {
+            if s.name.is_empty() {
+                return Err("scenario with empty name".into());
+            }
+            if !seen.insert(&s.name) {
+                return Err(format!("duplicate scenario name '{}'", s.name));
+            }
+            if s.completed > s.issued {
+                return Err(format!(
+                    "scenario '{}': completed {} > issued {}",
+                    s.name, s.completed, s.issued
+                ));
+            }
+            let fields = [
+                ("samples_per_sec", s.samples_per_sec),
+                ("queue_p50", s.queue_p50),
+                ("queue_p95", s.queue_p95),
+                ("queue_p99", s.queue_p99),
+                ("service_p50", s.service_p50),
+                ("service_p95", s.service_p95),
+                ("service_p99", s.service_p99),
+                ("total_p50", s.total_p50),
+                ("total_p95", s.total_p95),
+                ("total_p99", s.total_p99),
+                ("fill_rows_per_call", s.fill_rows_per_call),
+            ];
+            for (label, v) in fields {
+                if let Some(x) = v {
+                    if !x.is_finite() || x < 0.0 {
+                        return Err(format!("scenario '{}': {label} = {x}", s.name));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn write(&self, path: &str) -> Result<(), String> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {dir:?}: {e}"))?;
+            }
+        }
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text).map_err(|e| format!("write {path}: {e}"))
+    }
+
+    pub fn read(path: &str) -> Result<BenchReport, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        BenchReport::from_json(&Json::parse(&text).map_err(|e| format!("{path}: {e}"))?)
+    }
+}
+
+/// Verdict for one scenario of a [`diff`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioDiff {
+    pub name: String,
+    pub old_throughput: Option<f64>,
+    pub new_throughput: Option<f64>,
+    pub old_p99: Option<f64>,
+    pub new_p99: Option<f64>,
+    /// Empty = within tolerance. Each entry is one violated gate.
+    pub failures: Vec<String>,
+    /// Scenario exists only in the new report (informational).
+    pub new_only: bool,
+}
+
+/// Result of comparing two snapshots.
+#[derive(Clone, Debug)]
+pub struct BenchDiff {
+    pub tol: f64,
+    pub scenarios: Vec<ScenarioDiff>,
+}
+
+impl BenchDiff {
+    pub fn passed(&self) -> bool {
+        self.scenarios.iter().all(|s| s.failures.is_empty())
+    }
+}
+
+impl std::fmt::Display for BenchDiff {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let pct = |v: Option<f64>, w: Option<f64>| -> String {
+            match (v, w) {
+                (Some(a), Some(b)) if a > 0.0 => format!("{:+.1}%", 100.0 * (b - a) / a),
+                _ => "-".to_string(),
+            }
+        };
+        let num = |v: Option<f64>| v.map(|x| format!("{x:.4}")).unwrap_or_else(|| "-".into());
+        let mut t = Table::new(
+            &format!("benchdiff (tol {:.0}%)", self.tol * 100.0),
+            &["scenario", "thpt old", "thpt new", "Δ", "p99 old", "p99 new", "Δ", "verdict"],
+        );
+        for s in &self.scenarios {
+            let verdict = if s.new_only {
+                "new".to_string()
+            } else if s.failures.is_empty() {
+                "ok".to_string()
+            } else {
+                s.failures.join("; ")
+            };
+            t.row(vec![
+                s.name.clone(),
+                num(s.old_throughput),
+                num(s.new_throughput),
+                pct(s.old_throughput, s.new_throughput),
+                num(s.old_p99),
+                num(s.new_p99),
+                pct(s.old_p99, s.new_p99),
+                verdict,
+            ]);
+        }
+        write!(f, "{}", t.render())
+    }
+}
+
+/// Compare two snapshots scenario-by-scenario. Fails a scenario when
+/// throughput drops more than `tol` below old, when total p99 inflates
+/// more than `tol` above old, or when an old scenario disappeared.
+/// Scenarios present only in `new` are reported but never fail — adding
+/// coverage must not require touching the baseline first.
+pub fn diff(old: &BenchReport, new: &BenchReport, tol: f64) -> BenchDiff {
+    let find = |r: &BenchReport, name: &str| -> Option<BenchScenario> {
+        r.scenarios.iter().find(|s| s.name == name).cloned()
+    };
+    let mut out = Vec::new();
+    for o in &old.scenarios {
+        let mut d = ScenarioDiff {
+            name: o.name.clone(),
+            old_throughput: o.samples_per_sec,
+            new_throughput: None,
+            old_p99: o.total_p99,
+            new_p99: None,
+            failures: Vec::new(),
+            new_only: false,
+        };
+        match find(new, &o.name) {
+            None => d.failures.push("missing in new report".to_string()),
+            Some(n) => {
+                d.new_throughput = n.samples_per_sec;
+                d.new_p99 = n.total_p99;
+                if let (Some(a), Some(b)) = (o.samples_per_sec, n.samples_per_sec) {
+                    if a > 0.0 && b < a * (1.0 - tol) {
+                        d.failures.push(format!(
+                            "throughput -{:.1}% (> {:.0}% tol)",
+                            100.0 * (a - b) / a,
+                            tol * 100.0
+                        ));
+                    }
+                }
+                if let (Some(a), Some(b)) = (o.total_p99, n.total_p99) {
+                    if a > 0.0 && b > a * (1.0 + tol) {
+                        d.failures.push(format!(
+                            "p99 +{:.1}% (> {:.0}% tol)",
+                            100.0 * (b - a) / a,
+                            tol * 100.0
+                        ));
+                    }
+                }
+            }
+        }
+        out.push(d);
+    }
+    for n in &new.scenarios {
+        if find(old, &n.name).is_none() {
+            out.push(ScenarioDiff {
+                name: n.name.clone(),
+                old_throughput: None,
+                new_throughput: n.samples_per_sec,
+                old_p99: None,
+                new_p99: n.total_p99,
+                failures: Vec::new(),
+                new_only: true,
+            });
+        }
+    }
+    BenchDiff { tol, scenarios: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scenario(name: &str, thpt: f64, p99: f64) -> BenchScenario {
+        let mut s = BenchScenario::named(name);
+        s.issued = 40;
+        s.completed = 40;
+        s.samples_per_sec = Some(thpt);
+        s.total_p50 = Some(p99 * 0.4);
+        s.total_p95 = Some(p99 * 0.8);
+        s.total_p99 = Some(p99);
+        s.fill_rows_per_call = Some(12.5);
+        s.coalesced_keys = Some(7);
+        s.score_calls = Some(220);
+        s
+    }
+
+    fn report(pairs: &[(&str, f64, f64)]) -> BenchReport {
+        let mut r = BenchReport::new(true, "local");
+        r.scenarios = pairs.iter().map(|(n, t, p)| scenario(n, *t, *p)).collect();
+        r
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_field() {
+        let mut r = report(&[("hetero4_sched_on", 812.5, 0.0123), ("dim_blobs16_bdm", 96.0, 0.2)]);
+        // Exercise null fields too.
+        r.scenarios[1].queue_p50 = None;
+        r.scenarios[1].coalesced_keys = None;
+        let back = BenchReport::from_json(&Json::parse(&r.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn wrong_schema_version_is_rejected() {
+        let mut j = report(&[("a", 1.0, 1.0)]).to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("schema_version".into(), Json::Num(999.0));
+        }
+        let err = BenchReport::from_json(&j).unwrap_err();
+        assert!(err.contains("schema_version"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_structural_problems() {
+        assert!(BenchReport::new(true, "local").validate().is_err(), "empty scenario list");
+        let mut dup = report(&[("a", 1.0, 1.0), ("a", 2.0, 1.0)]);
+        assert!(dup.validate().is_err(), "duplicate names");
+        dup.scenarios[1].name = "b".into();
+        dup.scenarios[1].samples_per_sec = Some(f64::NAN);
+        assert!(dup.validate().is_err(), "non-finite number");
+        let mut bad = report(&[("a", 1.0, 1.0)]);
+        bad.scenarios[0].completed = bad.scenarios[0].issued + 1;
+        assert!(bad.validate().is_err(), "completed > issued");
+        assert!(report(&[("a", 1.0, 1.0)]).validate().is_ok());
+    }
+
+    #[test]
+    fn diff_passes_within_tolerance() {
+        let old = report(&[("a", 100.0, 0.100)]);
+        let new = report(&[("a", 95.0, 0.105)]);
+        let d = diff(&old, &new, DEFAULT_TOL);
+        assert!(d.passed(), "{d}");
+    }
+
+    #[test]
+    fn diff_fails_on_throughput_regression_and_p99_inflation() {
+        let old = report(&[("a", 100.0, 0.100), ("b", 50.0, 0.050)]);
+        let new = report(&[("a", 85.0, 0.100), ("b", 50.0, 0.060)]);
+        let d = diff(&old, &new, DEFAULT_TOL);
+        assert!(!d.passed());
+        let a = d.scenarios.iter().find(|s| s.name == "a").unwrap();
+        assert!(a.failures.iter().any(|f| f.contains("throughput")), "{a:?}");
+        let b = d.scenarios.iter().find(|s| s.name == "b").unwrap();
+        assert!(b.failures.iter().any(|f| f.contains("p99")), "{b:?}");
+    }
+
+    #[test]
+    fn diff_fails_on_missing_scenario_but_not_new_ones() {
+        let old = report(&[("a", 100.0, 0.1)]);
+        let new = report(&[("b", 100.0, 0.1)]);
+        let d = diff(&old, &new, DEFAULT_TOL);
+        assert!(!d.passed());
+        assert!(d.scenarios.iter().any(|s| s.name == "a" && !s.failures.is_empty()));
+        assert!(d.scenarios.iter().any(|s| s.name == "b" && s.new_only && s.failures.is_empty()));
+    }
+
+    #[test]
+    fn write_read_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join("gddim_bench_report_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("BENCH_serving.json");
+        let path = path.to_str().unwrap();
+        let r = report(&[("hetero4_sched_off", 420.0, 0.033)]);
+        r.write(path).unwrap();
+        assert_eq!(BenchReport::read(path).unwrap(), r);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -12,6 +12,8 @@
 //!   (queueing delay is allowed to grow without bound, and the p99 shows
 //!   it). [`max_rate_under_slo`] sweeps rates against a latency target.
 
+pub mod bench_report;
+
 use std::time::{Duration, Instant};
 
 use crate::engine::{Engine, Job};

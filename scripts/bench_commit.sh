@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Refresh the committed perf trajectory: run the serving bench, write a
+# fresh BENCH_serving.json at the repo root, and print a benchdiff
+# against the copy committed at HEAD.
+#
+# Usage:
+#   scripts/bench_commit.sh            # full bench (minutes)
+#   GDDIM_BENCH_QUICK=1 scripts/bench_commit.sh   # CI-probe sizes (seconds)
+#
+# Numbers are machine-dependent — the committed baseline comes from CI's
+# runner class (see README "Performance trajectory"), so a local diff is
+# informational unless your box matches it. The script never fails on a
+# regression verdict; it fails only if the bench or schema check breaks.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT=BENCH_serving.json
+export GDDIM_BENCH_SOURCE="${GDDIM_BENCH_SOURCE:-local}"
+
+OLD=""
+if git cat-file -e "HEAD:$OUT" 2>/dev/null; then
+    OLD=$(mktemp --suffix=.json)
+    trap 'rm -f "$OLD"' EXIT
+    git show "HEAD:$OUT" > "$OLD"
+fi
+
+cargo bench --bench serving -- --json "$OUT"
+cargo run --release --bin gddim -- benchdiff --validate "$OUT"
+
+if [ -n "$OLD" ]; then
+    # Advisory: print the comparison but do not fail the refresh on it.
+    cargo run --release --bin gddim -- benchdiff "$OLD" "$OUT" || true
+else
+    echo "no $OUT committed at HEAD — wrote the first snapshot"
+fi
+
+echo "refreshed $OUT — commit it alongside your change"
