@@ -18,9 +18,11 @@ use gddim::server::request::{GenRequest, PlanKey};
 use gddim::server::router::{oracle_factory, Router, RouterConfig};
 use gddim::util::bench::Table;
 use gddim::util::cli::Args;
+use gddim::server::net::NetConfig;
 use gddim::workload::bench_report::{BenchReport, BenchScenario};
 use gddim::workload::{
-    engine_throughput, max_rate_under_slo, open_loop_probe, ClosedLoop, WorkloadSpec,
+    engine_throughput, max_rate_under_slo, open_loop_probe, open_loop_tcp_probe, ClosedLoop,
+    WorkloadSpec,
 };
 
 /// `GDDIM_BENCH_QUICK=1` shrinks every sweep to CI-probe size (same
@@ -89,6 +91,7 @@ fn main() {
     let mut scenarios = dimension_scaling(&args, quick);
     open_loop_slo(&args, quick);
     scenarios.extend(score_batching(&args, quick));
+    scenarios.extend(tcp_edge(&args, quick));
 
     // --json PATH: persist the scenario set as a schema-versioned
     // snapshot (the perf trajectory; see workload::bench_report).
@@ -213,6 +216,67 @@ fn score_batching(args: &Args, quick: bool) -> Vec<BenchScenario> {
     }
     t.emit("serving_score_batching");
     scenarios
+}
+
+/// Loopback-TCP edge scenario: the same heterogeneous 4-key mix as
+/// [`score_batching`] (scheduler on), but driven through a real
+/// `NetServer` over loopback sockets — wire parsing, admission control
+/// and per-connection writer threads are all on the measured path, so
+/// this row tracks the *edge tax* relative to `hetero4_sched_on` in the
+/// committed trajectory.
+fn tcp_edge(args: &Args, quick: bool) -> Vec<BenchScenario> {
+    let n_requests = args.get_usize("open-requests", if quick { 12 } else { 40 });
+    let samples = args.get_usize("hetero-samples", if quick { 8 } else { 16 });
+    let rate = args.get_f64("hetero-rate", 400.0);
+    let conns = args.get_usize("conns", 4);
+    let keys = vec![
+        PlanKey::gddim("cld", "gmm2d", 20, 1),
+        PlanKey::gddim("cld", "gmm2d", 20, 2),
+        PlanKey::gddim("cld", "gmm2d", 20, 3),
+        PlanKey::new(
+            "cld",
+            "gmm2d",
+            gddim::samplers::SamplerSpec::Em { lambda: gddim::samplers::OrderedF64::new(0.0) },
+            20,
+        ),
+    ];
+    let (report, metrics) = open_loop_tcp_probe(
+        RouterConfig { dispatchers: 4, ..RouterConfig::default() },
+        EngineConfig {
+            workers: 4,
+            score_batch: 4096,
+            score_wait: std::time::Duration::from_micros(200),
+            ..EngineConfig::default()
+        },
+        BatcherConfig { max_batch: 4096, max_wait: Duration::from_millis(2) },
+        NetConfig::default(),
+        conns,
+        WorkloadSpec {
+            n_requests,
+            samples_per_request: samples,
+            rate_per_sec: rate,
+            keys,
+            seed: 17,
+        },
+        true,
+    );
+    let edge = metrics.edge.as_ref().expect("edge server report carries edge counters");
+    let cell = |v: Option<f64>| v.map_or_else(|| "-".into(), |x| format!("{x:.4}"));
+    let mut t = Table::new(
+        "Loopback TCP edge: heterogeneous 4-key mix (CLD NFE=20) through the wire protocol",
+        &["conns", "done", "admitted", "shed", "p50(s)", "p99(s)", "samples/s"],
+    );
+    t.row(vec![
+        conns.to_string(),
+        format!("{}/{}", report.completed, report.issued),
+        edge.requests_admitted.to_string(),
+        edge.requests_shed.to_string(),
+        cell(report.total.as_ref().map(|s| s.p50)),
+        cell(report.total.as_ref().map(|s| s.p99)),
+        format!("{:.0}", metrics.samples_per_sec),
+    ]);
+    t.emit("serving_tcp_edge");
+    vec![BenchScenario::from_probe("hetero4_tcp", &report, samples, metrics.engine.as_ref())]
 }
 
 /// Open-loop SLO bench: inject at fixed rates regardless of completion

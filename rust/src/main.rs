@@ -6,7 +6,7 @@
 //!   sample                 run one sampling config and report metrics
 //!   exp <table1|...|nll>   regenerate a paper table/figure (also via `cargo bench`)
 //!   coeffs                 time Stage-I plan construction (App. C.3 "within 1 min")
-//!   serve                  run the batched sampling service demo
+//!   serve                  batched sampling service (demo, or TCP edge via --listen)
 //!   workload               open-loop SLO workload: rate sweep + latency percentiles
 //!   benchdiff              compare two BENCH_serving.json snapshots (perf gate)
 
@@ -53,10 +53,14 @@ fn main() {
                  serve flags:  --workers W --dispatchers D --requests R --samples S --rate RPS\n\
                  \u{20}              --dataset NAME --samplers SPEC+SPEC+.. --plan-cache-dir DIR\n\
                  \u{20}              --shard-size BYTES --score-batch N (0 = off) --score-wait MICROS\n\
+                 \u{20}              --listen ADDR   (TCP edge; line-delimited JSON wire protocol)\n\
+                 \u{20}              --conn-threads N --accept-queue N --rate-limit RPS --rate-burst B\n\
+                 \u{20}              --max-inflight N --slo-ms M --duration-secs S --report-secs S\n\
                  workload flags: --rates R1,R2,.. (or --rate R) --slo-ms M --poisson\n\
                  \u{20}                --requests R --samples S --nfe N --workers W --dispatchers D\n\
                  \u{20}                --dataset NAME --samplers SPEC+SPEC+.. --plan-cache-dir DIR\n\
                  \u{20}                --shard-size BYTES --score-batch N (0 = off) --score-wait MICROS\n\
+                 \u{20}                --tcp --conns C   (drive the loopback TCP edge, C connections)\n\
                  benchdiff:    gddim benchdiff OLD.json NEW.json [--tol FRAC]   (exit 1 on regression)\n\
                  \u{20}              gddim benchdiff --validate FILE.json       (schema check only)"
             );
@@ -272,7 +276,13 @@ fn exp(args: &Args) {
 }
 
 fn serve(args: &Args) {
-    gddim::server::demo::run(args);
+    // `--listen ADDR` runs the real TCP edge; without it, the in-process
+    // synthetic-load demo (the original `serve` behavior) keeps working.
+    if args.has("listen") {
+        gddim::server::net::run_cli(args);
+    } else {
+        gddim::server::demo::run(args);
+    }
 }
 
 fn workload(args: &Args) {

@@ -1,12 +1,15 @@
 //! Server observability: per-request latency, batch occupancy, NFE and
 //! throughput counters (lock-guarded; the hot path touches them once per
-//! batch, not per sample).
+//! batch, not per sample), plus the TCP edge's admission counters
+//! ([`EdgeCounters`] → [`EdgeStats`]).
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::engine::EngineStats;
 use crate::math::stats::Summary;
+use crate::server::lock_unpoisoned;
 
 #[derive(Default)]
 struct Inner {
@@ -30,14 +33,14 @@ impl ServerMetrics {
     }
 
     pub fn start_clock(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         if g.started.is_none() {
             g.started = Some(Instant::now());
         }
     }
 
     pub fn record_batch(&self, n_requests: usize, n_samples: usize, nfe: usize, latencies: &[f64]) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         g.latencies.extend_from_slice(latencies);
         g.batch_sizes.push(n_requests as f64);
         g.samples_done += n_samples as u64;
@@ -54,10 +57,11 @@ impl ServerMetrics {
     /// attached (the router passes its shared engine's stats here so one
     /// report covers both serving and execution layers).
     pub fn report_with_engine(&self, engine: Option<EngineStats>) -> MetricsReport {
-        let g = self.inner.lock().unwrap();
+        let g = lock_unpoisoned(&self.inner);
         let elapsed = g.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
         MetricsReport {
             engine,
+            edge: None,
             latency: if g.latencies.is_empty() { None } else { Some(Summary::from(&g.latencies)) },
             mean_batch_requests: if g.batch_sizes.is_empty() {
                 0.0
@@ -74,10 +78,90 @@ impl ServerMetrics {
     }
 }
 
+/// Live admission counters for the TCP edge (`server::net`). Atomics,
+/// not a mutex: the accept loop and every connection thread bump them on
+/// the request hot path.
+#[derive(Default)]
+pub struct EdgeCounters {
+    pub connections_accepted: AtomicU64,
+    /// Connections turned away at the accept queue (queue full).
+    pub connections_shed: AtomicU64,
+    /// Requests admitted past rate limiting + the inflight watermark.
+    pub requests_admitted: AtomicU64,
+    /// Requests answered with a shed + `Retry-After` hint.
+    pub requests_shed: AtomicU64,
+    /// Lines that failed wire parsing (answered, connection kept).
+    pub requests_malformed: AtomicU64,
+    /// Result lines actually written back to a client.
+    pub requests_completed: AtomicU64,
+    /// Of the completed, how many finished during graceful drain.
+    pub requests_drained: AtomicU64,
+    /// High-water mark of any single connection's in-flight queue depth.
+    pub peak_conn_depth: AtomicUsize,
+}
+
+impl EdgeCounters {
+    /// Record one connection's current in-flight depth, keeping the max.
+    pub fn note_conn_depth(&self, depth: usize) {
+        self.peak_conn_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> EdgeStats {
+        EdgeStats {
+            connections_accepted: self.connections_accepted.load(Ordering::Relaxed),
+            connections_shed: self.connections_shed.load(Ordering::Relaxed),
+            requests_admitted: self.requests_admitted.load(Ordering::Relaxed),
+            requests_shed: self.requests_shed.load(Ordering::Relaxed),
+            requests_malformed: self.requests_malformed.load(Ordering::Relaxed),
+            requests_completed: self.requests_completed.load(Ordering::Relaxed),
+            requests_drained: self.requests_drained.load(Ordering::Relaxed),
+            peak_conn_depth: self.peak_conn_depth.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time snapshot of [`EdgeCounters`], riding
+/// [`MetricsReport::edge`] when the report comes from a [`NetServer`]
+/// (in-process routers leave it `None`).
+///
+/// [`NetServer`]: crate::server::net::NetServer
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EdgeStats {
+    pub connections_accepted: u64,
+    pub connections_shed: u64,
+    pub requests_admitted: u64,
+    pub requests_shed: u64,
+    pub requests_malformed: u64,
+    pub requests_completed: u64,
+    pub requests_drained: u64,
+    pub peak_conn_depth: usize,
+}
+
+impl std::fmt::Display for EdgeStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "edge: conns={}(+{} shed) requests: admitted={} shed={} malformed={} \
+             completed={} drained={} peak-conn-depth={}",
+            self.connections_accepted,
+            self.connections_shed,
+            self.requests_admitted,
+            self.requests_shed,
+            self.requests_malformed,
+            self.requests_completed,
+            self.requests_drained,
+            self.peak_conn_depth
+        )
+    }
+}
+
 pub struct MetricsReport {
     /// Execution-layer counters (jobs/shards/queue depth/worker busy
     /// shares), when the caller has an engine to snapshot.
     pub engine: Option<EngineStats>,
+    /// Network-edge admission counters, when the caller is a
+    /// [`NetServer`](crate::server::net::NetServer).
+    pub edge: Option<EdgeStats>,
     pub latency: Option<Summary>,
     pub mean_batch_requests: f64,
     pub requests_done: u64,
@@ -100,6 +184,9 @@ impl std::fmt::Display for MetricsReport {
             self.nfe_total
         )?;
         writeln!(f, "throughput={:.0} samples/s over {:.2}s", self.samples_per_sec, self.elapsed)?;
+        if let Some(edge) = &self.edge {
+            writeln!(f, "{edge}")?;
+        }
         if let Some(e) = &self.engine {
             writeln!(f, "{e}")?;
         }
@@ -128,6 +215,7 @@ mod tests {
         assert_eq!(r.latency.unwrap().n, 4);
         assert!((r.mean_batch_requests - 2.0).abs() < 1e-12);
         assert!(r.engine.is_none(), "plain report carries no engine snapshot");
+        assert!(r.edge.is_none(), "in-process reports carry no edge counters");
     }
 
     #[test]
@@ -141,5 +229,25 @@ mod tests {
         let e = r.engine.as_ref().unwrap();
         assert_eq!(e.jobs_run, 0);
         assert!(r.to_string().contains("engine: workers=1"), "{r}");
+    }
+
+    #[test]
+    fn edge_counters_snapshot_and_display() {
+        let c = EdgeCounters::default();
+        c.connections_accepted.fetch_add(3, Ordering::Relaxed);
+        c.requests_admitted.fetch_add(10, Ordering::Relaxed);
+        c.requests_shed.fetch_add(2, Ordering::Relaxed);
+        c.requests_completed.fetch_add(10, Ordering::Relaxed);
+        c.note_conn_depth(4);
+        c.note_conn_depth(2);
+        let s = c.snapshot();
+        assert_eq!(s.connections_accepted, 3);
+        assert_eq!(s.requests_shed, 2);
+        assert_eq!(s.peak_conn_depth, 4, "depth keeps its high-water mark");
+        let mut r = ServerMetrics::new().report();
+        r.edge = Some(s.clone());
+        let text = r.to_string();
+        assert!(text.contains("edge: conns=3(+0 shed)"), "{text}");
+        assert!(text.contains("peak-conn-depth=4"), "{text}");
     }
 }

@@ -16,7 +16,26 @@ pub mod batcher;
 pub mod lru;
 pub mod router;
 pub mod metrics;
+pub mod net;
+pub mod wire;
 pub mod demo;
 
+pub use net::{NetConfig, NetServer};
 pub use request::{GenRequest, GenResponse, PlanKey};
 pub use router::{Router, RouterConfig};
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Poison-proof lock acquisition for the serving boundary.
+///
+/// A panic in one dispatcher (or in a custom `PreparedFactory`) poisons
+/// any mutex whose guard it held, and the default `.lock().unwrap()`
+/// then panics every *later* caller too — one bad request would take
+/// the whole edge down. The shared router/metrics state is simple data
+/// (queues, counters, the plan cache) that stays structurally valid at
+/// every await-free lock region, so the recovery policy is: take the
+/// guard back with [`PoisonError::into_inner`](std::sync::PoisonError)
+/// and keep serving.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}

@@ -31,6 +31,7 @@ use crate::samplers::{SampleOutput, Sampler, SamplerSpec};
 use crate::score::model::ScoreModel;
 use crate::score::oracle::GmmOracle;
 use crate::server::batcher::{BatcherConfig, KeyQueue};
+use crate::server::lock_unpoisoned;
 use crate::server::lru::LruCache;
 use crate::server::metrics::{MetricsReport, ServerMetrics};
 use crate::server::request::{Envelope, GenRequest, GenResponse, PlanKey};
@@ -90,7 +91,7 @@ pub fn oracle_factory() -> Box<PreparedFactory> {
         let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), key.nfe);
         let kt = key.spec.model_kt();
         let model: Arc<dyn ScoreModel> = {
-            let mut cache = models.lock().unwrap();
+            let mut cache = lock_unpoisoned(&models);
             cache
                 .entry((key.process.clone(), key.dataset.clone(), kt))
                 .or_insert_with(|| {
@@ -212,18 +213,25 @@ impl Router {
     }
 
     /// Enqueue a request; the receiver yields exactly one response. A
-    /// structurally invalid key (bad sampler config — e.g. SSCS off
-    /// CLD, λ ≤ 0, nfe = 0 — or a catalogue dataset whose dimensions
-    /// cannot fit the process, e.g. 2-D vector data on the image-space
-    /// BDM) is answered immediately with `GenResponse::error` set and
-    /// never reaches a dispatcher; whether a *well-formed* key's
-    /// process/dataset is servable is the factory's call, answered per
-    /// request at preparation time (datasets the catalogue does not
-    /// know pass the dims check untouched).
+    /// structurally invalid request (`n = 0`, or a bad sampler config —
+    /// e.g. SSCS off CLD, λ ≤ 0, nfe = 0 — or a catalogue dataset whose
+    /// dimensions cannot fit the process, e.g. 2-D vector data on the
+    /// image-space BDM) is answered immediately with
+    /// `GenResponse::error` set and never reaches a dispatcher; whether
+    /// a *well-formed* key's process/dataset is servable is the
+    /// factory's call, answered per request at preparation time
+    /// (datasets the catalogue does not know pass the dims check
+    /// untouched).
     pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
         let (tx, rx) = channel();
         let structural = if req.key.nfe == 0 {
             Err(crate::Error::msg("nfe must be >= 1"))
+        } else if req.n == 0 {
+            // A zero-sample request would flow into batch accounting as
+            // a zero-row slice of someone else's batch, skewing the
+            // fill/throughput counters — reject it like any other
+            // structural error.
+            Err(crate::Error::msg("n must be >= 1"))
         } else {
             req.key.validate_dims().and_then(|()| req.key.spec.validate(&req.key.process))
         };
@@ -233,7 +241,7 @@ impl Router {
         }
         let env = Envelope { req, reply: tx, enqueued: Instant::now() };
         {
-            let mut qs = self.shared.queues.lock().unwrap();
+            let mut qs = lock_unpoisoned(&self.shared.queues);
             qs.entry(env.req.key.clone())
                 .or_insert_with(|| {
                     KeyQueue::new(BatcherConfig {
@@ -260,12 +268,12 @@ impl Router {
     /// Entries currently held by the Stage-I plan cache (observability +
     /// eviction tests).
     pub fn plan_cache_len(&self) -> usize {
-        self.shared.prepared.lock().unwrap().len()
+        lock_unpoisoned(&self.shared.prepared).len()
     }
 
     /// Whether `key`'s Stage-I state is currently cached.
     pub fn plan_cache_contains(&self, key: &PlanKey) -> bool {
-        self.shared.prepared.lock().unwrap().contains(key)
+        lock_unpoisoned(&self.shared.prepared).contains(key)
     }
 
     /// Graceful shutdown: drain queues, stop workers.
@@ -273,7 +281,7 @@ impl Router {
         // Wait for queues to drain.
         loop {
             let empty = {
-                let qs = self.shared.queues.lock().unwrap();
+                let qs = lock_unpoisoned(&self.shared.queues);
                 qs.values().all(|q| q.is_empty())
             };
             if empty {
@@ -310,7 +318,7 @@ fn worker_loop(sh: Arc<Shared>) {
     loop {
         // Find (or wait for) ready queues.
         let batches: Vec<Vec<Envelope>> = {
-            let mut qs = sh.queues.lock().unwrap();
+            let mut qs = lock_unpoisoned(&sh.queues);
             loop {
                 if sh.stop.load(Ordering::SeqCst) {
                     return;
@@ -332,8 +340,10 @@ fn worker_loop(sh: Arc<Shared>) {
                         .collect();
                 }
                 // Sleep briefly (deadline granularity) or until notified.
-                let (guard, _timeout) =
-                    sh.cv.wait_timeout(qs, Duration::from_millis(1)).unwrap();
+                let (guard, _timeout) = sh
+                    .cv
+                    .wait_timeout(qs, Duration::from_millis(1))
+                    .unwrap_or_else(|e| e.into_inner());
                 qs = guard;
             }
         };
@@ -345,17 +355,21 @@ fn worker_loop(sh: Arc<Shared>) {
 }
 
 fn prepared_for(sh: &Shared, key: &PlanKey) -> crate::Result<Arc<Prepared>> {
-    if let Some(p) = sh.prepared.lock().unwrap().get(key) {
+    if let Some(p) = lock_unpoisoned(&sh.prepared).get(key) {
         return Ok(p);
     }
     // Build outside the lock (plan construction can take milliseconds).
     // A factory rejection is answered per request by the caller, never
-    // cached: a transient failure must not poison the key.
-    let built = (sh.factory)(key, None)?;
+    // cached: a transient failure must not poison the key. The call is
+    // also panic-contained: a panicking custom factory must cost only
+    // the requests riding this batch — not the dispatcher thread, and
+    // with it every queue the dispatcher would have served.
+    let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (sh.factory)(key, None)))
+        .unwrap_or_else(|_| Err(crate::Error::msg("prepared factory panicked")))?;
     if let Some(dir) = &sh.plan_cache_dir {
         persist_plan(dir, key, built.plan.as_deref());
     }
-    let mut cache = sh.prepared.lock().unwrap();
+    let mut cache = lock_unpoisoned(&sh.prepared);
     // Another dispatcher may have built the same key while we did; keep
     // the first build so every batch of a key sees one Prepared.
     if let Some(p) = cache.get(key) {
@@ -425,7 +439,7 @@ fn warm_plan_cache(sh: &Shared, dir: &Path) {
             Ok((key, prep))
         }) {
             Ok((key, prep)) => {
-                sh.prepared.lock().unwrap().insert(key, prep);
+                lock_unpoisoned(&sh.prepared).insert(key, prep);
             }
             Err(e) => eprintln!("plan cache: skipping {}: {e}", path.display()),
         }
@@ -723,6 +737,57 @@ mod tests {
         let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
         assert!(resp.error.is_none());
         assert_eq!(resp.xs.len(), 8 * 2);
+        router.shutdown();
+    }
+
+    #[test]
+    fn zero_sample_requests_are_rejected_at_submit() {
+        let router = Router::new(1, BatcherConfig::default(), oracle_factory());
+        let rx = router.submit(GenRequest { id: 3, n: 0, key: key(), seed: 1 });
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(resp.id, 3);
+        assert_eq!(resp.error.as_deref(), Some("n must be >= 1"));
+        assert!(resp.xs.is_empty());
+        // The rejection never reached a dispatcher, so no counter moved
+        // — a zero-row request must not skew fill/throughput stats.
+        let report = router.metrics().report();
+        assert_eq!(report.requests_done, 0);
+        assert_eq!(report.samples_done, 0);
+        // And the router still serves real traffic afterwards.
+        let rx = router.submit(GenRequest { id: 4, n: 8, key: key(), seed: 1 });
+        let ok = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(ok.error.is_none());
+        assert_eq!(ok.xs.len(), 8 * 2);
+        router.shutdown();
+    }
+
+    #[test]
+    fn panicking_factory_leaves_router_serving_other_keys() {
+        // A factory that panics on one dataset and delegates the rest to
+        // the oracle factory — the "bad model load" failure mode a
+        // custom factory can hit once real networks are behind it.
+        let inner = oracle_factory();
+        let factory: Box<PreparedFactory> = Box::new(move |key, pre| {
+            if key.dataset == "hard2d" {
+                panic!("factory blew up on `{}`", key.dataset);
+            }
+            inner(key, pre)
+        });
+        let router = Router::new(2, BatcherConfig::default(), factory);
+        let bad = PlanKey::gddim("cld", "hard2d", 6, 1);
+        let rx = router.submit(GenRequest { id: 1, n: 4, key: bad.clone(), seed: 0 });
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.error.as_deref(), Some("prepared factory panicked"));
+        // The dispatcher survived and nothing is poisoned: an unrelated
+        // key round-trips, and a retry of the panicking key is answered
+        // again (not cached, not a hang, not a poisoned-lock panic).
+        let rx = router.submit(GenRequest { id: 2, n: 8, key: key(), seed: 1 });
+        let ok = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(ok.error.is_none(), "{:?}", ok.error);
+        assert_eq!(ok.xs.len(), 8 * 2);
+        let rx = router.submit(GenRequest { id: 3, n: 4, key: bad, seed: 0 });
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.error.as_deref(), Some("prepared factory panicked"));
         router.shutdown();
     }
 

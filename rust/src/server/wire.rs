@@ -1,0 +1,385 @@
+//! Line-delimited JSON wire format for the TCP serving edge.
+//!
+//! One JSON object per `\n`-terminated line, both directions. A request
+//! line carries the client-assigned `id`, the sample count `n`, the RNG
+//! `seed`, and the four [`PlanKey`] fields inline — `spec` rides as the
+//! round-trip-exact [`SamplerSpec`](crate::samplers::SamplerSpec) text
+//! grammar, so a wire request parses straight into a [`GenRequest`]
+//! without a lossy intermediate:
+//!
+//! ```json
+//! {"dataset":"gmm2d","id":1,"n":16,"nfe":20,"process":"cld","seed":7,"spec":"gddim:q=2"}
+//! ```
+//!
+//! The server answers each admitted request with a status line first and
+//! a result line later (responses for different requests on one
+//! connection may interleave; match on `id`):
+//!
+//! ```json
+//! {"id":1,"status":"accepted"}
+//! {"batch_size":1,"dim_x":2,"id":1,"latency":0.004,"nfe":20,"ok":true,...,"xs":[0.5,-1.5]}
+//! ```
+//!
+//! Rejections and sheds are `{"error":...,"id":N,"ok":false}` lines; a
+//! shed additionally carries `retry_after_ms`, the edge's `Retry-After`
+//! hint. Floats round-trip bit-exactly through [`Json`]'s shortest
+//! representation, which is what makes the loopback-TCP bit-identity
+//! test against in-process [`Router::submit`](crate::server::Router)
+//! meaningful.
+
+use crate::server::request::{GenRequest, GenResponse, PlanKey};
+use crate::util::json::Json;
+use crate::Error;
+use std::collections::BTreeMap;
+
+/// A client→server request line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    pub id: u64,
+    pub n: usize,
+    pub seed: u64,
+    pub key: PlanKey,
+}
+
+fn field_u64(j: &Json, k: &str) -> crate::Result<u64> {
+    let v = j.get(k).ok_or_else(|| Error::msg(format!("wire: missing `{k}`")))?;
+    let x = v.as_f64().ok_or_else(|| Error::msg(format!("wire: `{k}` not a number")))?;
+    if x < 0.0 || x.fract() != 0.0 {
+        return Err(Error::msg(format!("wire: `{k}` not a non-negative integer")));
+    }
+    Ok(x as u64)
+}
+
+impl WireRequest {
+    /// Parse one request line (trailing newline tolerated).
+    pub fn parse_line(line: &str) -> crate::Result<WireRequest> {
+        let j = Json::parse(line.trim_end()).map_err(|e| Error::msg(format!("wire: {e}")))?;
+        let key = PlanKey::from_json(&j)?;
+        Ok(WireRequest {
+            id: field_u64(&j, "id")?,
+            n: field_u64(&j, "n")? as usize,
+            seed: field_u64(&j, "seed")?,
+            key,
+        })
+    }
+
+    /// Serialize as one `\n`-terminated line.
+    pub fn to_line(&self) -> String {
+        let mut obj = match self.key.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!("PlanKey::to_json is an object"),
+        };
+        obj.insert("id".to_string(), Json::Num(self.id as f64));
+        obj.insert("n".to_string(), Json::Num(self.n as f64));
+        obj.insert("seed".to_string(), Json::Num(self.seed as f64));
+        let mut line = Json::Obj(obj).to_string_compact();
+        line.push('\n');
+        line
+    }
+
+    /// The in-process request this wire request stands for.
+    pub fn to_gen(&self) -> GenRequest {
+        GenRequest { id: self.id, n: self.n, key: self.key.clone(), seed: self.seed }
+    }
+}
+
+/// A server→client response line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireResponse {
+    /// Admission acknowledgement, streamed before the result.
+    Status { id: u64, status: String },
+    /// A completed request's samples + latency split.
+    Result {
+        id: u64,
+        dim_x: usize,
+        nfe: usize,
+        latency: f64,
+        queue_latency: f64,
+        service_latency: f64,
+        batch_size: usize,
+        /// Row-major n × dim_x samples, bit-exact over the wire.
+        xs: Vec<f64>,
+    },
+    /// Rejection or shed. `retry_after_ms` is set on load sheds — the
+    /// edge's `Retry-After` hint, derived from its SLO target.
+    Error { id: u64, error: String, retry_after_ms: Option<u64> },
+}
+
+impl WireResponse {
+    /// The request id this line answers.
+    pub fn id(&self) -> u64 {
+        match self {
+            WireResponse::Status { id, .. }
+            | WireResponse::Result { id, .. }
+            | WireResponse::Error { id, .. } => *id,
+        }
+    }
+
+    /// Map a router response onto the wire: an error response becomes an
+    /// `Error` line (no retry hint — structural rejections are not
+    /// retryable), everything else a `Result` line.
+    pub fn from_gen(r: &GenResponse) -> WireResponse {
+        if let Some(error) = &r.error {
+            return WireResponse::Error { id: r.id, error: error.clone(), retry_after_ms: None };
+        }
+        WireResponse::Result {
+            id: r.id,
+            dim_x: r.dim_x,
+            nfe: r.nfe,
+            latency: r.latency,
+            queue_latency: r.queue_latency,
+            service_latency: r.service_latency,
+            batch_size: r.batch_size,
+            xs: r.xs.clone(),
+        }
+    }
+
+    /// The client-side view: rebuild the [`GenResponse`] a wire line
+    /// stands for (status lines have no `GenResponse` equivalent).
+    pub fn to_gen(&self) -> Option<GenResponse> {
+        match self {
+            WireResponse::Status { .. } => None,
+            WireResponse::Result {
+                id,
+                dim_x,
+                nfe,
+                latency,
+                queue_latency,
+                service_latency,
+                batch_size,
+                xs,
+            } => Some(GenResponse {
+                id: *id,
+                xs: xs.clone(),
+                dim_x: *dim_x,
+                nfe: *nfe,
+                latency: *latency,
+                queue_latency: *queue_latency,
+                service_latency: *service_latency,
+                batch_size: *batch_size,
+                error: None,
+            }),
+            WireResponse::Error { id, error, .. } => {
+                Some(GenResponse::rejected(*id, error.clone()))
+            }
+        }
+    }
+
+    /// Serialize as one `\n`-terminated line.
+    pub fn to_line(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("id".to_string(), Json::Num(self.id() as f64));
+        match self {
+            WireResponse::Status { status, .. } => {
+                obj.insert("status".to_string(), Json::Str(status.clone()));
+            }
+            WireResponse::Result {
+                dim_x,
+                nfe,
+                latency,
+                queue_latency,
+                service_latency,
+                batch_size,
+                xs,
+                ..
+            } => {
+                obj.insert("ok".to_string(), Json::Bool(true));
+                obj.insert("dim_x".to_string(), Json::Num(*dim_x as f64));
+                obj.insert("nfe".to_string(), Json::Num(*nfe as f64));
+                obj.insert("latency".to_string(), Json::Num(*latency));
+                obj.insert("queue_latency".to_string(), Json::Num(*queue_latency));
+                obj.insert("service_latency".to_string(), Json::Num(*service_latency));
+                obj.insert("batch_size".to_string(), Json::Num(*batch_size as f64));
+                obj.insert("xs".to_string(), Json::Arr(xs.iter().map(|x| Json::Num(*x)).collect()));
+            }
+            WireResponse::Error { error, retry_after_ms, .. } => {
+                obj.insert("ok".to_string(), Json::Bool(false));
+                obj.insert("error".to_string(), Json::Str(error.clone()));
+                if let Some(ms) = retry_after_ms {
+                    obj.insert("retry_after_ms".to_string(), Json::Num(*ms as f64));
+                }
+            }
+        }
+        let mut line = Json::Obj(obj).to_string_compact();
+        line.push('\n');
+        line
+    }
+
+    /// Parse one response line (trailing newline tolerated).
+    pub fn parse_line(line: &str) -> crate::Result<WireResponse> {
+        let j = Json::parse(line.trim_end()).map_err(|e| Error::msg(format!("wire: {e}")))?;
+        let id = field_u64(&j, "id")?;
+        if let Some(status) = j.get("status") {
+            let status = status.as_str().ok_or("wire: `status` not a string")?.to_string();
+            return Ok(WireResponse::Status { id, status });
+        }
+        match j.get("ok") {
+            Some(Json::Bool(true)) => {
+                let xs = j
+                    .get("xs")
+                    .and_then(|v| v.as_f64_vec())
+                    .ok_or("wire: result missing `xs`")?;
+                Ok(WireResponse::Result {
+                    id,
+                    dim_x: field_u64(&j, "dim_x")? as usize,
+                    nfe: field_u64(&j, "nfe")? as usize,
+                    latency: j.get("latency").and_then(Json::as_f64).unwrap_or(0.0),
+                    queue_latency: j.get("queue_latency").and_then(Json::as_f64).unwrap_or(0.0),
+                    service_latency: j.get("service_latency").and_then(Json::as_f64).unwrap_or(0.0),
+                    batch_size: field_u64(&j, "batch_size")? as usize,
+                    xs,
+                })
+            }
+            Some(Json::Bool(false)) => {
+                let error =
+                    j.get("error").and_then(Json::as_str).unwrap_or("unspecified").to_string();
+                let retry_after_ms = match j.get("retry_after_ms") {
+                    Some(v) => Some(
+                        v.as_f64().ok_or("wire: `retry_after_ms` not a number")?.max(0.0) as u64,
+                    ),
+                    None => None,
+                };
+                Ok(WireResponse::Error { id, error, retry_after_ms })
+            }
+            _ => Err(Error::msg("wire: response has neither `status` nor boolean `ok`")),
+        }
+    }
+}
+
+/// Best-effort id recovery from a line that failed full parsing, so a
+/// malformed request can still be answered with an `Error` line carrying
+/// the id the client is waiting on (0 when even that is unrecoverable).
+pub fn extract_id(line: &str) -> u64 {
+    Json::parse(line.trim_end())
+        .ok()
+        .and_then(|j| j.get("id").and_then(Json::as_f64))
+        .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+        .map(|x| x as u64)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::samplers::{OrderedF64, SamplerSpec};
+
+    #[test]
+    fn request_line_round_trips_bit_exactly() {
+        let reqs = [
+            WireRequest { id: 1, n: 16, seed: 7, key: PlanKey::gddim("cld", "gmm2d", 20, 2) },
+            WireRequest {
+                id: u64::MAX >> 12,
+                n: 1,
+                seed: 0,
+                key: PlanKey::new(
+                    "vpsde",
+                    "blobs8",
+                    SamplerSpec::Em { lambda: OrderedF64::new(1e-4) },
+                    50,
+                ),
+            },
+        ];
+        for req in reqs {
+            let line = req.to_line();
+            assert!(line.ends_with('\n') && !line[..line.len() - 1].contains('\n'));
+            let back = WireRequest::parse_line(&line).unwrap();
+            assert_eq!(back, req);
+            let gen = back.to_gen();
+            assert_eq!((gen.id, gen.n, gen.seed), (req.id, req.n, req.seed));
+            assert_eq!(gen.key, req.key);
+        }
+    }
+
+    #[test]
+    fn result_line_round_trips_awkward_floats() {
+        let resp = WireResponse::Result {
+            id: 42,
+            dim_x: 2,
+            nfe: 20,
+            latency: 0.1 + 0.2,
+            queue_latency: 1e-17,
+            service_latency: 0.30000000000000004,
+            batch_size: 3,
+            xs: vec![0.1 + 0.2, -0.0, 1.0 / 3.0, f64::MIN_POSITIVE, -1.5e300],
+        };
+        let back = WireResponse::parse_line(&resp.to_line()).unwrap();
+        match (&resp, &back) {
+            (WireResponse::Result { xs: a, .. }, WireResponse::Result { xs: b, .. }) => {
+                let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(a), bits(b));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(back, resp);
+        let gen = back.to_gen().unwrap();
+        assert_eq!(gen.batch_size, 3);
+        assert!(gen.error.is_none());
+    }
+
+    #[test]
+    fn status_error_and_retry_hint_round_trip() {
+        let status = WireResponse::Status { id: 9, status: "accepted".to_string() };
+        assert_eq!(WireResponse::parse_line(&status.to_line()).unwrap(), status);
+
+        let shed = WireResponse::Error {
+            id: 9,
+            error: "shed: queue depth over watermark".to_string(),
+            retry_after_ms: Some(125),
+        };
+        let back = WireResponse::parse_line(&shed.to_line()).unwrap();
+        assert_eq!(back, shed);
+        let gen = back.to_gen().unwrap();
+        assert_eq!(gen.error.as_deref(), Some("shed: queue depth over watermark"));
+
+        let reject =
+            WireResponse::Error { id: 3, error: "nfe must be >= 1".into(), retry_after_ms: None };
+        assert!(!reject.to_line().contains("retry_after_ms"));
+        assert_eq!(WireResponse::parse_line(&reject.to_line()).unwrap(), reject);
+    }
+
+    #[test]
+    fn from_gen_maps_errors_and_results() {
+        let ok = GenResponse {
+            id: 5,
+            xs: vec![1.0, 2.0],
+            dim_x: 2,
+            nfe: 6,
+            latency: 0.01,
+            queue_latency: 0.002,
+            service_latency: 0.008,
+            batch_size: 1,
+            error: None,
+        };
+        assert!(matches!(WireResponse::from_gen(&ok), WireResponse::Result { id: 5, .. }));
+        let bad = GenResponse::rejected(6, "unknown process `ddim`".into());
+        match WireResponse::from_gen(&bad) {
+            WireResponse::Error { id: 6, retry_after_ms: None, .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected_not_panicked() {
+        for line in [
+            "",
+            "not json",
+            "{",
+            "[1,2,3]",
+            r#"{"id":"x","n":1,"seed":0}"#,
+            r#"{"id":1,"n":1}"#,
+            r#"{"id":1,"n":-2,"seed":0,"process":"cld","dataset":"gmm2d","spec":"sscs","nfe":5}"#,
+            r#"{"id":1,"n":1,"seed":0,"process":"cld","dataset":"gmm2d","spec":"warp:9","nfe":5}"#,
+        ] {
+            assert!(WireRequest::parse_line(line).is_err(), "{line:?}");
+        }
+        assert!(WireResponse::parse_line(r#"{"id":1}"#).is_err());
+        assert!(WireResponse::parse_line("zzz").is_err());
+    }
+
+    #[test]
+    fn extract_id_recovers_what_it_can() {
+        assert_eq!(extract_id(r#"{"id":77,"n":"oops"}"#), 77);
+        assert_eq!(extract_id("garbage"), 0);
+        assert_eq!(extract_id(r#"{"id":-4}"#), 0);
+    }
+}

@@ -80,6 +80,15 @@ impl Json {
         s
     }
 
+    /// Single-line form (no newlines, no padding) — the wire format for
+    /// `server::wire` is one JSON value per line, so the writer must
+    /// never emit a `\n` of its own.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, false);
+        s
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |n: usize| "  ".repeat(n);
         match self {
@@ -357,6 +366,16 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let j2 = Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn compact_form_is_one_line_and_round_trips() {
+        let src = r#"{"id":7,"nested":{"xs":[0.5,-1.5,3.25]},"spec":"gddim:q=2"}"#;
+        let j = Json::parse(src).unwrap();
+        let line = j.to_string_compact();
+        assert!(!line.contains('\n'));
+        assert_eq!(line, src);
+        assert_eq!(Json::parse(&line).unwrap(), j);
     }
 
     #[test]

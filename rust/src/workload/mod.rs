@@ -334,6 +334,146 @@ pub fn open_loop_probe(
     (report, metrics)
 }
 
+/// Like [`open_loop_probe`], but over loopback TCP through a
+/// [`NetServer`](crate::server::net::NetServer): same schedule and key
+/// mix, with requests riding the line-delimited wire format round-robin
+/// across `conns` client connections. Latency is *client-measured* —
+/// from each request's scheduled arrival to the moment its result line
+/// is read off the socket — so the report prices the full edge path
+/// (framing, admission control, both socket hops), not just the router.
+/// The server-reported service latency is kept and queueing is rebuilt
+/// as `total − service`, so the split still adds up exactly.
+pub fn open_loop_tcp_probe(
+    rcfg: crate::server::router::RouterConfig,
+    ecfg: crate::engine::EngineConfig,
+    bcfg: crate::server::batcher::BatcherConfig,
+    mut ncfg: crate::server::net::NetConfig,
+    conns: usize,
+    spec: WorkloadSpec,
+    poisson: bool,
+) -> (OpenLoopReport, crate::server::metrics::MetricsReport) {
+    use crate::server::net::NetServer;
+    use crate::server::wire::{WireRequest, WireResponse};
+    use std::io::{BufRead, BufReader, Write as _};
+    use std::net::TcpStream;
+
+    let conns = conns.max(1);
+    // The client connections are held for the whole run, so the pool
+    // needs one thread per connection or the round-robin tail starves.
+    ncfg.conn_threads = ncfg.conn_threads.max(conns);
+    let router = Router::with_options(
+        rcfg,
+        Engine::with_config(ecfg),
+        bcfg,
+        crate::server::router::oracle_factory(),
+    );
+    let server = NetServer::bind("127.0.0.1:0", ncfg, router).expect("bind loopback edge");
+    let addr = server.local_addr();
+
+    // Warm every key over the wire, mirroring the in-process probe.
+    {
+        let mut warm = TcpStream::connect(addr).expect("connect warm client");
+        for (i, key) in spec.keys.iter().enumerate() {
+            let line = WireRequest { id: i as u64, n: 1, seed: 0, key: key.clone() }.to_line();
+            warm.write_all(line.as_bytes()).expect("warm write");
+        }
+        let mut done = 0usize;
+        let mut lines = BufReader::new(warm.try_clone().expect("clone warm client")).lines();
+        while done < spec.keys.len() {
+            let Some(Ok(line)) = lines.next() else { break };
+            match WireResponse::parse_line(&line) {
+                Ok(WireResponse::Status { .. }) | Err(_) => {}
+                Ok(_) => done += 1,
+            }
+        }
+    }
+
+    let driver = if poisson { OpenLoop::poisson(spec) } else { OpenLoop::new(spec) };
+    let schedule = driver.schedule();
+    let n = schedule.len();
+    let spec = &driver.spec;
+    let start = Instant::now();
+    let mut socks: Vec<TcpStream> = (0..conns)
+        .map(|_| {
+            let s = TcpStream::connect(addr).expect("connect client");
+            let _ = s.set_nodelay(true);
+            s
+        })
+        .collect();
+    let readers: Vec<std::thread::JoinHandle<Vec<(f64, GenResponse)>>> = socks
+        .iter()
+        .enumerate()
+        .map(|(c, s)| {
+            let want = (0..n).filter(|i| i % conns == c).count();
+            let rd = s.try_clone().expect("clone client");
+            let _ = rd.set_read_timeout(Some(driver.timeout));
+            std::thread::spawn(move || {
+                let mut out = Vec::with_capacity(want);
+                let mut lines = BufReader::new(rd).lines();
+                while out.len() < want {
+                    let Some(Ok(line)) = lines.next() else { break };
+                    match WireResponse::parse_line(&line) {
+                        Ok(WireResponse::Status { .. }) | Err(_) => {}
+                        Ok(resp) => {
+                            let t = start.elapsed().as_secs_f64();
+                            if let Some(gen) = resp.to_gen() {
+                                out.push((t, gen));
+                            }
+                        }
+                    }
+                }
+                out
+            })
+        })
+        .collect();
+
+    let mut max_lag = 0.0f64;
+    for (i, &at) in schedule.iter().enumerate() {
+        let target = Duration::from_secs_f64(at);
+        let elapsed = start.elapsed();
+        if target > elapsed {
+            std::thread::sleep(target - elapsed);
+        }
+        max_lag = max_lag.max((start.elapsed().as_secs_f64() - at).max(0.0));
+        let key = &spec.keys[i % spec.keys.len()];
+        let wire = WireRequest {
+            id: i as u64,
+            n: spec.samples_per_request,
+            seed: i as u64,
+            key: key.clone(),
+        };
+        let _ = socks[i % conns].write_all(wire.to_line().as_bytes());
+    }
+    let inject_elapsed = start.elapsed().as_secs_f64();
+
+    let mut responses = Vec::with_capacity(n);
+    for h in readers {
+        for (recv_t, mut r) in h.join().expect("reader thread") {
+            // The client clock starts at the *scheduled* arrival, so
+            // injector lag is inside recv_t and coordinated omission
+            // stays corrected, exactly as in the in-process driver.
+            let at = schedule.get(r.id as usize).copied().unwrap_or(0.0);
+            let total = (recv_t - at).max(r.service_latency).max(0.0);
+            r.queue_latency = total - r.service_latency;
+            r.latency = total;
+            responses.push(r);
+        }
+    }
+    let run = OpenLoopRun {
+        offered_rate: spec.rate_per_sec,
+        issued: n,
+        dropped: n - responses.len(),
+        inject_elapsed,
+        max_inject_lag: max_lag,
+        elapsed: start.elapsed().as_secs_f64(),
+        responses,
+    };
+    drop(socks);
+    let report = run.report();
+    let metrics = server.shutdown();
+    (report, metrics)
+}
+
 /// Probe `rates` (each via `run_at`, typically [`open_loop_probe`]) and
 /// report the maximum rate meeting `p99 ≤ slo_secs`.
 pub fn max_rate_under_slo(
@@ -415,8 +555,12 @@ pub fn cli_key_mix(samplers: &str, dataset: &str, nfe: usize) -> crate::Result<V
 
 /// `gddim workload` — open-loop SLO characterization from the CLI: sweep
 /// injection rates against a fresh router each, print per-rate latency
-/// percentiles and the max rate meeting the SLO.
+/// percentiles and the max rate meeting the SLO. With `--tcp` the probe
+/// runs over loopback TCP through the `server::net` edge (`--conns`
+/// client connections), so the SLO prices the full network path.
 pub fn run_cli(args: &crate::util::cli::Args) {
+    let tcp = args.has("tcp");
+    let conns = args.get_usize("conns", 4);
     let workers = args.get_usize("workers", 4);
     let dispatchers = args.get_usize("dispatchers", 2);
     let n_requests = args.get_usize("requests", 64);
@@ -458,6 +602,9 @@ pub fn run_cli(args: &crate::util::cli::Args) {
         if poisson { "poisson" } else { "uniform" },
         if score_batch > 0 { score_batch.to_string() } else { "off".to_string() },
     );
+    if tcp {
+        println!("mode: loopback TCP edge ({conns} client connections)");
+    }
     let keys = match cli_key_mix(&samplers, &dataset, nfe) {
         Ok(k) => k,
         Err(e) => {
@@ -466,32 +613,40 @@ pub fn run_cli(args: &crate::util::cli::Args) {
         }
     };
     let sweep = max_rate_under_slo(&rates, slo_ms / 1e3, |rate| {
-        let (report, metrics) = open_loop_probe(
-            RouterConfig {
-                dispatchers,
-                plan_cache_capacity: args.get_usize("plan-cache", 64),
-                plan_cache_dir: args.get("plan-cache-dir").map(std::path::PathBuf::from),
-            },
-            EngineConfig {
-                workers,
-                shard_bytes,
-                score_batch,
-                score_wait,
-                ..EngineConfig::default()
-            },
-            BatcherConfig {
-                max_batch: args.get_usize("max-batch", 4096),
-                max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 5)),
-            },
-            WorkloadSpec {
-                n_requests,
-                samples_per_request: samples,
-                rate_per_sec: rate,
-                keys: keys.clone(),
-                seed,
-            },
-            poisson,
-        );
+        let rcfg = RouterConfig {
+            dispatchers,
+            plan_cache_capacity: args.get_usize("plan-cache", 64),
+            plan_cache_dir: args.get("plan-cache-dir").map(std::path::PathBuf::from),
+        };
+        let ecfg = EngineConfig {
+            workers,
+            shard_bytes,
+            score_batch,
+            score_wait,
+            ..EngineConfig::default()
+        };
+        let bcfg = BatcherConfig {
+            max_batch: args.get_usize("max-batch", 4096),
+            max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 5)),
+        };
+        let wspec = WorkloadSpec {
+            n_requests,
+            samples_per_request: samples,
+            rate_per_sec: rate,
+            keys: keys.clone(),
+            seed,
+        };
+        let (report, metrics) = if tcp {
+            let ncfg = crate::server::net::NetConfig {
+                max_inflight: args.get_usize("max-inflight", 256),
+                rate_limit: args.get_f64("rate-limit", 0.0),
+                slo_ms: slo_ms.max(1.0) as u64,
+                ..crate::server::net::NetConfig::default()
+            };
+            open_loop_tcp_probe(rcfg, ecfg, bcfg, ncfg, conns, wspec, poisson)
+        } else {
+            open_loop_probe(rcfg, ecfg, bcfg, wspec, poisson)
+        };
         println!("{report}");
         println!("{metrics}");
         report
@@ -738,6 +893,47 @@ mod tests {
             assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
         }
         router.shutdown();
+    }
+
+    #[test]
+    fn open_loop_tcp_probe_completes_and_the_split_adds_up() {
+        use crate::engine::EngineConfig;
+        use crate::server::net::NetConfig;
+        use crate::server::router::RouterConfig;
+        let spec = WorkloadSpec {
+            n_requests: 6,
+            samples_per_request: 2,
+            rate_per_sec: 200.0,
+            keys: vec![
+                PlanKey::gddim("vpsde", "gmm2d", 5, 1),
+                PlanKey::gddim("cld", "gmm2d", 5, 2),
+            ],
+            seed: 4,
+        };
+        let (report, metrics) = open_loop_tcp_probe(
+            RouterConfig { dispatchers: 1, ..RouterConfig::default() },
+            EngineConfig { workers: 2, ..EngineConfig::default() },
+            BatcherConfig::default(),
+            NetConfig { conn_threads: 2, ..NetConfig::default() },
+            2,
+            spec,
+            false,
+        );
+        assert_eq!(report.issued, 6);
+        assert_eq!(report.completed, 6, "every wire request must come back");
+        assert_eq!(report.dropped, 0);
+        let (q, s, t) = (
+            report.queueing.as_ref().unwrap(),
+            report.service.as_ref().unwrap(),
+            report.total.as_ref().unwrap(),
+        );
+        assert!(q.p50 >= 0.0 && s.p50 > 0.0 && t.p50 >= s.p50);
+        let edge = metrics.edge.expect("TCP probe report carries edge counters");
+        // 2 warm requests + 6 measured ones, all admitted, none shed.
+        assert_eq!(edge.requests_admitted, 8);
+        assert_eq!(edge.requests_completed, 8);
+        assert_eq!(edge.requests_shed, 0);
+        assert_eq!(edge.connections_accepted, 3, "1 warm + 2 client connections");
     }
 
     #[test]

@@ -1,0 +1,275 @@
+//! End-to-end tests for the TCP serving edge (`gddim serve --listen`):
+//! bit-identity with the in-process router, shed-with-`Retry-After`
+//! under overload, graceful drain, and malformed-line isolation — the
+//! lifecycle guarantees `server::net` documents, checked over real
+//! loopback sockets.
+
+use std::io::{BufRead, BufReader, Lines, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use gddim::coeffs::plan::SamplerPlan;
+use gddim::diffusion::process::KtKind;
+use gddim::diffusion::{Process, TimeGrid, Vpsde};
+use gddim::samplers::{OrderedF64, SamplerSpec};
+use gddim::score::ScoreModel;
+use gddim::server::batcher::BatcherConfig;
+use gddim::server::router::{oracle_factory, Prepared, PreparedFactory};
+use gddim::server::wire::{WireRequest, WireResponse};
+use gddim::server::{GenRequest, NetConfig, NetServer, PlanKey, Router};
+
+/// Next substantive line: status acknowledgements are skipped, anything
+/// unparseable is a test failure.
+fn next_response(lines: &mut Lines<BufReader<TcpStream>>) -> WireResponse {
+    loop {
+        let line = lines.next().expect("connection closed early").expect("socket read");
+        let resp = WireResponse::parse_line(&line).expect("server line must parse");
+        if !matches!(resp, WireResponse::Status { .. }) {
+            return resp;
+        }
+    }
+}
+
+/// An ε-model that sleeps a fixed time per call, so requests stay
+/// in-flight long enough for the overload and drain tests to act while
+/// the router is genuinely busy.
+struct SleepyModel {
+    d: usize,
+    pause: Duration,
+}
+
+impl ScoreModel for SleepyModel {
+    fn dim_u(&self) -> usize {
+        self.d
+    }
+
+    fn kt_kind(&self) -> KtKind {
+        KtKind::R
+    }
+
+    fn eps_batch(&self, _t: f64, _us: &[f64], out: &mut [f64]) {
+        std::thread::sleep(self.pause);
+        out.fill(0.0);
+    }
+}
+
+fn sleepy_factory(pause: Duration) -> Box<PreparedFactory> {
+    Box::new(move |key: &PlanKey, _preloaded| {
+        let proc = Arc::new(Vpsde::standard(2));
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), key.nfe);
+        let cfg = key.spec.plan_config().ok_or("test factory serves gddim keys only")?;
+        let plan = SamplerPlan::build(proc.as_ref(), &grid, &cfg);
+        Ok(Arc::new(Prepared {
+            dim_x: proc.dim_x(),
+            model: Arc::new(SleepyModel { d: proc.dim_u(), pause }),
+            plan: Some(Arc::new(plan)),
+            grid,
+            proc,
+        }))
+    })
+}
+
+#[test]
+fn concurrent_tcp_clients_match_in_process_router_bit_for_bit() {
+    // One key per client: the batcher groups by key, so each TCP request
+    // forms its own single-member batch — exactly the shape of a lone
+    // in-process submit, including the RNG fold over batch members.
+    let keys = [
+        PlanKey::gddim("cld", "gmm2d", 6, 1),
+        PlanKey::gddim("cld", "gmm2d", 6, 2),
+        PlanKey::gddim("cld", "gmm2d", 6, 3),
+        PlanKey::new("cld", "gmm2d", SamplerSpec::Em { lambda: OrderedF64::new(0.0) }, 6),
+    ];
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        NetConfig { conn_threads: keys.len(), ..NetConfig::default() },
+        Router::new(2, BatcherConfig::default(), oracle_factory()),
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let tcp: Vec<(u64, Vec<f64>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = keys
+            .iter()
+            .enumerate()
+            .map(|(i, key)| {
+                let key = key.clone();
+                scope.spawn(move || {
+                    let mut conn = TcpStream::connect(addr).unwrap();
+                    let req = WireRequest { id: i as u64, n: 24, seed: 7 + i as u64, key };
+                    conn.write_all(req.to_line().as_bytes()).unwrap();
+                    let mut lines = BufReader::new(conn).lines();
+                    match next_response(&mut lines) {
+                        WireResponse::Result { id, xs, .. } => (id, xs),
+                        other => panic!("expected a result line, got {other:?}"),
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let local = Router::new(2, BatcherConfig::default(), oracle_factory());
+    for (i, key) in keys.iter().enumerate() {
+        let req = GenRequest { id: i as u64, n: 24, key: key.clone(), seed: 7 + i as u64 };
+        let resp = local.submit(req).recv().unwrap();
+        assert!(resp.error.is_none(), "in-process baseline failed: {:?}", resp.error);
+        let (_, xs) = tcp.iter().find(|(id, _)| *id == i as u64).expect("every client answered");
+        assert_eq!(xs.len(), resp.xs.len(), "key {i}: sample counts differ");
+        for (j, (a, b)) in xs.iter().zip(&resp.xs).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "key {i} sample {j}: TCP result must be bit-identical to Router::submit"
+            );
+        }
+    }
+    local.shutdown();
+
+    let report = server.shutdown();
+    let edge = report.edge.expect("NetServer reports carry edge counters");
+    assert_eq!(edge.requests_admitted, keys.len() as u64);
+    assert_eq!(edge.requests_completed, keys.len() as u64);
+    assert_eq!(edge.requests_shed, 0);
+    assert_eq!(edge.requests_malformed, 0);
+}
+
+#[test]
+fn overload_sheds_with_retry_after_and_recovers() {
+    // Watermark of 1 + a slow backend: the second request on the wire
+    // must be refused with a Retry-After hint while the first is still
+    // in flight, and the edge must serve normally again afterwards.
+    let router = Router::new(
+        1,
+        BatcherConfig { max_batch: 4096, max_wait: Duration::from_millis(1) },
+        sleepy_factory(Duration::from_millis(20)),
+    );
+    let cfg = NetConfig { conn_threads: 2, max_inflight: 1, slo_ms: 25, ..NetConfig::default() };
+    let server = NetServer::bind("127.0.0.1:0", cfg, router).unwrap();
+    let key = PlanKey::gddim("vpsde", "gmm2d", 4, 1);
+    let mk = |id: u64| WireRequest { id, n: 2, seed: id, key: key.clone() }.to_line();
+
+    let conn = TcpStream::connect(server.local_addr()).unwrap();
+    let mut w = conn.try_clone().unwrap();
+    // Both lines land back-to-back; the reader admits 1, then sheds 2.
+    w.write_all(format!("{}{}", mk(1), mk(2)).as_bytes()).unwrap();
+    let mut lines = BufReader::new(conn).lines();
+    match next_response(&mut lines) {
+        WireResponse::Error { id, error, retry_after_ms } => {
+            assert_eq!(id, 2, "the over-watermark request is the one shed");
+            assert!(error.contains("overloaded"), "{error}");
+            let hint = retry_after_ms.expect("sheds carry a Retry-After hint");
+            assert!(hint >= 25, "hint {hint} ms derives from the SLO window");
+        }
+        other => panic!("expected a shed, not a hang or {other:?}"),
+    }
+    match next_response(&mut lines) {
+        WireResponse::Result { id: 1, xs, .. } => assert_eq!(xs.len(), 4),
+        other => panic!("admitted request must still complete, got {other:?}"),
+    }
+    // Shedding is per-request, not per-connection: the same socket is
+    // served normally once the load clears.
+    w.write_all(mk(3).as_bytes()).unwrap();
+    match next_response(&mut lines) {
+        WireResponse::Result { id: 3, .. } => {}
+        other => panic!("edge must recover after the shed, got {other:?}"),
+    }
+
+    let report = server.shutdown();
+    let edge = report.edge.unwrap();
+    assert_eq!(edge.requests_admitted, 2);
+    assert_eq!(edge.requests_shed, 1);
+    assert_eq!(edge.requests_completed, 2);
+}
+
+#[test]
+fn graceful_drain_completes_in_flight_requests() {
+    let router = Router::new(
+        1,
+        BatcherConfig { max_batch: 4096, max_wait: Duration::from_millis(1) },
+        sleepy_factory(Duration::from_millis(10)),
+    );
+    let cfg = NetConfig { conn_threads: 1, ..NetConfig::default() };
+    let server = NetServer::bind("127.0.0.1:0", cfg, router).unwrap();
+    let key = PlanKey::gddim("vpsde", "gmm2d", 4, 1);
+
+    let conn = TcpStream::connect(server.local_addr()).unwrap();
+    let mut w = conn.try_clone().unwrap();
+    let mut body = String::new();
+    for id in 0..3u64 {
+        body.push_str(&WireRequest { id, n: 2, seed: id, key: key.clone() }.to_line());
+    }
+    w.write_all(body.as_bytes()).unwrap();
+    // All three must be on the books before the drain starts.
+    let mut lines = BufReader::new(conn).lines();
+    let mut accepted = 0;
+    while accepted < 3 {
+        let line = lines.next().unwrap().unwrap();
+        match WireResponse::parse_line(&line).unwrap() {
+            WireResponse::Status { .. } => accepted += 1,
+            other => panic!("unexpected pre-drain line: {other:?}"),
+        }
+    }
+    // Shutdown concurrently with the client still reading: drain means
+    // every admitted request reaches the wire before the edge joins.
+    let drain = std::thread::spawn(move || server.shutdown());
+    let mut got = [false; 3];
+    for _ in 0..3 {
+        match next_response(&mut lines) {
+            WireResponse::Result { id, xs, .. } => {
+                assert_eq!(xs.len(), 4, "request {id}: n=2 × dim 2");
+                got[id as usize] = true;
+            }
+            other => panic!("drain must answer in-flight requests, got {other:?}"),
+        }
+    }
+    assert!(got.iter().all(|&g| g), "each of the three requests got its own result");
+    let report = drain.join().unwrap();
+    let edge = report.edge.unwrap();
+    assert_eq!(edge.requests_admitted, 3);
+    assert_eq!(edge.requests_completed, 3);
+    assert_eq!(edge.requests_shed, 0);
+}
+
+#[test]
+fn malformed_line_is_answered_and_the_connection_survives() {
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        NetConfig { conn_threads: 1, ..NetConfig::default() },
+        Router::new(1, BatcherConfig::default(), oracle_factory()),
+    )
+    .unwrap();
+    let conn = TcpStream::connect(server.local_addr()).unwrap();
+    let mut w = conn.try_clone().unwrap();
+    // Valid JSON, invalid request: the id is still recoverable, so the
+    // error line carries it back to the waiting client.
+    w.write_all(b"{\"id\":5,\"n\":\"oops\"}\n").unwrap();
+    let mut lines = BufReader::new(conn).lines();
+    match next_response(&mut lines) {
+        WireResponse::Error { id, error, retry_after_ms } => {
+            assert_eq!(id, 5, "best-effort id recovery from the bad line");
+            assert!(error.starts_with("bad request:"), "{error}");
+            assert_eq!(retry_after_ms, None, "a parse error is not a shed");
+        }
+        other => panic!("expected an error line, got {other:?}"),
+    }
+    // The same socket keeps working — one typo'd request must not kill
+    // its neighbours on the connection.
+    let req = WireRequest { id: 6, n: 3, seed: 0, key: PlanKey::gddim("vpsde", "gmm2d", 5, 1) };
+    w.write_all(req.to_line().as_bytes()).unwrap();
+    match next_response(&mut lines) {
+        WireResponse::Result { id, dim_x, xs, .. } => {
+            assert_eq!((id, dim_x), (6, 2));
+            assert_eq!(xs.len(), 3 * 2);
+            assert!(xs.iter().all(|x| x.is_finite()));
+        }
+        other => panic!("expected a result after the bad line, got {other:?}"),
+    }
+
+    let report = server.shutdown();
+    let edge = report.edge.unwrap();
+    assert_eq!(edge.requests_malformed, 1);
+    assert_eq!(edge.requests_admitted, 1);
+    assert_eq!(edge.requests_completed, 1);
+}
