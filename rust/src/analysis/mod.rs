@@ -1,0 +1,275 @@
+//! `gddim lint` — the repo-invariant static-analysis pass.
+//!
+//! The serving stack holds its concurrency core to a small set of
+//! mechanical invariants (poison-proof locking, SAFETY-documented
+//! unsafe, no panics or exits on the serving path, bounded network
+//! reads, no re-association on the bit-identical sampler path). Each is
+//! cheap to state and easy to erode one edit at a time, so this module
+//! enforces them as a versioned rule catalog over the source itself:
+//!
+//! - [`rules::CATALOG`] — the rules and their remediation plans
+//!   (`--fix-plan` prints the latter);
+//! - [`scan`] — the lexer-lite that makes line-level matching sound
+//!   (comments, strings and `#[cfg(test)]` regions);
+//! - [`run_cli`] — `gddim lint [PATHS] [--fix-plan]`, exit 0 clean /
+//!   1 findings / 2 I/O error.
+//!
+//! The pass runs over its own source: `cargo test` includes a self-test
+//! that lints `src/` and asserts zero findings, and CI gates merges on
+//! the same invocation, so every exemption in the tree carries a
+//! justified `gddim-lint: allow(...)` pragma (see [`rules`]).
+
+pub mod rules;
+pub mod scan;
+
+use std::path::{Path, PathBuf};
+
+pub use rules::{Finding, CATALOG, CATALOG_VERSION};
+
+use crate::util::cli::Args;
+use crate::{Error, Result};
+
+/// Lint one in-memory source file. `label` is the path used in
+/// diagnostics and for the path-scoped rules (forward slashes).
+pub fn lint_source(label: &str, text: &str) -> Vec<Finding> {
+    rules::check_file(label, &scan::scan(text))
+}
+
+/// Lint files and directories (recursively, `.rs` only). Findings come
+/// back sorted by path, then line.
+pub fn lint_paths(paths: &[PathBuf]) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for p in paths {
+        collect_rs(p, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut findings = Vec::new();
+    for file in &files {
+        let text = std::fs::read_to_string(file)
+            .map_err(|e| Error::msg(format!("read {}: {e}", file.display())))?;
+        let label = file.to_string_lossy().replace('\\', "/");
+        findings.extend(lint_source(&label, &text));
+    }
+    findings.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    Ok(findings)
+}
+
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if path.is_dir() {
+        let entries = std::fs::read_dir(path)
+            .map_err(|e| Error::msg(format!("read dir {}: {e}", path.display())))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| Error::msg(format!("walk {}: {e}", path.display())))?;
+            let p = entry.path();
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if p.is_dir() {
+                if name == "target" || name.starts_with('.') {
+                    continue;
+                }
+                collect_rs(&p, out)?;
+            } else if name.ends_with(".rs") {
+                out.push(p);
+            }
+        }
+        Ok(())
+    } else if path.is_file() {
+        out.push(path.to_path_buf());
+        Ok(())
+    } else {
+        Err(Error::msg(format!("lint: no such path {}", path.display())))
+    }
+}
+
+/// `gddim lint [PATHS] [--fix-plan]`. Returns the process exit code so
+/// `main.rs` owns the actual `exit` (the no-process-exit rule applies
+/// here too).
+pub fn run_cli(args: &Args) -> i32 {
+    let mut paths: Vec<PathBuf> = args.positional.iter().skip(1).map(PathBuf::from).collect();
+    // `--fix-plan rust/src` parses the path as the flag's value; claim
+    // it back so flag order doesn't matter.
+    if let Some(v) = args.get("fix-plan") {
+        if v != "true" {
+            paths.push(PathBuf::from(v));
+        }
+    }
+    if paths.is_empty() {
+        // From the repo root the crate lives under rust/; inside the
+        // crate dir, src/ directly.
+        let default = if Path::new("rust/src").is_dir() { "rust/src" } else { "src" };
+        paths.push(PathBuf::from(default));
+    }
+    let findings = match lint_paths(&paths) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("gddim lint: {e}");
+            return 2;
+        }
+    };
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("gddim lint: clean (catalog v{CATALOG_VERSION})");
+        return 0;
+    }
+    if args.has("fix-plan") {
+        println!("\nfix plan (catalog v{CATALOG_VERSION}):");
+        let mut seen: Vec<&str> = Vec::new();
+        for f in &findings {
+            if seen.contains(&f.rule) {
+                continue;
+            }
+            seen.push(f.rule);
+            if let Some(r) = rules::rule(f.rule) {
+                println!("  [{}] {}", r.id, r.fix_plan);
+            }
+        }
+    }
+    eprintln!("gddim lint: {} finding(s) (catalog v{CATALOG_VERSION})", findings.len());
+    1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_hit(label: &str, src: &str) -> Vec<&'static str> {
+        lint_source(label, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn raw_lock_unwrap_is_flagged_and_the_helper_is_not() {
+        let bad = "fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }\n";
+        assert_eq!(rules_hit("util/x.rs", bad), vec!["no-raw-lock-unwrap"]);
+        let bad_rw = "fn f(l: &std::sync::RwLock<u32>) { l.read().unwrap(); l.write().unwrap(); }\n";
+        assert_eq!(rules_hit("util/x.rs", bad_rw).len(), 2);
+        let good = "fn f(m: &std::sync::Mutex<u32>) -> u32 { *lock_unpoisoned(m) }\n";
+        assert!(rules_hit("util/x.rs", good).is_empty());
+        let helper = "pub fn lock_unpoisoned(m: &Mutex<u32>) -> MutexGuard<'_, u32> {\n    \
+                      m.lock().unwrap_or_else(|e| e.into_inner())\n}\n";
+        assert!(rules_hit("util/sync.rs", helper).is_empty(), "unwrap_or_else is the fix");
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn t(m: &M) { m.lock().unwrap(); }\n}\n";
+        assert_eq!(rules_hit("util/x.rs", in_test), vec!["no-raw-lock-unwrap"], "tests too");
+    }
+
+    #[test]
+    fn unsafe_needs_an_adjacent_safety_comment() {
+        let bad = "fn f(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n";
+        assert_eq!(rules_hit("engine/x.rs", bad), vec!["safety-comment"]);
+        let good = "fn f(p: *const u32) -> u32 {\n    // SAFETY: caller keeps p alive.\n    \
+                    unsafe { *p }\n}\n";
+        assert!(rules_hit("engine/x.rs", good).is_empty());
+        // One SAFETY comment covers a run of unsafe impls, and a
+        // multi-line statement whose unsafe sits below the comment.
+        let run = "// SAFETY: no interior mutability.\nunsafe impl Send for X {}\n\
+                   unsafe impl Sync for X {}\n";
+        assert!(rules_hit("engine/x.rs", run).is_empty());
+        let stmt = "// SAFETY: lifetime erasure only.\nlet m: &'static dyn M =\n    \
+                    unsafe { std::mem::transmute(model) };\n";
+        assert!(rules_hit("engine/x.rs", stmt).is_empty());
+        let far = "// SAFETY: too far away.\nfn a() {}\nfn b() {}\nfn c() {}\n\
+                   fn f(p: *const u32) -> u32 { unsafe { *p } }\n";
+        assert_eq!(rules_hit("engine/x.rs", far), vec!["safety-comment"], "3 code lines between");
+    }
+
+    #[test]
+    fn fma_is_fenced_off_the_sampler_path_unless_relocked() {
+        let bad = "fn axpy(a: f64, x: f64, y: f64) -> f64 { a.mul_add(x, y) }\n";
+        assert_eq!(rules_hit("math/simd.rs", bad), vec!["no-reassoc-on-sampler-path"]);
+        assert_eq!(rules_hit("samplers/gddim.rs", bad), vec!["no-reassoc-on-sampler-path"]);
+        assert!(rules_hit("server/net.rs", bad).is_empty(), "rule is path-scoped");
+        let free_fn = "let z = crate::math::simd::mul_add(o, x, y);\n";
+        assert!(rules_hit("math/linop.rs", free_fn).is_empty(), "free fn is elementwise, unfused");
+        let relocked = "// gddim-lint: allow(no-reassoc-on-sampler-path) — golden re-lock: \
+                        goldens regenerated in this PR\nlet z = a.mul_add(x, y);\n";
+        assert!(rules_hit("math/simd.rs", relocked).is_empty());
+    }
+
+    #[test]
+    fn unwrap_on_the_serving_path_is_flagged_outside_tests() {
+        let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(rules_hit("server/router.rs", bad), vec!["no-unwrap-in-server"]);
+        assert_eq!(rules_hit("engine/mod.rs", bad), vec!["no-unwrap-in-server"]);
+        assert!(rules_hit("math/simd.rs", bad).is_empty(), "rule is path-scoped");
+        let expect = "fn f(x: Option<u32>) -> u32 { x.expect(\"invariant\") }\n";
+        assert_eq!(rules_hit("server/router.rs", expect), vec!["no-unwrap-in-server"]);
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn t(x: Option<u32>) { x.unwrap(); }\n}\n";
+        assert!(rules_hit("server/router.rs", in_test).is_empty(), "test code is exempt");
+        let tagged = "// gddim-lint: allow(no-unwrap-in-server) — construction-time fail-fast\n\
+                      let h = spawn().expect(\"spawn\");\n";
+        assert!(rules_hit("server/router.rs", tagged).is_empty());
+        let trailing = "let h = spawn().expect(\"spawn\"); \
+                        // gddim-lint: allow(no-unwrap-in-server) — fail-fast\n";
+        assert!(rules_hit("server/router.rs", trailing).is_empty(), "trailing pragma, same line");
+    }
+
+    #[test]
+    fn process_exit_is_main_only() {
+        let bad = "fn f() { std::process::exit(2); }\n";
+        assert_eq!(rules_hit("server/demo.rs", bad), vec!["no-process-exit"]);
+        assert!(rules_hit("main.rs", bad).is_empty(), "main.rs owns the exit");
+        assert!(rules_hit("src/main.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn unbounded_reads_are_flagged_only_on_network_files() {
+        let bad = "use std::net::TcpStream;\nfn f(r: &mut impl std::io::BufRead) {\n    \
+                   let mut s = String::new();\n    r.read_line(&mut s);\n}\n";
+        assert_eq!(rules_hit("server/net.rs", bad), vec!["bounded-io"]);
+        let no_net = "fn f(r: &mut impl std::io::BufRead) {\n    let mut s = String::new();\n    \
+                      r.read_line(&mut s);\n}\n";
+        assert!(rules_hit("server/net.rs", no_net).is_empty(), "scoped to TCP-handling files");
+        let lines_iter = "use std::net::TcpStream;\nfn f(r: impl std::io::BufRead) {\n    \
+                          for _ in r.lines() {}\n}\n";
+        assert_eq!(rules_hit("workload/mod.rs", lines_iter), vec!["bounded-io"]);
+    }
+
+    #[test]
+    fn pragmas_require_a_justification_and_a_known_rule() {
+        let naked = "// gddim-lint: allow(no-unwrap-in-server)\nlet x = f().unwrap();\n";
+        assert_eq!(rules_hit("server/x.rs", naked), vec!["pragma-justification"]);
+        let dashed = "// gddim-lint: allow(no-unwrap-in-server) - short reason\n\
+                      let x = f().unwrap();\n";
+        assert!(rules_hit("server/x.rs", dashed).is_empty(), "plain dash separator works");
+        let unknown = "// gddim-lint: allow(no-such-rule) — reason\nlet x = 1;\n";
+        assert_eq!(rules_hit("server/x.rs", unknown), vec!["pragma-justification"]);
+        let wrong_rule = "// gddim-lint: allow(bounded-io) — reason\nlet x = f().unwrap();\n";
+        assert_eq!(
+            rules_hit("server/x.rs", wrong_rule),
+            vec!["no-unwrap-in-server"],
+            "a pragma only suppresses its own rule"
+        );
+    }
+
+    #[test]
+    fn patterns_inside_strings_and_comments_never_fire() {
+        let src = "fn f() {\n    // a comment mentioning .lock().unwrap() and unsafe\n    \
+                   let s = \".unwrap() process::exit unsafe\";\n    let _ = s;\n}\n";
+        assert!(rules_hit("server/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn catalog_is_well_formed() {
+        assert_eq!(CATALOG_VERSION, 1);
+        assert_eq!(CATALOG.len(), 7);
+        for r in CATALOG {
+            assert!(!r.id.is_empty() && !r.summary.is_empty() && !r.fix_plan.is_empty());
+            assert_eq!(r.id, r.id.to_lowercase(), "rule ids are kebab-case");
+        }
+        let ids: std::collections::BTreeSet<&str> = CATALOG.iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), CATALOG.len(), "rule ids are unique");
+    }
+
+    /// The repo must lint clean against its own catalog: every exemption
+    /// in the tree carries a justified pragma. This is the same check CI
+    /// gates on (`gddim lint`), so a violation fails fast locally.
+    #[test]
+    fn self_test_repo_source_lints_clean() {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let findings = lint_paths(&[src]).expect("walk src");
+        let rendered: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+        assert!(findings.is_empty(), "gddim lint must pass on its own repo:\n{rendered:?}");
+    }
+}

@@ -1,0 +1,328 @@
+//! The versioned rule catalog and its line-level checkers.
+//!
+//! Every rule works on the channelled lines of [`super::scan`]: pattern
+//! rules match the comment- and literal-stripped *code* channel, and
+//! pragma / `SAFETY:` detection reads the *comment* channel, so strings
+//! can never trip a rule and code can never fake an exemption.
+//!
+//! # Pragmas
+//!
+//! A finding is suppressed by a scoped allow pragma with a mandatory
+//! justification:
+//!
+//! ```text
+//! // gddim-lint: allow(no-unwrap-in-server) — why this site is sound
+//! flagged_code();
+//! ```
+//!
+//! A pragma on its own line covers the next line that carries code; a
+//! trailing pragma covers its own line. The justification (anything
+//! after a `—` or `-` separator) is not optional: an allow without one
+//! is itself a finding (`pragma-justification`), so exemptions carry
+//! their reasoning in the diff forever.
+
+use super::scan::SourceLine;
+
+/// Bumped whenever a rule is added, removed, or changes meaning, so a
+/// CI failure can be traced to a catalog change rather than a code one.
+pub const CATALOG_VERSION: u32 = 1;
+
+/// One catalog entry. `fix_plan` is the remediation line printed by
+/// `gddim lint --fix-plan`.
+pub struct Rule {
+    pub id: &'static str,
+    pub summary: &'static str,
+    pub fix_plan: &'static str,
+}
+
+pub const CATALOG: &[Rule] = &[
+    Rule {
+        id: "no-raw-lock-unwrap",
+        summary: "raw .lock()/.read()/.write() + .unwrap() panics every later caller once one \
+                  thread poisons the lock",
+        fix_plan: "route the acquisition through util::sync \
+                   (lock_unpoisoned/read_unpoisoned/write_unpoisoned), which recovers the guard \
+                   from a PoisonError",
+    },
+    Rule {
+        id: "safety-comment",
+        summary: "unsafe block or impl without an adjacent `// SAFETY:` comment stating the \
+                  invariant it relies on",
+        fix_plan: "write a `// SAFETY:` comment immediately above the unsafe site naming the \
+                   invariant and who upholds it",
+    },
+    Rule {
+        id: "no-reassoc-on-sampler-path",
+        summary: "fused multiply-add on the sampler/score/math path changes bit patterns, \
+                  breaking the bit-identity contract the golden tests pin",
+        fix_plan: "use separate mul and add (the simd kernels are written to be bit-identical), \
+                   or re-lock the goldens and tag the site with allow(no-reassoc-on-sampler-path) \
+                   — golden re-lock: <evidence>",
+    },
+    Rule {
+        id: "no-unwrap-in-server",
+        summary: ".unwrap()/.expect() on the serving path converts a recoverable condition into \
+                  a thread panic",
+        fix_plan: "return the error on the wire (WireResponse::Error) or recover; for \
+                   construction-time or invariant-backed sites, keep .expect() and tag it with a \
+                   justified allow pragma",
+    },
+    Rule {
+        id: "no-process-exit",
+        summary: "process::exit outside main.rs skips every destructor — engines, routers and \
+                  sockets never drain",
+        fix_plan: "bubble an error (or exit code) up to main.rs and exit there, after the stack \
+                   has unwound",
+    },
+    Rule {
+        id: "bounded-io",
+        summary: "unbounded read (.read_line/.read_to_end/.read_to_string/.lines) on a file that \
+                  handles network streams lets a peer grow a buffer without limit",
+        fix_plan: "frame reads through a bounded accumulator (see server::net's max_frame_len \
+                   state machine), or tag trusted-peer clients with a justified allow pragma",
+    },
+    Rule {
+        id: "pragma-justification",
+        summary: "gddim-lint allow pragma without a justification — exemptions must carry their \
+                  reasoning",
+        fix_plan: "append `— <why this site is sound>` to the pragma",
+    },
+];
+
+/// Look up a catalog entry by id.
+pub fn rule(id: &str) -> Option<&'static Rule> {
+    CATALOG.iter().find(|r| r.id == id)
+}
+
+/// One diagnostic: `path:line: [rule] message`.
+pub struct Finding {
+    /// Path as given to the walker (kept relative for stable output).
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// A parsed `gddim-lint: allow(rule)` pragma, resolved to the line it
+/// covers.
+struct Allow {
+    rule: String,
+    /// 1-based line the pragma exempts.
+    covers: usize,
+    justified: bool,
+    /// 1-based line the pragma itself sits on (for diagnostics).
+    at: usize,
+}
+
+/// Extract allow pragmas from the comment channel. A pragma on a line
+/// with no code covers the next line that has code; a trailing pragma
+/// covers its own line.
+fn collect_allows(lines: &[SourceLine]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let Some(pos) = line.comment.find("gddim-lint:") else { continue };
+        let rest = &line.comment[pos + "gddim-lint:".len()..];
+        let Some(open) = rest.find("allow(") else { continue };
+        let after = &rest[open + "allow(".len()..];
+        let Some(close) = after.find(')') else { continue };
+        let rule = after[..close].trim().to_string();
+        let tail = &after[close + 1..];
+        let justified = ["—", "--", "-"]
+            .iter()
+            .find_map(|sep| tail.split_once(sep))
+            .map(|(_, j)| !j.trim().is_empty())
+            .unwrap_or(false);
+        let covers = if line.code.trim().is_empty() {
+            // Own-line pragma: the next line carrying code.
+            lines[idx + 1..]
+                .iter()
+                .find(|l| !l.code.trim().is_empty())
+                .map(|l| l.number)
+                .unwrap_or(line.number)
+        } else {
+            line.number
+        };
+        out.push(Allow { rule, covers, justified, at: line.number });
+    }
+    out
+}
+
+fn allowed(allows: &[Allow], rule_id: &str, line: usize) -> bool {
+    allows.iter().any(|a| a.covers == line && a.rule == rule_id)
+}
+
+/// Does `code` contain `word` as a standalone token (not an identifier
+/// substring)?
+fn has_word(code: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || !code[..at].chars().next_back().is_some_and(is_ident);
+        let after = at + word.len();
+        let after_ok = !code[after..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = after;
+    }
+    false
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Is the `unsafe` on `lines[idx]` covered by a `SAFETY` comment?
+/// Accepts a trailing comment on the same line, or a comment block
+/// above, looking through at most two interleaved code lines (a
+/// multi-line statement, or a run of `unsafe impl`s sharing one
+/// comment) within a 12-line window.
+fn has_safety_comment(lines: &[SourceLine], idx: usize) -> bool {
+    if lines[idx].comment.contains("SAFETY") {
+        return true;
+    }
+    let mut skipped_code = 0usize;
+    let mut i = idx;
+    while i > 0 && idx - i < 12 {
+        i -= 1;
+        let l = &lines[i];
+        let has_comment = !l.comment.trim().is_empty();
+        let has_code = !l.code.trim().is_empty();
+        if has_comment && l.comment.contains("SAFETY") {
+            return true;
+        }
+        if has_comment && !has_code {
+            continue;
+        }
+        if has_code {
+            skipped_code += 1;
+            if skipped_code > 2 {
+                return false;
+            }
+            continue;
+        }
+        // Blank line: the comment block (if any) has ended.
+        return false;
+    }
+    false
+}
+
+fn path_has_dir(path: &str, dir: &str) -> bool {
+    path.split('/').any(|seg| seg == dir)
+}
+
+/// Push `message` as a finding unless a pragma on `line` allows it.
+fn flag(
+    out: &mut Vec<Finding>,
+    allows: &[Allow],
+    path: &str,
+    rule_id: &'static str,
+    line: usize,
+    message: String,
+) {
+    if !allowed(allows, rule_id, line) {
+        out.push(Finding { path: path.to_string(), line, rule: rule_id, message });
+    }
+}
+
+/// Run every rule over one scanned file. `path` should be the
+/// repo-relative path (forward slashes) for stable diagnostics.
+pub fn check_file(path: &str, lines: &[SourceLine]) -> Vec<Finding> {
+    let allows = collect_allows(lines);
+    let mut out = Vec::new();
+
+    // pragma-justification: an allow without a reason is a finding at
+    // the pragma's own line (and the allow still suppresses its target —
+    // the justification finding is the enforcement).
+    for a in &allows {
+        if !a.justified {
+            out.push(Finding {
+                path: path.to_string(),
+                line: a.at,
+                rule: "pragma-justification",
+                message: format!(
+                    "allow({}) has no justification — append `— <why this site is sound>`",
+                    a.rule
+                ),
+            });
+        }
+        if rule(&a.rule).is_none() {
+            out.push(Finding {
+                path: path.to_string(),
+                line: a.at,
+                rule: "pragma-justification",
+                message: format!("allow({}) names no rule in catalog v{CATALOG_VERSION}", a.rule),
+            });
+        }
+    }
+
+    let is_main = path == "main.rs" || path.ends_with("/main.rs");
+    let server_path = path_has_dir(path, "server") || path_has_dir(path, "engine");
+    let sampler_path =
+        path_has_dir(path, "math") || path_has_dir(path, "score") || path_has_dir(path, "samplers");
+    let net_file = lines
+        .iter()
+        .any(|l| l.code.contains("TcpStream") || l.code.contains("TcpListener"));
+
+    for (idx, line) in lines.iter().enumerate() {
+        let code = line.code.as_str();
+        let n = line.number;
+
+        for pat in [".lock().unwrap()", ".read().unwrap()", ".write().unwrap()"] {
+            if code.contains(pat) {
+                let msg = format!("`{pat}` panics on a poisoned lock; use util::sync helpers");
+                flag(&mut out, &allows, path, "no-raw-lock-unwrap", n, msg);
+            }
+        }
+
+        if has_word(code, "unsafe") && !has_safety_comment(lines, idx) {
+            let msg = "unsafe site without an adjacent `// SAFETY:` comment".to_string();
+            flag(&mut out, &allows, path, "safety-comment", n, msg);
+        }
+
+        if sampler_path {
+            for pat in [".mul_add(", "fmaf32", "fmaf64", "fmadd"] {
+                if code.contains(pat) {
+                    let msg =
+                        format!("`{pat}` fuses the rounding step and breaks bit-identity goldens");
+                    flag(&mut out, &allows, path, "no-reassoc-on-sampler-path", n, msg);
+                }
+            }
+        }
+
+        if server_path && !line.in_test {
+            for pat in [".unwrap()", ".expect("] {
+                if code.contains(pat) {
+                    let msg = format!(
+                        "`{pat}` on the serving path; answer the error or justify with a pragma"
+                    );
+                    flag(&mut out, &allows, path, "no-unwrap-in-server", n, msg);
+                }
+            }
+        }
+
+        if !is_main && code.contains("process::exit") {
+            let msg = "process::exit outside main.rs skips destructors".to_string();
+            flag(&mut out, &allows, path, "no-process-exit", n, msg);
+        }
+
+        if net_file && !line.in_test {
+            for pat in [".read_line(", ".read_to_end(", ".read_to_string(", ".lines()"] {
+                if code.contains(pat) {
+                    let msg = format!(
+                        "`{pat}` is unbounded on a network-handling file; frame with a byte cap"
+                    );
+                    flag(&mut out, &allows, path, "bounded-io", n, msg);
+                }
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,295 @@
+//! Lexer-lite for the lint pass: a per-line view of a Rust source file
+//! with comment text and literal contents separated out of the *code*
+//! channel, plus `#[cfg(test)]` region tracking.
+//!
+//! This is deliberately not a parser. The rules in [`super::rules`] only
+//! need three things to be reliable — where comments are, where string
+//! /char literals are, and which lines sit inside test-gated items — and
+//! a hand-rolled character state machine gets exactly those right:
+//!
+//! - nested block comments (`/* /* */ */`), line comments, doc comments;
+//! - string, byte-string, raw-string (`r#"…"#`) and char literals, with
+//!   the `'a` lifetime vs `'a'` char-literal ambiguity resolved by
+//!   lookahead;
+//! - `#[cfg(test)]` attributes gate the following brace region (module
+//!   or fn), tracked by brace counting over the already-stripped code
+//!   channel so braces inside strings or comments cannot desync it.
+//!
+//! Pattern rules match against [`SourceLine::code`], so `".unwrap()"`
+//! inside a string (say, a lint fixture) can never produce a finding,
+//! and pragma/SAFETY detection reads [`SourceLine::comment`], so code
+//! can never fake a comment.
+
+/// One physical source line, split into channels.
+pub struct SourceLine {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code with comments removed and literal contents blanked (the
+    /// delimiting quotes survive, so token adjacency is preserved).
+    pub code: String,
+    /// Concatenated comment text appearing on this line (line comments
+    /// and the per-line slices of block comments, markers included).
+    pub comment: String,
+    /// Line sits inside a `#[cfg(test)]`-gated brace region.
+    pub in_test: bool,
+}
+
+#[derive(PartialEq)]
+enum Mode {
+    Code,
+    LineComment,
+    /// Nesting depth of `/* … */`.
+    BlockComment(u32),
+    Str,
+    /// Number of `#`s that (with a quote) terminate the raw string.
+    RawStr(u32),
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Split `text` into channelled lines. Total work is linear in the file.
+pub fn scan(text: &str) -> Vec<SourceLine> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines: Vec<(String, String)> = vec![(String::new(), String::new())];
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if mode == Mode::LineComment {
+                mode = Mode::Code;
+            }
+            lines.push((String::new(), String::new()));
+            i += 1;
+            continue;
+        }
+        let last = lines.last_mut().expect("lines starts non-empty");
+        match mode {
+            Mode::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    mode = Mode::LineComment;
+                    last.1.push_str("//");
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::BlockComment(1);
+                    last.1.push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    last.0.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && (i == 0 || !is_ident(chars[i - 1])) {
+                    // Raw (or raw-byte) string prefix: `r`/`br` + `#`* + `"`.
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if (c == 'r' || j > i + 1) && chars.get(j) == Some(&'"') {
+                        for &p in &chars[i..=j] {
+                            last.0.push(p);
+                        }
+                        mode = Mode::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        last.0.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: a literal is `'\…'` or
+                    // `'x'`; anything else (`'a`, `'static`) is a
+                    // lifetime and the quote passes through as code.
+                    let j = i + 1;
+                    let escaped = chars.get(j) == Some(&'\\');
+                    let single = chars.get(j).is_some() && chars.get(j + 1) == Some(&'\'');
+                    if escaped || single {
+                        last.0.push('\'');
+                        i += 1;
+                        while i < chars.len() && chars[i] != '\'' && chars[i] != '\n' {
+                            if chars[i] == '\\' && i + 1 < chars.len() && chars[i + 1] != '\n' {
+                                i += 1;
+                            }
+                            i += 1;
+                        }
+                        if chars.get(i) == Some(&'\'') {
+                            last.0.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        last.0.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    last.0.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                last.1.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    last.1.push_str("*/");
+                    mode = if depth == 1 { Mode::Code } else { Mode::BlockComment(depth - 1) };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    last.1.push_str("/*");
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    last.1.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // Skip the escaped char — unless it is the newline of
+                    // a line-continuation, which must still break lines.
+                    if i + 1 < chars.len() && chars[i + 1] != '\n' {
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    last.0.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut seen = 0u32;
+                    while seen < hashes && chars.get(j) == Some(&'#') {
+                        seen += 1;
+                        j += 1;
+                    }
+                    if seen == hashes {
+                        last.0.push('"');
+                        for _ in 0..hashes {
+                            last.0.push('#');
+                        }
+                        mode = Mode::Code;
+                        i = j;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    mark_test_regions(lines)
+}
+
+/// Second pass: brace-count the stripped code channel to mark every line
+/// inside a `#[cfg(test)]`-gated region (the attribute gates the next
+/// brace region to open — a `mod tests { … }` or a bare `#[test]`-style
+/// fn). Regions nest; a stack of opening depths tracks them.
+fn mark_test_regions(lines: Vec<(String, String)>) -> Vec<SourceLine> {
+    let mut out = Vec::with_capacity(lines.len());
+    let mut depth: i64 = 0;
+    let mut regions: Vec<i64> = Vec::new();
+    let mut pending = false;
+    for (idx, (code, comment)) in lines.into_iter().enumerate() {
+        if code.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        let mut in_test = pending || !regions.is_empty();
+        for ch in code.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        regions.push(depth);
+                        pending = false;
+                        in_test = true;
+                    }
+                }
+                '}' => {
+                    if regions.last() == Some(&depth) {
+                        regions.pop();
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+        }
+        out.push(SourceLine { number: idx + 1, code, comment, in_test });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(text: &str) -> Vec<String> {
+        scan(text).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_leave_the_code_channel() {
+        let src = "let a = m.lock(); // .lock().unwrap() in a comment\nlet b = \".unwrap()\";\n";
+        let lines = scan(src);
+        assert!(!lines[0].code.contains(".unwrap()"), "{}", lines[0].code);
+        assert!(lines[0].comment.contains(".lock().unwrap()"));
+        assert_eq!(lines[1].code, "let b = \"\";");
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_strings() {
+        let src = "/* outer /* inner */ still */ code();\nlet r = r#\"has \".unwrap()\" inside\"#;\n";
+        let c = codes(src);
+        assert_eq!(c[0].trim(), "code();");
+        assert_eq!(c[1], "let r = r#\"\"#;");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }\nlet c = 'x'; let n = '\\n'; // tail\n";
+        let c = codes(src);
+        assert!(c[0].contains("<'a>"), "{}", c[0]);
+        assert!(c[0].contains("{ x }"), "lifetime must not swallow code: {}", c[0]);
+        assert_eq!(c[1], "let c = ''; let n = ''; ");
+    }
+
+    #[test]
+    fn multiline_strings_span_lines_without_leaking_code() {
+        let src = "let s = \"first\nsecond .unwrap()\nthird\"; done();\n";
+        let c = codes(src);
+        assert_eq!(c[0], "let s = \"");
+        assert_eq!(c[1], "");
+        assert_eq!(c[2], "\"; done();");
+    }
+
+    #[test]
+    fn cfg_test_regions_cover_the_module_and_nothing_else() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\nfn after() {}\n";
+        let lines = scan(src);
+        assert!(!lines[0].in_test);
+        assert!(lines[1].in_test, "the attribute line is part of the region");
+        assert!(lines[2].in_test);
+        assert!(lines[3].in_test);
+        assert!(lines[4].in_test, "closing brace still inside");
+        assert!(!lines[5].in_test, "region ends with its brace");
+    }
+
+    #[test]
+    fn braces_in_strings_do_not_desync_test_tracking() {
+        let src = "#[cfg(test)]\nmod tests {\n    let s = \"}\";\n    fn t() {}\n}\nfn after() {}\n";
+        let lines = scan(src);
+        assert!(lines[3].in_test, "stray brace inside a string must not close the region");
+        assert!(!lines[5].in_test);
+    }
+}

@@ -68,6 +68,7 @@ use crate::math::rng::Rng;
 use crate::samplers::common::SampleOutput;
 use crate::samplers::{model_score, Sampler, SamplerSpec, ScoreRequest};
 use crate::score::model::ScoreModel;
+use crate::util::sync::{lock_unpoisoned, wait_unpoisoned};
 
 pub use scheduler::{SchedulerConfig, ScoreScheduler, ScoreStats};
 
@@ -413,6 +414,7 @@ impl Engine {
                     std::thread::Builder::new()
                         .name(format!("gddim-engine-{w}"))
                         .spawn(move || pool_worker(&rx, &m, s.as_deref(), w))
+                        // gddim-lint: allow(no-unwrap-in-server) — construction-time fail-fast: no pool exists yet, so no request can be wedged by this panic
                         .expect("engine: failed to spawn pool worker")
                 })
                 .collect();
@@ -463,6 +465,7 @@ impl Engine {
     pub fn run(&self, job: &Job<'_>) -> SampleOutput {
         self.run_group(std::slice::from_ref(job))
             .pop()
+            // gddim-lint: allow(no-unwrap-in-server) — structural invariant: run_group returns exactly jobs.len() outputs, checked by its own tests
             .expect("run_group returns one output per job")
     }
 
@@ -561,7 +564,7 @@ impl Engine {
                         // One lock for the whole group keeps its shards
                         // contiguous in the queue even with several
                         // dispatchers submitting concurrently.
-                        let tx = pool.tx.lock().unwrap();
+                        let tx = lock_unpoisoned(&pool.tx);
                         for (slot_idx, p) in plans.into_iter().enumerate() {
                             self.metrics.queue_push();
                             tx.send(ShardTask {
@@ -573,12 +576,13 @@ impl Engine {
                                 rng: p.rng,
                                 batch: Arc::clone(&batch),
                             })
+                            // gddim-lint: allow(no-unwrap-in-server) — receiver closes only in Engine::drop, which cannot run concurrently with &self
                             .expect("engine: pool queue closed while engine alive");
                         }
                     }
-                    let mut g = batch.inner.lock().unwrap();
+                    let mut g = lock_unpoisoned(&batch.inner);
                     while g.done < total_shards {
-                        g = batch.cv.wait(g).unwrap();
+                        g = wait_unpoisoned(&batch.cv, g);
                     }
                     std::mem::take(&mut g.slots)
                 }
@@ -597,6 +601,7 @@ impl Engine {
             let mut us = Vec::with_capacity(job.n * job.proc.dim_u());
             let mut nfe = 0usize;
             for cell in slots[cursor..cursor + k].iter_mut() {
+                // gddim-lint: allow(no-unwrap-in-server) — the condvar wait above holds until done == total_shards, so every slot is filled
                 match cell.take().expect("engine: shard never executed") {
                     Ok(out) => {
                         xs.extend_from_slice(&out.xs);
@@ -639,7 +644,7 @@ fn pool_worker(
         // Holding the lock across recv() is the single-consumer handoff:
         // exactly one idle worker waits on the channel, the rest queue on
         // the mutex. Err = sender dropped = engine shutdown.
-        let task = match rx.lock().unwrap().recv() {
+        let task = match lock_unpoisoned(rx).recv() {
             Ok(t) => t,
             Err(_) => return,
         };
@@ -666,7 +671,7 @@ fn pool_worker(
         metrics.busy_add(widx, t0.elapsed());
         metrics.shards.fetch_add(1, Ordering::Relaxed);
         {
-            let mut g = batch.inner.lock().unwrap();
+            let mut g = lock_unpoisoned(&batch.inner);
             g.slots[idx] = Some(result);
             g.done += 1;
         }

@@ -33,8 +33,12 @@
 //!   LRU plan cache + the engine as its execution backend).
 //! * [`workload`] — closed- and open-loop (SLO-at-rate) workload drivers.
 //! * [`exp`] — experiment harnesses regenerating every paper table/figure.
+//! * [`analysis`] — `gddim lint`: the repo-invariant static-analysis
+//!   pass that keeps the concurrency core honest (lock hygiene, SAFETY
+//!   comments, bounded network reads, bit-identity fences).
 
 pub mod math;
+pub mod analysis;
 pub mod util;
 pub mod diffusion;
 pub mod coeffs;

@@ -9,6 +9,7 @@
 //!   serve                  batched sampling service (demo, or TCP edge via --listen)
 //!   workload               open-loop SLO workload: rate sweep + latency percentiles
 //!   benchdiff              compare two BENCH_serving.json snapshots (perf gate)
+//!   lint                   repo-invariant static analysis over rust/src (CI gate)
 
 use std::sync::Arc;
 
@@ -36,12 +37,14 @@ fn main() {
         "serve" => serve(&args),
         "workload" => workload(&args),
         "benchdiff" => benchdiff(&args),
+        "lint" => std::process::exit(gddim::analysis::run_cli(&args)),
         _ => {
             // The dataset list comes from the preset registry, so a new
             // preset shows up here without touching the usage string.
             let datasets = presets::names().collect::<Vec<_>>().join("|");
             eprintln!(
-                "usage: gddim <gen-configs|selfcheck|sample|coeffs|exp|serve|workload|benchdiff> \
+                "usage: gddim \
+                 <gen-configs|selfcheck|sample|coeffs|exp|serve|workload|benchdiff|lint> \
                  [--flags]\n\
                  sample flags: --process vpsde|cld|bdm --dataset {datasets}\n\
                  \u{20}              --sampler gddim|gddim-sde|em|ancestral|rk45|heun|sscs\n\
@@ -55,14 +58,16 @@ fn main() {
                  \u{20}              --shard-size BYTES --score-batch N (0 = off) --score-wait MICROS\n\
                  \u{20}              --listen ADDR   (TCP edge; line-delimited JSON wire protocol)\n\
                  \u{20}              --conn-threads N --accept-queue N --rate-limit RPS --rate-burst B\n\
-                 \u{20}              --max-inflight N --slo-ms M --duration-secs S --report-secs S\n\
+                 \u{20}              --max-inflight N --slo-ms M --max-frame BYTES\n\
+                 \u{20}              --duration-secs S --report-secs S\n\
                  workload flags: --rates R1,R2,.. (or --rate R) --slo-ms M --poisson\n\
                  \u{20}                --requests R --samples S --nfe N --workers W --dispatchers D\n\
                  \u{20}                --dataset NAME --samplers SPEC+SPEC+.. --plan-cache-dir DIR\n\
                  \u{20}                --shard-size BYTES --score-batch N (0 = off) --score-wait MICROS\n\
                  \u{20}                --tcp --conns C   (drive the loopback TCP edge, C connections)\n\
                  benchdiff:    gddim benchdiff OLD.json NEW.json [--tol FRAC]   (exit 1 on regression)\n\
-                 \u{20}              gddim benchdiff --validate FILE.json       (schema check only)"
+                 \u{20}              gddim benchdiff --validate FILE.json       (schema check only)\n\
+                 lint:         gddim lint [PATHS] [--fix-plan]   (default rust/src; exit 1 on findings)"
             );
         }
     }

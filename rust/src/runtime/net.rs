@@ -10,6 +10,7 @@ use std::sync::Mutex;
 use crate::diffusion::process::KtKind;
 use crate::runtime::manifest::ModelEntry;
 use crate::score::model::ScoreModel;
+use crate::util::sync::lock_unpoisoned;
 use crate::{Error, Result};
 
 pub struct NetScore {
@@ -52,7 +53,7 @@ impl NetScore {
         debug_assert_eq!(chunk.len(), b * d);
         let u = xla::Literal::vec1(chunk).reshape(&[b as i64, d as i64]).map_err(xe)?;
         let t_lit = xla::Literal::vec1(&[t as f32]).reshape(&[]).map_err(xe)?;
-        let exe = self.exe.lock().unwrap();
+        let exe = lock_unpoisoned(&self.exe);
         let result = exe.execute::<xla::Literal>(&[u, t_lit]).map_err(xe)?[0][0]
             .to_literal_sync()
             .map_err(xe)?;

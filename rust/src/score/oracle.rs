@@ -75,7 +75,7 @@ impl GmmOracle {
 
     fn cache_for(&self, t: f64) -> Arc<TimeCache> {
         {
-            let g = self.cache.read().unwrap();
+            let g = crate::util::sync::read_unpoisoned(&self.cache);
             if let Some(c) = g.get(&t.to_bits()) {
                 return c.clone();
             }
@@ -99,7 +99,7 @@ impl GmmOracle {
             mus.extend_from_slice(&tmp);
         }
         let cache = Arc::new(TimeCache { l_inv, c_inv, neg_kt_t, mus });
-        let mut g = self.cache.write().unwrap();
+        let mut g = crate::util::sync::write_unpoisoned(&self.cache);
         // Bound the map: grid samplers touch a few dozen t's, but RK45's
         // adaptive stepping can mint unboundedly many distinct times
         // over a long-lived shared oracle. A rare wholesale clear is

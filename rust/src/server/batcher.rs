@@ -63,14 +63,16 @@ impl KeyQueue {
     pub fn cut(&mut self) -> Vec<Envelope> {
         let mut out = Vec::new();
         let mut total = 0usize;
-        while let Some(front) = self.queue.front() {
+        loop {
+            let Some(front) = self.queue.front() else { break };
             let n = front.req.n;
             if !out.is_empty() && total + n > self.cfg.max_batch {
                 break;
             }
+            let Some(env) = self.queue.pop_front() else { break };
             total += n;
             self.queued_samples -= n;
-            out.push(self.queue.pop_front().unwrap());
+            out.push(env);
             if total >= self.cfg.max_batch {
                 break;
             }

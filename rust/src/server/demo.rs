@@ -30,6 +30,7 @@ pub fn run(args: &Args) {
         Ok(k) => k,
         Err(e) => {
             eprintln!("error: {e}");
+            // gddim-lint: allow(no-process-exit) — CLI entry point: a bad sampler spec exits with status 2 before the router starts
             std::process::exit(2);
         }
     };

@@ -92,6 +92,11 @@ pub struct EdgeCounters {
     pub requests_shed: AtomicU64,
     /// Lines that failed wire parsing (answered, connection kept).
     pub requests_malformed: AtomicU64,
+    /// Lines that exceeded [`NetConfig::max_frame_len`] (answered with a
+    /// wire error; connection kept, bytes discarded to the next newline).
+    ///
+    /// [`NetConfig::max_frame_len`]: crate::server::net::NetConfig::max_frame_len
+    pub requests_oversized: AtomicU64,
     /// Result lines actually written back to a client.
     pub requests_completed: AtomicU64,
     /// Of the completed, how many finished during graceful drain.
@@ -113,6 +118,7 @@ impl EdgeCounters {
             requests_admitted: self.requests_admitted.load(Ordering::Relaxed),
             requests_shed: self.requests_shed.load(Ordering::Relaxed),
             requests_malformed: self.requests_malformed.load(Ordering::Relaxed),
+            requests_oversized: self.requests_oversized.load(Ordering::Relaxed),
             requests_completed: self.requests_completed.load(Ordering::Relaxed),
             requests_drained: self.requests_drained.load(Ordering::Relaxed),
             peak_conn_depth: self.peak_conn_depth.load(Ordering::Relaxed),
@@ -132,6 +138,7 @@ pub struct EdgeStats {
     pub requests_admitted: u64,
     pub requests_shed: u64,
     pub requests_malformed: u64,
+    pub requests_oversized: u64,
     pub requests_completed: u64,
     pub requests_drained: u64,
     pub peak_conn_depth: usize,
@@ -141,13 +148,14 @@ impl std::fmt::Display for EdgeStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "edge: conns={}(+{} shed) requests: admitted={} shed={} malformed={} \
+            "edge: conns={}(+{} shed) requests: admitted={} shed={} malformed={} oversized={} \
              completed={} drained={} peak-conn-depth={}",
             self.connections_accepted,
             self.connections_shed,
             self.requests_admitted,
             self.requests_shed,
             self.requests_malformed,
+            self.requests_oversized,
             self.requests_completed,
             self.requests_drained,
             self.peak_conn_depth
@@ -237,12 +245,14 @@ mod tests {
         c.connections_accepted.fetch_add(3, Ordering::Relaxed);
         c.requests_admitted.fetch_add(10, Ordering::Relaxed);
         c.requests_shed.fetch_add(2, Ordering::Relaxed);
+        c.requests_oversized.fetch_add(1, Ordering::Relaxed);
         c.requests_completed.fetch_add(10, Ordering::Relaxed);
         c.note_conn_depth(4);
         c.note_conn_depth(2);
         let s = c.snapshot();
         assert_eq!(s.connections_accepted, 3);
         assert_eq!(s.requests_shed, 2);
+        assert_eq!(s.requests_oversized, 1);
         assert_eq!(s.peak_conn_depth, 4, "depth keeps its high-water mark");
         let mut r = ServerMetrics::new().report();
         r.edge = Some(s.clone());

@@ -24,18 +24,9 @@ pub use net::{NetConfig, NetServer};
 pub use request::{GenRequest, GenResponse, PlanKey};
 pub use router::{Router, RouterConfig};
 
-use std::sync::{Mutex, MutexGuard};
-
-/// Poison-proof lock acquisition for the serving boundary.
-///
-/// A panic in one dispatcher (or in a custom `PreparedFactory`) poisons
-/// any mutex whose guard it held, and the default `.lock().unwrap()`
-/// then panics every *later* caller too — one bad request would take
-/// the whole edge down. The shared router/metrics state is simple data
-/// (queues, counters, the plan cache) that stays structurally valid at
-/// every await-free lock region, so the recovery policy is: take the
-/// guard back with [`PoisonError::into_inner`](std::sync::PoisonError)
-/// and keep serving.
-pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
+/// Poison-proof lock acquisition, promoted to [`crate::util::sync`] so
+/// the engine/scheduler/runtime layers share the serving edge's policy
+/// (see the rationale there). Re-exported here for compatibility: PR 7
+/// introduced the helper under `server::` and callers still import it
+/// from this path.
+pub use crate::util::sync::lock_unpoisoned;

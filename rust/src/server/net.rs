@@ -61,6 +61,11 @@ pub struct NetConfig {
     pub max_inflight: usize,
     /// SLO target the `Retry-After` hint is derived from.
     pub slo_ms: u64,
+    /// Largest request line (bytes, excluding the newline) a connection
+    /// may send. Past it the reader answers a wire error, discards bytes
+    /// until the next newline, and keeps the connection — a client
+    /// cannot grow the per-connection buffer without bound.
+    pub max_frame_len: usize,
     /// Poll granularity of the accept loop and connection readers (how
     /// quickly they notice `stop`).
     pub poll_interval: Duration,
@@ -75,6 +80,7 @@ impl Default for NetConfig {
             rate_burst: 32.0,
             max_inflight: 256,
             slo_ms: 50,
+            max_frame_len: 64 * 1024,
             poll_interval: Duration::from_millis(20),
         }
     }
@@ -320,15 +326,42 @@ fn handle_conn(sh: &EdgeShared, stream: TcpStream) {
         // Byte-level line framing (not BufRead::read_line): with a read
         // timeout on the socket, a line can arrive split across reads,
         // and `read_line` may drop a partial multi-byte char on the
-        // timeout error path. Accumulate raw bytes; cut at `\n`.
+        // timeout error path. Accumulate raw bytes; cut at `\n`. The
+        // accumulator is bounded by `max_frame_len`: a line that outgrows
+        // it is answered immediately and its remaining bytes discarded up
+        // to the next newline (`skipping`), so framing — and the
+        // connection — survive.
         let mut sock = stream;
         let mut buf: Vec<u8> = Vec::new();
         let mut chunk = [0u8; 4096];
+        let mut skipping = false;
+        let max_frame = sh.cfg.max_frame_len.max(1);
         loop {
             while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
                 let line: Vec<u8> = buf.drain(..=pos).collect();
+                if skipping {
+                    // Tail of an already-answered oversized line.
+                    skipping = false;
+                    continue;
+                }
+                if pos > max_frame {
+                    // A whole line can arrive in one read and still be
+                    // over the cap; enforce it here too.
+                    answer_oversized(sh, writer, &line[..pos.min(4096)], max_frame);
+                    continue;
+                }
                 let text = String::from_utf8_lossy(&line);
                 handle_line(sh, writer, depth, peer, &text, &pend_tx);
+            }
+            // No complete line buffered: bound the partial one. Past the
+            // cap it can never become a valid frame, so answer it now and
+            // drop bytes until a newline restores framing.
+            if skipping {
+                buf.clear();
+            } else if buf.len() > max_frame {
+                answer_oversized(sh, writer, &buf[..buf.len().min(4096)], max_frame);
+                buf.clear();
+                skipping = true;
             }
             if sh.stop.load(Ordering::SeqCst) {
                 break;
@@ -423,6 +456,22 @@ fn handle_line(
     }
 }
 
+/// Answer an over-length frame with a wire error and count it. Only a
+/// bounded prefix of the line is passed in, so this never copies the
+/// attacker-sized payload. Id recovery is best-effort: a complete
+/// over-cap line that still parses gets its id echoed back; a truncated
+/// prefix is answered with id 0.
+fn answer_oversized(sh: &EdgeShared, writer: &Mutex<TcpStream>, seen: &[u8], max_frame: usize) {
+    sh.counters.requests_oversized.fetch_add(1, Ordering::Relaxed);
+    let prefix = String::from_utf8_lossy(seen);
+    let resp = WireResponse::Error {
+        id: wire::extract_id(&prefix),
+        error: format!("frame exceeds max-frame ({max_frame} bytes)"),
+        retry_after_ms: None,
+    };
+    write_line(writer, &resp.to_line());
+}
+
 /// Answer a request with a load-shed line carrying the SLO-derived
 /// `Retry-After` hint.
 fn shed(sh: &EdgeShared, writer: &Mutex<TcpStream>, id: u64, why: &str) {
@@ -450,6 +499,7 @@ pub fn run_cli(args: &Args) {
 
     let Some(addr) = args.get("listen") else {
         eprintln!("error: serve --listen needs an address (e.g. 127.0.0.1:7878)");
+        // gddim-lint: allow(no-process-exit) — CLI entry point: usage errors exit with status 2 before any server state exists
         std::process::exit(2);
     };
     let router = Router::with_options(
@@ -478,12 +528,14 @@ pub fn run_cli(args: &Args) {
         rate_burst: args.get_f64("rate-burst", 32.0),
         max_inflight: args.get_usize("max-inflight", 256),
         slo_ms: args.get_u64("slo-ms", 50),
+        max_frame_len: args.get_usize("max-frame", 64 * 1024),
         ..NetConfig::default()
     };
     let server = match NetServer::bind(&addr, cfg, router) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("error: {e}");
+            // gddim-lint: allow(no-process-exit) — CLI entry point: a failed bind exits with status 2 before any connection is accepted
             std::process::exit(2);
         }
     };
@@ -552,6 +604,42 @@ mod tests {
         assert_eq!(retry_after_ms(&cfg, 35), 200);
         let degenerate = NetConfig { max_inflight: 0, slo_ms: 0, ..NetConfig::default() };
         assert!(retry_after_ms(&degenerate, 5) >= 1, "hint is never 0");
+    }
+
+    #[test]
+    fn oversized_line_is_answered_and_the_connection_survives() {
+        let router = Router::new(1, BatcherConfig::default(), oracle_factory());
+        let cfg = NetConfig { conn_threads: 1, max_frame_len: 256, ..NetConfig::default() };
+        let server = NetServer::bind("127.0.0.1:0", cfg, router).unwrap();
+        let mut conn = TcpStream::connect(server.local_addr()).unwrap();
+        // A line far past the 256-byte cap: answered with a wire error
+        // instead of growing the reader's buffer to match.
+        let mut big = vec![b'x'; 10 * 1024];
+        big.push(b'\n');
+        conn.write_all(&big).unwrap();
+        let mut lines = BufReader::new(conn.try_clone().unwrap()).lines();
+        let err = WireResponse::parse_line(&lines.next().unwrap().unwrap()).unwrap();
+        match err {
+            WireResponse::Error { error, retry_after_ms, .. } => {
+                assert!(error.contains("max-frame"), "{error}");
+                assert_eq!(retry_after_ms, None, "oversized is a client bug, not overload");
+            }
+            other => panic!("expected an error line, got {other:?}"),
+        }
+        // The same connection still serves a well-formed request.
+        let req = WireRequest { id: 7, n: 2, seed: 1, key: PlanKey::gddim("vpsde", "gmm2d", 6, 2) };
+        conn.write_all(req.to_line().as_bytes()).unwrap();
+        let status = WireResponse::parse_line(&lines.next().unwrap().unwrap()).unwrap();
+        assert_eq!(status, WireResponse::Status { id: 7, status: "accepted".to_string() });
+        let result = WireResponse::parse_line(&lines.next().unwrap().unwrap()).unwrap();
+        assert!(matches!(result, WireResponse::Result { id: 7, .. }), "{result:?}");
+        drop(lines);
+        drop(conn);
+        let report = server.shutdown();
+        let edge = report.edge.expect("edge counters ride the NetServer report");
+        assert_eq!(edge.requests_oversized, 1, "one oversized line, answered exactly once");
+        assert_eq!(edge.requests_completed, 1);
+        assert_eq!(edge.requests_malformed, 0, "the oversized line is not double-counted");
     }
 
     #[test]

@@ -1,7 +1,14 @@
 //! Non-numerical utilities: JSON (for the artifact manifest and dataset
-//! configs shared with the python layer), a tiny CLI argument parser, and
-//! the benchmark timing harness (the offline build has no criterion).
+//! configs shared with the python layer), a tiny CLI argument parser,
+//! the benchmark timing harness (the offline build has no criterion),
+//! and the poison-proof lock/condvar helpers shared by every concurrent
+//! layer (engine, scheduler, runtime, server).
 
 pub mod json;
 pub mod cli;
 pub mod bench;
+pub mod sync;
+
+pub use sync::{
+    lock_unpoisoned, read_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned, write_unpoisoned,
+};

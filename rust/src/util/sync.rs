@@ -1,0 +1,135 @@
+//! Poison-proof synchronization primitives for the serving stack.
+//!
+//! A panic in one thread (a custom `PreparedFactory`, a score model, a
+//! sampler shard) poisons any mutex whose guard it held, and the default
+//! `.lock().unwrap()` then panics every *later* caller too — one bad
+//! request would take the whole engine pool or serving edge down. All
+//! shared state in this crate is simple data (queues, counters, caches,
+//! result slots) that stays structurally valid at every lock region, so
+//! the crate-wide recovery policy is: take the guard back with
+//! [`PoisonError::into_inner`](std::sync::PoisonError) and keep going.
+//!
+//! These helpers are the *only* sanctioned way to acquire a lock or wait
+//! on a condvar in this crate; the `no-raw-lock-unwrap` rule of
+//! `gddim lint` (see [`crate::analysis`]) enforces it. Originally these
+//! lived in `server/` (PR 7 poison-proofed the edge); they are promoted
+//! here so the engine, scheduler, and runtime share one policy, and
+//! `server::lock_unpoisoned` remains as a re-export for compatibility.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Duration;
+
+/// Poison-proof [`Mutex::lock`].
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-proof [`RwLock::read`].
+pub fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-proof [`RwLock::write`].
+pub fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-proof [`Condvar::wait`]: a panic in another holder of the
+/// mutex must wake this waiter normally, not convert into a second
+/// panic here.
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-proof [`Condvar::wait_timeout`]. The timeout flag is dropped:
+/// every caller in this crate re-checks its predicate and its own
+/// deadline after waking, which is the only robust pattern anyway
+/// (spurious wakeups make the flag advisory at best).
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, _timeout)) => g,
+        Err(e) => e.into_inner().0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+    use std::time::Instant;
+
+    /// Deliberately poison `m` by panicking while holding its guard.
+    fn poison<T: Send + 'static>(m: &Arc<Mutex<T>>) {
+        let m2 = Arc::clone(m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap_or_else(|e| e.into_inner());
+            panic!("poison the mutex");
+        })
+        .join();
+    }
+
+    #[test]
+    fn lock_unpoisoned_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(41));
+        poison(&m);
+        assert!(m.lock().is_err(), "the mutex really is poisoned");
+        let mut g = lock_unpoisoned(&m);
+        *g += 1;
+        assert_eq!(*g, 42, "the data survives the panic untouched");
+    }
+
+    #[test]
+    fn rwlock_helpers_recover_a_poisoned_rwlock() {
+        let l = Arc::new(RwLock::new(7));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap_or_else(|e| e.into_inner());
+            panic!("poison the rwlock");
+        })
+        .join();
+        assert_eq!(*read_unpoisoned(&l), 7);
+        *write_unpoisoned(&l) = 8;
+        assert_eq!(*read_unpoisoned(&l), 8);
+    }
+
+    #[test]
+    fn wait_unpoisoned_wakes_despite_a_poisoning_notifier() {
+        // The notifier flips the flag, poisons the mutex by panicking
+        // with the guard held, and the waiter must still come back with
+        // the flag visible rather than panicking on the poison.
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let h = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut g = lock_unpoisoned(m);
+            while !*g {
+                g = wait_unpoisoned(cv, g);
+            }
+            true
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        let pair3 = Arc::clone(&pair);
+        let _ = std::thread::spawn(move || {
+            let (m, cv) = &*pair3;
+            let mut g = lock_unpoisoned(m);
+            *g = true;
+            cv.notify_all();
+            panic!("poison while holding the flag mutex");
+        })
+        .join();
+        assert!(h.join().expect("waiter must wake, not die on poison"));
+    }
+
+    #[test]
+    fn wait_timeout_unpoisoned_still_times_out() {
+        let pair = (Mutex::new(()), Condvar::new());
+        let t0 = Instant::now();
+        let g = lock_unpoisoned(&pair.0);
+        let _g = wait_timeout_unpoisoned(&pair.1, g, Duration::from_millis(10));
+        assert!(t0.elapsed() >= Duration::from_millis(5), "the timeout path must elapse");
+    }
+}

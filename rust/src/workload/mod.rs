@@ -378,6 +378,7 @@ pub fn open_loop_tcp_probe(
             warm.write_all(line.as_bytes()).expect("warm write");
         }
         let mut done = 0usize;
+        // gddim-lint: allow(bounded-io) — bench client reading its own loopback server's replies, not an untrusted peer
         let mut lines = BufReader::new(warm.try_clone().expect("clone warm client")).lines();
         while done < spec.keys.len() {
             let Some(Ok(line)) = lines.next() else { break };
@@ -409,6 +410,7 @@ pub fn open_loop_tcp_probe(
             let _ = rd.set_read_timeout(Some(driver.timeout));
             std::thread::spawn(move || {
                 let mut out = Vec::with_capacity(want);
+                // gddim-lint: allow(bounded-io) — bench client reading its own loopback server's replies, not an untrusted peer
                 let mut lines = BufReader::new(rd).lines();
                 while out.len() < want {
                     let Some(Ok(line)) = lines.next() else { break };
@@ -609,6 +611,7 @@ pub fn run_cli(args: &crate::util::cli::Args) {
         Ok(k) => k,
         Err(e) => {
             eprintln!("error: {e}");
+            // gddim-lint: allow(no-process-exit) — CLI entry point: a bad sampler spec exits with status 2 before any router exists
             std::process::exit(2);
         }
     };

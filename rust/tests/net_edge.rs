@@ -233,6 +233,63 @@ fn graceful_drain_completes_in_flight_requests() {
 }
 
 #[test]
+fn oversized_frames_are_bounded_answered_and_the_connection_survives() {
+    // A 512-byte frame cap on the edge: both oversized shapes — a
+    // complete line over the cap, and a giant never-ending line that
+    // must be cut off mid-accumulation — get one error line each, the
+    // reader's buffer stays bounded, and the connection keeps serving.
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        NetConfig { conn_threads: 1, max_frame_len: 512, ..NetConfig::default() },
+        Router::new(1, BatcherConfig::default(), oracle_factory()),
+    )
+    .unwrap();
+    let conn = TcpStream::connect(server.local_addr()).unwrap();
+    let mut w = conn.try_clone().unwrap();
+    let mut lines = BufReader::new(conn).lines();
+
+    // Shape 1: a complete, parseable line just over the cap.
+    let line1 = format!("{{\"id\":9,\"pad\":\"{}\"}}\n", "x".repeat(600));
+    w.write_all(line1.as_bytes()).unwrap();
+    match next_response(&mut lines) {
+        WireResponse::Error { error, retry_after_ms, .. } => {
+            assert!(error.contains("max-frame"), "{error}");
+            assert_eq!(retry_after_ms, None, "an oversized frame is a client bug, not a shed");
+        }
+        other => panic!("expected an oversized-frame error, got {other:?}"),
+    }
+
+    // Shape 2: 64 KiB without a newline — far past anything the reader
+    // may buffer. Exactly one error, then the tail is discarded up to
+    // the newline that restores framing.
+    let mut giant = vec![b'y'; 64 * 1024];
+    giant.push(b'\n');
+    w.write_all(&giant).unwrap();
+    match next_response(&mut lines) {
+        WireResponse::Error { error, .. } => assert!(error.contains("max-frame"), "{error}"),
+        other => panic!("expected an oversized-frame error, got {other:?}"),
+    }
+
+    // The same socket still serves a well-formed request.
+    let req = WireRequest { id: 10, n: 3, seed: 0, key: PlanKey::gddim("vpsde", "gmm2d", 5, 1) };
+    w.write_all(req.to_line().as_bytes()).unwrap();
+    match next_response(&mut lines) {
+        WireResponse::Result { id, dim_x, xs, .. } => {
+            assert_eq!((id, dim_x), (10, 2));
+            assert_eq!(xs.len(), 3 * 2);
+        }
+        other => panic!("expected a result after the oversized lines, got {other:?}"),
+    }
+
+    let report = server.shutdown();
+    let edge = report.edge.unwrap();
+    assert_eq!(edge.requests_oversized, 2, "one error per oversized line, never more");
+    assert_eq!(edge.requests_malformed, 0, "oversized is its own counter");
+    assert_eq!(edge.requests_admitted, 1);
+    assert_eq!(edge.requests_completed, 1);
+}
+
+#[test]
 fn malformed_line_is_answered_and_the_connection_survives() {
     let server = NetServer::bind(
         "127.0.0.1:0",
