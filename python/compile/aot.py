@@ -6,10 +6,18 @@ emits HloModuleProto with 64-bit instruction ids which xla_extension
 0.5.1 (the version the published `xla` crate binds) rejects; the text
 parser reassigns ids (see /opt/xla-example/README.md).
 
-The manifest records, per model: file, dims, batch, K_t kind, process,
+Each variant exports **two** serving artifacts: the HLO text (for the
+feature-gated PJRT executor) and a `.gdw` raw-weight file (see
+:mod:`compile.weights`) that the pure-Rust ``score::net::ScoreNet``
+loads with zero native deps.
+
+The manifest records, per model: files, dims, batch, K_t kind, process,
 dataset, network config, final training loss, and a **probe** (frozen
-input → expected ε output) that the rust integration test replays
-through PJRT to pin the cross-layer numerics.
+input → expected ε output) that the rust loaders replay to pin the
+cross-layer numerics. The probe's `eps_row0` is the *float64 reference*
+forward of the exported f32 weights (``weights.score_eps_f64``), which
+the Rust float64 forward reproduces to ~1e-12 — so the rust gate is a
+strict 1e-6. jax's float32 forward is asserted within 2e-4 of it here.
 
 Exported function signature: `eps = f(u: f32[B, D], t: f32[]) → f32[B, D]`.
 """
@@ -25,6 +33,7 @@ from jax._src.lib import xla_client as xc
 
 from .model import score_eps
 from .train import train_model
+from .weights import probe_block, write_gdw
 
 # (name, process, dataset, kt, hidden, blocks, steps)
 VARIANTS = [
@@ -98,14 +107,19 @@ def export_variant(out_dir, name, process, dataset, kt, hidden, blocks, steps):
     with open(os.path.join(out_dir, hlo_file), "w") as f:
         f.write(hlo)
 
-    # Probe: deterministic input, jax-evaluated output (row 0 recorded).
-    rng = np.random.default_rng(1234)
-    u_probe = rng.standard_normal((BATCH, d)).astype(np.float32)
-    t_probe = np.float32(0.5)
-    eps_out = np.asarray(fn(jnp.asarray(u_probe), jnp.asarray(t_probe))[0])
+    # Raw weights for the pure-Rust ScoreNet (deterministic bytes).
+    gdw_file = f"{name}.gdw"
+    write_gdw(os.path.join(out_dir, gdw_file), params, cfg)
+
+    # Probe: deterministic input; the recorded row is the float64
+    # reference forward, with jax's f32 evaluation asserted against it.
+    probe, u_probe, eps_ref = probe_block(params, cfg, BATCH)
+    eps_jax = np.asarray(fn(jnp.asarray(u_probe), jnp.asarray(np.float32(probe["t"])))[0])
+    np.testing.assert_allclose(eps_jax, eps_ref, rtol=2e-4, atol=2e-4)
 
     entry = {
         "file": hlo_file,
+        "weights": gdw_file,
         "process": process,
         "dataset": dataset,
         "kt": kt,
@@ -113,15 +127,11 @@ def export_variant(out_dir, name, process, dataset, kt, hidden, blocks, steps):
         "batch": BATCH,
         "hidden": cfg.hidden,
         "blocks": cfg.blocks,
+        "emb_half": cfg.emb_half,
         "final_loss": float(np.mean(losses[-50:])) if losses else None,
-        "probe": {
-            "t": float(t_probe),
-            "u_row0": [float(x) for x in u_probe[0]],
-            "eps_row0": [float(x) for x in eps_out[0]],
-            "seed": 1234,
-        },
+        "probe": probe,
     }
-    print(f"[{name}] exported {hlo_file} ({len(hlo)} chars)")
+    print(f"[{name}] exported {hlo_file} ({len(hlo)} chars) + {gdw_file}")
     return entry
 
 

@@ -1,0 +1,184 @@
+"""Fallback generator for ``configs/cld_tables.json``.
+
+`gddim gen-configs` (the rust binary) is the **authoritative** producer
+of the CLD Stage-I tables; :class:`compile.processes.Cld` only ever
+interpolates them. This module exists for environments with no rust
+toolchain (CI's python job, the fixture exporter): it replays the same
+closed forms as ``rust/src/diffusion/cld.rs`` — Ψ(t,0), Σ_t and its
+Cholesky L_t are exact exponential-polynomial expressions, and R_t uses
+the polar trick ``R_t = L_t·Rot(φ_t)`` with the scalar angle φ
+integrated by RK4 from the closed-form skew generator rate.
+
+Fidelity notes: because Rot(φ) is orthogonal, ``R_tR_tᵀ = Σ_t`` holds to
+machine precision for *any* φ, so the only approximation here is the
+angle itself (RK4 on the same geometric grid the rust engine uses).
+Training-data quality is insensitive to that at the tolerances involved;
+anything downstream that pins numerics (manifest probes) is recorded
+from the trained weights, not from these tables.
+"""
+
+import json
+import math
+import os
+
+import numpy as np
+
+# Mirrors rust `CldConfig::default()`.
+BETA = 4.0
+MASS = 0.25
+GAMMA0 = 0.04
+T_MAX = 1.0
+T_MIN = 1e-3
+TABLE_LEN = 4096
+SUBSTEPS = 8
+
+_OMEGA = 1.0 / math.sqrt(MASS)
+_GAMMA = 2.0 * math.sqrt(MASS)  # critical damping Γ = 2√M
+# Drift structure A with F_t = β·A, as ((a, b), (c, d)).
+_A = (0.0, 1.0 / MASS, -1.0, -_GAMMA / MASS)
+
+
+def _mul2(x, y):
+    return (
+        x[0] * y[0] + x[1] * y[2],
+        x[0] * y[1] + x[1] * y[3],
+        x[2] * y[0] + x[3] * y[2],
+        x[2] * y[1] + x[3] * y[3],
+    )
+
+
+def _sigma(t):
+    """Closed-form Σ_t as (xx, xv, vv) — port of `Cld::sigma_mat`."""
+    w = _OMEGA
+    tb = BETA * max(t, 0.0)
+    e = math.exp(-2.0 * w * tb)
+    g0 = GAMMA0 * MASS
+    p = w * w * tb
+    q = 1.0 - w * tb
+    aa = 2.0 * w
+    at = aa * tb
+    if at < 1e-4:
+        i0 = tb - aa * tb * tb / 2.0 + aa * aa * tb**3 / 6.0
+        i1 = tb * tb / 2.0 - aa * tb**3 / 3.0
+        i2 = tb**3 / 3.0 - aa * tb**4 / 4.0
+    else:
+        i0 = (1.0 - e) / aa
+        i1 = (1.0 - e * (1.0 + at)) / (aa * aa)
+        i2 = (2.0 - e * (2.0 + 2.0 * at + at * at)) / (aa * aa * aa)
+    c = 2.0 * _GAMMA
+    sxx = g0 * e * p * p + c * w**4 * i2
+    sxv = g0 * e * p * q + c * w * w * (i1 - w * i2)
+    svv = g0 * e * q * q + c * (i0 - 2.0 * w * i1 + w * w * i2)
+    return sxx, sxv, svv
+
+
+def _sigma_dot(t):
+    """Lyapunov RHS F S + S Fᵀ + GGᵀ as (xx, xv, vv)."""
+    sxx, sxv, svv = _sigma(t)
+    fa, fb, fc, fd = (BETA * v for v in _A)
+    dxx = 2.0 * (fa * sxx + fb * sxv)
+    dxv = fa * sxv + fb * svv + sxx * fc + sxv * fd
+    dvv = 2.0 * (fc * sxv + fd * svv) + 2.0 * _GAMMA * BETA
+    return dxx, dxv, dvv
+
+
+def _chol_and_dot(t):
+    """Closed-form L_t and L'_t (lower triangular, as (l11, l21, l22))."""
+    sxx, sxv, svv = _sigma(t)
+    dxx, dxv, dvv = _sigma_dot(t)
+    l11 = math.sqrt(max(sxx, 0.0))
+    l21 = sxv / l11
+    l22 = math.sqrt(max(svv - l21 * l21, 0.0))
+    d11 = dxx / (2.0 * l11)
+    d21 = (dxv - l21 * d11) / l11
+    d22 = (dvv - 2.0 * l21 * d21) / (2.0 * l22)
+    return (l11, l21, l22), (d11, d21, d22)
+
+
+def _phi_rate(t):
+    """φ' = [L⁻¹FL + ½L⁻¹GGᵀL⁻ᵀ − L⁻¹L']₍₂,₁₎ — port of `Cld::phi_rate`."""
+    (l11, l21, l22), (d11, d21, d22) = _chol_and_dot(t)
+    l = (l11, 0.0, l21, l22)
+    ld = (d11, 0.0, d21, d22)
+    li = (1.0 / l11, 0.0, -l21 / (l11 * l22), 1.0 / l22)
+    f = tuple(BETA * v for v in _A)
+    ggt_half = (0.0, 0.0, 0.0, _GAMMA * BETA)
+    li_t = (li[0], li[2], li[1], li[3])
+    m = _mul2(_mul2(li, f), l)
+    n = _mul2(_mul2(li, ggt_half), li_t)
+    p = _mul2(li, ld)
+    return (m[2] + n[2] - p[2])
+
+
+def _phi_table():
+    """Integrate φ on the geometric grid rust uses; returns (ts, φs)."""
+    r_start = T_MIN * 1e-2
+    # φ(r_start): Rot(φ₀) = L⁻¹·sqrtm(Σ), with the SPD 2×2 closed form
+    # sqrtm(S) = (S + √det·I)/√(tr + 2√det).
+    sxx, sxv, svv = _sigma(r_start)
+    sdet = math.sqrt(max(sxx * svv - sxv * sxv, 0.0))
+    norm = math.sqrt(sxx + svv + 2.0 * sdet)
+    sq = ((sxx + sdet) / norm, sxv / norm, sxv / norm, (svv + sdet) / norm)
+    l11, l21, l22 = _chol_and_dot(r_start)[0]
+    li = (1.0 / l11, 0.0, -l21 / (l11 * l22), 1.0 / l22)
+    w0 = _mul2(li, sq)
+    phi = math.atan2(w0[2], w0[0])
+
+    ratio = math.log(T_MAX / r_start)
+    ts = [r_start]
+    phis = [phi]
+    for i in range(TABLE_LEN):
+        t_lo = r_start * math.exp(ratio * i / TABLE_LEN)
+        t_hi = r_start * math.exp(ratio * (i + 1) / TABLE_LEN)
+        h = (t_hi - t_lo) / SUBSTEPS
+        for k in range(SUBSTEPS):
+            t0 = t_lo + k * h
+            k1 = _phi_rate(t0)
+            k2 = _phi_rate(t0 + 0.5 * h)
+            k3 = k2  # scalar autonomous-in-y RHS: k2 == k3 exactly
+            k4 = _phi_rate(t0 + h)
+            phi += h * (k1 + 2.0 * k2 + 2.0 * k3 + k4) / 6.0
+        ts.append(t_hi)
+        phis.append(phi)
+    return np.asarray(ts), np.asarray(phis)
+
+
+def ensure_cld_tables(config_dir):
+    """Write a fallback ``configs/cld_tables.json`` when absent, with the
+    same schema `gddim gen-configs` emits (2001 uniform rows of
+    ``[t, Ψ(a,b,c,d), Σ(xx,xv,vv), R(a,b,c,d), L(l11,l21,l22)]``)."""
+    path = os.path.join(config_dir, "cld_tables.json")
+    if os.path.exists(path):
+        return
+    ts_phi, phis = _phi_table()
+    log_ts = np.log(ts_phi)
+    r_start = float(ts_phi[0])
+    n = 2000
+    rows = []
+    for i in range(n + 1):
+        t = T_MIN * 0.1 + (T_MAX - T_MIN * 0.1) * i / n
+        w = _OMEGA
+        tau = BETA * t
+        sc = math.exp(-w * tau)
+        nil = (_A[0] + w, _A[1], _A[2], _A[3] + w)  # A + ωI (nilpotent)
+        psi = tuple(sc * ((1.0 if j in (0, 3) else 0.0) + tau * nil[j]) for j in range(4))
+        sxx, sxv, svv = _sigma(t)
+        tc = min(max(t, r_start), T_MAX)
+        (l11, l21, l22), _ = _chol_and_dot(tc)
+        phi = float(np.interp(math.log(tc), log_ts, phis))
+        cphi, sphi = math.cos(phi), math.sin(phi)
+        r = (l11 * cphi, -l11 * sphi, l21 * cphi + l22 * sphi, -l21 * sphi + l22 * cphi)
+        # R Rᵀ = Σ holds for any φ (Rot is orthogonal) — cheap sanity net.
+        assert abs(r[0] * r[0] + r[1] * r[1] - sxx) < 1e-9 * (1.0 + sxx)
+        rows.append([t, *psi, sxx, sxv, svv, *r, l11, l21, l22])
+    tab = {
+        "columns": "t, psi(a,b,c,d), sigma(xx,xv,vv), R(a,b,c,d), L(l11,l21,l22)",
+        "beta": BETA,
+        "mass": MASS,
+        "gamma0": GAMMA0,
+        "rows": rows,
+    }
+    os.makedirs(config_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(tab, f)
+    print(f"wrote fallback {path} (`gddim gen-configs` is authoritative)")

@@ -1,0 +1,125 @@
+"""Train + export the tiny learned-score fixture the rust tests pin.
+
+``python -m compile.fixture`` (from `python/`) trains two deliberately
+tiny nets (blocks=1, hidden=16, emb_half=8, fixed seed, ~200 steps —
+seconds on CPU) and writes a weights-only artifacts directory:
+
+    manifest.json
+    tiny_vpsde_gmm2d.gdw      (vpsde on gmm2d, D=2)
+    tiny_cld_gmm2d.gdw        (cld   on gmm2d, D=4 — position+velocity)
+
+The output is committed under ``rust/tests/fixtures/learned/`` so the
+rust probe-parity and serving tests stay hermetic when JAX is absent;
+CI's python job re-runs this exporter on every PR (into a scratch dir)
+to prove the pipeline still trains and exports end to end.
+
+Unlike `aot.py` these entries carry **no** HLO file — the fixture only
+feeds the pure-Rust ``score::net`` path, and the manifest schema allows
+either artifact (`file` for PJRT, `weights` for native) per entry.
+"""
+
+import argparse
+import json
+import math
+import os
+
+import numpy as np
+
+from .cld_fallback import ensure_cld_tables
+from .processes import CONFIG_DIR
+from .train import train_model
+from .weights import probe_block, write_gdw
+
+
+def ensure_gmm2d_config():
+    """Write a minimal ``configs/datasets.json`` when the repo copy is
+    absent (CI's python job has no rust binary to run `gddim
+    gen-configs`). The spec mirrors ``data::presets::gmm2d`` exactly: 8
+    modes on a radius-4 circle, shared variance 0.05, uniform weights."""
+    path = os.path.join(CONFIG_DIR, "datasets.json")
+    if os.path.exists(path):
+        return
+    means = [
+        [4.0 * math.cos(math.tau * i / 8.0), 4.0 * math.sin(math.tau * i / 8.0)]
+        for i in range(8)
+    ]
+    spec = {"name": "gmm2d", "d": 2, "var": 0.05, "weights": [1.0 / 8.0] * 8, "means": means}
+    os.makedirs(CONFIG_DIR, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"gmm2d": spec}, f, indent=2)
+    print(f"wrote fallback {path} (gmm2d only; `gddim gen-configs` is authoritative)")
+
+# (name, process, dataset, kt, hidden, blocks, emb_half)
+FIXTURE_VARIANTS = [
+    ("tiny_vpsde_gmm2d", "vpsde", "gmm2d", "R", 16, 1, 8),
+    ("tiny_cld_gmm2d", "cld", "gmm2d", "R", 16, 1, 8),
+]
+
+BATCH = 64
+
+
+def export_fixture(out_dir, steps=200, seed=0):
+    ensure_gmm2d_config()
+    ensure_cld_tables(CONFIG_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"models": {}, "batch": BATCH}
+    for name, process, dataset, kt, hidden, blocks, emb_half in FIXTURE_VARIANTS:
+        print(f"[{name}] training tiny net ({steps} steps)…")
+        params, cfg, losses = train_model(
+            process,
+            dataset,
+            kt=kt,
+            hidden=hidden,
+            blocks=blocks,
+            emb_half=emb_half,
+            steps=steps,
+            batch=128,
+            seed=seed,
+            log_every=0,
+        )
+        gdw_file = f"{name}.gdw"
+        write_gdw(os.path.join(out_dir, gdw_file), params, cfg)
+        probe, u_probe, eps_ref = probe_block(params, cfg, BATCH)
+
+        # Cross-check: jax's f32 forward must agree with the recorded
+        # float64 reference to f32 rounding — same gate as aot.py.
+        import jax.numpy as jnp
+
+        from .model import score_eps
+
+        eps_jax = np.asarray(
+            score_eps(params, cfg, jnp.asarray(u_probe), jnp.float32(probe["t"]), impl="ref")
+        )
+        np.testing.assert_allclose(eps_jax, eps_ref, rtol=2e-4, atol=2e-4)
+
+        manifest["models"][name] = {
+            "weights": gdw_file,
+            "process": process,
+            "dataset": dataset,
+            "kt": kt,
+            "dim_u": cfg.dim,
+            "batch": BATCH,
+            "hidden": cfg.hidden,
+            "blocks": cfg.blocks,
+            "emb_half": cfg.emb_half,
+            "final_loss": float(np.mean(losses[-50:])),
+            "probe": probe,
+        }
+        print(f"[{name}] exported {gdw_file} (final loss {manifest['models'][name]['final_loss']:.4f})")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_dir}/manifest.json with {len(manifest['models'])} models")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../rust/tests/fixtures/learned")
+    ap.add_argument("--steps", type=int, default=int(os.environ.get("FIXTURE_STEPS", "200")))
+    args = ap.parse_args()
+    export_fixture(args.out_dir, steps=args.steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,7 @@ def train_model(
     kt: str = "R",
     hidden: int = 128,
     blocks: int = 3,
+    emb_half: int = 16,
     steps: int = 2000,
     batch: int = 512,
     lr: float = 2e-3,
@@ -41,7 +42,7 @@ def train_model(
     """Train ε_θ for (process, dataset, K_t); returns (params, cfg, losses)."""
     data = GmmData(dataset_name)
     proc = build_process(process_name, data.d)
-    cfg = ScoreNetConfig(dim=proc.dim_u, hidden=hidden, blocks=blocks)
+    cfg = ScoreNetConfig(dim=proc.dim_u, hidden=hidden, blocks=blocks, emb_half=emb_half)
     key = jax.random.PRNGKey(seed)
     params = init_params(key, cfg)
     m = {k: jnp.zeros_like(p) for k, p in params.items()}

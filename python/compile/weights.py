@@ -1,0 +1,149 @@
+"""Deterministic weight export (`.gdw`) + the float64 reference forward.
+
+The `.gdw` file is the serving contract between this training layer and
+the pure-Rust ``score::net::ScoreNet``: one line of compact JSON header
+followed by raw little-endian float32 tensor data, concatenated in
+header order (row-major / C layout, weight matrices stored
+``(fan_in, fan_out)`` exactly as trained). The header pins everything
+the loader needs to validate the blob without trusting its length::
+
+    {"magic":"gddim-weights","version":1,"dtype":"f32","order":"row-major",
+     "dim":2,"hidden":16,"blocks":1,"emb_half":8,
+     "tensors":[{"name":"emb0_w","shape":[16,16]}, ...]}\n
+    <raw f32 bytes>
+
+Tensor order is the fixed canonical sequence of :func:`tensor_names` —
+byte output is a pure function of the parameters, so re-exporting
+unchanged weights produces an identical file (no timestamps, no dict
+ordering hazards).
+
+:func:`score_eps_f64` replays :func:`compile.model.score_eps` in float64
+from the *stored f32* weights, mirroring the Rust forward's op order.
+Manifest probes record its output: the Rust loader reproduces it to
+~1e-12 (same ops, same promotion), so the probe-parity gate can be a
+strict 1e-6 while jax's float32 forward is only asserted to ~2e-4 of it
+(float32 rounding, checked at export time).
+"""
+
+import json
+
+import numpy as np
+
+GDW_MAGIC = "gddim-weights"
+GDW_VERSION = 1
+
+
+def tensor_names(blocks: int):
+    """Canonical tensor order: embed MLP, stem, FiLM+residual per block
+    (ascending), head — `_w` then `_b` for each layer."""
+    layers = ["emb0", "emb1", "stem"]
+    for i in range(blocks):
+        layers += [f"film{i}", f"block{i}"]
+    layers.append("head")
+    names = []
+    for layer in layers:
+        names += [f"{layer}_w", f"{layer}_b"]
+    return names
+
+
+def write_gdw(path, params, cfg):
+    """Write `params` (a name → array dict from :func:`compile.model.init_params`)
+    for `cfg` (a ``ScoreNetConfig``) as a `.gdw` file."""
+    tensors = []
+    blobs = []
+    for name in tensor_names(cfg.blocks):
+        arr = np.ascontiguousarray(np.asarray(params[name], dtype=np.float32))
+        tensors.append({"name": name, "shape": [int(s) for s in arr.shape]})
+        blobs.append(arr.tobytes())
+    header = {
+        "magic": GDW_MAGIC,
+        "version": GDW_VERSION,
+        "dtype": "f32",
+        "order": "row-major",
+        "dim": int(cfg.dim),
+        "hidden": int(cfg.hidden),
+        "blocks": int(cfg.blocks),
+        "emb_half": int(cfg.emb_half),
+        "tensors": tensors,
+    }
+    with open(path, "wb") as f:
+        f.write(json.dumps(header, sort_keys=True, separators=(",", ":")).encode("utf-8"))
+        f.write(b"\n")
+        for blob in blobs:
+            f.write(blob)
+
+
+def read_gdw(path):
+    """Read a `.gdw` file back → (header dict, name → f32 array dict).
+    The inverse of :func:`write_gdw`; pytest round-trips through it."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    nl = raw.index(b"\n")
+    header = json.loads(raw[:nl].decode("utf-8"))
+    assert header["magic"] == GDW_MAGIC and header["version"] == GDW_VERSION
+    assert header["dtype"] == "f32" and header["order"] == "row-major"
+    tensors = {}
+    off = nl + 1
+    for spec in header["tensors"]:
+        count = int(np.prod(spec["shape"], dtype=np.int64)) if spec["shape"] else 1
+        end = off + 4 * count
+        tensors[spec["name"]] = np.frombuffer(raw[off:end], dtype="<f4").reshape(spec["shape"])
+        off = end
+    assert off == len(raw), "trailing bytes after the last declared tensor"
+    return header, tensors
+
+
+def _silu(y):
+    return y * (1.0 / (1.0 + np.exp(-y)))
+
+
+def score_eps_f64(params, cfg, u, t):
+    """Float64 replay of ``score_eps`` from the stored-f32 weights.
+
+    Op order mirrors the Rust ``ScoreNet`` forward: the time embedding
+    and the per-block FiLM (scale, shift) pair are computed once (they
+    depend only on `t`), then every row runs stem → blocks → head
+    independently. `u` is (B, D) float64, `t` a python float; returns
+    (B, D) float64.
+    """
+    p = {k: np.asarray(v, dtype=np.float32).astype(np.float64) for k, v in params.items()}
+    u = np.atleast_2d(np.asarray(u, dtype=np.float64))
+    t = float(t)
+
+    half = cfg.emb_half
+    exps = np.arange(half, dtype=np.float64) / max(half - 1, 1)
+    freqs = (2.0 * np.pi) / (100.0 ** exps)
+    phase = t * freqs
+    emb = np.concatenate([np.sin(phase), np.cos(phase)])
+    emb = _silu(emb @ p["emb0_w"] + p["emb0_b"])
+    emb = _silu(emb @ p["emb1_w"] + p["emb1_b"])
+
+    films = []
+    for i in range(cfg.blocks):
+        ss = emb @ p[f"film{i}_w"] + p[f"film{i}_b"]
+        films.append((ss[: cfg.hidden], ss[cfg.hidden :]))
+
+    out = np.empty_like(u)
+    for r in range(u.shape[0]):
+        h = _silu(u[r] @ p["stem_w"] + p["stem_b"])
+        for i, (scale, shift) in enumerate(films):
+            g = h * (1.0 + scale) + shift
+            h = h + _silu(g @ p[f"block{i}_w"] + p[f"block{i}_b"])
+        out[r] = h @ p["head_w"] + p["head_b"]
+    return out
+
+
+def probe_block(params, cfg, batch, seed=1234, t=0.5):
+    """The manifest's frozen probe: `batch` standard-normal rows from
+    ``default_rng(seed)`` at time `t`, with row 0's input and float64
+    reference output recorded."""
+    rng = np.random.default_rng(seed)
+    u_probe = rng.standard_normal((batch, cfg.dim)).astype(np.float32)
+    eps_ref = score_eps_f64(params, cfg, u_probe.astype(np.float64), t)
+    probe = {
+        "t": float(t),
+        "u_row0": [float(x) for x in u_probe[0]],
+        "eps_row0": [float(x) for x in eps_ref[0]],
+        "seed": int(seed),
+    }
+    return probe, u_probe, eps_ref

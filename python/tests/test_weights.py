@@ -1,0 +1,84 @@
+"""Contract tests for the `.gdw` weight export and the float64 probe
+reference (`compile.weights`) — the serving handshake with the rust
+``score::net::ScoreNet`` loader."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile.model import ScoreNetConfig, init_params, score_eps
+from compile.weights import probe_block, read_gdw, score_eps_f64, tensor_names, write_gdw
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ScoreNetConfig(dim=3, hidden=8, blocks=2, emb_half=4)
+    params = init_params(jax.random.PRNGKey(7), cfg)
+    return params, cfg
+
+
+def test_tensor_names_are_canonical():
+    assert tensor_names(1) == [
+        "emb0_w", "emb0_b", "emb1_w", "emb1_b", "stem_w", "stem_b",
+        "film0_w", "film0_b", "block0_w", "block0_b", "head_w", "head_b",
+    ]
+    # Blocks interleave film/block ascending; every layer is _w then _b.
+    names = tensor_names(3)
+    assert names.index("film2_w") < names.index("block2_w") < names.index("head_w")
+
+
+def test_gdw_round_trip_is_exact_and_deterministic(tiny, tmp_path):
+    params, cfg = tiny
+    p1, p2 = tmp_path / "a.gdw", tmp_path / "b.gdw"
+    write_gdw(p1, params, cfg)
+    write_gdw(p2, params, cfg)
+    assert p1.read_bytes() == p2.read_bytes(), "export must be byte-deterministic"
+    header, tensors = read_gdw(p1)
+    assert header["dim"] == cfg.dim and header["blocks"] == cfg.blocks
+    assert [t["name"] for t in header["tensors"]] == tensor_names(cfg.blocks)
+    for name in tensor_names(cfg.blocks):
+        np.testing.assert_array_equal(tensors[name], np.asarray(params[name], dtype=np.float32))
+
+
+def test_f64_reference_matches_jax_forward(tiny):
+    params, cfg = tiny
+    rng = np.random.default_rng(3)
+    u = rng.standard_normal((5, cfg.dim)).astype(np.float32)
+    ref = score_eps_f64(params, cfg, u.astype(np.float64), 0.37)
+    via_jax = np.asarray(score_eps(params, cfg, u, np.float32(0.37), impl="ref"))
+    np.testing.assert_allclose(via_jax, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_probe_block_is_reproducible(tiny):
+    params, cfg = tiny
+    probe1, u1, eps1 = probe_block(params, cfg, 16)
+    probe2, _, _ = probe_block(params, cfg, 16)
+    assert probe1 == probe2
+    assert u1.shape == (16, cfg.dim)
+    np.testing.assert_array_equal(np.asarray(probe1["eps_row0"]), eps1[0])
+
+
+def test_fixture_probe_replays_from_committed_gdw():
+    """The committed fixture's probe must be regenerable from its own
+    .gdw bytes — exactly what the rust loader does at registry load."""
+    import json
+
+    fix = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures", "learned")
+    if not os.path.exists(os.path.join(fix, "manifest.json")):
+        pytest.skip("committed fixture not present")
+    with open(os.path.join(fix, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name, entry in manifest["models"].items():
+        header, tensors = read_gdw(os.path.join(fix, entry["weights"]))
+        cfg = ScoreNetConfig(
+            dim=header["dim"], hidden=header["hidden"],
+            blocks=header["blocks"], emb_half=header["emb_half"],
+        )
+        probe = entry["probe"]
+        u = np.asarray(probe["u_row0"], dtype=np.float64)[None, :]
+        eps = score_eps_f64(tensors, cfg, u, probe["t"])
+        np.testing.assert_allclose(
+            eps[0], np.asarray(probe["eps_row0"]), rtol=1e-12, atol=1e-12, err_msg=name
+        )

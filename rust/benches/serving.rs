@@ -15,14 +15,14 @@ use gddim::samplers::GddimDet;
 use gddim::score::oracle::GmmOracle;
 use gddim::server::batcher::BatcherConfig;
 use gddim::server::request::{GenRequest, PlanKey};
-use gddim::server::router::{oracle_factory, Router, RouterConfig};
+use gddim::server::router::{learned_factory, oracle_factory, Router, RouterConfig};
 use gddim::util::bench::Table;
 use gddim::util::cli::Args;
 use gddim::server::net::NetConfig;
 use gddim::workload::bench_report::{BenchReport, BenchScenario};
 use gddim::workload::{
-    engine_throughput, max_rate_under_slo, open_loop_probe, open_loop_tcp_probe, ClosedLoop,
-    WorkloadSpec,
+    engine_throughput, max_rate_under_slo, open_loop_probe, open_loop_probe_with,
+    open_loop_tcp_probe, ClosedLoop, WorkloadSpec,
 };
 
 /// `GDDIM_BENCH_QUICK=1` shrinks every sweep to CI-probe size (same
@@ -92,6 +92,7 @@ fn main() {
     open_loop_slo(&args, quick);
     scenarios.extend(score_batching(&args, quick));
     scenarios.extend(tcp_edge(&args, quick));
+    scenarios.extend(learned_models(&args, quick));
 
     // --json PATH: persist the scenario set as a schema-versioned
     // snapshot (the perf trajectory; see workload::bench_report).
@@ -277,6 +278,61 @@ fn tcp_edge(args: &Args, quick: bool) -> Vec<BenchScenario> {
     ]);
     t.emit("serving_tcp_edge");
     vec![BenchScenario::from_probe("hetero4_tcp", &report, samples, metrics.engine.as_ref())]
+}
+
+/// Learned-score serving: the same open-loop harness as
+/// [`score_batching`], but routed through `learned_factory` over the
+/// committed tiny-model fixture, so the measured `eps_batch` is a real
+/// matmul forward ([`gddim::score::ScoreNet`]) instead of the closed-form
+/// oracle — the fill-ratio and pooling numbers this row records are the
+/// honest ones for network-shaped score cost. Two keys (gDDIM q=1/q=2 on
+/// vpsde/gmm2d) share the one fixture model, so the scheduler's same-
+/// model pooling is on the measured path. Emitted as a **new-only**
+/// scenario: `benchdiff` reports scenarios absent from the committed
+/// baseline without failing, so this lands without touching
+/// `BENCH_serving.json` (the next trajectory refresh picks it up).
+fn learned_models(args: &Args, quick: bool) -> Vec<BenchScenario> {
+    let n_requests = args.get_usize("open-requests", if quick { 12 } else { 40 });
+    let samples = args.get_usize("hetero-samples", if quick { 8 } else { 16 });
+    let rate = args.get_f64("hetero-rate", 400.0);
+    let fixture = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/learned");
+    let keys =
+        vec![PlanKey::gddim("vpsde", "gmm2d", 20, 1), PlanKey::gddim("vpsde", "gmm2d", 20, 2)];
+    let (report, metrics) = open_loop_probe_with(
+        RouterConfig { dispatchers: 4, ..RouterConfig::default() },
+        EngineConfig {
+            workers: 4,
+            score_batch: 4096,
+            score_wait: std::time::Duration::from_micros(200),
+            ..EngineConfig::default()
+        },
+        BatcherConfig { max_batch: 4096, max_wait: Duration::from_millis(2) },
+        WorkloadSpec {
+            n_requests,
+            samples_per_request: samples,
+            rate_per_sec: rate,
+            keys,
+            seed: 17,
+        },
+        true,
+        learned_factory(fixture).expect("committed learned fixture loads"),
+    );
+    let engine = metrics.engine.expect("router report carries engine stats");
+    let cell = |v: Option<f64>| v.map_or_else(|| "-".into(), |x| format!("{x:.4}"));
+    let mut t = Table::new(
+        "Learned-score serving: tiny ScoreNet fixture (vpsde/gmm2d, 2-key mix, scheduler on)",
+        &["done", "p50(s)", "p99(s)", "score calls", "rows/call", "samples/s"],
+    );
+    t.row(vec![
+        format!("{}/{}", report.completed, report.issued),
+        cell(report.total.as_ref().map(|s| s.p50)),
+        cell(report.total.as_ref().map(|s| s.p99)),
+        engine.score_calls.to_string(),
+        format!("{:.1}", engine.rows_per_call()),
+        format!("{:.0}", metrics.samples_per_sec),
+    ]);
+    t.emit("serving_learned");
+    vec![BenchScenario::from_probe("learned_vpsde_sched_on", &report, samples, Some(&engine))]
 }
 
 /// Open-loop SLO bench: inject at fixed rates regardless of completion

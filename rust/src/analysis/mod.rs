@@ -227,6 +227,22 @@ mod tests {
     }
 
     #[test]
+    fn uncapped_artifact_reads_are_flagged_on_score_and_runtime_files() {
+        let bad = "fn f(p: &std::path::Path) -> Vec<u8> { std::fs::read(p).unwrap() }\n";
+        assert_eq!(rules_hit("score/net.rs", bad), vec!["bounded-io"]);
+        let bad_str =
+            "fn f(p: &std::path::Path) -> String { std::fs::read_to_string(p).unwrap() }\n";
+        assert_eq!(rules_hit("runtime/manifest.rs", bad_str), vec!["bounded-io"]);
+        assert!(rules_hit("workload/bench_report.rs", bad).is_empty(), "rule is path-scoped");
+        let capped = "fn f(p: &std::path::Path) -> crate::Result<Vec<u8>> {\n    \
+                      crate::util::io::read_capped(p, 64 << 20)\n}\n";
+        assert!(rules_hit("score/net.rs", capped).is_empty(), "read_capped is the sanctioned path");
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn t(p: &std::path::Path) { \
+                       std::fs::read(p).unwrap(); }\n}\n";
+        assert!(rules_hit("runtime/manifest.rs", in_test).is_empty(), "test code is exempt");
+    }
+
+    #[test]
     fn pragmas_require_a_justification_and_a_known_rule() {
         let naked = "// gddim-lint: allow(no-unwrap-in-server)\nlet x = f().unwrap();\n";
         assert_eq!(rules_hit("server/x.rs", naked), vec!["pragma-justification"]);
@@ -252,7 +268,7 @@ mod tests {
 
     #[test]
     fn catalog_is_well_formed() {
-        assert_eq!(CATALOG_VERSION, 1);
+        assert_eq!(CATALOG_VERSION, 2);
         assert_eq!(CATALOG.len(), 7);
         for r in CATALOG {
             assert!(!r.id.is_empty() && !r.summary.is_empty() && !r.fix_plan.is_empty());

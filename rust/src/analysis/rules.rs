@@ -25,7 +25,10 @@ use super::scan::SourceLine;
 
 /// Bumped whenever a rule is added, removed, or changes meaning, so a
 /// CI failure can be traced to a catalog change rather than a code one.
-pub const CATALOG_VERSION: u32 = 1;
+/// v2: `bounded-io` also covers uncapped `fs::read*` on artifact-loading
+/// files (`score/`, `runtime/`), where `util::io::read_capped` is the
+/// sanctioned replacement.
+pub const CATALOG_VERSION: u32 = 2;
 
 /// One catalog entry. `fix_plan` is the remediation line printed by
 /// `gddim lint --fix-plan`.
@@ -77,9 +80,12 @@ pub const CATALOG: &[Rule] = &[
     Rule {
         id: "bounded-io",
         summary: "unbounded read (.read_line/.read_to_end/.read_to_string/.lines) on a file that \
-                  handles network streams lets a peer grow a buffer without limit",
-        fix_plan: "frame reads through a bounded accumulator (see server::net's max_frame_len \
-                   state machine), or tag trusted-peer clients with a justified allow pragma",
+                  handles network streams, or an uncapped fs::read* on an artifact-loading file \
+                  (score/, runtime/), lets a peer or an oversized artifact grow a buffer without \
+                  limit",
+        fix_plan: "frame network reads through a bounded accumulator (see server::net's \
+                   max_frame_len state machine), route artifact reads through \
+                   util::io::read_capped, or tag trusted sites with a justified allow pragma",
     },
     Rule {
         id: "pragma-justification",
@@ -270,6 +276,10 @@ pub fn check_file(path: &str, lines: &[SourceLine]) -> Vec<Finding> {
     let net_file = lines
         .iter()
         .any(|l| l.code.contains("TcpStream") || l.code.contains("TcpListener"));
+    // Artifact loaders (learned-score weights, manifests, HLO text) read
+    // on-disk files whose size the server does not control; they must go
+    // through the size-capped helpers in `util::io`.
+    let artifact_file = path_has_dir(path, "score") || path_has_dir(path, "runtime");
 
     for (idx, line) in lines.iter().enumerate() {
         let code = line.code.as_str();
@@ -318,6 +328,18 @@ pub fn check_file(path: &str, lines: &[SourceLine]) -> Vec<Finding> {
                 if code.contains(pat) {
                     let msg = format!(
                         "`{pat}` is unbounded on a network-handling file; frame with a byte cap"
+                    );
+                    flag(&mut out, &allows, path, "bounded-io", n, msg);
+                }
+            }
+        }
+
+        if artifact_file && !line.in_test {
+            for pat in ["fs::read(", "fs::read_to_string("] {
+                if code.contains(pat) {
+                    let msg = format!(
+                        "`{pat}` is uncapped on an artifact-loading file; use \
+                         util::io::read_capped"
                     );
                     flag(&mut out, &allows, path, "bounded-io", n, msg);
                 }

@@ -15,8 +15,9 @@
 //!   of `R_t`, transition matrices, and multistep predictor/corrector
 //!   coefficients, packaged as a reusable [`coeffs::SamplerPlan`].
 //! * [`score`] — score models: exact oracles for mixture data (closed
-//!   form, used to validate Props 1–7) and PJRT-backed neural nets
-//!   AOT-compiled from JAX/Pallas.
+//!   form, used to validate Props 1–7) and the pure-Rust
+//!   [`score::ScoreNet`] that serves JAX-trained checkpoints natively
+//!   (plus the optional PJRT executor behind the `pjrt` feature).
 //! * [`samplers`] — "Stage II": the step-level [`samplers::Sampler`]
 //!   trait and the owned [`samplers::SamplerSpec`], implemented by gDDIM
 //!   (deterministic + stochastic, multistep predictor-corrector) and
@@ -25,7 +26,9 @@
 //! * [`metrics`] — Fréchet distance (the repo's FID analog), Wasserstein,
 //!   mode coverage, probability-flow NLL.
 //! * [`data`] — synthetic datasets shared with the python build layer.
-//! * [`runtime`] — the PJRT client wrapper that loads `artifacts/*.hlo.txt`.
+//! * [`runtime`] — the artifact layer: the validated `manifest.json`
+//!   contract with `python/compile`, plus the feature-gated PJRT client
+//!   that executes `artifacts/*.hlo.txt`.
 //! * [`engine`] — the sharded parallel sampling engine: fixed-size shards,
 //!   per-shard RNG streams, deterministic merge, a persistent worker pool
 //!   (mpsc job queue, condvar result collection, counters).

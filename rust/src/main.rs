@@ -55,6 +55,7 @@ fn main() {
                  \u{20}              --score-batch N --score-wait MICROS   (cross-key score pooling)\n\
                  serve flags:  --workers W --dispatchers D --requests R --samples S --rate RPS\n\
                  \u{20}              --dataset NAME --samplers SPEC+SPEC+.. --plan-cache-dir DIR\n\
+                 \u{20}              --models-dir DIR   (serve learned ScoreNet models from a manifest)\n\
                  \u{20}              --shard-size BYTES --score-batch N (0 = off) --score-wait MICROS\n\
                  \u{20}              --listen ADDR   (TCP edge; line-delimited JSON wire protocol)\n\
                  \u{20}              --conn-threads N --accept-queue N --rate-limit RPS --rate-burst B\n\
@@ -63,7 +64,8 @@ fn main() {
                  workload flags: --rates R1,R2,.. (or --rate R) --slo-ms M --poisson\n\
                  \u{20}                --requests R --samples S --nfe N --workers W --dispatchers D\n\
                  \u{20}                --dataset NAME --samplers SPEC+SPEC+.. --plan-cache-dir DIR\n\
-                 \u{20}                --shard-size BYTES --score-batch N (0 = off) --score-wait MICROS\n\
+                 \u{20}                --models-dir DIR --shard-size BYTES\n\
+                 \u{20}                --score-batch N (0 = off) --score-wait MICROS\n\
                  \u{20}                --tcp --conns C   (drive the loopback TCP edge, C connections)\n\
                  benchdiff:    gddim benchdiff OLD.json NEW.json [--tol FRAC]   (exit 1 on regression)\n\
                  \u{20}              gddim benchdiff --validate FILE.json       (schema check only)\n\

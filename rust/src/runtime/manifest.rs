@@ -1,23 +1,82 @@
 //! `artifacts/manifest.json` — the contract between `python/compile` and
-//! the rust runtime.
+//! the rust serving layer.
+//!
+//! Both python exporters (`aot.py` for real models, `fixture.py` for the
+//! committed test fixture) write the same schema; [`Manifest::load`]
+//! validates it **eagerly** with per-entry errors, so a malformed
+//! artifact directory fails at startup with the model named instead of
+//! panicking later inside a forward pass.
+//!
+//! # Schema
+//!
+//! ```json
+//! {
+//!   "batch": 256,
+//!   "models": {
+//!     "<name>": {
+//!       "file":       "name.hlo.txt",   // optional: HLO text (PJRT path)
+//!       "weights":    "name.gdw",       // optional: raw weights (ScoreNet)
+//!       "process":    "vpsde|cld|bdm",
+//!       "dataset":    "gmm2d|blobs8|...",
+//!       "kt":         "R|L|sqrt",       // K_t the ε output is trained in
+//!       "dim_u":      2,                // state dimension (required, > 0)
+//!       "batch":      256,              // export batch of the HLO artifact
+//!       "hidden":     128,              // ScoreNet width
+//!       "blocks":     3,                // FiLM residual block count
+//!       "emb_half":   16,               // half-width of the time embedding
+//!       "final_loss": 0.12,             // training diagnostic (optional)
+//!       "probe": {                      // frozen cross-layer probe
+//!         "t":        0.5,
+//!         "u_row0":   [..dim_u floats],   // input row
+//!         "eps_row0": [..dim_u floats],   // float64 reference ε of row 0
+//!         "seed":     1234                // RNG seed of the full probe batch
+//!       }
+//!     }
+//!   }
+//! }
+//! ```
+//!
+//! At least one of `file` / `weights` must be present per entry and must
+//! name a readable file next to the manifest. `probe.eps_row0` is the
+//! *float64 reference forward* of the exported f32 weights (see
+//! `python/compile/weights.py`); the pure-Rust loader
+//! [`crate::score::net::ScoreNet`] replays it within 1e-6 at load time,
+//! and the PJRT executor checks the same row against its f32 output at a
+//! looser float32 tolerance.
 
 use std::path::{Path, PathBuf};
 
 use crate::diffusion::process::KtKind;
+use crate::util::io::read_string_capped;
 use crate::util::json::Json;
 use crate::{Error, Result};
 
+/// Size cap on `manifest.json` itself (it holds probe vectors, not
+/// weights — 4 MiB is three orders of magnitude of headroom).
+pub const MANIFEST_CAP_BYTES: u64 = 4 << 20;
+
+/// One exported model: artifact paths (already joined onto the manifest
+/// directory), serving metadata, and the frozen probe. See the module
+/// docs for the JSON schema and which fields are optional.
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
     pub name: String,
-    pub file: PathBuf,
+    /// HLO-text artifact for the PJRT executor, when exported.
+    pub file: Option<PathBuf>,
+    /// `.gdw` raw-weight artifact for [`crate::score::net::ScoreNet`],
+    /// when exported.
+    pub weights: Option<PathBuf>,
     pub process: String,
     pub dataset: String,
     pub kt: KtKind,
     pub dim_u: usize,
     pub batch: usize,
+    /// Network shape (defaults mirror python's `ScoreNetConfig`).
+    pub hidden: usize,
+    pub blocks: usize,
+    pub emb_half: usize,
     pub final_loss: Option<f64>,
-    /// Frozen cross-layer probe: ε(u_row0, t) recorded by jax.
+    /// Frozen cross-layer probe: ε(u_row0, t), float64 reference.
     pub probe_t: f64,
     pub probe_u_row0: Vec<f64>,
     pub probe_eps_row0: Vec<f64>,
@@ -33,7 +92,7 @@ pub struct Manifest {
 impl Manifest {
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
-        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let text = read_string_capped(&dir.join("manifest.json"), MANIFEST_CAP_BYTES)?;
         let j = Json::parse(&text).map_err(|e| Error::msg(format!("manifest parse: {e}")))?;
         let models_obj = j
             .get("models")
@@ -41,31 +100,70 @@ impl Manifest {
             .ok_or_else(|| Error::msg("manifest missing models"))?;
         let mut models = Vec::new();
         for (name, m) in models_obj {
+            let fail = |what: &str| Error::msg(format!("model {name}: {what}"));
             let get_str = |k: &str| {
                 m.get(k)
                     .and_then(|v| v.as_str())
                     .map(|s| s.to_string())
-                    .ok_or_else(|| Error::msg(format!("model {name}: missing {k}")))
+                    .ok_or_else(|| fail(&format!("missing {k}")))
             };
-            let probe = m.get("probe").ok_or_else(|| Error::msg("missing probe"))?;
+            let get_dim = |k: &str, default: usize| {
+                m.get(k).and_then(|v| v.as_usize()).unwrap_or(default)
+            };
+            let probe = m.get("probe").ok_or_else(|| fail("missing probe"))?;
+            let dim_u =
+                m.get("dim_u").and_then(|v| v.as_usize()).ok_or_else(|| fail("missing dim_u"))?;
+            if dim_u == 0 {
+                return Err(fail("dim_u must be > 0"));
+            }
+
+            // Artifact paths: at least one of `file`/`weights`, readable.
+            let artifact = |k: &str| -> Result<Option<PathBuf>> {
+                match m.get(k).and_then(|v| v.as_str()) {
+                    None => Ok(None),
+                    Some(rel) => {
+                        let p = dir.join(rel);
+                        if !p.is_file() {
+                            let msg = format!("{k} {} is not a readable file", p.display());
+                            return Err(fail(&msg));
+                        }
+                        Ok(Some(p))
+                    }
+                }
+            };
+            let (file, weights) = (artifact("file")?, artifact("weights")?);
+            if file.is_none() && weights.is_none() {
+                return Err(fail("needs at least one of `file` (HLO) / `weights` (.gdw)"));
+            }
+
+            let probe_vec = |k: &str| -> Result<Vec<f64>> {
+                let v = probe
+                    .get(k)
+                    .and_then(|v| v.as_f64_vec())
+                    .ok_or_else(|| fail(&format!("probe missing {k}")))?;
+                if v.len() != dim_u {
+                    let msg = format!("probe {k} has {} entries, dim_u is {dim_u}", v.len());
+                    return Err(fail(&msg));
+                }
+                Ok(v)
+            };
+
             models.push(ModelEntry {
                 name: name.clone(),
-                file: dir.join(get_str("file")?),
+                file,
+                weights,
                 process: get_str("process")?,
                 dataset: get_str("dataset")?,
                 kt: get_str("kt")?.parse().map_err(Error::msg)?,
-                dim_u: m.get("dim_u").and_then(|v| v.as_usize()).unwrap_or(0),
-                batch: m.get("batch").and_then(|v| v.as_usize()).unwrap_or(256),
+                dim_u,
+                batch: get_dim("batch", 256),
+                hidden: get_dim("hidden", 128),
+                blocks: get_dim("blocks", 3),
+                emb_half: get_dim("emb_half", 16),
                 final_loss: m.get("final_loss").and_then(|v| v.as_f64()),
                 probe_t: probe.get("t").and_then(|v| v.as_f64()).unwrap_or(0.5),
-                probe_u_row0: probe
-                    .get("u_row0")
-                    .and_then(|v| v.as_f64_vec())
-                    .unwrap_or_default(),
-                probe_eps_row0: probe
-                    .get("eps_row0")
-                    .and_then(|v| v.as_f64_vec())
-                    .unwrap_or_default(),
+                probe_u_row0: probe_vec("u_row0")?,
+                probe_eps_row0: probe_vec("eps_row0")?,
                 probe_seed: probe.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
             });
         }
@@ -88,24 +186,91 @@ impl Manifest {
 mod tests {
     use super::*;
 
+    fn write_manifest(tag: &str, body: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("gddim_manifest_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+        dir
+    }
+
+    const GOOD: &str = r#"{"batch": 256, "models": {"m1": {
+        "file": "m1.hlo.txt", "process": "cld", "dataset": "gmm2d",
+        "kt": "R", "dim_u": 4, "batch": 256, "final_loss": 0.12,
+        "probe": {"t": 0.5, "u_row0": [1, 2, 3, 4],
+                  "eps_row0": [0.1, 0.2, 0.3, 0.4], "seed": 1234}}}}"#;
+
     #[test]
     fn parses_a_minimal_manifest() {
-        let dir = std::env::temp_dir().join("gddim_manifest_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(
-            dir.join("manifest.json"),
-            r#"{"batch": 256, "models": {"m1": {
-                "file": "m1.hlo.txt", "process": "cld", "dataset": "gmm2d",
-                "kt": "R", "dim_u": 4, "batch": 256, "final_loss": 0.12,
-                "probe": {"t": 0.5, "u_row0": [1, 2, 3, 4],
-                          "eps_row0": [0.1, 0.2, 0.3, 0.4], "seed": 1234}}}}"#,
-        )
-        .unwrap();
+        let dir = write_manifest("ok", GOOD);
+        std::fs::write(dir.join("m1.hlo.txt"), "HloModule m1").unwrap();
         let m = Manifest::load(&dir).unwrap();
         let e = m.get("m1").unwrap();
         assert_eq!(e.dim_u, 4);
         assert_eq!(e.kt, KtKind::R);
         assert_eq!(e.probe_u_row0.len(), 4);
         assert_eq!(e.probe_seed, 1234);
+        assert!(e.file.is_some() && e.weights.is_none());
+        // Shape fields fall back to the python ScoreNetConfig defaults.
+        assert_eq!((e.hidden, e.blocks, e.emb_half), (128, 3, 16));
+    }
+
+    #[test]
+    fn rejects_missing_artifact_file() {
+        // Same manifest, but m1.hlo.txt was never written.
+        let dir = write_manifest("nofile", GOOD);
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("model m1") && err.contains("not a readable file"), "{err}");
+    }
+
+    #[test]
+    fn rejects_zero_or_missing_dim_u() {
+        for (tag, entry) in [
+            ("dim0", r#""dim_u": 0,"#),
+            ("dimmissing", ""),
+        ] {
+            let body = format!(
+                r#"{{"models": {{"m1": {{"file": "f", "process": "vpsde",
+                    "dataset": "gmm2d", "kt": "R", {entry}
+                    "probe": {{"t": 0.5, "u_row0": [1], "eps_row0": [1]}}}}}}}}"#
+            );
+            let dir = write_manifest(tag, &body);
+            let err = Manifest::load(&dir).unwrap_err().to_string();
+            assert!(err.contains("model m1") && err.contains("dim_u"), "{tag}: {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_probe_length_mismatch_and_missing_artifacts() {
+        let dir = write_manifest(
+            "shortprobe",
+            r#"{"models": {"m1": {"file": "m1.hlo.txt", "process": "cld",
+                "dataset": "gmm2d", "kt": "R", "dim_u": 4,
+                "probe": {"t": 0.5, "u_row0": [1, 2], "eps_row0": [1, 2]}}}}"#,
+        );
+        std::fs::write(dir.join("m1.hlo.txt"), "HloModule m1").unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("probe u_row0 has 2 entries, dim_u is 4"), "{err}");
+
+        let dir = write_manifest(
+            "noartifact",
+            r#"{"models": {"m1": {"process": "cld", "dataset": "gmm2d",
+                "kt": "R", "dim_u": 1,
+                "probe": {"t": 0.5, "u_row0": [1], "eps_row0": [1]}}}}"#,
+        );
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("at least one of"), "{err}");
+    }
+
+    #[test]
+    fn loads_the_committed_learned_fixture() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/learned");
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.models.len(), 2);
+        for e in &m.models {
+            assert!(e.weights.is_some() && e.file.is_none(), "{}", e.name);
+            assert_eq!(e.probe_eps_row0.len(), e.dim_u);
+            assert_eq!((e.hidden, e.blocks, e.emb_half), (16, 1, 8));
+        }
+        assert_eq!(m.get("tiny_cld_gmm2d").unwrap().dim_u, 4);
     }
 }

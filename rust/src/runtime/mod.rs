@@ -1,15 +1,19 @@
-//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt` + manifest)
-//! and serve them as [`ScoreModel`](crate::score::ScoreModel)s on the
-//! rust hot path.
+//! Artifact runtime: load AOT exports (`artifacts/` + [`manifest`]) and
+//! serve them as [`ScoreModel`](crate::score::ScoreModel)s on the rust
+//! hot path. Two executors share the manifest contract:
 //!
-//! Interchange is HLO *text* — jax ≥ 0.5 serialized protos carry 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
+//! * [`crate::score::net::ScoreNet`] (always available, std-only) reads
+//!   the `.gdw` raw-weight artifact and replays the MLP forward with the
+//!   `math::simd` kernels — the default serving backend.
+//! * `net::NetScore` (behind the `pjrt` cargo feature) executes the HLO
+//!   text artifact via PJRT; it needs an external `xla` binding crate
+//!   the offline std-only build does not vendor. Interchange is HLO
+//!   *text* — jax ≥ 0.5 serialized protos carry 64-bit instruction ids
+//!   that xla_extension 0.5.1 rejects; the text parser reassigns ids
+//!   (see /opt/xla-example/README.md and DESIGN.md §2).
 //!
-//! The executor itself (`net::NetScore`) sits behind the `pjrt` cargo
-//! feature: it needs an external `xla` binding crate that the offline
-//! std-only build does not vendor. The manifest parser is always
-//! available (it is plain JSON) so the artifact contract stays testable.
+//! The [`manifest`] parser is always available (plain JSON) so the
+//! artifact contract stays testable without either executor.
 
 pub mod manifest;
 #[cfg(feature = "pjrt")]

@@ -32,8 +32,12 @@ unsafe impl Sync for NetScore {}
 impl NetScore {
     /// Compile the model on the shared CPU PJRT client.
     pub fn load(client: &xla::PjRtClient, entry: &ModelEntry) -> Result<NetScore> {
+        let file = entry
+            .file
+            .as_ref()
+            .ok_or_else(|| Error::msg(format!("model {}: no HLO `file` artifact", entry.name)))?;
         let proto = xla::HloModuleProto::from_text_file(
-            entry.file.to_str().ok_or_else(|| Error::msg("bad path"))?,
+            file.to_str().ok_or_else(|| Error::msg("bad path"))?,
         )
         .map_err(|e| Error::msg(format!("hlo parse: {e:?}")))?;
         let comp = xla::XlaComputation::from_proto(&proto);

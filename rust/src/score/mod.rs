@@ -1,19 +1,39 @@
-//! Score models.
+//! Score models: everything the samplers call through [`ScoreModel`].
 //!
 //! A [`ScoreModel`] produces the ε-prediction `ε_θ(u, t) = −K_tᵀ s(u, t)`
-//! under a declared `K_t` parameterization (paper Eq. 4). Two families:
+//! under a declared `K_t` parameterization (paper Eq. 4). The trait's
+//! load-bearing clause is the **row-independence contract** on
+//! [`ScoreModel::eps_batch`]: each output row may depend only on its own
+//! input row and `t`, which is what lets the cross-key score scheduler
+//! ([`crate::engine::scheduler`]) concatenate shards from different
+//! requests into one call and slice the result back bit-identically.
+//!
+//! Three backends:
 //!
 //! * [`oracle::GmmOracle`] — the *exact* score of a Gaussian-mixture data
 //!   distribution pushed through the forward SDE (closed form). This is
 //!   what validates Props 1–7 and runs every sampler comparison free of
 //!   training error.
-//! * `runtime::net::NetScore` (behind the `pjrt` cargo feature) — a
-//!   JAX/Pallas-trained network AOT-compiled to HLO, executed via PJRT.
+//! * [`net::ScoreNet`] — the **learned** backend: a std-only float64
+//!   replay of the MLP that `python/compile/train.py` trains, loaded
+//!   from the `.gdw` artifact in a [`crate::runtime::manifest`]
+//!   directory and verified against its frozen probe. [`registry`]
+//!   memoizes one shared session per entry.
+//! * `runtime::net::NetScore` (behind the `pjrt` cargo feature) — the
+//!   same trained models executed from HLO text via PJRT, for parity
+//!   checks against the native forward.
+//!
+//! [`counting::Counting`] wraps any of them to meter evaluations in
+//! tests and benches.
 
 pub mod counting;
+pub mod net;
 pub mod oracle;
 pub mod model;
+pub mod registry;
 
 pub use counting::Counting;
 pub use model::ScoreModel;
+pub use net::ScoreNet;
 pub use oracle::GmmOracle;
+pub use registry::ModelRegistry;

@@ -1,0 +1,486 @@
+//! Pure-Rust learned-score forward: the serving side of
+//! `python/compile/model.py::score_eps`.
+//!
+//! [`ScoreNet`] loads the `.gdw` raw-weight artifact that
+//! `python/compile/weights.py` exports next to each HLO file and replays
+//! the network in float64 with **zero native deps** — no PJRT, no BLAS.
+//! Architecture (must mirror the python forward op-for-op):
+//!
+//! ```text
+//!   emb  = silu(lin₁(silu(lin₀(time_embed(t)))))        (t-only)
+//!   ss_i = film_i(emb), (scale_i, shift_i) = split(ss_i) (t-only)
+//!   h    = silu(stem(u))                                 (per row)
+//!   h   += silu(block_i(h·(1+scale_i) + shift_i))        (per row, ×blocks)
+//!   ε    = head(h)
+//! ```
+//!
+//! with `time_embed(t) = [sin(t·f), cos(t·f)]`,
+//! `f_k = 2π / 100^(k/max(half−1,1))`, and
+//! `silu(y) = y·(1/(1+e^{−y}))` — the exact expression both layers pin.
+//!
+//! Numerics contract: every matmul is the k-outer [`simd::axpy`] loop
+//! over contiguous `(fan_in, fan_out)` weight rows, so (a) accumulation
+//! order is fixed ascending-k (bit-reproducible across batch sizes and
+//! worker counts), and (b) each output row of [`ScoreModel::eps_batch`]
+//! depends only on its own input row and `t` — the row-independence the
+//! cross-key score scheduler requires. The t-only context (embedding +
+//! FiLM pairs) is hoisted out of the row loop; it is identical however
+//! many rows share the call, so pooled and direct evaluation agree
+//! bit-for-bit. Loading replays the manifest probe and rejects nets
+//! whose `(probe_t, probe_u_row0)` forward strays ≥ 1e-6 from the
+//! recorded float64 reference (see `compile/weights.py` for why 1e-6 is
+//! safe: the reference is the float64 forward of the same f32 weights,
+//! which this module reproduces to ~1e-12).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::diffusion::process::KtKind;
+use crate::math::simd;
+use crate::runtime::manifest::ModelEntry;
+use crate::score::model::ScoreModel;
+use crate::util::io::read_capped;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Size cap on `.gdw` weight files (64 MiB ≈ 16M f32 parameters — two
+/// orders of magnitude above the MLPs `python/compile` trains).
+pub const WEIGHTS_CAP_BYTES: u64 = 64 << 20;
+
+/// Gate on the load-time probe replay (see module docs).
+pub const PROBE_TOL: f64 = 1e-6;
+
+/// A dense layer with weights stored row-major `(fan_in, fan_out)`,
+/// exactly as trained (no transpose on load, no transpose at run time).
+struct Linear {
+    fan_in: usize,
+    fan_out: usize,
+    w: Vec<f64>,
+    b: Vec<f64>,
+}
+
+impl Linear {
+    /// `out = x·W + b` via the k-outer axpy over contiguous weight rows.
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.fan_in);
+        out.copy_from_slice(&self.b);
+        for (k, &xk) in x.iter().enumerate() {
+            simd::axpy(xk, &self.w[k * self.fan_out..(k + 1) * self.fan_out], out);
+        }
+    }
+}
+
+fn silu_inplace(y: &mut [f64]) {
+    for v in y.iter_mut() {
+        *v *= 1.0 / (1.0 + (-*v).exp());
+    }
+}
+
+/// A loaded learned-score network (see module docs for the contract).
+pub struct ScoreNet {
+    name: String,
+    kt: KtKind,
+    dim: usize,
+    hidden: usize,
+    emb_half: usize,
+    emb0: Linear,
+    emb1: Linear,
+    stem: Linear,
+    films: Vec<Linear>,
+    blocks: Vec<Linear>,
+    head: Linear,
+    /// ε evaluations served (a batch counts once per row) and
+    /// `eps_batch` invocations (once per call): `calls / batch_calls`
+    /// is the realized batch fill, same accounting as [`super::GmmOracle`].
+    pub calls: AtomicU64,
+    pub batch_calls: AtomicU64,
+}
+
+impl ScoreNet {
+    /// Load the entry's `.gdw` weights (size-capped) and verify its
+    /// frozen probe within [`PROBE_TOL`].
+    pub fn load(entry: &ModelEntry) -> Result<ScoreNet> {
+        let path = entry.weights.as_ref().ok_or_else(|| {
+            Error::msg(format!("model {}: no `weights` file (PJRT-only entry)", entry.name))
+        })?;
+        let raw = read_capped(path, WEIGHTS_CAP_BYTES)?;
+        let net = Self::from_gdw(&raw, entry)?;
+        let err = net.probe_error(entry);
+        if !(err < PROBE_TOL) {
+            return Err(Error::msg(format!(
+                "model {}: probe replay off by {err:.3e} (gate {PROBE_TOL:.0e}) — \
+                 weights do not match the manifest probe",
+                entry.name
+            )));
+        }
+        Ok(net)
+    }
+
+    /// Parse `.gdw` bytes: one line of compact JSON, then little-endian
+    /// f32 tensor data in exactly the header's declared order.
+    fn from_gdw(raw: &[u8], entry: &ModelEntry) -> Result<ScoreNet> {
+        let ctx = |m: String| Error::msg(format!("model {}: {m}", entry.name));
+        let nl = raw
+            .iter()
+            .position(|&b| b == b'\n')
+            .ok_or_else(|| ctx("gdw header: no newline".into()))?;
+        let header_text = std::str::from_utf8(&raw[..nl])
+            .map_err(|e| ctx(format!("gdw header not UTF-8: {e}")))?;
+        let h = Json::parse(header_text).map_err(|e| ctx(format!("gdw header parse: {e}")))?;
+        let str_field = |k: &str| {
+            h.get(k)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| ctx(format!("gdw header missing {k}")))
+        };
+        let dim_field = |k: &str| {
+            h.get(k)
+                .and_then(|v| v.as_usize())
+                .filter(|&v| v > 0)
+                .ok_or_else(|| ctx(format!("gdw header missing/zero {k}")))
+        };
+        if str_field("magic")? != "gddim-weights" {
+            return Err(ctx("bad gdw magic".into()));
+        }
+        let version = h.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != 1 {
+            return Err(ctx(format!("unsupported gdw version {version}")));
+        }
+        if str_field("dtype")? != "f32" || str_field("order")? != "row-major" {
+            return Err(ctx("gdw dtype/order must be f32 row-major".into()));
+        }
+        let (dim, hidden) = (dim_field("dim")?, dim_field("hidden")?);
+        let (blocks, emb_half) = (dim_field("blocks")?, dim_field("emb_half")?);
+        for (k, want, got) in [
+            ("dim_u", entry.dim_u, dim),
+            ("hidden", entry.hidden, hidden),
+            ("blocks", entry.blocks, blocks),
+            ("emb_half", entry.emb_half, emb_half),
+        ] {
+            if want != got {
+                return Err(ctx(format!("gdw {k}={got} but manifest says {want}")));
+            }
+        }
+
+        // Canonical tensor order with the expected (fan_in, fan_out) per
+        // layer — must match python's `weights.tensor_names`.
+        let mut expect: Vec<(String, usize, usize)> =
+            vec![("emb0".into(), 2 * emb_half, hidden), ("emb1".into(), hidden, hidden)];
+        expect.push(("stem".into(), dim, hidden));
+        for i in 0..blocks {
+            expect.push((format!("film{i}"), hidden, 2 * hidden));
+            expect.push((format!("block{i}"), hidden, hidden));
+        }
+        expect.push(("head".into(), hidden, dim));
+
+        let tensors = h
+            .get("tensors")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| ctx("gdw header missing tensors".into()))?;
+        if tensors.len() != 2 * expect.len() {
+            return Err(ctx(format!(
+                "gdw declares {} tensors, expected {}",
+                tensors.len(),
+                2 * expect.len()
+            )));
+        }
+
+        let mut data = &raw[nl + 1..];
+        let mut take = |count: usize, what: &str| -> Result<Vec<f64>> {
+            let bytes = count * 4;
+            if data.len() < bytes {
+                return Err(ctx(format!("gdw truncated reading {what}")));
+            }
+            let (head, rest) = data.split_at(bytes);
+            data = rest;
+            Ok(head
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64)
+                .collect())
+        };
+        let mut layers = Vec::with_capacity(expect.len());
+        for (i, (name, fan_in, fan_out)) in expect.iter().enumerate() {
+            for (suffix, shape) in
+                [("_w", vec![*fan_in, *fan_out]), ("_b", vec![*fan_out])]
+            {
+                let t = &tensors[2 * i + usize::from(suffix == "_b")];
+                let tname = t.get("name").and_then(|v| v.as_str()).unwrap_or("");
+                let tshape: Vec<usize> = t
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default();
+                if tname != format!("{name}{suffix}") || tshape != shape {
+                    return Err(ctx(format!(
+                        "gdw tensor {} is {tname}{tshape:?}, expected {name}{suffix}{shape:?}",
+                        2 * i + usize::from(suffix == "_b")
+                    )));
+                }
+            }
+            let w = take(fan_in * fan_out, name)?;
+            let b = take(*fan_out, name)?;
+            layers.push(Linear { fan_in: *fan_in, fan_out: *fan_out, w, b });
+        }
+        if !data.is_empty() {
+            return Err(ctx(format!("{} trailing bytes after the last tensor", data.len())));
+        }
+
+        let mut it = layers.into_iter();
+        let (emb0, emb1, stem) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+        let mut films = Vec::with_capacity(blocks);
+        let mut blks = Vec::with_capacity(blocks);
+        for _ in 0..blocks {
+            films.push(it.next().unwrap());
+            blks.push(it.next().unwrap());
+        }
+        let head = it.next().unwrap();
+
+        Ok(ScoreNet {
+            name: entry.name.clone(),
+            kt: entry.kt,
+            dim,
+            hidden,
+            emb_half,
+            emb0,
+            emb1,
+            stem,
+            films,
+            blocks: blks,
+            head,
+            calls: AtomicU64::new(0),
+            batch_calls: AtomicU64::new(0),
+        })
+    }
+
+    /// `[sin(t·f), cos(t·f)]` with `f_k = 2π/100^(k/max(half−1,1))`.
+    fn time_embed(&self, t: f64, out: &mut [f64]) {
+        let half = self.emb_half;
+        let denom = half.saturating_sub(1).max(1) as f64;
+        for k in 0..half {
+            let freq = (2.0 * std::f64::consts::PI) / 100f64.powf(k as f64 / denom);
+            let phase = t * freq;
+            out[k] = phase.sin();
+            out[half + k] = phase.cos();
+        }
+    }
+
+    /// The t-only context: the per-block (scale‖shift) FiLM vectors.
+    fn t_context(&self, t: f64) -> Vec<Vec<f64>> {
+        let mut tbuf = vec![0.0; 2 * self.emb_half];
+        self.time_embed(t, &mut tbuf);
+        let mut emb = vec![0.0; self.hidden];
+        self.emb0.apply(&tbuf, &mut emb);
+        silu_inplace(&mut emb);
+        let mut emb2 = vec![0.0; self.hidden];
+        self.emb1.apply(&emb, &mut emb2);
+        silu_inplace(&mut emb2);
+        self.films
+            .iter()
+            .map(|f| {
+                let mut ss = vec![0.0; 2 * self.hidden];
+                f.apply(&emb2, &mut ss);
+                ss
+            })
+            .collect()
+    }
+
+    /// Max-abs deviation replaying the manifest's frozen probe row.
+    pub fn probe_error(&self, entry: &ModelEntry) -> f64 {
+        let eps = self.eps(entry.probe_t, &entry.probe_u_row0);
+        eps.iter()
+            .zip(&entry.probe_eps_row0)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl ScoreModel for ScoreNet {
+    fn dim_u(&self) -> usize {
+        self.dim
+    }
+
+    fn kt_kind(&self) -> KtKind {
+        self.kt
+    }
+
+    fn eps_batch(&self, t: f64, us: &[f64], out: &mut [f64]) {
+        let d = self.dim;
+        assert_eq!(us.len() % d, 0, "us not a multiple of dim_u");
+        assert_eq!(us.len(), out.len());
+        let films = self.t_context(t);
+        let mut h = vec![0.0; self.hidden];
+        let mut g = vec![0.0; self.hidden];
+        let mut hb = vec![0.0; self.hidden];
+        for (u_row, out_row) in us.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+            self.stem.apply(u_row, &mut h);
+            silu_inplace(&mut h);
+            for (ss, blk) in films.iter().zip(&self.blocks) {
+                let (scale, shift) = ss.split_at(self.hidden);
+                for j in 0..self.hidden {
+                    g[j] = h[j] * (1.0 + scale[j]) + shift[j];
+                }
+                blk.apply(&g, &mut hb);
+                silu_inplace(&mut hb);
+                // h += silu(block(g)) — the residual add, via the same
+                // simd kernel (1.0·x + y is exact).
+                simd::axpy(1.0, &hb, &mut h);
+            }
+            self.head.apply(&h, out_row);
+        }
+        self.calls.fetch_add((us.len() / d) as u64, Ordering::Relaxed);
+        self.batch_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "score-net({}, dim={}, hidden={}, blocks={}, kt={})",
+            self.name,
+            self.dim,
+            self.hidden,
+            self.blocks.len(),
+            self.kt.token()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    /// Build `.gdw` bytes for a net whose every parameter is `fill(i)`
+    /// over the flat canonical parameter index (matches the python
+    /// writer's layout byte-for-byte by construction).
+    fn gdw_bytes(
+        dim: usize,
+        hidden: usize,
+        blocks: usize,
+        emb_half: usize,
+        fill: impl Fn(usize) -> f32,
+    ) -> Vec<u8> {
+        let mut names: Vec<(String, Vec<usize>)> = vec![
+            ("emb0_w".into(), vec![2 * emb_half, hidden]),
+            ("emb0_b".into(), vec![hidden]),
+            ("emb1_w".into(), vec![hidden, hidden]),
+            ("emb1_b".into(), vec![hidden]),
+            ("stem_w".into(), vec![dim, hidden]),
+            ("stem_b".into(), vec![hidden]),
+        ];
+        for i in 0..blocks {
+            names.push((format!("film{i}_w"), vec![hidden, 2 * hidden]));
+            names.push((format!("film{i}_b"), vec![2 * hidden]));
+            names.push((format!("block{i}_w"), vec![hidden, hidden]));
+            names.push((format!("block{i}_b"), vec![hidden]));
+        }
+        names.push(("head_w".into(), vec![hidden, dim]));
+        names.push(("head_b".into(), vec![dim]));
+        let tensors = names
+            .iter()
+            .map(|(n, s)| {
+                let dims =
+                    s.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+                format!(r#"{{"name":"{n}","shape":[{dims}]}}"#)
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        let mut out = format!(
+            r#"{{"blocks":{blocks},"dim":{dim},"dtype":"f32","emb_half":{emb_half},"hidden":{hidden},"magic":"gddim-weights","order":"row-major","tensors":[{tensors}],"version":1}}"#
+        )
+        .into_bytes();
+        out.push(b'\n');
+        let mut idx = 0usize;
+        for (_, shape) in &names {
+            for _ in 0..shape.iter().product::<usize>() {
+                out.extend_from_slice(&fill(idx).to_le_bytes());
+                idx += 1;
+            }
+        }
+        out
+    }
+
+    fn entry(dim: usize, hidden: usize, blocks: usize, emb_half: usize) -> ModelEntry {
+        ModelEntry {
+            name: "t".into(),
+            file: None,
+            weights: Some(PathBuf::from("unused.gdw")),
+            process: "vpsde".into(),
+            dataset: "gmm2d".into(),
+            kt: KtKind::R,
+            dim_u: dim,
+            batch: 8,
+            hidden,
+            blocks,
+            emb_half,
+            final_loss: None,
+            probe_t: 0.5,
+            probe_u_row0: vec![0.0; dim],
+            probe_eps_row0: vec![0.0; dim],
+            probe_seed: 0,
+        }
+    }
+
+    #[test]
+    fn zero_weights_give_zero_eps() {
+        let raw = gdw_bytes(2, 4, 1, 3, |_| 0.0);
+        let net = ScoreNet::from_gdw(&raw, &entry(2, 4, 1, 3)).unwrap();
+        assert_eq!(net.eps(0.3, &[1.0, -2.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn hand_computed_forward_matches() {
+        // dim=1, hidden=1, blocks=1, emb_half=1, all params = 0.1: small
+        // enough to replay the whole architecture by hand.
+        let raw = gdw_bytes(1, 1, 1, 1, |_| 0.1);
+        let net = ScoreNet::from_gdw(&raw, &entry(1, 1, 1, 1)).unwrap();
+        let silu = |y: f64| y * (1.0 / (1.0 + (-y).exp()));
+        let w = 0.1f32 as f64;
+        let (t, u) = (0.3, 0.7);
+        let tau = std::f64::consts::TAU;
+        let emb = silu((t * tau).sin() * w + (t * tau).cos() * w + w);
+        let emb = silu(emb * w + w);
+        let (scale, shift) = (emb * w + w, emb * w + w);
+        let mut h = silu(u * w + w);
+        h += silu((h * (1.0 + scale) + shift) * w + w);
+        let expected = h * w + w;
+        let got = net.eps(t, &[u])[0];
+        assert!((got - expected).abs() < 1e-15, "{got} vs {expected}");
+    }
+
+    #[test]
+    fn eps_batch_is_bit_identical_to_row_by_row() {
+        let raw = gdw_bytes(3, 8, 2, 4, |i| ((i % 17) as f32 - 8.0) * 0.037);
+        let net = ScoreNet::from_gdw(&raw, &entry(3, 8, 2, 4)).unwrap();
+        for n in [1usize, 3, 33] {
+            let us: Vec<f64> = (0..n * 3).map(|i| ((i * 7919) % 23) as f64 * 0.11 - 1.2).collect();
+            let mut pooled = vec![0.0; n * 3];
+            net.eps_batch(0.42, &us, &mut pooled);
+            for r in 0..n {
+                let one = net.eps(0.42, &us[r * 3..(r + 1) * 3]);
+                assert_eq!(
+                    one.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    pooled[r * 3..(r + 1) * 3].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "row {r} of n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_gdw_is_rejected_with_context() {
+        let e = entry(2, 4, 1, 3);
+        let good = gdw_bytes(2, 4, 1, 3, |_| 0.0);
+        // No newline / bad magic / truncated data / trailing bytes /
+        // manifest-header mismatch — each must fail naming the model.
+        for (raw, what) in [
+            (b"not json at all".to_vec(), "no newline"),
+            (good[..good.len() - 2].to_vec(), "truncated"),
+            ([good.clone(), vec![0u8; 4]].concat(), "trailing"),
+        ] {
+            let err = ScoreNet::from_gdw(&raw, &e).unwrap_err().to_string();
+            assert!(err.contains("model t"), "{what}: {err}");
+        }
+        let bad_magic = gdw_bytes(2, 4, 1, 3, |_| 0.0);
+        let bad_magic = String::from_utf8(bad_magic).unwrap().replace("gddim-weights", "nope");
+        assert!(ScoreNet::from_gdw(bad_magic.as_bytes(), &e).is_err());
+        let err = ScoreNet::from_gdw(&good, &entry(3, 4, 1, 3)).unwrap_err().to_string();
+        assert!(err.contains("manifest says 3"), "{err}");
+    }
+}

@@ -1,0 +1,98 @@
+//! Lazy, shared learned-model sessions over an artifact directory.
+//!
+//! [`ModelRegistry`] owns a validated [`Manifest`] and memoizes one
+//! [`ScoreNet`] per entry behind a `Mutex<HashMap>`: models load on
+//! first use (startup cost is one manifest parse, not N weight reads)
+//! and every caller gets the **same** `Arc` — so all `PlanKey`s routed
+//! to one model share a session, and the cross-key score scheduler's
+//! same-model pooling (which groups shards by `Arc` pointer identity)
+//! works for learned models exactly as it does for oracles.
+//!
+//! Loading is where the probe gate lives: [`ScoreNet::load`] replays the
+//! manifest's frozen `(probe_t, probe_u_row0) → probe_eps_row0` row and
+//! refuses weights that drift ≥ 1e-6 from the float64 reference, so a
+//! registry never hands out a net that disagrees with its manifest.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::diffusion::process::KtKind;
+use crate::runtime::manifest::{Manifest, ModelEntry};
+use crate::score::net::ScoreNet;
+use crate::util::sync::lock_unpoisoned;
+use crate::{Error, Result};
+
+pub struct ModelRegistry {
+    manifest: Manifest,
+    loaded: Mutex<HashMap<String, Arc<ScoreNet>>>,
+}
+
+impl ModelRegistry {
+    /// Parse + validate `dir/manifest.json` (no weights are read yet).
+    pub fn open(dir: impl AsRef<Path>) -> Result<ModelRegistry> {
+        Ok(ModelRegistry { manifest: Manifest::load(dir)?, loaded: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The manifest entry that can serve `(process, dataset, K_t)`
+    /// natively (i.e. has a `.gdw` weights artifact), if any.
+    pub fn find(&self, process: &str, dataset: &str, kt: KtKind) -> Option<&ModelEntry> {
+        self.manifest.models.iter().find(|m| {
+            m.weights.is_some() && m.process == process && m.dataset == dataset && m.kt == kt
+        })
+    }
+
+    /// Load (or reuse) the named model. Every call returns the same
+    /// shared `Arc` — see the module docs for why that matters.
+    pub fn get(&self, name: &str) -> Result<Arc<ScoreNet>> {
+        let entry = self.manifest.get(name).ok_or_else(|| {
+            Error::msg(format!("no model {name} in {}", self.manifest.dir.display()))
+        })?;
+        let mut loaded = lock_unpoisoned(&self.loaded);
+        if let Some(net) = loaded.get(name) {
+            return Ok(net.clone());
+        }
+        let net = Arc::new(ScoreNet::load(entry)?);
+        loaded.insert(name.to_string(), net.clone());
+        Ok(net)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::model::ScoreModel;
+
+    fn fixture() -> ModelRegistry {
+        ModelRegistry::open(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/learned")).unwrap()
+    }
+
+    #[test]
+    fn sessions_are_shared_arcs() {
+        let reg = fixture();
+        let a = reg.get("tiny_vpsde_gmm2d").unwrap();
+        let b = reg.get("tiny_vpsde_gmm2d").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "repeat get() must reuse the loaded session");
+        assert_eq!(a.dim_u(), 2);
+    }
+
+    #[test]
+    fn find_routes_by_process_dataset_kt() {
+        let reg = fixture();
+        let e = reg.find("cld", "gmm2d", KtKind::R).expect("cld fixture entry");
+        assert_eq!(e.name, "tiny_cld_gmm2d");
+        assert_eq!(e.dim_u, 4);
+        assert!(reg.find("cld", "gmm2d", KtKind::L).is_none());
+        assert!(reg.find("bdm", "gmm2d", KtKind::R).is_none());
+    }
+
+    #[test]
+    fn unknown_model_errors_with_directory() {
+        let err = fixture().get("nope").unwrap_err().to_string();
+        assert!(err.contains("no model nope"), "{err}");
+    }
+}

@@ -7,7 +7,7 @@ use std::time::Duration;
 use crate::engine::{Engine, EngineConfig};
 use crate::server::batcher::BatcherConfig;
 use crate::server::request::GenRequest;
-use crate::server::router::{oracle_factory, Router, RouterConfig};
+use crate::server::router::{factory_for, Router, RouterConfig};
 use crate::util::cli::Args;
 use crate::workload::{cli_key_mix, ClosedLoop, WorkloadSpec};
 
@@ -42,6 +42,17 @@ pub fn run(args: &Args) {
     // realized fill (`rows/call`) and cross-key coalescing counters.
     let score_batch = args.get_usize("score-batch", 4096);
     let score_wait = Duration::from_micros(args.get_u64("score-wait", 200));
+    // `--models-dir DIR`: serve manifest-matching keys with the learned
+    // ScoreNet backend; everything else falls back to the oracle.
+    let models_dir = args.get("models-dir").map(std::path::PathBuf::from);
+    let factory = match factory_for(models_dir.as_deref()) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: --models-dir: {e}");
+            // gddim-lint: allow(no-process-exit) — CLI entry point: a bad artifacts directory exits with status 2 before the router starts
+            std::process::exit(2);
+        }
+    };
     let router = Router::with_options(
         RouterConfig {
             dispatchers,
@@ -59,7 +70,7 @@ pub fn run(args: &Args) {
             max_batch: args.get_usize("max-batch", 4096),
             max_wait: Duration::from_millis(max_wait_ms),
         },
-        oracle_factory(),
+        factory,
     );
 
     let spec = WorkloadSpec {

@@ -491,16 +491,27 @@ fn write_line(writer: &Mutex<TcpStream>, line: &str) {
 /// `gddim serve --listen ADDR`: bind the edge over an oracle-backed
 /// router (same construction knobs as the in-process demo) and serve
 /// until `--duration-secs` elapses (0 = forever), reporting every
-/// `--report-secs`.
+/// `--report-secs`. With `--models-dir DIR`, keys matching the
+/// directory's manifest are served by the pure-Rust learned-score
+/// backend (others still fall back to the oracle).
 pub fn run_cli(args: &Args) {
     use crate::engine::{Engine, EngineConfig};
     use crate::server::batcher::BatcherConfig;
-    use crate::server::router::{oracle_factory, RouterConfig};
+    use crate::server::router::{factory_for, RouterConfig};
 
     let Some(addr) = args.get("listen") else {
         eprintln!("error: serve --listen needs an address (e.g. 127.0.0.1:7878)");
         // gddim-lint: allow(no-process-exit) — CLI entry point: usage errors exit with status 2 before any server state exists
         std::process::exit(2);
+    };
+    let models_dir = args.get("models-dir").map(std::path::PathBuf::from);
+    let factory = match factory_for(models_dir.as_deref()) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: --models-dir: {e}");
+            // gddim-lint: allow(no-process-exit) — CLI entry point: a bad artifacts directory exits with status 2 before any server state exists
+            std::process::exit(2);
+        }
     };
     let router = Router::with_options(
         RouterConfig {
@@ -519,7 +530,7 @@ pub fn run_cli(args: &Args) {
             max_batch: args.get_usize("max-batch", 4096),
             max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 5)),
         },
-        oracle_factory(),
+        factory,
     );
     let cfg = NetConfig {
         conn_threads: args.get_usize("conn-threads", 8),

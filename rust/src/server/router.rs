@@ -112,6 +112,61 @@ pub fn oracle_factory() -> Box<PreparedFactory> {
     })
 }
 
+/// Learned-score factory: keys whose `(process, dataset, K_t)` matches a
+/// manifest entry with a `.gdw` artifact are served by the pure-Rust
+/// [`crate::score::ScoreNet`]; everything else falls back to
+/// [`oracle_factory`] — one `--models-dir` flag upgrades matching
+/// traffic to learned scores without shrinking the servable key space.
+///
+/// The manifest is validated here (startup), each model loads lazily on
+/// its first key and is probe-gated by
+/// [`ScoreNet::load`](crate::score::ScoreNet::load); all keys matching
+/// one entry share a single session `Arc` via
+/// [`crate::score::ModelRegistry`], so the cross-key score scheduler
+/// pools their `eps_batch` traffic exactly as it does for shared
+/// oracles.
+pub fn learned_factory(models_dir: impl AsRef<Path>) -> crate::Result<Box<PreparedFactory>> {
+    let registry = crate::score::ModelRegistry::open(models_dir)?;
+    let fallback = oracle_factory();
+    Ok(Box::new(move |key: &PlanKey, preloaded: Option<Arc<SamplerPlan>>| {
+        let kt = key.spec.model_kt();
+        let Some(name) = registry.find(&key.process, &key.dataset, kt).map(|e| e.name.clone())
+        else {
+            return fallback(key, preloaded);
+        };
+        let model = registry.get(&name)?;
+        let info = presets::info(&key.dataset)
+            .ok_or_else(|| crate::Error::msg(format!("unknown dataset `{}`", key.dataset)))?;
+        let proc = crate::diffusion::process_for(&key.process, info)?;
+        if model.dim_u() != proc.dim_u() {
+            return Err(crate::Error::msg(format!(
+                "model {name} has dim_u={} but process {} needs {}",
+                model.dim_u(),
+                key.process,
+                proc.dim_u()
+            )));
+        }
+        let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), key.nfe);
+        let plan = match preloaded {
+            Some(p) if key.spec.matches_plan(&p) && p.n_steps() == key.nfe => Some(p),
+            _ => key
+                .spec
+                .plan_config()
+                .map(|cfg| Arc::new(SamplerPlan::build(proc.as_ref(), &grid, &cfg))),
+        };
+        Ok(Arc::new(Prepared { dim_x: proc.dim_x(), proc, model, plan, grid }))
+    }))
+}
+
+/// The factory the CLI surfaces pick: [`learned_factory`] when a models
+/// directory was given, plain [`oracle_factory`] otherwise.
+pub fn factory_for(models_dir: Option<&Path>) -> crate::Result<Box<PreparedFactory>> {
+    match models_dir {
+        Some(dir) => learned_factory(dir),
+        None => Ok(oracle_factory()),
+    }
+}
+
 /// Router-level knobs (the batcher has its own [`BatcherConfig`]).
 #[derive(Clone, Debug)]
 pub struct RouterConfig {
@@ -580,6 +635,24 @@ mod tests {
 
     fn key() -> PlanKey {
         PlanKey::gddim("vpsde", "gmm2d", 10, 2)
+    }
+
+    #[test]
+    fn learned_factory_routes_fixture_keys_and_falls_back() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/learned");
+        let factory = learned_factory(dir).unwrap();
+        // (vpsde, gmm2d, R) has a fixture entry → served by the ScoreNet.
+        let prep = factory(&key(), None).unwrap();
+        assert!(
+            prep.model.describe().starts_with("score-net(tiny_vpsde_gmm2d"),
+            "{}",
+            prep.model.describe()
+        );
+        // No fixture for blobs8 → transparent oracle fallback.
+        let prep = factory(&PlanKey::gddim("vpsde", "blobs8", 10, 2), None).unwrap();
+        assert!(!prep.model.describe().starts_with("score-net"), "{}", prep.model.describe());
+        // Missing manifest is a startup error, not a request-time one.
+        assert!(learned_factory("/nonexistent/gddim-models").is_err());
     }
 
     #[test]

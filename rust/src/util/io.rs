@@ -1,0 +1,84 @@
+//! Size-capped file reads for artifact ingestion.
+//!
+//! Every artifact the serving path reads from disk (manifest JSON,
+//! `.gdw` weight blobs, HLO text) goes through [`read_capped`] /
+//! [`read_string_capped`] so a corrupt or hostile file cannot balloon
+//! into an unbounded allocation — the same "no unbounded reads" policy
+//! `gddim lint`'s `bounded-io` rule enforces on the network edge, and
+//! the reason that rule also watches `score/` and `runtime/` for naked
+//! `fs::read*` calls (this module is the sanctioned replacement).
+//!
+//! The cap is checked against the file's metadata length *before* the
+//! allocation, then enforced again on the actual byte count via
+//! [`std::io::Read::take`] (metadata can lie on special files).
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+/// Read at most `cap` bytes from `path`; error (naming the path and the
+/// cap) if the file is larger, missing, or unreadable.
+pub fn read_capped(path: &Path, cap: u64) -> Result<Vec<u8>> {
+    let meta = std::fs::metadata(path)
+        .map_err(|e| Error::msg(format!("stat {}: {e}", path.display())))?;
+    if meta.len() > cap {
+        return Err(Error::msg(format!(
+            "{} is {} bytes, over the {cap}-byte cap",
+            path.display(),
+            meta.len()
+        )));
+    }
+    let f = std::fs::File::open(path)
+        .map_err(|e| Error::msg(format!("open {}: {e}", path.display())))?;
+    let mut buf = Vec::with_capacity(meta.len() as usize);
+    // gddim-lint: allow(bounded-io) — the read is capped by `take` right here.
+    f.take(cap + 1).read_to_end(&mut buf).map_err(|e| {
+        Error::msg(format!("read {}: {e}", path.display()))
+    })?;
+    if buf.len() as u64 > cap {
+        return Err(Error::msg(format!("{} grew past the {cap}-byte cap", path.display())));
+    }
+    Ok(buf)
+}
+
+/// [`read_capped`], then UTF-8 decode.
+pub fn read_string_capped(path: &Path, cap: u64) -> Result<String> {
+    String::from_utf8(read_capped(path, cap)?)
+        .map_err(|e| Error::msg(format!("{}: not UTF-8: {e}", path.display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("gddim_io_{name}_{}", std::process::id()));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn reads_within_cap() {
+        let p = tmp("ok", b"hello");
+        assert_eq!(read_capped(&p, 16).unwrap(), b"hello");
+        assert_eq!(read_string_capped(&p, 5).unwrap(), "hello");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn rejects_over_cap_and_missing() {
+        let p = tmp("big", &[0u8; 64]);
+        let err = read_capped(&p, 63).unwrap_err().to_string();
+        assert!(err.contains("64 bytes") && err.contains("63-byte cap"), "{err}");
+        std::fs::remove_file(&p).unwrap();
+        assert!(read_capped(Path::new("/nonexistent/gddim"), 8).is_err());
+    }
+
+    #[test]
+    fn rejects_non_utf8() {
+        let p = tmp("bin", &[0xff, 0xfe, 0x00]);
+        assert!(read_string_capped(&p, 16).unwrap_err().to_string().contains("not UTF-8"));
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,12 +1,13 @@
 //! Non-numerical utilities: JSON (for the artifact manifest and dataset
 //! configs shared with the python layer), a tiny CLI argument parser,
 //! the benchmark timing harness (the offline build has no criterion),
-//! and the poison-proof lock/condvar helpers shared by every concurrent
-//! layer (engine, scheduler, runtime, server).
+//! size-capped artifact reads, and the poison-proof lock/condvar helpers
+//! shared by every concurrent layer (engine, scheduler, runtime, server).
 
 pub mod json;
 pub mod cli;
 pub mod bench;
+pub mod io;
 pub mod sync;
 
 pub use sync::{

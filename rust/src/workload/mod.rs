@@ -311,12 +311,22 @@ pub fn open_loop_probe(
     spec: WorkloadSpec,
     poisson: bool,
 ) -> (OpenLoopReport, crate::server::metrics::MetricsReport) {
-    let router = Router::with_options(
-        rcfg,
-        Engine::with_config(ecfg),
-        bcfg,
-        crate::server::router::oracle_factory(),
-    );
+    open_loop_probe_with(rcfg, ecfg, bcfg, spec, poisson, crate::server::router::oracle_factory())
+}
+
+/// [`open_loop_probe`] with an explicit
+/// [`PreparedFactory`](crate::server::router::PreparedFactory) — how the
+/// learned-model benches and `gddim workload --models-dir` route traffic
+/// to [`crate::score::ScoreNet`] backends instead of the oracle.
+pub fn open_loop_probe_with(
+    rcfg: crate::server::router::RouterConfig,
+    ecfg: crate::engine::EngineConfig,
+    bcfg: crate::server::batcher::BatcherConfig,
+    spec: WorkloadSpec,
+    poisson: bool,
+    factory: Box<crate::server::router::PreparedFactory>,
+) -> (OpenLoopReport, crate::server::metrics::MetricsReport) {
+    let router = Router::with_options(rcfg, Engine::with_config(ecfg), bcfg, factory);
     for key in &spec.keys {
         let rx = router.submit(GenRequest { id: u64::MAX, n: 1, key: key.clone(), seed: 0 });
         let _ = rx.recv_timeout(Duration::from_secs(60));
@@ -347,10 +357,36 @@ pub fn open_loop_tcp_probe(
     rcfg: crate::server::router::RouterConfig,
     ecfg: crate::engine::EngineConfig,
     bcfg: crate::server::batcher::BatcherConfig,
+    ncfg: crate::server::net::NetConfig,
+    conns: usize,
+    spec: WorkloadSpec,
+    poisson: bool,
+) -> (OpenLoopReport, crate::server::metrics::MetricsReport) {
+    open_loop_tcp_probe_with(
+        rcfg,
+        ecfg,
+        bcfg,
+        ncfg,
+        conns,
+        spec,
+        poisson,
+        crate::server::router::oracle_factory(),
+    )
+}
+
+/// [`open_loop_tcp_probe`] with an explicit
+/// [`PreparedFactory`](crate::server::router::PreparedFactory) (see
+/// [`open_loop_probe_with`]).
+#[allow(clippy::too_many_arguments)]
+pub fn open_loop_tcp_probe_with(
+    rcfg: crate::server::router::RouterConfig,
+    ecfg: crate::engine::EngineConfig,
+    bcfg: crate::server::batcher::BatcherConfig,
     mut ncfg: crate::server::net::NetConfig,
     conns: usize,
     spec: WorkloadSpec,
     poisson: bool,
+    factory: Box<crate::server::router::PreparedFactory>,
 ) -> (OpenLoopReport, crate::server::metrics::MetricsReport) {
     use crate::server::net::NetServer;
     use crate::server::wire::{WireRequest, WireResponse};
@@ -361,12 +397,7 @@ pub fn open_loop_tcp_probe(
     // The client connections are held for the whole run, so the pool
     // needs one thread per connection or the round-robin tail starves.
     ncfg.conn_threads = ncfg.conn_threads.max(conns);
-    let router = Router::with_options(
-        rcfg,
-        Engine::with_config(ecfg),
-        bcfg,
-        crate::server::router::oracle_factory(),
-    );
+    let router = Router::with_options(rcfg, Engine::with_config(ecfg), bcfg, factory);
     let server = NetServer::bind("127.0.0.1:0", ncfg, router).expect("bind loopback edge");
     let addr = server.local_addr();
 
@@ -573,6 +604,17 @@ pub fn run_cli(args: &crate::util::cli::Args) {
     let poisson = args.has("poisson");
     let samplers = args.get_or("samplers", "gddim:q=2");
     let dataset = args.get_or("dataset", "gmm2d");
+    // `--models-dir DIR`: route manifest-matching keys to the learned
+    // ScoreNet backend (validated once up front; per-rate probes each
+    // build their own factory over the same directory).
+    let models_dir = args.get("models-dir").map(std::path::PathBuf::from);
+    if let Some(dir) = &models_dir {
+        if let Err(e) = crate::server::router::factory_for(Some(dir)) {
+            eprintln!("error: --models-dir: {e}");
+            // gddim-lint: allow(no-process-exit) — CLI entry point: a bad artifacts directory exits with status 2 before any router exists
+            std::process::exit(2);
+        }
+    }
     let shard_bytes = args.get_usize("shard-size", EngineConfig::default().shard_bytes);
     // Cross-key score batching (the engine's scheduler): on by default
     // for the serving CLIs — `--score-batch 0` turns it off.
@@ -639,6 +681,8 @@ pub fn run_cli(args: &crate::util::cli::Args) {
             keys: keys.clone(),
             seed,
         };
+        let factory = crate::server::router::factory_for(models_dir.as_deref())
+            .expect("models dir validated before the sweep");
         let (report, metrics) = if tcp {
             let ncfg = crate::server::net::NetConfig {
                 max_inflight: args.get_usize("max-inflight", 256),
@@ -646,9 +690,9 @@ pub fn run_cli(args: &crate::util::cli::Args) {
                 slo_ms: slo_ms.max(1.0) as u64,
                 ..crate::server::net::NetConfig::default()
             };
-            open_loop_tcp_probe(rcfg, ecfg, bcfg, ncfg, conns, wspec, poisson)
+            open_loop_tcp_probe_with(rcfg, ecfg, bcfg, ncfg, conns, wspec, poisson, factory)
         } else {
-            open_loop_probe(rcfg, ecfg, bcfg, wspec, poisson)
+            open_loop_probe_with(rcfg, ecfg, bcfg, wspec, poisson, factory)
         };
         println!("{report}");
         println!("{metrics}");

@@ -1,0 +1,175 @@
+//! End-to-end suite for the pure-Rust learned-score backend
+//! (`cargo test --test learned_score`; CI also runs it under
+//! `GDDIM_TEST_WORKERS=4`).
+//!
+//! Everything runs against the committed tiny-model fixture under
+//! `tests/fixtures/learned/` (exported by `python -m compile.fixture`,
+//! so these tests are hermetic — no JAX in the loop):
+//!
+//! 1. probe parity — every manifest entry's frozen `(probe_t,
+//!    probe_u_row0) → probe_eps_row0` row replays through
+//!    [`ScoreNet::eps`] within the 1e-6 float64-reference gate;
+//! 2. `eps_batch` is bit-identical to row-by-row `eps` at n ∈ {1, 3, 33}
+//!    (the row-independence contract the score scheduler pools on);
+//! 3. the router serves learned `PlanKey`s end-to-end through
+//!    `learned_factory`, falling back to the oracle for keys the
+//!    manifest doesn't cover;
+//! 4. the TCP edge (`gddim serve --models-dir`) round-trips a learned
+//!    key over a real loopback socket.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use gddim::score::net::PROBE_TOL;
+use gddim::score::{ModelRegistry, ScoreModel};
+use gddim::server::batcher::BatcherConfig;
+use gddim::server::router::learned_factory;
+use gddim::server::wire::{WireRequest, WireResponse};
+use gddim::server::{GenRequest, NetConfig, NetServer, PlanKey, Router};
+
+const FIXTURE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/learned");
+
+fn registry() -> ModelRegistry {
+    ModelRegistry::open(FIXTURE).expect("committed fixture manifest loads")
+}
+
+/// Deterministic but non-trivial state rows (no RNG: the values only
+/// need to be fixed and finite, and cover sign changes / magnitudes).
+fn probe_rows(n: usize, d: usize) -> Vec<f64> {
+    (0..n * d).map(|i| ((i as f64) * 0.37 + 0.11).sin() * 2.5).collect()
+}
+
+#[test]
+fn every_fixture_entry_replays_its_probe_within_tolerance() {
+    let reg = registry();
+    assert_eq!(reg.manifest().models.len(), 2, "fixture ships two tiny models");
+    for entry in &reg.manifest().models {
+        let net = reg.get(&entry.name).expect("fixture weights load");
+        // `ScoreNet::load` already gates on this; re-assert explicitly so
+        // a loosened gate can't silently pass the suite.
+        let err = net.probe_error(entry);
+        assert!(err < PROBE_TOL, "{}: probe error {err:.3e} ≥ {PROBE_TOL:.0e}", entry.name);
+        let eps = net.eps(entry.probe_t, &entry.probe_u_row0);
+        assert_eq!(eps.len(), entry.dim_u, "{}: probe output shape", entry.name);
+        for (k, (got, want)) in eps.iter().zip(&entry.probe_eps_row0).enumerate() {
+            assert!(
+                (got - want).abs() < PROBE_TOL,
+                "{}: probe component {k}: got {got}, manifest says {want}",
+                entry.name
+            );
+        }
+    }
+}
+
+#[test]
+fn eps_batch_is_bit_identical_to_row_by_row_eps() {
+    let reg = registry();
+    for entry in &reg.manifest().models {
+        let net = reg.get(&entry.name).unwrap();
+        let d = net.dim_u();
+        for n in [1usize, 3, 33] {
+            let us = probe_rows(n, d);
+            let mut pooled = vec![0.0; n * d];
+            net.eps_batch(entry.probe_t, &us, &mut pooled);
+            for row in 0..n {
+                let single = net.eps(entry.probe_t, &us[row * d..(row + 1) * d]);
+                for k in 0..d {
+                    assert_eq!(
+                        pooled[row * d + k].to_bits(),
+                        single[k].to_bits(),
+                        "{}: n={n} row {row} component {k} not bit-identical",
+                        entry.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn router_serves_learned_keys_and_falls_back_for_uncovered_ones() {
+    let factory = learned_factory(FIXTURE).expect("fixture factory");
+    let router = Router::new(2, BatcherConfig::default(), factory);
+    // Both fixture processes (vpsde dim_u=2, cld dim_u=4) route to the
+    // learned backend; gmm2d is a 2-D dataset so x-space stays 2 wide.
+    for (id, process) in [(0u64, "vpsde"), (1, "cld")] {
+        let key = PlanKey::gddim(process, "gmm2d", 8, 2);
+        let rx = router.submit(GenRequest { id, n: 8, key, seed: 42 + id });
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.error.is_none(), "{process} learned key rejected: {:?}", resp.error);
+        assert_eq!(resp.xs.len(), 8 * 2, "{process}: sample shape");
+        assert!(resp.xs.iter().all(|x| x.is_finite()), "{process}: non-finite samples");
+        assert!(resp.nfe > 0, "{process}: NFE not reported");
+    }
+    // blobs8 has no manifest entry: the factory must fall back to the
+    // oracle instead of rejecting, so --models-dir never shrinks the
+    // servable key space.
+    let key = PlanKey::gddim("vpsde", "blobs8", 6, 2);
+    let rx = router.submit(GenRequest { id: 9, n: 4, key, seed: 1 });
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    assert!(resp.error.is_none(), "uncovered key must fall back: {:?}", resp.error);
+    assert_eq!(resp.xs.len(), 4 * 64);
+    router.shutdown();
+}
+
+/// Same submissions, learned backend vs learned backend across router
+/// instances: the registry memoizes one session per model, and sampling
+/// is deterministic given (key, seed), so two routers over the same
+/// fixture must agree bit for bit.
+#[test]
+fn learned_serving_is_deterministic_across_router_instances() {
+    let sample = || {
+        let router =
+            Router::new(2, BatcherConfig::default(), learned_factory(FIXTURE).unwrap());
+        let key = PlanKey::gddim("cld", "gmm2d", 8, 2);
+        let rx = router.submit(GenRequest { id: 0, n: 16, key, seed: 7 });
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        router.shutdown();
+        resp.xs
+    };
+    let a = sample();
+    let b = sample();
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "sample {i} diverged across instances");
+    }
+}
+
+/// The `gddim serve --models-dir` acceptance path: a learned key served
+/// over a real loopback socket through `NetServer`, answered with finite
+/// samples of the right shape.
+#[test]
+fn tcp_edge_serves_a_learned_key() {
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        NetConfig::default(),
+        Router::new(2, BatcherConfig::default(), learned_factory(FIXTURE).unwrap()),
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let req =
+        WireRequest { id: 5, n: 12, seed: 99, key: PlanKey::gddim("vpsde", "gmm2d", 8, 2) };
+    conn.write_all(req.to_line().as_bytes()).unwrap();
+    let mut lines = BufReader::new(conn).lines();
+    let resp = loop {
+        let line = lines.next().expect("connection closed early").expect("socket read");
+        let resp = WireResponse::parse_line(&line).expect("server line must parse");
+        if !matches!(resp, WireResponse::Status { .. }) {
+            break resp;
+        }
+    };
+    match resp {
+        WireResponse::Result { id, xs, nfe, .. } => {
+            assert_eq!(id, 5);
+            assert_eq!(xs.len(), 12 * 2, "learned key over TCP: sample shape");
+            assert!(xs.iter().all(|x| x.is_finite()));
+            assert!(nfe > 0);
+        }
+        other => panic!("expected a result line, got {other:?}"),
+    }
+    server.shutdown();
+}

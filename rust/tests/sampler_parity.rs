@@ -12,7 +12,9 @@
 //!    sampler (the old suite only covered gDDIM + ancestral);
 //! 4. the cross-key score scheduler (`score_batch > 0`) is bit-identical
 //!    to the direct-call path for every sampler and worker count — the
-//!    pooled `eps_batch` frontier may regroup rows, never change them.
+//!    pooled `eps_batch` frontier may regroup rows, never change them —
+//!    and the same holds with the learned `ScoreNet` backend (loaded
+//!    from the committed fixture) in place of the oracle.
 //!
 //! Plus: the trait objects are Send/Sync (they cross pool threads), the
 //! router serves every `SamplerSpec` variant end-to-end on vpsde/blobs8
@@ -36,6 +38,7 @@ use gddim::samplers::{
     SampleOutput, SamplerSpec, Sscs,
 };
 use gddim::score::oracle::GmmOracle;
+use gddim::score::ScoreModel;
 use gddim::server::batcher::BatcherConfig;
 use gddim::server::request::{GenRequest, PlanKey};
 use gddim::server::router::{oracle_factory, Router};
@@ -336,6 +339,48 @@ fn score_scheduler_is_bit_identical_for_every_sampler_and_worker_count() {
                 &format!("{what} scheduler-on @ {workers} workers"),
             );
         }
+    }
+}
+
+/// The scheduler contract re-proved on the learned backend: a real
+/// `ScoreNet` forward (matmuls + FiLM from the committed tiny-model
+/// fixture, not a closed-form oracle) pooled through the cross-key
+/// frontier must produce the same bytes as the direct-call path for
+/// every worker count — exactly what the k-outer `axpy` layout in
+/// `score::net` exists to guarantee.
+#[test]
+fn score_scheduler_is_bit_identical_for_the_learned_backend() {
+    let reg = gddim::score::ModelRegistry::open(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/learned"
+    ))
+    .expect("committed fixture loads");
+    let net = reg.get("tiny_vpsde_gmm2d").unwrap();
+    let proc = Arc::new(gddim::diffusion::Vpsde::standard(net.dim_u()));
+    let grid = TimeGrid::uniform(proc.t_min(), proc.t_max(), 8);
+    let plan = SamplerPlan::build(proc.as_ref(), &grid, &PlanConfig::deterministic(2, KtKind::R));
+    let sampler = GddimDet { plan: &plan };
+    let run = |workers: usize, score_batch: usize| {
+        Engine::with_config(EngineConfig {
+            workers,
+            shard_size: 16,
+            score_batch,
+            score_wait: Duration::from_millis(50),
+            ..EngineConfig::default()
+        })
+        .run(&Job {
+            proc: proc.as_ref(),
+            model: net.as_ref(),
+            sampler: &sampler,
+            n: N, // 3 shards of 16
+            seed: SEED,
+        })
+    };
+    let reference = run(1, 0);
+    assert!(reference.xs.iter().all(|x| x.is_finite()), "learned backend: non-finite output");
+    for workers in [1usize, 2, 4] {
+        let pooled = run(workers, 4096);
+        assert_bytes_equal(&reference, &pooled, &format!("learned net @ {workers} workers"));
     }
 }
 
