@@ -287,10 +287,9 @@ fn tcp_edge(args: &Args, quick: bool) -> Vec<BenchScenario> {
 /// oracle — the fill-ratio and pooling numbers this row records are the
 /// honest ones for network-shaped score cost. Two keys (gDDIM q=1/q=2 on
 /// vpsde/gmm2d) share the one fixture model, so the scheduler's same-
-/// model pooling is on the measured path. Emitted as a **new-only**
-/// scenario: `benchdiff` reports scenarios absent from the committed
-/// baseline without failing, so this lands without touching
-/// `BENCH_serving.json` (the next trajectory refresh picks it up).
+/// model pooling is on the measured path. The scenario is part of the
+/// committed `BENCH_serving.json` baseline, so `benchdiff` tracks it
+/// like any other trajectory row.
 fn learned_models(args: &Args, quick: bool) -> Vec<BenchScenario> {
     let n_requests = args.get_usize("open-requests", if quick { 12 } else { 40 });
     let samples = args.get_usize("hetero-samples", if quick { 8 } else { 16 });

@@ -1,0 +1,1302 @@
+//! Whole-crate flow analysis: symbol table, call graph, and the four
+//! graph rules of catalog v3.
+//!
+//! [`super::scan`] gives a comment- and literal-stripped *code* channel
+//! per line; this module parses `fn` items, `impl`/`trait` blocks and
+//! call sites out of it — deliberately *not* a full parser — and builds
+//! an intra-crate call graph with best-effort method resolution:
+//!
+//! - `self.m(..)` resolves inside the enclosing `impl` block first;
+//! - `Type::m(..)` resolves against that type's `impl` blocks;
+//! - `module::f(..)` resolves to free fns in a file named after the
+//!   last module segment (`util::sync::f` → `…/sync.rs`);
+//! - `x.m(..)` is receiver-type-blind: it links every method named `m`
+//!   when `m` is declared by some trait (dispatch), a unique method
+//!   otherwise, and lands in the explicit [`Graph::unresolved`] bucket
+//!   when several unrelated types define `m` — soundness gaps stay
+//!   visible instead of silently dropping edges.
+//!
+//! On top of the graph sit the transitive rules (`panic-reachability`,
+//! `lock-order`, `blocking-in-lock`, `reassoc-taint`); each finding
+//! carries a deterministic witness path (`--explain RULE` prints it).
+//! Iteration order is deterministic everywhere: files are sorted by the
+//! caller, functions keep file order, and worklists are index-ordered.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::rules::{self, Finding};
+use super::scan::SourceLine;
+
+/// One line of a function body, as seen by the fact extractors.
+struct BodyLine {
+    number: usize,
+    code: String,
+    /// Brace depth relative to the `fn` item at the *start* of the line
+    /// (the body proper sits at depth ≥ 1); guard scopes end when the
+    /// depth falls below the binding depth.
+    depth: i64,
+}
+
+/// One `fn` item: identity, enclosing block context, and extracted
+/// facts. `file` keeps the label the walker passed in.
+pub(crate) struct FnInfo {
+    pub file: String,
+    pub name: String,
+    /// Enclosing `impl Type { .. }` / `trait Name { .. }` type name.
+    pub impl_type: Option<String>,
+    /// Trait being implemented (`impl Trait for Type`) or declared.
+    pub trait_name: Option<String>,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+    pub in_test: bool,
+    body: Vec<BodyLine>,
+}
+
+impl FnInfo {
+    /// Stable display key: `file::Type::name` with the path shortened
+    /// to its `src/`-relative suffix.
+    pub fn key(&self) -> String {
+        let file = short_path(&self.file);
+        match &self.impl_type {
+            Some(t) => format!("{file}::{t}::{}", self.name),
+            None => format!("{file}::{}", self.name),
+        }
+    }
+}
+
+fn short_path(path: &str) -> &str {
+    path.rfind("/src/").map_or(path, |p| &path[p + 5..])
+}
+
+/// A call site that could not be pinned to a single callee (or to a
+/// trait dispatch set): several unrelated types define the method.
+pub(crate) struct UnresolvedCall {
+    pub file: String,
+    pub line: usize,
+    pub name: String,
+    pub candidates: usize,
+}
+
+/// One lock acquisition inside a function body.
+struct LockAcq {
+    line: usize,
+    /// Normalized identity: `self` replaced by the impl type, then the
+    /// last two path segments (`ScoreScheduler.inner`, `slot.state`).
+    id: String,
+    /// Let-bound guard variable, if any. `None` means the guard is a
+    /// temporary — no `let`, or the acquisition is method-chained so the
+    /// binding holds the call result, not the guard — and the region is
+    /// that single line (documented under-approximation for
+    /// match-scrutinee temporaries).
+    guard: Option<String>,
+    /// Binding depth (line-start depth of the acquisition line).
+    depth: i64,
+}
+
+/// The symbol table + call graph + per-function facts.
+pub(crate) struct Graph {
+    pub fns: Vec<FnInfo>,
+    /// Resolved edges per caller: `(callee index, call-site line)`.
+    pub edges: Vec<Vec<(usize, usize)>>,
+    pub unresolved: Vec<UnresolvedCall>,
+    /// Panic sites per fn: `(line, pattern)`; empty for test code.
+    panics: Vec<Vec<(usize, &'static str)>>,
+    locks: Vec<Vec<LockAcq>>,
+    /// Blocking sites per fn: `(line, what)`.
+    blocking: Vec<Vec<(usize, String)>>,
+    /// Reassociating taint sources (fn indices).
+    reassoc_sources: Vec<usize>,
+}
+
+// ---------------------------------------------------------------------------
+// Tokenizing
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, PartialEq)]
+enum Tok {
+    Id(String),
+    P(char),
+}
+
+impl Tok {
+    fn id(&self) -> Option<&str> {
+        match self {
+            Tok::Id(s) => Some(s),
+            Tok::P(_) => None,
+        }
+    }
+
+    fn is(&self, c: char) -> bool {
+        matches!(self, Tok::P(p) if *p == c)
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Drop `::<…>` turbofish spans so `f::<T>(x)` tokenizes like `f(x)`.
+fn strip_turbofish(code: &str) -> String {
+    let mut out = String::with_capacity(code.len());
+    let b: Vec<char> = code.chars().collect();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == ':' && b.get(i + 1) == Some(&':') && b.get(i + 2) == Some(&'<') {
+            let mut depth = 1i64;
+            let mut j = i + 3;
+            while j < b.len() && depth > 0 {
+                match b[j] {
+                    '<' => depth += 1,
+                    '>' => depth -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            i = j;
+        } else {
+            out.push(b[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Whitespace-free token stream of one code-channel line.
+fn tokenize(code: &str) -> Vec<Tok> {
+    let mut out = Vec::new();
+    let mut ident = String::new();
+    for c in strip_turbofish(code).chars() {
+        if is_ident(c) {
+            ident.push(c);
+        } else {
+            if !ident.is_empty() {
+                out.push(Tok::Id(std::mem::take(&mut ident)));
+            }
+            if !c.is_whitespace() {
+                out.push(Tok::P(c));
+            }
+        }
+    }
+    if !ident.is_empty() {
+        out.push(Tok::Id(ident));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Item parsing
+// ---------------------------------------------------------------------------
+
+/// Position of `word` as a standalone token in `code`.
+fn word_pos(code: &str, word: &str) -> Option<usize> {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || !code[..at].chars().next_back().is_some_and(is_ident);
+        let after = at + word.len();
+        let after_ok = !code[after..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        start = after;
+    }
+    None
+}
+
+/// Last segment of the first `A::B::C` path at the start of `s`,
+/// skipping a leading `<…>` generic parameter list.
+fn first_path_last_seg(s: &str) -> Option<String> {
+    let mut rest = s.trim_start();
+    if let Some(r) = rest.strip_prefix('<') {
+        let mut depth = 1i64;
+        let mut idx = 0;
+        for (i, c) in r.char_indices() {
+            match c {
+                '<' => depth += 1,
+                '>' => depth -= 1,
+                _ => {}
+            }
+            if depth == 0 {
+                idx = i + 1;
+                break;
+            }
+        }
+        rest = r[idx..].trim_start();
+    }
+    let mut last = None;
+    loop {
+        let end = rest.find(|c: char| !is_ident(c)).unwrap_or(rest.len());
+        if end == 0 {
+            return last;
+        }
+        last = Some(rest[..end].to_string());
+        rest = &rest[end..];
+        match rest.strip_prefix("::") {
+            Some(r) => rest = r,
+            None => return last,
+        }
+    }
+}
+
+struct Ctx {
+    type_name: String,
+    trait_name: Option<String>,
+    is_trait_decl: bool,
+    open_depth: i64,
+}
+
+struct PendingCtx {
+    type_name: String,
+    trait_name: Option<String>,
+    is_trait_decl: bool,
+}
+
+struct PendingFn {
+    name: String,
+    line: usize,
+    in_test: bool,
+}
+
+/// Parse one scanned file into `fn` items with raw body lines. Also
+/// records trait-*declared* method names (signature-only or defaulted)
+/// into `trait_methods`.
+fn parse_file(
+    label: &str,
+    lines: &[SourceLine],
+    trait_methods: &mut BTreeSet<String>,
+) -> Vec<FnInfo> {
+    let mut fns: Vec<FnInfo> = Vec::new();
+    let mut ctx_stack: Vec<Ctx> = Vec::new();
+    let mut fn_stack: Vec<(usize, i64)> = Vec::new();
+    let mut pending_ctx: Option<PendingCtx> = None;
+    let mut pending_fn: Option<PendingFn> = None;
+    // Byte position of the pending item's keyword on the *current* line
+    // (-1 once it was declared on an earlier line), so a `{` can tell
+    // which pending item it opens when both sit on one line
+    // (`impl T for A { fn m(&self) {} }`).
+    let mut pending_ctx_pos = -1i64;
+    let mut pending_fn_pos = -1i64;
+    let mut depth = 0i64;
+    // Paren/bracket depth inside a pending fn signature, so the `;` in
+    // `fn f(x: [u8; 4]);` is not mistaken for the decl-only terminator.
+    let mut sig_nest = 0i64;
+
+    for line in lines {
+        let code = line.code.as_str();
+        let line_depth_start = depth - fn_stack.last().map_or(depth, |f| f.1);
+        pending_ctx_pos = -1;
+        pending_fn_pos = -1;
+        // Item headers are only recognized at item scope.
+        if pending_fn.is_none() && fn_stack.is_empty() && pending_ctx.is_none() {
+            let fp = word_pos(code, "fn");
+            let ip = word_pos(code, "impl").filter(|p| fp.is_none_or(|f| *p < f));
+            let tp = word_pos(code, "trait").filter(|p| fp.is_none_or(|f| *p < f));
+            if let Some(p) = ip {
+                let rest = &code[p + "impl".len()..];
+                let (head, tail) = match rest.split_once(" for ") {
+                    Some((h, t)) => (Some(h), t),
+                    None => (None, rest),
+                };
+                if let Some(ty) = first_path_last_seg(tail) {
+                    pending_ctx = Some(PendingCtx {
+                        type_name: ty,
+                        trait_name: head.and_then(first_path_last_seg),
+                        is_trait_decl: false,
+                    });
+                    pending_ctx_pos = p as i64;
+                }
+            } else if let Some(p) = tp {
+                if let Some(name) = first_path_last_seg(&code[p + "trait".len()..]) {
+                    pending_ctx = Some(PendingCtx {
+                        trait_name: Some(name.clone()),
+                        type_name: name,
+                        is_trait_decl: true,
+                    });
+                    pending_ctx_pos = p as i64;
+                }
+            }
+        }
+        if pending_fn.is_none() {
+            if let Some(p) = word_pos(code, "fn") {
+                // `fn(A) -> B` type positions yield no ident.
+                if let Some(name) = first_path_last_seg(&code[p + "fn".len()..]) {
+                    pending_fn = Some(PendingFn { name, line: line.number, in_test: line.in_test });
+                    pending_fn_pos = p as i64;
+                    sig_nest = 0;
+                }
+            }
+        }
+
+        // Innermost fn owning this line, surviving a same-line close.
+        let mut line_owner = fn_stack.last().map(|f| f.0);
+        for (ci, c) in code.char_indices() {
+            match c {
+                '(' | '[' if pending_fn.is_some() => sig_nest += 1,
+                ')' | ']' if pending_fn.is_some() => sig_nest -= 1,
+                ';' if pending_fn.is_some() && sig_nest == 0 => {
+                    // Signature-only decl (trait method or extern).
+                    let pf = pending_fn.take().expect("checked is_some");
+                    let in_trait = fn_stack.is_empty()
+                        && ctx_stack.last().is_some_and(|c| c.is_trait_decl);
+                    if in_trait {
+                        trait_methods.insert(pf.name);
+                    }
+                }
+                '{' => {
+                    depth += 1;
+                    // When both an item header and a fn decl precede
+                    // this brace, it opens the *nearer* (rightmost) one.
+                    let fn_ok = pending_fn.is_some() && pending_fn_pos < ci as i64;
+                    let ctx_ok = pending_ctx.is_some() && pending_ctx_pos < ci as i64;
+                    if fn_ok && (!ctx_ok || pending_fn_pos > pending_ctx_pos) {
+                        let pf = pending_fn.take().expect("fn_ok");
+                        // Context resolves at attach time, so a block
+                        // opened earlier on this same line counts.
+                        let ctx = if fn_stack.is_empty() { ctx_stack.last() } else { None };
+                        if ctx.is_some_and(|c| c.is_trait_decl) {
+                            trait_methods.insert(pf.name.clone());
+                        }
+                        fns.push(FnInfo {
+                            file: label.to_string(),
+                            name: pf.name,
+                            impl_type: ctx.map(|c| c.type_name.clone()),
+                            trait_name: ctx.and_then(|c| c.trait_name.clone()),
+                            line: pf.line,
+                            in_test: pf.in_test,
+                            body: Vec::new(),
+                        });
+                        fn_stack.push((fns.len() - 1, depth));
+                        line_owner = Some(fns.len() - 1);
+                    } else if ctx_ok {
+                        let pc = pending_ctx.take().expect("ctx_ok");
+                        ctx_stack.push(Ctx {
+                            type_name: pc.type_name,
+                            trait_name: pc.trait_name,
+                            is_trait_decl: pc.is_trait_decl,
+                            open_depth: depth,
+                        });
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if fn_stack.last().is_some_and(|f| f.1 > depth) {
+                        fn_stack.pop();
+                    }
+                    if ctx_stack.last().is_some_and(|c| c.open_depth > depth) {
+                        ctx_stack.pop();
+                    }
+                }
+                _ => {}
+            }
+        }
+        if let Some(idx) = line_owner {
+            fns[idx].body.push(BodyLine {
+                number: line.number,
+                code: code.to_string(),
+                depth: line_depth_start.max(0),
+            });
+        }
+    }
+    fns
+}
+
+// ---------------------------------------------------------------------------
+// Call extraction + resolution
+// ---------------------------------------------------------------------------
+
+enum Recv {
+    /// `f(..)` — plain path-less call.
+    Bare,
+    /// `self.m(..)`.
+    SelfDot,
+    /// `x.m(..)`, `).m(..)` — receiver type unknown.
+    Method,
+    /// `a::b::m(..)` — `qual` is the segment before the name.
+    Qual(String),
+}
+
+struct CallSite {
+    name: String,
+    recv: Recv,
+}
+
+/// Extract call sites from one tokenized line. Declarations (`fn name(`)
+/// and macros (`name!(`) are not calls.
+fn calls_on_line(toks: &[Tok]) -> Vec<CallSite> {
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        let Some(name) = toks[i].id() else { continue };
+        if toks.get(i + 1).is_none_or(|t| !t.is('(')) {
+            continue;
+        }
+        if i > 0 && toks[i - 1].id() == Some("fn") {
+            continue;
+        }
+        let recv = if i >= 3 && toks[i - 1].is(':') && toks[i - 2].is(':') {
+            match toks[i - 3].id() {
+                Some(q) => Recv::Qual(q.to_string()),
+                None => continue,
+            }
+        } else if i >= 1 && toks[i - 1].is('.') {
+            if i >= 2 && toks[i - 2].id() == Some("self") {
+                Recv::SelfDot
+            } else {
+                Recv::Method
+            }
+        } else {
+            Recv::Bare
+        };
+        out.push(CallSite { name: name.to_string(), recv });
+    }
+    out
+}
+
+impl Graph {
+    /// Build the graph from scanned files (`(label, lines)` pairs,
+    /// already in deterministic order).
+    pub fn build(files: &[(String, Vec<SourceLine>)]) -> Graph {
+        let mut trait_methods = BTreeSet::new();
+        let mut fns = Vec::new();
+        for (label, lines) in files {
+            fns.extend(parse_file(label, lines, &mut trait_methods));
+        }
+        // Defaulted trait methods also dispatch.
+        for f in &fns {
+            if f.trait_name.is_some() && f.impl_type.as_deref() == f.trait_name.as_deref() {
+                trait_methods.insert(f.name.clone());
+            }
+        }
+
+        let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        let mut by_type: BTreeMap<(&str, &str), Vec<usize>> = BTreeMap::new();
+        let mut frees: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for (i, f) in fns.iter().enumerate() {
+            by_name.entry(&f.name).or_default().push(i);
+            match &f.impl_type {
+                Some(t) => by_type.entry((t, &f.name)).or_default().push(i),
+                None => frees.entry(&f.name).or_default().push(i),
+            }
+        }
+
+        let mut edges: Vec<Vec<(usize, usize)>> = vec![Vec::new(); fns.len()];
+        let mut unresolved = Vec::new();
+        for (i, f) in fns.iter().enumerate() {
+            for bl in &f.body {
+                let toks = tokenize(&bl.code);
+                for call in calls_on_line(&toks) {
+                    let name = call.name.as_str();
+                    let methods = || -> Vec<usize> {
+                        by_name.get(name).map_or(Vec::new(), |v| {
+                            v.iter().copied().filter(|&j| fns[j].impl_type.is_some()).collect()
+                        })
+                    };
+                    let targets: Vec<usize> = match call.recv {
+                        Recv::SelfDot => {
+                            let own = f.impl_type.as_deref().and_then(|t| by_type.get(&(t, name)));
+                            match own {
+                                Some(v) => v.clone(),
+                                None => resolve_method(name, &methods(), &trait_methods),
+                            }
+                        }
+                        Recv::Qual(q) => {
+                            let q = if q == "Self" {
+                                f.impl_type.clone().unwrap_or(q)
+                            } else {
+                                q
+                            };
+                            if q.starts_with(char::is_uppercase) {
+                                by_type.get(&(q.as_str(), name)).cloned().unwrap_or_default()
+                            } else {
+                                // `module::f` → free fns in `…/module.rs`
+                                // or `…/module/…`; no crate-wide fallback.
+                                let file_rs = format!("/{q}.rs");
+                                let dir = format!("/{q}/");
+                                frees.get(name).map_or(Vec::new(), |v| {
+                                    v.iter()
+                                        .copied()
+                                        .filter(|&j| {
+                                            fns[j].file.ends_with(&file_rs)
+                                                || fns[j].file.contains(&dir)
+                                        })
+                                        .collect()
+                                })
+                            }
+                        }
+                        Recv::Method => resolve_method(name, &methods(), &trait_methods),
+                        Recv::Bare => {
+                            let cands = frees.get(name).cloned().unwrap_or_default();
+                            let same_file: Vec<usize> =
+                                cands.iter().copied().filter(|&j| fns[j].file == f.file).collect();
+                            if same_file.len() == 1 {
+                                same_file
+                            } else if cands.len() == 1 {
+                                cands
+                            } else if cands.len() > 1 {
+                                unresolved.push(UnresolvedCall {
+                                    file: f.file.clone(),
+                                    line: bl.number,
+                                    name: name.to_string(),
+                                    candidates: cands.len(),
+                                });
+                                Vec::new()
+                            } else {
+                                Vec::new()
+                            }
+                        }
+                    };
+                    if matches!(call.recv, Recv::Method | Recv::SelfDot) && targets.is_empty() {
+                        let n = methods().len();
+                        if n > 1 {
+                            unresolved.push(UnresolvedCall {
+                                file: f.file.clone(),
+                                line: bl.number,
+                                name: name.to_string(),
+                                candidates: n,
+                            });
+                        }
+                    }
+                    for t in targets {
+                        if t != i {
+                            edges[i].push((t, bl.number));
+                        }
+                    }
+                }
+            }
+        }
+        for e in &mut edges {
+            e.sort_unstable();
+            e.dedup();
+        }
+
+        let panics = fns.iter().map(collect_panics).collect();
+        let locks = fns.iter().map(collect_locks).collect();
+        let blocking = fns.iter().map(collect_blocking).collect();
+        Graph {
+            reassoc_sources: reassoc_sources(&fns, files),
+            fns,
+            edges,
+            unresolved,
+            panics,
+            locks,
+            blocking,
+        }
+    }
+}
+
+/// Method-call resolution over the impl-method candidate set: a trait
+/// dispatch links every implementation, a unique method links directly,
+/// and ≥ 2 unrelated candidates stay unresolved (handled by the caller).
+fn resolve_method(name: &str, methods: &[usize], trait_methods: &BTreeSet<String>) -> Vec<usize> {
+    if trait_methods.contains(name) || methods.len() == 1 {
+        methods.to_vec()
+    } else {
+        Vec::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-function facts
+// ---------------------------------------------------------------------------
+
+const PANIC_PATS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+fn collect_panics(f: &FnInfo) -> Vec<(usize, &'static str)> {
+    if f.in_test {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for bl in &f.body {
+        for pat in PANIC_PATS {
+            if let Some(p) = bl.code.find(pat) {
+                // Macro patterns need a word boundary on the left so a
+                // hypothetical `my_panic!(` never matches; the method
+                // patterns start with `.` and are boundary-safe as-is.
+                let boundary = pat.starts_with('.')
+                    || p == 0
+                    || !bl.code[..p].chars().next_back().is_some_and(is_ident);
+                if boundary {
+                    out.push((bl.number, *pat));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Normalize a lock path to its identity: `self` → impl type, then the
+/// last two segments.
+fn lock_id(segs: &[String], impl_type: Option<&str>) -> String {
+    let mut segs: Vec<&str> = segs.iter().map(String::as_str).collect();
+    if segs.first() == Some(&"self") {
+        if let Some(t) = impl_type {
+            segs[0] = t;
+        }
+    }
+    let n = segs.len();
+    segs[n.saturating_sub(2)..].join(".")
+}
+
+/// Index just past the `)` matching the `(` at `open`.
+fn after_close(toks: &[Tok], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.is('(') {
+            depth += 1;
+        }
+        if t.is(')') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k + 1);
+            }
+        }
+    }
+    None
+}
+
+/// Read an `ident(.ident)*` path forward from `toks[at]`.
+fn path_forward(toks: &[Tok], mut at: usize) -> Vec<String> {
+    let mut segs = Vec::new();
+    while let Some(s) = toks.get(at).and_then(Tok::id) {
+        segs.push(s.to_string());
+        if toks.get(at + 1).is_some_and(|t| t.is('.')) {
+            at += 2;
+        } else {
+            break;
+        }
+    }
+    segs
+}
+
+fn collect_locks(f: &FnInfo) -> Vec<LockAcq> {
+    // The helpers themselves acquire raw guards by design.
+    if f.file.ends_with("util/sync.rs") {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for bl in &f.body {
+        let toks = tokenize(&bl.code);
+        let guard = match toks.as_slice() {
+            [Tok::Id(l), Tok::Id(m), Tok::Id(g), ..] if l == "let" && m == "mut" => {
+                Some(g.clone())
+            }
+            [Tok::Id(l), Tok::Id(g), ..] if l == "let" => Some(g.clone()),
+            _ => None,
+        };
+        for i in 0..toks.len() {
+            let Some(name) = toks[i].id() else { continue };
+            let helper =
+                matches!(name, "lock_unpoisoned" | "read_unpoisoned" | "write_unpoisoned");
+            if helper && toks.get(i + 1).is_some_and(|t| t.is('(')) {
+                // A method-chained acquisition is a temporary: the guard
+                // dies at the end of the statement, not at the binding
+                // (`let task = lock_unpoisoned(rx).recv()` binds the recv
+                // result, never the guard).
+                let chained = after_close(&toks, i + 1)
+                    .is_some_and(|k| toks.get(k).is_some_and(|t| t.is('.')));
+                let at = if toks.get(i + 2).is_some_and(|t| t.is('&')) { i + 3 } else { i + 2 };
+                let segs = path_forward(&toks, at);
+                if !segs.is_empty() {
+                    out.push(LockAcq {
+                        line: bl.number,
+                        id: lock_id(&segs, f.impl_type.as_deref()),
+                        guard: if chained { None } else { guard.clone() },
+                        depth: bl.depth,
+                    });
+                }
+            }
+            // Raw `path.lock()` / `path.write()` / argless `path.read()`.
+            let raw = matches!(name, "lock" | "read" | "write");
+            if raw
+                && i >= 2
+                && toks[i - 1].is('.')
+                && toks.get(i + 1).is_some_and(|t| t.is('('))
+                && toks.get(i + 2).is_some_and(|t| t.is(')'))
+            {
+                // Walk the receiver path backwards.
+                let mut segs = Vec::new();
+                let mut j = i - 1;
+                while j >= 1 && toks[j].is('.') {
+                    match toks[j - 1].id() {
+                        Some(s) => segs.push(s.to_string()),
+                        None => break,
+                    }
+                    if j < 2 {
+                        break;
+                    }
+                    j -= 2;
+                }
+                segs.reverse();
+                let chained = toks.get(i + 3).is_some_and(|t| t.is('.'));
+                if !segs.is_empty() {
+                    out.push(LockAcq {
+                        line: bl.number,
+                        id: lock_id(&segs, f.impl_type.as_deref()),
+                        guard: if chained { None } else { guard.clone() },
+                        depth: bl.depth,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Lines of `f` on which the acquisition `a` is still held.
+fn lock_region(f: &FnInfo, a: &LockAcq) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut active = false;
+    for bl in &f.body {
+        if bl.number == a.line {
+            active = true;
+        }
+        if !active {
+            continue;
+        }
+        if bl.number > a.line {
+            if a.guard.is_none() {
+                break;
+            }
+            if bl.depth < a.depth {
+                break;
+            }
+            if let Some(g) = &a.guard {
+                let toks = tokenize(&bl.code);
+                let dropped = toks.windows(4).any(|w| {
+                    w[0].id() == Some("drop")
+                        && w[1].is('(')
+                        && w[2].id() == Some(g)
+                        && w[3].is(')')
+                });
+                if dropped {
+                    break;
+                }
+            }
+        }
+        out.push(bl.number);
+    }
+    out
+}
+
+fn collect_blocking(f: &FnInfo) -> Vec<(usize, String)> {
+    let net_file = f.body.iter().any(|bl| bl.code.contains("TcpStream"));
+    let mut out = Vec::new();
+    for bl in &f.body {
+        if bl.code.contains("thread::sleep") {
+            out.push((bl.number, "thread::sleep".to_string()));
+        }
+        if bl.code.contains("eps_batch(") {
+            out.push((bl.number, "eps_batch (score evaluation)".to_string()));
+        }
+        if net_file {
+            for pat in [".write_all(", ".read_exact(", ".read(&", ".flush()"] {
+                if bl.code.contains(pat) {
+                    out.push((bl.number, format!("TcpStream I/O `{pat}`")));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Taint sources: the documented reassociating kernel plus anything
+/// pragma'd `allow(no-reassoc-on-sampler-path)` inside its body.
+fn reassoc_sources(fns: &[FnInfo], files: &[(String, Vec<SourceLine>)]) -> Vec<usize> {
+    let mut relocked: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (label, lines) in files {
+        for a in rules::collect_allows(lines) {
+            if a.rule == "no-reassoc-on-sampler-path" {
+                relocked.entry(label).or_default().push(a.covers);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (i, f) in fns.iter().enumerate() {
+        let pragma_hit = relocked.get(f.file.as_str()).is_some_and(|lines| {
+            lines.iter().any(|&l| f.line == l || f.body.iter().any(|bl| bl.number == l))
+        });
+        if f.name == "sum_sq_blocked" || pragma_hit {
+            out.push(i);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Graph rules
+// ---------------------------------------------------------------------------
+
+/// Serving-path roots for `panic-reachability` (file suffix, impl type,
+/// fn name). Thread entry points are roots of their own: a panic there
+/// kills a worker even though no submit() frame is on the stack.
+const PANIC_ROOTS: &[(&str, Option<&str>, &str)] = &[
+    ("server/router.rs", Some("Router"), "submit"),
+    ("server/router.rs", None, "worker_loop"),
+    ("engine/mod.rs", Some("Engine"), "run"),
+    ("engine/mod.rs", Some("Engine"), "run_group"),
+    ("engine/mod.rs", None, "pool_worker"),
+    ("engine/scheduler.rs", Some("ScoreScheduler"), "eval"),
+    ("server/net.rs", None, "accept_loop"),
+    ("server/net.rs", None, "conn_worker"),
+    ("server/net.rs", None, "handle_conn"),
+    ("server/net.rs", None, "handle_line"),
+    ("server/net.rs", None, "answer_oversized"),
+    ("server/net.rs", None, "shed"),
+    ("server/net.rs", None, "write_line"),
+];
+
+impl Graph {
+    fn root_indices(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = (0..self.fns.len())
+            .filter(|&i| {
+                let f = &self.fns[i];
+                PANIC_ROOTS.iter().any(|(file, ty, name)| {
+                    f.file.ends_with(file) && f.impl_type.as_deref() == *ty && f.name == *name
+                })
+            })
+            .collect();
+        out.sort_by_key(|&i| (self.fns[i].file.clone(), self.fns[i].line));
+        out
+    }
+
+    /// BFS from `roots`; returns `parent[i] = Some(caller)` for every
+    /// reachable fn (roots map to themselves). Deterministic: roots in
+    /// the given order, edges in per-fn sorted order.
+    fn reach(&self, roots: &[usize]) -> BTreeMap<usize, usize> {
+        let mut parent: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut queue: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+        for &r in roots {
+            if !parent.contains_key(&r) {
+                parent.insert(r, r);
+                queue.push_back(r);
+            }
+        }
+        while let Some(i) = queue.pop_front() {
+            for &(j, _) in &self.edges[i] {
+                if !parent.contains_key(&j) {
+                    parent.insert(j, i);
+                    queue.push_back(j);
+                }
+            }
+        }
+        parent
+    }
+
+    /// Witness path root → `i` through the BFS parent map.
+    fn witness(&self, parent: &BTreeMap<usize, usize>, mut i: usize) -> Vec<String> {
+        let mut path = vec![self.fns[i].key()];
+        while let Some(&p) = parent.get(&i) {
+            if p == i {
+                break;
+            }
+            path.push(self.fns[p].key());
+            i = p;
+        }
+        path.reverse();
+        path
+    }
+
+    pub fn panic_reachability(&self) -> Vec<Finding> {
+        let roots = self.root_indices();
+        let parent = self.reach(&roots);
+        let mut out = Vec::new();
+        for (&i, _) in &parent {
+            let f = &self.fns[i];
+            if f.in_test {
+                continue;
+            }
+            for &(line, pat) in &self.panics[i] {
+                let witness = self.witness(&parent, i);
+                let hops = witness.len() - 1;
+                out.push(Finding {
+                    path: f.file.clone(),
+                    line,
+                    rule: "panic-reachability",
+                    message: format!(
+                        "`{pat}` in `{}` is reachable from serving root `{}` ({hops} call(s) \
+                         deep); answer the error or justify with a pragma",
+                        f.key(),
+                        witness[0],
+                    ),
+                    witness,
+                });
+            }
+        }
+        out
+    }
+
+    /// Transitive closure of a per-fn seeded fact over call edges.
+    fn transitive(&self, mut acc: Vec<BTreeSet<String>>) -> Vec<BTreeSet<String>> {
+        loop {
+            let mut changed = false;
+            for i in 0..self.fns.len() {
+                for &(j, _) in &self.edges[i] {
+                    let add: Vec<String> =
+                        acc[j].iter().filter(|s| !acc[i].contains(*s)).cloned().collect();
+                    if !add.is_empty() {
+                        acc[i].extend(add);
+                        changed = true;
+                    }
+                }
+            }
+            if !changed {
+                return acc;
+            }
+        }
+    }
+
+    pub fn lock_order(&self) -> Vec<Finding> {
+        // Transitive lock sets: every lock a call into `i` may acquire.
+        let seed: Vec<BTreeSet<String>> = (0..self.fns.len())
+            .map(|i| self.locks[i].iter().map(|a| a.id.clone()).collect())
+            .collect();
+        let trans = self.transitive(seed);
+
+        // Ordered edges `held → acquired`, first witness wins.
+        let mut edges: BTreeMap<(String, String), (String, usize, String)> = BTreeMap::new();
+        for (i, f) in self.fns.iter().enumerate() {
+            for a in &self.locks[i] {
+                let region = lock_region(f, a);
+                for bl in &f.body {
+                    if !region.contains(&bl.number) {
+                        continue;
+                    }
+                    for b in &self.locks[i] {
+                        if b.id != a.id && b.line == bl.number && b.line > a.line {
+                            edges.entry((a.id.clone(), b.id.clone())).or_insert_with(|| {
+                                (
+                                    f.file.clone(),
+                                    b.line,
+                                    format!(
+                                        "`{}` acquired at {}:{} while `{}` is held (since \
+                                         line {})",
+                                        b.id,
+                                        short_path(&f.file),
+                                        b.line,
+                                        a.id,
+                                        a.line
+                                    ),
+                                )
+                            });
+                        }
+                    }
+                    for &(j, line) in &self.edges[i] {
+                        if line != bl.number {
+                            continue;
+                        }
+                        for id in &trans[j] {
+                            if *id != a.id {
+                                edges.entry((a.id.clone(), id.clone())).or_insert_with(|| {
+                                    (
+                                        f.file.clone(),
+                                        line,
+                                        format!(
+                                            "`{}` held in `{}` across the call to `{}` at \
+                                             {}:{}, which may acquire `{id}`",
+                                            a.id,
+                                            f.key(),
+                                            self.fns[j].key(),
+                                            short_path(&f.file),
+                                            line
+                                        ),
+                                    )
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Cycle detection over the lock-order digraph.
+        let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+        for (a, b) in edges.keys() {
+            adj.entry(a).or_default().push(b);
+        }
+        let mut seen_cycles: BTreeSet<Vec<String>> = BTreeSet::new();
+        let mut out = Vec::new();
+        let starts: Vec<&str> = adj.keys().copied().collect();
+        for start in starts {
+            let mut stack: Vec<&str> = vec![start];
+            let mut iters: Vec<usize> = vec![0];
+            while let Some(&node) = stack.last() {
+                let next = adj.get(node).and_then(|v| v.get(*iters.last().expect("in step")));
+                *iters.last_mut().expect("in step") += 1;
+                match next {
+                    None => {
+                        stack.pop();
+                        iters.pop();
+                    }
+                    Some(&n) => {
+                        if let Some(pos) = stack.iter().position(|&s| s == n) {
+                            let cycle: Vec<String> =
+                                stack[pos..].iter().map(|s| s.to_string()).collect();
+                            let mut canon = cycle.clone();
+                            let min =
+                                (0..canon.len()).min_by_key(|&k| &canon[k]).expect("non-empty");
+                            canon.rotate_left(min);
+                            if seen_cycles.insert(canon.clone()) {
+                                let mut witness = Vec::new();
+                                for k in 0..cycle.len() {
+                                    let pair =
+                                        (cycle[k].clone(), cycle[(k + 1) % cycle.len()].clone());
+                                    if let Some((_, _, w)) = edges.get(&pair) {
+                                        witness.push(w.clone());
+                                    }
+                                }
+                                let (file, line, _) = edges
+                                    [&(canon[0].clone(), canon[1 % canon.len()].clone())]
+                                    .clone();
+                                let mut ring = canon.clone();
+                                ring.push(canon[0].clone());
+                                out.push(Finding {
+                                    path: file,
+                                    line,
+                                    rule: "lock-order",
+                                    message: format!(
+                                        "lock-order cycle `{}` — two threads interleaving \
+                                         these acquisitions deadlock",
+                                        ring.join(" -> ")
+                                    ),
+                                    witness,
+                                });
+                            }
+                        } else if stack.len() < 32 {
+                            stack.push(n);
+                            iters.push(0);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn blocking_in_lock(&self) -> Vec<Finding> {
+        let seed: Vec<BTreeSet<String>> = (0..self.fns.len())
+            .map(|i| self.blocking[i].iter().map(|(_, w)| w.clone()).collect())
+            .collect();
+        let trans = self.transitive(seed);
+        let mut out = Vec::new();
+        for (i, f) in self.fns.iter().enumerate() {
+            if !rules::path_has_dir(&f.file, "engine") {
+                continue;
+            }
+            for a in &self.locks[i] {
+                let region = lock_region(f, a);
+                for &(line, ref what) in &self.blocking[i] {
+                    if region.contains(&line) && line >= a.line {
+                        out.push(Finding {
+                            path: f.file.clone(),
+                            line,
+                            rule: "blocking-in-lock",
+                            message: format!(
+                                "{what} while `{}` is held (acquired at line {}) stalls every \
+                                 thread contending for the lock",
+                                a.id, a.line
+                            ),
+                            witness: vec![f.key()],
+                        });
+                    }
+                }
+                for &(j, line) in &self.edges[i] {
+                    if region.contains(&line) && !trans[j].is_empty() {
+                        let what = trans[j].iter().next().expect("non-empty").clone();
+                        out.push(Finding {
+                            path: f.file.clone(),
+                            line,
+                            rule: "blocking-in-lock",
+                            message: format!(
+                                "call to `{}` may block ({what}) while `{}` is held (acquired \
+                                 at line {})",
+                                self.fns[j].key(),
+                                a.id,
+                                a.line
+                            ),
+                            witness: vec![f.key(), self.fns[j].key()],
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn reassoc_taint(&self) -> Vec<Finding> {
+        let mut roots: Vec<usize> = (0..self.fns.len())
+            .filter(|&i| {
+                let f = &self.fns[i];
+                let sampler_step = f.trait_name.as_deref() == Some("Sampler") && f.name == "step";
+                let score_impl = f.trait_name.as_deref() == Some("ScoreModel");
+                sampler_step || score_impl
+            })
+            .collect();
+        roots.sort_by_key(|&i| (self.fns[i].file.clone(), self.fns[i].line));
+        let parent = self.reach(&roots);
+        let mut out = Vec::new();
+        for &i in &self.reassoc_sources {
+            if !parent.contains_key(&i) || roots.contains(&i) {
+                continue;
+            }
+            let f = &self.fns[i];
+            let witness = self.witness(&parent, i);
+            out.push(Finding {
+                path: f.file.clone(),
+                line: f.line,
+                rule: "reassoc-taint",
+                message: format!(
+                    "reassociating kernel `{}` is reachable from bit-identity root `{}` — \
+                     re-lock the goldens or route through the scalar kernel",
+                    f.key(),
+                    witness[0]
+                ),
+                witness,
+            });
+        }
+        out
+    }
+}
+
+/// Run the four graph rules over a scanned file set and drop findings
+/// suppressed by an allow pragma at the finding line.
+pub fn check_files(files: &[(String, Vec<SourceLine>)]) -> Vec<Finding> {
+    let g = Graph::build(files);
+    let mut findings = Vec::new();
+    findings.extend(g.panic_reachability());
+    findings.extend(g.lock_order());
+    findings.extend(g.blocking_in_lock());
+    findings.extend(g.reassoc_taint());
+    let allows: BTreeMap<&str, Vec<rules::Allow>> = files
+        .iter()
+        .map(|(label, lines)| (label.as_str(), rules::collect_allows(lines)))
+        .collect();
+    findings.retain(|f| {
+        !allows.get(f.path.as_str()).is_some_and(|a| rules::allowed(a, f.rule, f.line))
+    });
+    findings
+}
+
+/// Render the resolver's blind spots for `--explain`: call sites where
+/// several unrelated types define the method and no trait declares it,
+/// so no edge was linked. Keeping these visible is the soundness
+/// contract of the heuristic resolver.
+pub(crate) fn unresolved_report(files: &[(String, Vec<SourceLine>)], max: usize) -> Vec<String> {
+    let g = Graph::build(files);
+    let mut out: Vec<String> = g
+        .unresolved
+        .iter()
+        .take(max)
+        .map(|u| {
+            format!(
+                "{}:{}: `{}` ({} candidates)",
+                short_path(&u.file),
+                u.line,
+                u.name,
+                u.candidates
+            )
+        })
+        .collect();
+    if g.unresolved.len() > max {
+        out.push(format!("... and {} more", g.unresolved.len() - max));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build(files: &[(&str, &str)]) -> Graph {
+        let scanned: Vec<(String, Vec<SourceLine>)> =
+            files.iter().map(|(l, t)| (l.to_string(), super::super::scan::scan(t))).collect();
+        Graph::build(&scanned)
+    }
+
+    fn callees(g: &Graph, key: &str) -> Vec<String> {
+        let i = g.fns.iter().position(|f| f.key() == key).expect("caller exists");
+        g.edges[i].iter().map(|&(j, _)| g.fns[j].key()).collect()
+    }
+
+    #[test]
+    fn self_calls_resolve_inside_the_enclosing_impl() {
+        let a = "pub struct A;\nimpl A {\n    pub fn go(&self) {\n        self.m();\n        \
+                 Self::fresh();\n    }\n    fn m(&self) {}\n    fn fresh() {}\n}\n";
+        let b = "pub struct B;\nimpl B {\n    fn m(&self) {}\n}\n";
+        let g = build(&[("a.rs", a), ("b.rs", b)]);
+        assert_eq!(callees(&g, "a.rs::A::go"), vec!["a.rs::A::m", "a.rs::A::fresh"]);
+        assert!(g.unresolved.is_empty(), "exact impl match is not ambiguous");
+    }
+
+    #[test]
+    fn trait_dispatch_links_every_implementation() {
+        let t = "pub trait T {\n    fn m(&self);\n}\n";
+        let a = "impl T for A {\n    fn m(&self) {}\n}\n";
+        let b = "impl T for B {\n    fn m(&self) {}\n}\n";
+        let c = "pub fn go(x: &dyn T) {\n    x.m();\n}\n";
+        let g = build(&[("a.rs", a), ("b.rs", b), ("c.rs", c), ("t.rs", t)]);
+        assert_eq!(callees(&g, "c.rs::go"), vec!["a.rs::A::m", "b.rs::B::m"]);
+        assert!(g.unresolved.is_empty());
+    }
+
+    #[test]
+    fn ambiguous_methods_land_in_the_unresolved_bucket() {
+        let a = "pub struct A;\nimpl A {\n    fn m(&self) {}\n}\n";
+        let b = "pub struct B;\nimpl B {\n    fn m(&self) {}\n}\n";
+        let c = "pub fn go(x: &A) {\n    x.m();\n}\n";
+        let g = build(&[("a.rs", a), ("b.rs", b), ("c.rs", c)]);
+        assert!(callees(&g, "c.rs::go").is_empty(), "no guessing between unrelated types");
+        assert_eq!(g.unresolved.len(), 1);
+        let u = &g.unresolved[0];
+        assert_eq!((u.file.as_str(), u.line, u.name.as_str(), u.candidates), ("c.rs", 2, "m", 2));
+    }
+
+    #[test]
+    fn declarations_and_macros_are_not_calls() {
+        let src = "fn helper() {}\npub fn go() {\n    println!(\"{}\", 1);\n    helper();\n}\n";
+        let g = build(&[("x.rs", src)]);
+        assert_eq!(callees(&g, "x.rs::go"), vec!["x.rs::helper"]);
+        assert!(callees(&g, "x.rs::helper").is_empty(), "a decl is not a self-call");
+        assert!(g.unresolved.is_empty());
+    }
+
+    #[test]
+    fn bare_calls_prefer_the_same_file_and_stay_unresolved_across_files() {
+        let m1 = "pub fn mk() {}\npub fn use_local() {\n    mk();\n}\n";
+        let m2 = "pub fn mk() {}\n";
+        let m3 = "pub fn use_far() {\n    mk();\n}\n";
+        let g = build(&[("m1.rs", m1), ("m2.rs", m2), ("m3.rs", m3)]);
+        assert_eq!(callees(&g, "m1.rs::use_local"), vec!["m1.rs::mk"]);
+        assert!(callees(&g, "m3.rs::use_far").is_empty());
+        assert_eq!(g.unresolved.len(), 1, "cross-file bare call with two candidates");
+        assert_eq!(g.unresolved[0].name, "mk");
+    }
+
+    #[test]
+    fn module_qualified_calls_resolve_by_file_name_only() {
+        let sync = "pub fn relock() {}\n";
+        let eng = "pub fn go() {\n    crate::util::sync::relock();\n}\n\
+                   pub fn go2() {\n    other::relock();\n}\n";
+        let g = build(&[("engine/mod.rs", eng), ("util/sync.rs", sync)]);
+        assert_eq!(callees(&g, "engine/mod.rs::go"), vec!["util/sync.rs::relock"]);
+        assert!(callees(&g, "engine/mod.rs::go2").is_empty(), "wrong module: external, no guess");
+    }
+
+    #[test]
+    fn dot_receiver_calls_never_fall_back_to_free_fns() {
+        // `(-x).exp()` is a method on the float, not the free `exp`.
+        let src = "pub fn exp(x: f64) -> f64 {\n    x\n}\npub fn go(x: f64) -> f64 {\n    \
+                   (-x).exp()\n}\n";
+        let g = build(&[("main.rs", src)]);
+        assert!(callees(&g, "main.rs::go").is_empty());
+        assert!(g.unresolved.is_empty(), "zero method candidates is external, not unresolved");
+    }
+
+    #[test]
+    fn one_line_impl_blocks_attach_their_methods() {
+        let src = "impl T for A { fn m(&self) {} }\n";
+        let g = build(&[("a.rs", src)]);
+        assert_eq!(g.fns.len(), 1);
+        assert_eq!(g.fns[0].key(), "a.rs::A::m");
+        assert_eq!(g.fns[0].trait_name.as_deref(), Some("T"));
+    }
+}

@@ -11,48 +11,78 @@
 //!   (`--fix-plan` prints the latter);
 //! - [`scan`] — the lexer-lite that makes line-level matching sound
 //!   (comments, strings and `#[cfg(test)]` regions);
-//! - [`run_cli`] — `gddim lint [PATHS] [--fix-plan]`, exit 0 clean /
-//!   1 findings / 2 I/O error.
+//! - [`graph`] — the whole-crate call graph behind the transitive rules
+//!   (`lock-order`, `panic-reachability`, `blocking-in-lock`,
+//!   `reassoc-taint`), on by default, disabled with `--no-graph`;
+//! - [`run_cli`] — `gddim lint [PATHS] [--fix-plan] [--no-graph]
+//!   [--format json] [--explain RULE]`, exit 0 clean / 1 findings /
+//!   2 usage or I/O error.
 //!
 //! The pass runs over its own source: `cargo test` includes a self-test
-//! that lints `src/` and asserts zero findings, and CI gates merges on
-//! the same invocation, so every exemption in the tree carries a
-//! justified `gddim-lint: allow(...)` pragma (see [`rules`]).
+//! that lints `src/` (graph rules included) and asserts zero findings,
+//! and CI gates merges on the same invocation, so every exemption in
+//! the tree carries a justified allow pragma (see [`rules`]).
 
+pub mod graph;
 pub mod rules;
 pub mod scan;
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 pub use rules::{Finding, CATALOG, CATALOG_VERSION};
 
 use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::{Error, Result};
 
-/// Lint one in-memory source file. `label` is the path used in
-/// diagnostics and for the path-scoped rules (forward slashes).
+/// Run the *line* rules over one in-memory source file. `label` is the
+/// path used in diagnostics and for the path-scoped rules (forward
+/// slashes). The graph rules need the whole file set — see
+/// [`lint_sources`].
 pub fn lint_source(label: &str, text: &str) -> Vec<Finding> {
     rules::check_file(label, &scan::scan(text))
 }
 
-/// Lint files and directories (recursively, `.rs` only). Findings come
-/// back sorted by path, then line.
-pub fn lint_paths(paths: &[PathBuf]) -> Result<Vec<Finding>> {
+/// Lint a whole file set: line rules per file, then (when `graph_on`)
+/// the call-graph rules across all of them. Findings come back sorted
+/// by path, line, rule.
+pub fn lint_sources(files: &[(String, String)], graph_on: bool) -> Vec<Finding> {
+    let scanned: Vec<(String, Vec<scan::SourceLine>)> =
+        files.iter().map(|(label, text)| (label.clone(), scan::scan(text))).collect();
+    let mut findings = Vec::new();
+    for (label, lines) in &scanned {
+        findings.extend(rules::check_file(label, lines));
+    }
+    if graph_on {
+        findings.extend(graph::check_files(&scanned));
+    }
+    findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    findings
+}
+
+/// Lint files and directories (recursively, `.rs` only).
+pub fn lint_paths(paths: &[PathBuf], graph_on: bool) -> Result<Vec<Finding>> {
+    Ok(lint_sources(&read_sources(paths)?, graph_on))
+}
+
+/// Collect `(label, text)` pairs for files and directories (recursively,
+/// `.rs` only), labels with forward slashes, in sorted order.
+fn read_sources(paths: &[PathBuf]) -> Result<Vec<(String, String)>> {
     let mut files = Vec::new();
     for p in paths {
         collect_rs(p, &mut files)?;
     }
     files.sort();
     files.dedup();
-    let mut findings = Vec::new();
+    let mut sources = Vec::new();
     for file in &files {
         let text = std::fs::read_to_string(file)
             .map_err(|e| Error::msg(format!("read {}: {e}", file.display())))?;
         let label = file.to_string_lossy().replace('\\', "/");
-        findings.extend(lint_source(&label, &text));
+        sources.push((label, text));
     }
-    findings.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
-    Ok(findings)
+    Ok(sources)
 }
 
 fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
@@ -82,9 +112,22 @@ fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
     }
 }
 
-/// `gddim lint [PATHS] [--fix-plan]`. Returns the process exit code so
-/// `main.rs` owns the actual `exit` (the no-process-exit rule applies
-/// here too).
+/// One finding as a JSON object (`--format json` emits one per line,
+/// which the CI problem-matcher turns into PR diff annotations).
+fn finding_json(f: &Finding) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("rule".to_string(), Json::Str(f.rule.to_string()));
+    o.insert("path".to_string(), Json::Str(f.path.clone()));
+    o.insert("line".to_string(), Json::Num(f.line as f64));
+    o.insert("message".to_string(), Json::Str(f.message.clone()));
+    let witness = f.witness.iter().map(|w| Json::Str(w.clone())).collect();
+    o.insert("witness".to_string(), Json::Arr(witness));
+    Json::Obj(o)
+}
+
+/// `gddim lint [PATHS] [--fix-plan] [--no-graph] [--format json]
+/// [--explain RULE]`. Returns the process exit code so `main.rs` owns
+/// the actual `exit` (the no-process-exit rule applies here too).
 pub fn run_cli(args: &Args) -> i32 {
     let mut paths: Vec<PathBuf> = args.positional.iter().skip(1).map(PathBuf::from).collect();
     // `--fix-plan rust/src` parses the path as the flag's value; claim
@@ -94,27 +137,76 @@ pub fn run_cli(args: &Args) -> i32 {
             paths.push(PathBuf::from(v));
         }
     }
+    let explain = args.get("explain").filter(|v| *v != "true");
+    if let Some(r) = explain {
+        if rules::rule(r).is_none() {
+            eprintln!("gddim lint: --explain {r}: no such rule in catalog v{CATALOG_VERSION}");
+            return 2;
+        }
+    }
+    let json = args.get("format").is_some_and(|v| v == "json");
+    let graph_on = !args.has("no-graph");
     if paths.is_empty() {
         // From the repo root the crate lives under rust/; inside the
         // crate dir, src/ directly.
         let default = if Path::new("rust/src").is_dir() { "rust/src" } else { "src" };
         paths.push(PathBuf::from(default));
     }
-    let findings = match lint_paths(&paths) {
-        Ok(f) => f,
+    let sources = match read_sources(&paths) {
+        Ok(s) => s,
         Err(e) => {
             eprintln!("gddim lint: {e}");
             return 2;
         }
     };
+    let findings = lint_sources(&sources, graph_on);
     for f in &findings {
-        println!("{f}");
+        if json {
+            println!("{}", finding_json(f).to_string_compact());
+        } else {
+            println!("{f}");
+        }
+    }
+    if let Some(r) = explain {
+        if let Some(rule) = rules::rule(r) {
+            println!("\n[{}] {}", rule.id, rule.summary);
+            println!("  fix: {}", rule.fix_plan);
+            let mut any = false;
+            for f in findings.iter().filter(|f| f.rule == r) {
+                any = true;
+                println!("  {}:{}", f.path, f.line);
+                for (k, hop) in f.witness.iter().enumerate() {
+                    let arrow = if k == 0 { "  " } else { "-> " };
+                    println!("    {arrow}{hop}");
+                }
+            }
+            if !any {
+                println!("  no findings for this rule");
+            }
+            if graph_on {
+                // Resolver blind spots: call sites the graph refused to
+                // guess on. An empty list means full edge coverage.
+                let scanned: Vec<(String, Vec<scan::SourceLine>)> =
+                    sources.iter().map(|(l, t)| (l.clone(), scan::scan(t))).collect();
+                let report = graph::unresolved_report(&scanned, 8);
+                if report.is_empty() {
+                    println!("  unresolved method calls: none (full edge coverage)");
+                } else {
+                    println!("  unresolved method calls (no edges linked):");
+                    for entry in &report {
+                        println!("    {entry}");
+                    }
+                }
+            }
+        }
     }
     if findings.is_empty() {
-        println!("gddim lint: clean (catalog v{CATALOG_VERSION})");
+        if !json {
+            println!("gddim lint: clean (catalog v{CATALOG_VERSION})");
+        }
         return 0;
     }
-    if args.has("fix-plan") {
+    if args.has("fix-plan") && !json {
         println!("\nfix plan (catalog v{CATALOG_VERSION}):");
         let mut seen: Vec<&str> = Vec::new();
         for f in &findings {
@@ -137,6 +229,13 @@ mod tests {
 
     fn rules_hit(label: &str, src: &str) -> Vec<&'static str> {
         lint_source(label, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    /// Whole-fileset lint (graph rules on) over in-memory fixtures.
+    fn lint_files(files: &[(&str, &str)]) -> Vec<Finding> {
+        let owned: Vec<(String, String)> =
+            files.iter().map(|(l, t)| (l.to_string(), t.to_string())).collect();
+        lint_sources(&owned, true)
     }
 
     #[test]
@@ -188,24 +287,6 @@ mod tests {
     }
 
     #[test]
-    fn unwrap_on_the_serving_path_is_flagged_outside_tests() {
-        let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
-        assert_eq!(rules_hit("server/router.rs", bad), vec!["no-unwrap-in-server"]);
-        assert_eq!(rules_hit("engine/mod.rs", bad), vec!["no-unwrap-in-server"]);
-        assert!(rules_hit("math/simd.rs", bad).is_empty(), "rule is path-scoped");
-        let expect = "fn f(x: Option<u32>) -> u32 { x.expect(\"invariant\") }\n";
-        assert_eq!(rules_hit("server/router.rs", expect), vec!["no-unwrap-in-server"]);
-        let in_test = "#[cfg(test)]\nmod tests {\n    fn t(x: Option<u32>) { x.unwrap(); }\n}\n";
-        assert!(rules_hit("server/router.rs", in_test).is_empty(), "test code is exempt");
-        let tagged = "// gddim-lint: allow(no-unwrap-in-server) — construction-time fail-fast\n\
-                      let h = spawn().expect(\"spawn\");\n";
-        assert!(rules_hit("server/router.rs", tagged).is_empty());
-        let trailing = "let h = spawn().expect(\"spawn\"); \
-                        // gddim-lint: allow(no-unwrap-in-server) — fail-fast\n";
-        assert!(rules_hit("server/router.rs", trailing).is_empty(), "trailing pragma, same line");
-    }
-
-    #[test]
     fn process_exit_is_main_only() {
         let bad = "fn f() { std::process::exit(2); }\n";
         assert_eq!(rules_hit("server/demo.rs", bad), vec!["no-process-exit"]);
@@ -244,17 +325,17 @@ mod tests {
 
     #[test]
     fn pragmas_require_a_justification_and_a_known_rule() {
-        let naked = "// gddim-lint: allow(no-unwrap-in-server)\nlet x = f().unwrap();\n";
+        let naked = "// gddim-lint: allow(no-process-exit)\nstd::process::exit(2);\n";
         assert_eq!(rules_hit("server/x.rs", naked), vec!["pragma-justification"]);
-        let dashed = "// gddim-lint: allow(no-unwrap-in-server) - short reason\n\
-                      let x = f().unwrap();\n";
+        let dashed = "// gddim-lint: allow(no-process-exit) - short reason\n\
+                      std::process::exit(2);\n";
         assert!(rules_hit("server/x.rs", dashed).is_empty(), "plain dash separator works");
         let unknown = "// gddim-lint: allow(no-such-rule) — reason\nlet x = 1;\n";
         assert_eq!(rules_hit("server/x.rs", unknown), vec!["pragma-justification"]);
-        let wrong_rule = "// gddim-lint: allow(bounded-io) — reason\nlet x = f().unwrap();\n";
+        let wrong_rule = "// gddim-lint: allow(bounded-io) — reason\nstd::process::exit(2);\n";
         assert_eq!(
             rules_hit("server/x.rs", wrong_rule),
-            vec!["no-unwrap-in-server"],
+            vec!["no-process-exit"],
             "a pragma only suppresses its own rule"
         );
     }
@@ -266,25 +347,224 @@ mod tests {
         assert!(rules_hit("server/x.rs", src).is_empty());
     }
 
+    // -- graph-rule fixtures -------------------------------------------------
+
+    const ROUTER_TO_HELPER: &str = "pub struct Router;\n\
+                                    impl Router {\n    \
+                                        pub fn submit(&self) {\n        helper();\n    }\n}\n\
+                                    fn helper() {\n    grid_max();\n}\n";
+
+    #[test]
+    fn panic_reachability_fires_through_the_call_graph_with_a_witness() {
+        let math = "pub fn grid_max(v: &[f64]) -> f64 {\n    *v.last().unwrap()\n}\n";
+        let fs = lint_files(&[("server/router.rs", ROUTER_TO_HELPER), ("math/grid.rs", math)]);
+        assert_eq!(fs.len(), 1, "{fs:?}",);
+        let f = &fs[0];
+        assert_eq!((f.rule, f.path.as_str(), f.line), ("panic-reachability", "math/grid.rs", 2));
+        assert_eq!(
+            f.witness,
+            vec![
+                "server/router.rs::Router::submit".to_string(),
+                "server/router.rs::helper".to_string(),
+                "math/grid.rs::grid_max".to_string(),
+            ],
+            "deterministic witness path root -> sink"
+        );
+    }
+
+    #[test]
+    fn panic_reachability_is_silent_without_a_path_from_a_root() {
+        // Same panic site, but nothing on the serving path calls it.
+        let math = "pub fn grid_max(v: &[f64]) -> f64 {\n    *v.last().unwrap()\n}\n";
+        let clean = lint_files(&[("math/grid.rs", math)]);
+        assert!(clean.is_empty(), "{clean:?}");
+        // And a non-panicking helper under a root is clean too.
+        let ok = "pub fn grid_max(v: &[f64]) -> Option<f64> {\n    v.last().copied()\n}\n";
+        let fs = lint_files(&[("server/router.rs", ROUTER_TO_HELPER), ("math/grid.rs", ok)]);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn panic_reachability_respects_a_pragma_at_the_sink() {
+        let math = "pub fn grid_max(v: &[f64]) -> f64 {\n    \
+                    // gddim-lint: allow(panic-reachability) — grids are never empty by \
+                    construction\n    \
+                    *v.last().unwrap()\n}\n";
+        let fs = lint_files(&[("server/router.rs", ROUTER_TO_HELPER), ("math/grid.rs", math)]);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    const LOCK_CYCLE: &str = "pub struct E {\n    \
+                              a: std::sync::Mutex<u32>,\n    b: std::sync::Mutex<u32>,\n}\n\
+                              impl E {\n    \
+                              pub fn ab(&self) {\n        \
+                              let g = lock_unpoisoned(&self.a);\n        \
+                              self.with_b();\n        drop(g);\n    }\n    \
+                              fn with_b(&self) {\n        \
+                              let h = lock_unpoisoned(&self.b);\n        drop(h);\n    }\n    \
+                              pub fn ba(&self) {\n        \
+                              let h = lock_unpoisoned(&self.b);\n        \
+                              self.with_a();\n        drop(h);\n    }\n    \
+                              fn with_a(&self) {\n        \
+                              let g = lock_unpoisoned(&self.a);\n        drop(g);\n    }\n}\n";
+
+    #[test]
+    fn lock_order_cycle_is_reported_with_both_edges_as_witness() {
+        let fs = lint_files(&[("engine/locks.rs", LOCK_CYCLE)]);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        let f = &fs[0];
+        assert_eq!(f.rule, "lock-order");
+        assert!(f.message.contains("`E.a -> E.b -> E.a`"), "{}", f.message);
+        assert_eq!(f.witness.len(), 2, "one witness line per cycle edge: {:?}", f.witness);
+        assert!(f.witness[0].contains("E.a") && f.witness[0].contains("with_b"), "{:?}", f.witness);
+    }
+
+    #[test]
+    fn lock_order_is_silent_when_acquisition_order_is_consistent() {
+        // Same locks, but both paths take E.a before E.b.
+        let src = LOCK_CYCLE.replace(
+            "let h = lock_unpoisoned(&self.b);\n        self.with_a();",
+            "let g = lock_unpoisoned(&self.a);\n        self.with_b();",
+        );
+        let fs = lint_files(&[("engine/locks.rs", &src)]);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn lock_order_respects_a_pragma_at_the_edge_site() {
+        let src = LOCK_CYCLE.replace(
+            "self.with_b();",
+            "self.with_b(); // gddim-lint: allow(lock-order) — ordered by design: see module doc",
+        );
+        let fs = lint_files(&[("engine/locks.rs", &src)]);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn blocking_in_lock_fires_directly_and_through_a_callee() {
+        let direct = "pub struct P;\nimpl P {\n    \
+                      pub fn poll(&self) {\n        \
+                      let g = lock_unpoisoned(&self.state);\n        \
+                      std::thread::sleep(d);\n        drop(g);\n    }\n}\n";
+        let fs = lint_files(&[("engine/pool.rs", direct)]);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!((fs[0].rule, fs[0].line), ("blocking-in-lock", 5));
+        assert!(fs[0].message.contains("thread::sleep"), "{}", fs[0].message);
+
+        let via = "pub struct P;\nimpl P {\n    \
+                   pub fn poll(&self) {\n        \
+                   let g = lock_unpoisoned(&self.state);\n        \
+                   self.nap();\n        drop(g);\n    }\n    \
+                   fn nap(&self) {\n        std::thread::sleep(d);\n    }\n}\n";
+        let fs = lint_files(&[("engine/pool.rs", via)]);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!((fs[0].rule, fs[0].line), ("blocking-in-lock", 5));
+        assert_eq!(fs[0].witness, vec!["engine/pool.rs::P::poll", "engine/pool.rs::P::nap"]);
+    }
+
+    #[test]
+    fn blocking_in_lock_is_silent_once_the_guard_is_dropped_or_off_engine() {
+        let after_drop = "pub struct P;\nimpl P {\n    \
+                          pub fn poll(&self) {\n        \
+                          let g = lock_unpoisoned(&self.state);\n        \
+                          drop(g);\n        std::thread::sleep(d);\n    }\n}\n";
+        assert!(lint_files(&[("engine/pool.rs", after_drop)]).is_empty());
+        // Same code outside engine/ is out of scope for this rule.
+        let direct = after_drop.replace("drop(g);\n        ", "");
+        assert!(lint_files(&[("workload/mod.rs", &direct)]).is_empty());
+        // A chained acquisition is a temporary: the binding holds the
+        // recv() result, and the guard dies at the end of the statement.
+        let temp = "pub struct P;\nimpl P {\n    \
+                    pub fn poll(&self, rx: &M) {\n        \
+                    let task = lock_unpoisoned(rx).recv();\n        \
+                    std::thread::sleep(d);\n    }\n}\n";
+        assert!(lint_files(&[("engine/pool.rs", temp)]).is_empty());
+    }
+
+    #[test]
+    fn blocking_in_lock_respects_a_pragma() {
+        let src = "pub struct P;\nimpl P {\n    \
+                   pub fn poll(&self) {\n        \
+                   let g = lock_unpoisoned(&self.state);\n        \
+                   // gddim-lint: allow(blocking-in-lock) — bounded 1ms backoff, by design\n        \
+                   std::thread::sleep(d);\n        drop(g);\n    }\n}\n";
+        assert!(lint_files(&[("engine/pool.rs", src)]).is_empty());
+    }
+
+    const SAMPLER_ROOT: &str = "pub struct S;\nimpl Sampler for S {\n    \
+                                fn step(&self) {\n        fast_norm();\n    }\n}\n";
+
+    #[test]
+    fn reassoc_taint_fires_from_sampler_step_to_a_relocked_kernel() {
+        let simd = "pub fn fast_norm(x: f64, y: f64, z: f64) -> f64 {\n    \
+                    x.mul_add(y, z) // gddim-lint: allow(no-reassoc-on-sampler-path) — golden \
+                    re-lock: pinned\n}\n";
+        let fs = lint_files(&[("samplers/s.rs", SAMPLER_ROOT), ("math/simd.rs", simd)]);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        let f = &fs[0];
+        assert_eq!((f.rule, f.path.as_str(), f.line), ("reassoc-taint", "math/simd.rs", 1));
+        assert_eq!(f.witness, vec!["samplers/s.rs::S::step", "math/simd.rs::fast_norm"]);
+        // The blocked-sum kernel is a source by name, no pragma needed.
+        let blocked = "pub fn sum_sq_blocked(v: &[f64]) -> f64 {\n    0.0\n}\n";
+        let root = SAMPLER_ROOT.replace("fast_norm", "sum_sq_blocked");
+        let fs = lint_files(&[("samplers/s.rs", &root), ("math/simd.rs", blocked)]);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, "reassoc-taint");
+    }
+
+    #[test]
+    fn reassoc_taint_is_silent_off_the_sampler_path_and_with_a_pragma() {
+        // A clean kernel under the root: no taint.
+        let clean = "pub fn fast_norm(x: f64, y: f64, z: f64) -> f64 {\n    x * y + z\n}\n";
+        assert!(lint_files(&[("samplers/s.rs", SAMPLER_ROOT), ("math/simd.rs", clean)]).is_empty());
+        // The relocked kernel with an explicit taint re-lock at the decl.
+        let simd = "// gddim-lint: allow(reassoc-taint) — golden re-lock: sampler goldens pinned\n\
+                    pub fn fast_norm(x: f64, y: f64, z: f64) -> f64 {\n    \
+                    x.mul_add(y, z) // gddim-lint: allow(no-reassoc-on-sampler-path) — golden \
+                    re-lock: pinned\n}\n";
+        let fs = lint_files(&[("samplers/s.rs", SAMPLER_ROOT), ("math/simd.rs", simd)]);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn json_findings_round_trip_with_witness() {
+        let math = "pub fn grid_max(v: &[f64]) -> f64 {\n    *v.last().unwrap()\n}\n";
+        let fs = lint_files(&[("server/router.rs", ROUTER_TO_HELPER), ("math/grid.rs", math)]);
+        let line = finding_json(&fs[0]).to_string_compact();
+        assert!(!line.contains('\n'), "one object per line");
+        let v = Json::parse(&line).expect("valid json");
+        assert_eq!(v.get("rule").and_then(Json::as_str), Some("panic-reachability"));
+        assert_eq!(v.get("path").and_then(Json::as_str), Some("math/grid.rs"));
+        assert_eq!(v.get("line").and_then(Json::as_usize), Some(2));
+        let witness = v.get("witness").and_then(Json::as_arr).expect("witness array");
+        assert_eq!(witness.len(), 3);
+        assert_eq!(witness[0].as_str(), Some("server/router.rs::Router::submit"));
+    }
+
     #[test]
     fn catalog_is_well_formed() {
-        assert_eq!(CATALOG_VERSION, 2);
-        assert_eq!(CATALOG.len(), 7);
+        assert_eq!(CATALOG_VERSION, 3);
+        assert_eq!(CATALOG.len(), 10);
         for r in CATALOG {
             assert!(!r.id.is_empty() && !r.summary.is_empty() && !r.fix_plan.is_empty());
             assert_eq!(r.id, r.id.to_lowercase(), "rule ids are kebab-case");
         }
         let ids: std::collections::BTreeSet<&str> = CATALOG.iter().map(|r| r.id).collect();
         assert_eq!(ids.len(), CATALOG.len(), "rule ids are unique");
+        for graph_rule in ["lock-order", "panic-reachability", "blocking-in-lock", "reassoc-taint"]
+        {
+            assert!(ids.contains(graph_rule), "catalog v3 carries the graph rules");
+        }
     }
 
-    /// The repo must lint clean against its own catalog: every exemption
-    /// in the tree carries a justified pragma. This is the same check CI
-    /// gates on (`gddim lint`), so a violation fails fast locally.
+    /// The repo must lint clean against its own catalog — graph rules
+    /// included: every exemption in the tree carries a justified pragma.
+    /// This is the same check CI gates on (`gddim lint`), so a violation
+    /// fails fast locally.
     #[test]
     fn self_test_repo_source_lints_clean() {
         let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
-        let findings = lint_paths(&[src]).expect("walk src");
+        let findings = lint_paths(&[src], true).expect("walk src");
         let rendered: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
         assert!(findings.is_empty(), "gddim lint must pass on its own repo:\n{rendered:?}");
     }

@@ -11,7 +11,7 @@
 //! justification:
 //!
 //! ```text
-//! // gddim-lint: allow(no-unwrap-in-server) — why this site is sound
+//! // gddim-lint: allow(panic-reachability) — why this site is sound
 //! flagged_code();
 //! ```
 //!
@@ -28,7 +28,13 @@ use super::scan::SourceLine;
 /// v2: `bounded-io` also covers uncapped `fs::read*` on artifact-loading
 /// files (`score/`, `runtime/`), where `util::io::read_capped` is the
 /// sanctioned replacement.
-pub const CATALOG_VERSION: u32 = 2;
+/// v3: the call-graph rules land ([`super::graph`]): `lock-order`,
+/// `panic-reachability`, `blocking-in-lock`, `reassoc-taint`. The
+/// file-scoped `no-unwrap-in-server` rule is *replaced* by
+/// `panic-reachability`, which follows the call graph from the serving
+/// roots instead of stopping at the `server/`+`engine/` directory
+/// boundary.
+pub const CATALOG_VERSION: u32 = 3;
 
 /// One catalog entry. `fix_plan` is the remediation line printed by
 /// `gddim lint --fix-plan`.
@@ -63,12 +69,36 @@ pub const CATALOG: &[Rule] = &[
                    — golden re-lock: <evidence>",
     },
     Rule {
-        id: "no-unwrap-in-server",
-        summary: ".unwrap()/.expect() on the serving path converts a recoverable condition into \
-                  a thread panic",
-        fix_plan: "return the error on the wire (WireResponse::Error) or recover; for \
-                   construction-time or invariant-backed sites, keep .expect() and tag it with a \
-                   justified allow pragma",
+        id: "panic-reachability",
+        summary: ".unwrap()/.expect()/panic! transitively reachable from a serving root \
+                  (Router::submit, Engine::run/run_group, the server::net handlers, \
+                  ScoreScheduler::eval) converts a recoverable condition into a thread panic",
+        fix_plan: "return the error on the wire (WireResponse::Error) or make the helper return \
+                   Result; for construction-time or invariant-backed sites, keep the panic and \
+                   tag it with a justified allow pragma (`--explain panic-reachability` prints \
+                   the call path)",
+    },
+    Rule {
+        id: "lock-order",
+        summary: "a cycle in the lock-order graph (lock A held while acquiring B somewhere, B \
+                  held while acquiring A elsewhere) deadlocks two threads that interleave",
+        fix_plan: "pick one global acquisition order and release the outer guard before taking \
+                   the inner one (scope the guard in a block, or drop() it explicitly)",
+    },
+    Rule {
+        id: "blocking-in-lock",
+        summary: "TcpStream I/O, thread::sleep or an eps_batch score evaluation while an \
+                  engine/scheduler lock is held stalls every thread contending for that lock",
+        fix_plan: "copy what the critical section needs out of the guard, drop it, then block \
+                   (see engine::scheduler::execute_pool: eval outside, publish under the lock)",
+    },
+    Rule {
+        id: "reassoc-taint",
+        summary: "a reassociating kernel (sum_sq_blocked, or anything pragma'd \
+                  no-reassoc-on-sampler-path) reachable from Sampler::step or a ScoreModel \
+                  implementation silently changes sampler bit patterns",
+        fix_plan: "route the sampler path through the scalar kernel, or re-lock the goldens and \
+                   tag the kernel with allow(reassoc-taint) — golden re-lock: <evidence>",
     },
     Rule {
         id: "no-process-exit",
@@ -101,6 +131,7 @@ pub fn rule(id: &str) -> Option<&'static Rule> {
 }
 
 /// One diagnostic: `path:line: [rule] message`.
+#[derive(Debug)]
 pub struct Finding {
     /// Path as given to the walker (kept relative for stable output).
     pub path: String,
@@ -108,6 +139,9 @@ pub struct Finding {
     pub line: usize,
     pub rule: &'static str,
     pub message: String,
+    /// Call path backing a graph-rule finding (root → sink), empty for
+    /// line rules. Printed by `--explain RULE` and `--format json`.
+    pub witness: Vec<String>,
 }
 
 impl std::fmt::Display for Finding {
@@ -116,12 +150,13 @@ impl std::fmt::Display for Finding {
     }
 }
 
-/// A parsed `gddim-lint: allow(rule)` pragma, resolved to the line it
-/// covers.
-struct Allow {
-    rule: String,
+/// A parsed allow pragma, resolved to the line it covers. Shared with
+/// [`super::graph`], which suppresses graph-rule findings the same way
+/// (the pragma sits at the finding's sink line).
+pub(crate) struct Allow {
+    pub(crate) rule: String,
     /// 1-based line the pragma exempts.
-    covers: usize,
+    pub(crate) covers: usize,
     justified: bool,
     /// 1-based line the pragma itself sits on (for diagnostics).
     at: usize,
@@ -130,7 +165,7 @@ struct Allow {
 /// Extract allow pragmas from the comment channel. A pragma on a line
 /// with no code covers the next line that has code; a trailing pragma
 /// covers its own line.
-fn collect_allows(lines: &[SourceLine]) -> Vec<Allow> {
+pub(crate) fn collect_allows(lines: &[SourceLine]) -> Vec<Allow> {
     let mut out = Vec::new();
     for (idx, line) in lines.iter().enumerate() {
         let Some(pos) = line.comment.find("gddim-lint:") else { continue };
@@ -160,7 +195,7 @@ fn collect_allows(lines: &[SourceLine]) -> Vec<Allow> {
     out
 }
 
-fn allowed(allows: &[Allow], rule_id: &str, line: usize) -> bool {
+pub(crate) fn allowed(allows: &[Allow], rule_id: &str, line: usize) -> bool {
     allows.iter().any(|a| a.covers == line && a.rule == rule_id)
 }
 
@@ -220,7 +255,7 @@ fn has_safety_comment(lines: &[SourceLine], idx: usize) -> bool {
     false
 }
 
-fn path_has_dir(path: &str, dir: &str) -> bool {
+pub(crate) fn path_has_dir(path: &str, dir: &str) -> bool {
     path.split('/').any(|seg| seg == dir)
 }
 
@@ -234,7 +269,13 @@ fn flag(
     message: String,
 ) {
     if !allowed(allows, rule_id, line) {
-        out.push(Finding { path: path.to_string(), line, rule: rule_id, message });
+        out.push(Finding {
+            path: path.to_string(),
+            line,
+            rule: rule_id,
+            message,
+            witness: Vec::new(),
+        });
     }
 }
 
@@ -257,6 +298,7 @@ pub fn check_file(path: &str, lines: &[SourceLine]) -> Vec<Finding> {
                     "allow({}) has no justification — append `— <why this site is sound>`",
                     a.rule
                 ),
+                witness: Vec::new(),
             });
         }
         if rule(&a.rule).is_none() {
@@ -265,12 +307,12 @@ pub fn check_file(path: &str, lines: &[SourceLine]) -> Vec<Finding> {
                 line: a.at,
                 rule: "pragma-justification",
                 message: format!("allow({}) names no rule in catalog v{CATALOG_VERSION}", a.rule),
+                witness: Vec::new(),
             });
         }
     }
 
     let is_main = path == "main.rs" || path.ends_with("/main.rs");
-    let server_path = path_has_dir(path, "server") || path_has_dir(path, "engine");
     let sampler_path =
         path_has_dir(path, "math") || path_has_dir(path, "score") || path_has_dir(path, "samplers");
     let net_file = lines
@@ -303,17 +345,6 @@ pub fn check_file(path: &str, lines: &[SourceLine]) -> Vec<Finding> {
                     let msg =
                         format!("`{pat}` fuses the rounding step and breaks bit-identity goldens");
                     flag(&mut out, &allows, path, "no-reassoc-on-sampler-path", n, msg);
-                }
-            }
-        }
-
-        if server_path && !line.in_test {
-            for pat in [".unwrap()", ".expect("] {
-                if code.contains(pat) {
-                    let msg = format!(
-                        "`{pat}` on the serving path; answer the error or justify with a pragma"
-                    );
-                    flag(&mut out, &allows, path, "no-unwrap-in-server", n, msg);
                 }
             }
         }

@@ -2,10 +2,11 @@
 //! with comment text and literal contents separated out of the *code*
 //! channel, plus `#[cfg(test)]` region tracking.
 //!
-//! This is deliberately not a parser. The rules in [`super::rules`] only
-//! need three things to be reliable — where comments are, where string
-//! /char literals are, and which lines sit inside test-gated items — and
-//! a hand-rolled character state machine gets exactly those right:
+//! This is deliberately not a parser. The line rules in [`super::rules`]
+//! and the item/call-site parser in [`super::graph`] only need three
+//! things to be reliable — where comments are, where string/char
+//! literals are, and which lines sit inside test-gated items — and a
+//! hand-rolled character state machine gets exactly those right:
 //!
 //! - nested block comments (`/* /* */ */`), line comments, doc comments;
 //! - string, byte-string, raw-string (`r#"…"#`) and char literals, with

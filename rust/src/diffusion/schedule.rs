@@ -52,6 +52,7 @@ impl TimeGrid {
     }
 
     pub fn t_max(&self) -> f64 {
+        // gddim-lint: allow(panic-reachability) — constructors assert n >= 1 (two or more nodes) and plan construction revalidates with is_valid(), so a grid on the serving path is never empty
         *self.ts.last().unwrap()
     }
 

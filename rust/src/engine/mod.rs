@@ -414,7 +414,7 @@ impl Engine {
                     std::thread::Builder::new()
                         .name(format!("gddim-engine-{w}"))
                         .spawn(move || pool_worker(&rx, &m, s.as_deref(), w))
-                        // gddim-lint: allow(no-unwrap-in-server) — construction-time fail-fast: no pool exists yet, so no request can be wedged by this panic
+                        // gddim-lint: allow(panic-reachability) — construction-time fail-fast: no pool exists yet, so no request can be wedged by this panic
                         .expect("engine: failed to spawn pool worker")
                 })
                 .collect();
@@ -465,7 +465,7 @@ impl Engine {
     pub fn run(&self, job: &Job<'_>) -> SampleOutput {
         self.run_group(std::slice::from_ref(job))
             .pop()
-            // gddim-lint: allow(no-unwrap-in-server) — structural invariant: run_group returns exactly jobs.len() outputs, checked by its own tests
+            // gddim-lint: allow(panic-reachability) — structural invariant: run_group returns exactly jobs.len() outputs, checked by its own tests
             .expect("run_group returns one output per job")
     }
 
@@ -576,7 +576,7 @@ impl Engine {
                                 rng: p.rng,
                                 batch: Arc::clone(&batch),
                             })
-                            // gddim-lint: allow(no-unwrap-in-server) — receiver closes only in Engine::drop, which cannot run concurrently with &self
+                            // gddim-lint: allow(panic-reachability) — receiver closes only in Engine::drop, which cannot run concurrently with &self
                             .expect("engine: pool queue closed while engine alive");
                         }
                     }
@@ -601,13 +601,14 @@ impl Engine {
             let mut us = Vec::with_capacity(job.n * job.proc.dim_u());
             let mut nfe = 0usize;
             for cell in slots[cursor..cursor + k].iter_mut() {
-                // gddim-lint: allow(no-unwrap-in-server) — the condvar wait above holds until done == total_shards, so every slot is filled
+                // gddim-lint: allow(panic-reachability) — the condvar wait above holds until done == total_shards, so every slot is filled
                 match cell.take().expect("engine: shard never executed") {
                     Ok(out) => {
                         xs.extend_from_slice(&out.xs);
                         us.extend_from_slice(&out.us);
                         nfe = nfe.max(out.nfe);
                     }
+                    // gddim-lint: allow(panic-reachability) — shard-panic re-raise protocol: the worker's catch_unwind stored the message and the caller's own catch_unwind answers it
                     Err(msg) => panic!("engine: shard panicked: {msg}"),
                 }
             }

@@ -69,7 +69,8 @@ fn main() {
                  \u{20}                --tcp --conns C   (drive the loopback TCP edge, C connections)\n\
                  benchdiff:    gddim benchdiff OLD.json NEW.json [--tol FRAC]   (exit 1 on regression)\n\
                  \u{20}              gddim benchdiff --validate FILE.json       (schema check only)\n\
-                 lint:         gddim lint [PATHS] [--fix-plan]   (default rust/src; exit 1 on findings)"
+                 lint:         gddim lint [PATHS] [--fix-plan] [--no-graph]   (default rust/src)\n\
+                 \u{20}              gddim lint --format json | --explain RULE  (exit 1 on findings)"
             );
         }
     }

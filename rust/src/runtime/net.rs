@@ -120,6 +120,7 @@ impl ScoreModel for NetScore {
                 *x = 0.0;
             }
             self.run_chunk(t, &chunk, &mut chunk_out)
+                // gddim-lint: allow(panic-reachability) — eps_batch is infallible by the ScoreModel contract; a PJRT failure mid-batch is unrecoverable and the scheduler's catch_unwind turns the panic into per-request errors
                 .expect("PJRT execution failed");
             for i in 0..take * d {
                 out[row * d + i] = chunk_out[i] as f64;

@@ -261,7 +261,7 @@ impl Router {
                 std::thread::Builder::new()
                     .name(format!("gddim-dispatch-{w}"))
                     .spawn(move || worker_loop(sh))
-                    // gddim-lint: allow(no-unwrap-in-server) — construction-time fail-fast: no request can be queued before the router exists
+                    // gddim-lint: allow(panic-reachability) — construction-time fail-fast: no request can be queued before the router exists
                     .expect("router: failed to spawn dispatcher")
             })
             .collect();
@@ -597,7 +597,7 @@ fn execute_group(sh: &Shared, batches: Vec<Vec<Envelope>>) {
             reject(batch, errs[i].as_deref().unwrap_or("sampler construction failed"));
             continue;
         };
-        // gddim-lint: allow(no-unwrap-in-server) — structural invariant: run_group returned one output per job and j indexes this batch's job
+        // gddim-lint: allow(panic-reachability) — structural invariant: run_group returned one output per job and j indexes this batch's job
         let out = outs[j].take().expect("one engine output per admitted job");
         let n_requests = batch.len();
         let queue_lats: Vec<f64> = batch

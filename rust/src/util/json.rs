@@ -188,7 +188,7 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
+    fn eat(&mut self, c: u8) -> Result<(), String> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -237,7 +237,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, String> {
-        self.expect(b'"')?;
+        self.eat(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
@@ -277,7 +277,7 @@ impl<'a> Parser<'a> {
                 Some(_) => {
                     // advance over one UTF-8 char
                     let rest = std::str::from_utf8(&self.b[self.i..]).map_err(|_| "bad utf8")?;
-                    let c = rest.chars().next().unwrap();
+                    let c = rest.chars().next().ok_or("empty utf8 tail")?;
                     s.push(c);
                     self.i += c.len_utf8();
                 }
@@ -286,7 +286,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, String> {
-        self.expect(b'[')?;
+        self.eat(b'[')?;
         let mut a = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -310,7 +310,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, String> {
-        self.expect(b'{')?;
+        self.eat(b'{')?;
         let mut o = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -321,7 +321,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let k = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.eat(b':')?;
             let v = self.value()?;
             o.insert(k, v);
             self.skip_ws();
